@@ -1,0 +1,77 @@
+"""Paper Figure 13 analogue: sampling-temperature ablation.
+
+The paper compares cascade/pre-gen curves at temperature 0.7 vs 0.3 and
+finds lower temperature reduces output diversity, hurting accuracy in
+high-threshold intervals while RCV/FCV retain their advantage.  This
+ablation reruns the routing evaluation at both temperatures on a subset.
+
+  PYTHONPATH=src python -m benchmarks.ablation_temperature
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import routing as routing_lib
+from repro.core.experiment import SCALES, eval_items, get_models, make_slm
+from repro.data.tasks import is_correct
+
+
+BENCHES = ("modchain", "parity")
+N_ITEMS = 20
+TAUS = (0.3, 0.6, 0.9)
+
+
+def run(scale_tag: str = "tiny"):
+    x = SCALES[scale_tag]
+    models = get_models(x)
+    llm = routing_lib.OracleLLM(accuracy=1.0, avg_out_tokens=40)
+    items = []
+    for b in BENCHES:
+        items.extend(eval_items(x, b)[:N_ITEMS])
+
+    out = {}
+    for temp in (0.7, 0.3):
+        sater = make_slm(models["stage2"], x, temperature=temp)
+        key = jax.random.PRNGKey(11)
+        pre = routing_lib.pregen_outcomes_sater(sater, items, llm, key,
+                                                thresholds=list(TAUS))
+        casc = routing_lib.cascade_outcomes(sater, items, llm, key,
+                                            mode="FCV", k=6,
+                                            thresholds=list(TAUS))
+        row = {}
+        for tau in TAUS:
+            p = pre[tau]
+            c = casc[tau]
+            row[str(tau)] = {
+                "pregen_acc": float(np.mean(
+                    [o.llm_correct if o.routed else o.slm_correct
+                     for o in p])),
+                "pregen_routed": float(np.mean([o.routed for o in p])),
+                "cascade_acc": float(np.mean(
+                    [o.llm_correct if o.routed else o.slm_correct
+                     for o in c])),
+                "cascade_routed": float(np.mean([o.routed for o in c])),
+            }
+        out[str(temp)] = row
+    return out
+
+
+def format_table(res) -> str:
+    lines = [f"{'temp':>5} {'tau':>4} {'pregen acc':>11} {'routed':>7} "
+             f"{'cascade acc':>12} {'routed':>7}"]
+    for temp, rows in res.items():
+        for tau, r in rows.items():
+            lines.append(
+                f"{temp:>5} {tau:>4} {r['pregen_acc']:11.2f} "
+                f"{r['pregen_routed']:7.2f} {r['cascade_acc']:12.2f} "
+                f"{r['cascade_routed']:7.2f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    res = run()
+    common.save_result("ablation_temperature_tiny", res)
+    print(format_table(res))

@@ -1,0 +1,87 @@
+"""Shared benchmark harness: cached models, cached generation outcomes,
+and CSV emission.  Every table benchmark writes
+benchmarks/results/<name>.json and returns rows for run.py's CSV."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import metrics as metrics_lib
+from repro.core import routing as routing_lib
+from repro.core.cost import DEFAULT
+from repro.core.experiment import (SCALES, eval_items, get_models, make_slm,
+                                   stage_questions)
+from repro.data.pipeline import format_prompt
+from repro.data.tasks import IN_DOMAIN, OUT_OF_DOMAIN
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+BENCHMARKS = list(IN_DOMAIN) + list(OUT_OF_DOMAIN)
+
+_MODELS = {}
+_ENDPOINTS = {}
+
+
+def models(scale):
+    if scale.tag not in _MODELS:
+        _MODELS[scale.tag] = get_models(scale)
+    return _MODELS[scale.tag]
+
+
+def oracle_llm():
+    return routing_lib.OracleLLM(accuracy=1.0, avg_out_tokens=60)
+
+
+def real_llm(scale):
+    """DeepSeek-V3 stand-in: imperfect oracle (difficulty-decaying acc)."""
+    return routing_lib.OracleLLM(accuracy=0.98, per_difficulty_decay=0.02,
+                                 avg_out_tokens=60, seed=3)
+
+
+def slm_endpoint(scale, benchmark: str, which: str = "base"):
+    """Cached SLM-only endpoint + correctness/out-tokens per benchmark."""
+    key = (scale.tag, benchmark, which)
+    if key not in _ENDPOINTS:
+        slm = make_slm(models(scale)[which], scale)
+        items = eval_items(scale, benchmark)
+        llm = oracle_llm()
+        _ENDPOINTS[key] = routing_lib.slm_only_endpoint(
+            slm, items, llm, jax.random.PRNGKey(99), DEFAULT)
+    return _ENDPOINTS[key]
+
+
+def golden_for(scale, benchmark: str):
+    (c_s, p_s), slm_corr, slm_out, _ = slm_endpoint(scale, benchmark)
+    items = eval_items(scale, benchmark)
+    return metrics_lib.golden_toga_100(
+        slm_corr, [len(format_prompt(it)) for it in items], slm_out,
+        DEFAULT, [60] * len(items))
+
+
+def save_result(name: str, payload: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=float)
+    return path
+
+
+def load_result(name: str):
+    path = os.path.join(RESULTS_DIR, f"{name}.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.time() - self.t0

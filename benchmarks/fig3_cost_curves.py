@@ -1,0 +1,67 @@
+"""Paper Figures 3/4: average cost-accuracy(100) curves — pre-generation
+vs cascade routing at cost ratios 1:13.75, 1:25, 1:50, 1:100."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import metrics as metrics_lib
+from repro.core import routing as routing_lib
+from repro.core.cost import with_ratio
+from repro.core.experiment import eval_items, make_slm
+
+RATIOS = (13.75, 25, 50, 100)
+
+
+def run(scale, benchmarks=None, k=None):
+    benchmarks = benchmarks or common.BENCHMARKS[:4]
+    k = k or scale.k_samples
+    llm = common.oracle_llm()
+    mdl = common.models(scale)
+    sater = make_slm(mdl["stage2"], scale)
+    base = make_slm(mdl["base"], scale)
+
+    # collect outcome sets once; price them at each ratio afterwards
+    per_bench = {}
+    for b in benchmarks:
+        items = eval_items(scale, b)
+        per_bench[b] = {
+            "pregen": routing_lib.pregen_outcomes_sater(
+                sater, items, llm, jax.random.PRNGKey(41)),
+            "cascade_fcv": routing_lib.cascade_outcomes(
+                sater, items, llm, jax.random.PRNGKey(42), mode="FCV", k=k),
+            "cascade_sc": routing_lib.cascade_outcomes(
+                base, items, llm, jax.random.PRNGKey(43), mode="SC", k=k,
+                early_stop=False),
+        }
+
+    curves = {}
+    for ratio in RATIOS:
+        cm = with_ratio(ratio)
+        agg = {}
+        for method in ("pregen", "cascade_fcv", "cascade_sc"):
+            pts_all = []
+            for b in benchmarks:
+                pts = metrics_lib.points_from_outcomes(
+                    per_bench[b][method], cm, assume_llm_perfect=True)
+                pts_all.append(pts)
+            # average across benchmarks pointwise (same threshold grid)
+            n = min(len(p) for p in pts_all)
+            agg[method] = [
+                (float(np.mean([p[i][0] for p in pts_all])),
+                 float(np.mean([p[i][1] for p in pts_all])))
+                for i in range(n)]
+        curves[str(ratio)] = agg
+    return curves
+
+
+def format_table(curves) -> str:
+    lines = []
+    for ratio, agg in curves.items():
+        lines.append(f"-- cost ratio 1:{ratio} (cost_at_tau, acc100_at_tau) --")
+        for method, pts in agg.items():
+            head = " ".join(f"({c:.2f},{a:.2f})" for c, a in pts[::2])
+            lines.append(f"  {method:12s} {head}")
+    return "\n".join(lines)

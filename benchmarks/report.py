@@ -1,0 +1,69 @@
+"""Emit the EXPERIMENTS.md §Results tables from the dry-run/roofline
+artifacts.
+
+  PYTHONPATH=src python -m benchmarks.report > /tmp/results.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+HBM_GB = 17.18          # 16 GiB
+
+
+def _load(tag):
+    with open(os.path.join(RESULTS, f"dryrun_{tag}.json")) as f:
+        return json.load(f)
+
+
+def dryrun_table() -> str:
+    rows = ["### §Dry-run/Results — lower+compile, bytes/device, fit",
+            "",
+            "| arch | shape | mesh | params | GB/dev (arg+temp) | fits 16 GiB | "
+            "HLO GFLOPs/chip | coll B/chip | compile s |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    pairs = sorted({tuple(os.path.basename(p)[7:-5].split("__"))
+                    for p in glob.glob(os.path.join(RESULTS, "dryrun_*.json"))
+                    if len(os.path.basename(p)[7:-5].split("__")) == 3})
+    for arch, shape, mesh in pairs:
+        d = _load(f"{arch}__{shape}__{mesh}")
+        if not d.get("ok"):
+            rows.append(f"| {arch} | {shape} | {mesh} | | FAILED | | | | |")
+            continue
+        tot = (d["argument_size_in_bytes"] + d["temp_size_in_bytes"]) / 1e9
+        fit = "yes" if tot <= HBM_GB else f"**no** ({tot:.1f} GB)"
+        rows.append(
+            f"| {arch} | {shape} | {mesh} | {d['params']/1e9:.1f}B "
+            f"| {tot:.2f} | {fit} | {d.get('hlo_flops', 0)/1e9:.0f} "
+            f"| {d['collectives']['total']:.2e} | {d.get('compile_s', 0)} |")
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    with open(os.path.join(RESULTS, "roofline_pod.json")) as f:
+        rl = json.load(f)
+    rows = ["### §Roofline/Results — single-pod (256 chips), per step",
+            "",
+            "| arch | shape | compute s | memory s | collective s | dominant | "
+            "useful (model/HLO flops) | MFU bound |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rl, key=lambda x: (x["arch"], x["shape"])):
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.2e} "
+            f"| {r['memory_s']:.2e} | {r['collective_s']:.2e} "
+            f"| **{r['dominant']}** | {r['model_flops_ratio']:.2f} "
+            f"| {r['mfu_bound']:.2f} |")
+    return "\n".join(rows)
+
+
+def main():
+    print(dryrun_table())
+    print()
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""§Roofline: derive the three roofline terms per (arch x shape) from the
+dry-run artifacts (benchmarks/results/dryrun_*.json, single-pod mesh).
+
+  compute    = FLOPs / (chips * 197 TFLOP/s bf16)
+  memory     = HBM bytes / (chips * 819 GB/s)
+  collective = per-chip collective bytes / (50 GB/s ICI)
+
+FLOPs/bytes come from the analytic step model (launch/analytics.py)
+because XLA's cost analysis counts scan bodies once; the per-chip raw
+HLO numbers are kept alongside for cross-checking.  Collective bytes are
+parsed from the compiled HLO with while-loop trip multipliers (i.e. they
+ARE from the compiled artifact)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def load_dryruns(mesh: str = "pod"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, f"dryrun_*__{mesh}.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("ok"):
+            rows.append(r)
+    return rows
+
+
+def roofline_terms(r: dict) -> dict:
+    chips = r["devices"]
+    t_c = r["analytic_flops"] / (chips * PEAK_FLOPS_BF16)
+    t_m = r["analytic_bytes"] / (chips * HBM_BW)
+    coll = r["collectives"].get("total",
+                                sum(v for k, v in r["collectives"].items()
+                                    if not k.startswith("n_")))
+    t_x = coll / ICI_BW          # collective bytes are per-chip already
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x}
+    dom = max(terms, key=terms.get)
+    ratio = r["model_flops"] / r["analytic_flops"]
+    bound = max(terms.values())
+    return {
+        **terms,
+        "dominant": dom.replace("_s", ""),
+        "model_flops_ratio": ratio,
+        "step_lower_bound_s": bound,
+        "mfu_bound": r["model_flops"] / (r["devices"] * PEAK_FLOPS_BF16) / bound
+        if bound > 0 else 0.0,
+    }
+
+
+_SUGGEST = {
+    "compute": "raise arithmetic intensity per chip (bigger per-chip tiles, "
+               "defer remat, fuse elementwise into matmuls)",
+    "memory": "cut HBM traffic (smaller logits dtype/chunked loss, fewer "
+              "remat reads, quantized cache)",
+    "collective": "reshard to cut cross-chip bytes (fewer all-reduces in the "
+                  "layer scan, reduce-scatter grads, avoid FSDP regather)",
+}
+
+
+def build_table(mesh: str = "pod"):
+    rows = []
+    for r in load_dryruns(mesh):
+        t = roofline_terms(r)
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "devices": r["devices"],
+            **{k: t[k] for k in ("compute_s", "memory_s", "collective_s",
+                                 "dominant", "model_flops_ratio",
+                                 "mfu_bound")},
+            "suggest": _SUGGEST[t["dominant"]],
+            "hlo_flops_per_chip": r.get("hlo_flops"),
+            "temp_bytes_per_chip": r.get("temp_size_in_bytes"),
+            "compile_s": r.get("compile_s"),
+        })
+    return rows
+
+
+def format_table(rows) -> str:
+    lines = [f"{'arch':24s} {'shape':12s} {'compute_s':>10} {'memory_s':>10} "
+             f"{'collect_s':>10} {'dominant':>10} {'useful':>7} {'mfu<=':>6}"]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['compute_s']:10.2e} "
+            f"{r['memory_s']:10.2e} {r['collective_s']:10.2e} "
+            f"{r['dominant']:>10s} {r['model_flops_ratio']:7.2f} "
+            f"{r['mfu_bound']:6.2f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    rows = build_table()
+    print(format_table(rows))
+    with open(os.path.join(RESULTS, "roofline_pod.json"), "w") as f:
+        json.dump(rows, f, indent=1)

@@ -1,0 +1,119 @@
+"""Benchmark harness — one entry per paper table/figure + the roofline
+table.  Prints ``name,us_per_call,derived`` CSV rows and writes full
+JSON payloads under benchmarks/results/.
+
+  PYTHONPATH=src python -m benchmarks.run                 # everything
+  PYTHONPATH=src python -m benchmarks.run --only roofline
+  PYTHONPATH=src python -m benchmarks.run --scale small --force
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny")
+    ap.add_argument("--only", default=None,
+                    help="comma list: roofline,table1,table2,table3,fig3")
+    ap.add_argument("--force", action="store_true",
+                    help="recompute even if a cached result JSON exists")
+    args = ap.parse_args()
+
+    from benchmarks import common
+    from repro.core.experiment import SCALES
+    scale = SCALES[args.scale]
+    only = set(args.only.split(",")) if args.only else None
+
+    csv_rows = [("name", "us_per_call", "derived")]
+
+    def emit(name, wall_s, n_calls, derived):
+        us = 1e6 * wall_s / max(n_calls, 1)
+        csv_rows.append((name, f"{us:.1f}", derived))
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    def want(name):
+        return only is None or name in only
+
+    # ------------------------------------------------------- roofline
+    if want("roofline"):
+        from benchmarks import roofline
+        with common.timer() as t:
+            rows = roofline.build_table("pod")
+        common.save_result("roofline_pod", rows)
+        print(roofline.format_table(rows), file=sys.stderr)
+        dom = {}
+        for r in rows:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        emit("roofline_pod", t.s, max(len(rows), 1),
+             "dominant:" + "/".join(f"{k}={v}" for k, v in sorted(dom.items())))
+
+    # ------------------------------------------------- paper tables
+    n_q = scale.n_eval * len(common.BENCHMARKS)
+
+    if want("table3"):
+        from benchmarks import table3_long2short
+        cached = None if args.force else common.load_result(
+            f"table3_{scale.tag}")
+        with common.timer() as t:
+            table = cached or table3_long2short.run(scale)
+        common.save_result(f"table3_{scale.tag}", table)
+        print(table3_long2short.format_table(table), file=sys.stderr)
+        import numpy as np
+        dtok = np.mean([r["delta_tok_pct"] for r in table.values()])
+        dacc = np.mean([r["delta_acc_pct"] for r in table.values()])
+        emit("table3_long2short", t.s, n_q,
+             f"dTok={dtok:+.1f}%;dAcc={dacc:+.1f}%")
+
+    if want("table2"):
+        from benchmarks import table2_latency
+        cached = None if args.force else common.load_result(
+            f"table2_{scale.tag}")
+        with common.timer() as t:
+            table = cached or table2_latency.run(scale)
+        common.save_result(f"table2_{scale.tag}", table)
+        for tau in (0.6, 1.0):
+            print(table2_latency.format_table(table, tau), file=sys.stderr)
+        import numpy as np
+        sc_agl = np.mean([r["SC"]["0.6"]["AGL"] for r in table.values()])
+        fcv_agl = np.mean([r["SC/FCV"]["0.6"]["AGL"] for r in table.values()])
+        sc_arol = np.mean([r["SC"]["0.6"]["AROL"] for r in table.values()])
+        fcv_arol = np.mean([r["SC/FCV"]["0.6"]["AROL"] for r in table.values()])
+        emit("table2_latency", t.s, n_q * 4,
+             f"AGL_cut={100*(1-fcv_agl/max(sc_agl,1e-9)):.0f}%;"
+             f"AROL_cut={100*(1-fcv_arol/max(sc_arol,1e-9)):.0f}%")
+
+    if want("table1"):
+        from benchmarks import table1_pregen
+        cached = None if args.force else common.load_result(
+            f"table1_{scale.tag}")
+        with common.timer() as t:
+            table = cached or table1_pregen.run(scale)
+        common.save_result(f"table1_{scale.tag}", table)
+        print(table1_pregen.format_table(table), file=sys.stderr)
+        import numpy as np
+        wins = sum(1 for row in table.values()
+                   if row["SATER"]["togr"] >= max(
+                       row[m]["togr"] for m in row if m != "SATER"))
+        mean_togr = np.mean([row["SATER"]["togr"] for row in table.values()])
+        emit("table1_pregen", t.s, n_q * 10,
+             f"SATER_wins={wins}/{len(table)};mean_ToGR={mean_togr:.3f}")
+
+    if want("fig3"):
+        from benchmarks import fig3_cost_curves
+        cached = None if args.force else common.load_result(
+            f"fig3_{scale.tag}")
+        with common.timer() as t:
+            curves = cached or fig3_cost_curves.run(scale)
+        common.save_result(f"fig3_{scale.tag}", curves)
+        print(fig3_cost_curves.format_table(curves), file=sys.stderr)
+        emit("fig3_cost_curves", t.s, n_q * 3, "ratios=13.75/25/50/100")
+
+    common.save_result("bench_csv", [list(r) for r in csv_rows])
+
+
+if __name__ == "__main__":
+    main()

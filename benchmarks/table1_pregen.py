@@ -1,0 +1,90 @@
+"""Paper Table 1 (+ Table 7): pre-generation routing — ToA-100 and ToGR
+for SATER vs BERT / KNN / HybridLLM (+ margin-sampling, FrugalGPT) across
+the in-domain and OOD benchmarks."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import baselines as bl
+from repro.core import metrics as metrics_lib
+from repro.core import routing as routing_lib
+from repro.core.cost import DEFAULT
+from repro.core.experiment import eval_items, make_slm, stage_questions
+from repro.core.metrics import QuestionRecord
+from repro.data.pipeline import format_prompt
+
+
+def _train_routers(scale):
+    """Fit all classifier baselines on stage-question correctness."""
+    base = make_slm(common.models(scale)["base"], scale)
+    train_items = stage_questions(scale)
+    samples = routing_lib.collect_samples(base, train_items, 4,
+                                          jax.random.PRNGKey(7))
+    prompts = [format_prompt(s.item) for s in samples]
+    soft = [s.accuracy for s in samples]
+    hard = [1.0 if s.accuracy >= 0.5 else 0.0 for s in samples]
+    routers = {
+        "KNN": bl.KNNRouter().fit(prompts, hard),
+        "HybridLLM": bl.HybridLLMRouter().fit(prompts, soft),
+        "BERT": bl.BERTRouter(epochs=4).fit(prompts, hard),
+    }
+    # FrugalGPT: correctness classifier on (prompt, answer) pairs
+    frugal = bl.FrugalGPTScorer()
+    ans = [s.texts[0] for s in samples]
+    corr = [float(s.correct_flags[0]) for s in samples]
+    frugal.fit_pairs(prompts, ans, corr)
+    routers["FrugalGPT"] = frugal
+    return routers, samples
+
+
+def run(scale, benchmarks=None):
+    benchmarks = benchmarks or common.BENCHMARKS
+    routers, _ = _train_routers(scale)
+    llm = common.oracle_llm()
+    sater = make_slm(common.models(scale)["stage2"], scale)
+
+    table = {}
+    for b in benchmarks:
+        items = eval_items(scale, b)
+        (c_s, p_s), slm_corr, slm_out, slm_texts = common.slm_endpoint(scale, b)
+        golden = common.golden_for(scale, b)
+        prompts = [format_prompt(it) for it in items]
+        llm_ans = [llm.answer(it) for it in items]
+
+        def records(scores):
+            return [QuestionRecord(sc, la[0], len(p), so, la[1], float(s))
+                    for sc, la, p, so, s in zip(slm_corr, llm_ans, prompts,
+                                                slm_out, scores)]
+
+        row = {}
+        for name, router in routers.items():
+            if name == "FrugalGPT":
+                scores = router.score_pairs(prompts, slm_texts)
+            else:
+                scores = router.score(prompts)
+            s = metrics_lib.toa_summary(records(scores), DEFAULT)
+            row[name] = {"toa_100": s["toa_100"], "togr": s["togr"]}
+
+        out = routing_lib.pregen_outcomes_sater(sater, items, llm,
+                                                jax.random.PRNGKey(11))
+        s = metrics_lib.outcome_toa_summary(out, DEFAULT, (c_s, p_s), golden)
+        row["SATER"] = {"toa_100": s["toa_100"], "togr": s["togr"]}
+        table[b] = row
+    return table
+
+
+def format_table(table) -> str:
+    methods = ["HybridLLM", "KNN", "BERT", "FrugalGPT", "SATER"]
+    lines = [f"{'benchmark':12s} " + " ".join(f"{m:>10s}{'':>7s}" for m in methods),
+             f"{'':12s} " + " ".join(f"{'ToA-100':>10s}{'ToGR':>7s}" for _ in methods)]
+    for b, row in table.items():
+        cells = []
+        for m in methods:
+            r = row.get(m, {})
+            cells.append(f"{r.get('toa_100', float('nan')):10.3f}"
+                         f"{r.get('togr', float('nan')):7.3f}")
+        lines.append(f"{b:12s} " + " ".join(cells))
+    return "\n".join(lines)

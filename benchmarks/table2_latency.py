@@ -1,0 +1,54 @@
+"""Paper Tables 2 & 4: cascade latency — AGL and AROL for SC (base
+model), SC/TE (Stage-I only), SC/RCV and SC/FCV (full SATER) at
+tau = 0.6 and tau = 1.0."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks import common
+from repro.core import metrics as metrics_lib
+from repro.core import routing as routing_lib
+from repro.core.experiment import eval_items, make_slm
+
+
+SYSTEMS = (
+    ("SC", "base", "SC", False),
+    ("SC/TE", "stage1", "SC", False),
+    ("SC/RCV", "stage2", "RCV", True),
+    ("SC/FCV", "stage2", "FCV", True),
+)
+
+
+def run(scale, taus=(0.6, 1.0), k=None, benchmarks=None):
+    benchmarks = benchmarks or common.BENCHMARKS
+    k = k or scale.k_samples
+    llm = common.oracle_llm()
+    mdl = common.models(scale)
+    table = {}
+    for b in benchmarks:
+        items = eval_items(scale, b)
+        row = {}
+        for name, which, mode, early in SYSTEMS:
+            slm = make_slm(mdl[which], scale)
+            out = routing_lib.cascade_outcomes(
+                slm, items, llm, jax.random.PRNGKey(21), mode=mode, k=k,
+                thresholds=list(taus), early_stop=early)
+            row[name] = {str(t): metrics_lib.outcome_latency(out[t])
+                         for t in taus}
+        table[b] = row
+    return table
+
+
+def format_table(table, tau) -> str:
+    systems = [s[0] for s in SYSTEMS]
+    lines = [f"tau={tau}",
+             f"{'benchmark':12s} " + " ".join(f"{s:>8s}{'':>7s}" for s in systems),
+             f"{'':12s} " + " ".join(f"{'AGL':>8s}{'AROL':>7s}" for _ in systems)]
+    for b, row in table.items():
+        cells = []
+        for s in systems:
+            r = row[s][str(tau)]
+            cells.append(f"{r['AGL']:8.1f}{r['AROL']:7.1f}")
+        lines.append(f"{b:12s} " + " ".join(cells))
+    return "\n".join(lines)

@@ -1,0 +1,54 @@
+"""Paper Tables 3/5/6: Stage-I (long-to-short) effectiveness — accuracy
+and mean output tokens, original vs SATER-TE, per benchmark, with
+percentage deltas."""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.core import routing as routing_lib
+from repro.core.experiment import eval_items, make_slm
+from repro.data.pipeline import format_prompt
+from repro.data.tasks import is_correct
+
+
+def run(scale, benchmarks=None):
+    benchmarks = benchmarks or common.BENCHMARKS
+    mdl = common.models(scale)
+    table = {}
+    for b in benchmarks:
+        items = eval_items(scale, b)
+        row = {}
+        for name, which in (("original", "base"), ("SATER", "stage1")):
+            slm = make_slm(mdl[which], scale, temperature=0.0)
+            texts, lens = routing_lib.batch_generate(
+                slm, [format_prompt(it) for it in items],
+                jax.random.PRNGKey(31))
+            row[name] = {
+                "acc": float(np.mean([is_correct(it, t)
+                                      for it, t in zip(items, texts)])),
+                "tokens": float(np.mean(lens)),
+            }
+        row["delta_acc_pct"] = 100 * (row["SATER"]["acc"] - row["original"]["acc"])
+        row["delta_tok_pct"] = 100 * (row["SATER"]["tokens"] -
+                                      row["original"]["tokens"]) / \
+            max(row["original"]["tokens"], 1)
+        table[b] = row
+    return table
+
+
+def format_table(table) -> str:
+    lines = [f"{'benchmark':12s} {'acc0':>6} {'tok0':>7} {'acc1':>6} "
+             f"{'tok1':>7} {'dAcc%':>7} {'dTok%':>7}"]
+    for b, r in table.items():
+        lines.append(
+            f"{b:12s} {r['original']['acc']:6.2f} {r['original']['tokens']:7.1f} "
+            f"{r['SATER']['acc']:6.2f} {r['SATER']['tokens']:7.1f} "
+            f"{r['delta_acc_pct']:+7.1f} {r['delta_tok_pct']:+7.1f}")
+    accs = [r["delta_acc_pct"] for r in table.values()]
+    toks = [r["delta_tok_pct"] for r in table.values()]
+    lines.append(f"{'average':12s} {'':6} {'':7} {'':6} {'':7} "
+                 f"{np.mean(accs):+7.1f} {np.mean(toks):+7.1f}")
+    return "\n".join(lines)

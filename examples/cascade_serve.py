@@ -1,0 +1,81 @@
+"""End-to-end serving driver (deliverable b): serve a batched request
+stream through the SATER cascade — K parallel vote lanes per request on
+the trained SLM, weighted majority voting with early stopping, fallback
+to the LLM.  Prints per-request decisions and the AGL/AROL/cost summary
+against the vanilla-SC baseline.
+
+  PYTHONPATH=src python examples/cascade_serve.py --scale tiny --mode FCV
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import routing as routing_lib
+from repro.core.cost import DEFAULT
+from repro.core.experiment import SCALES, eval_items, get_models, make_slm
+from repro.core.metrics import outcome_latency, points_from_outcomes
+from repro.data.tasks import IN_DOMAIN
+
+
+def serve(slm, items, llm, mode, k, tau, key, early_stop=None):
+    t0 = time.time()
+    out = routing_lib.cascade_outcomes(slm, items, llm, key, mode=mode, k=k,
+                                       thresholds=[tau],
+                                       early_stop=early_stop)
+    rows = out[tau]
+    lat = outcome_latency(rows)
+    acc = float(np.mean([(o.llm_correct if o.routed else o.slm_correct)
+                         for o in rows]))
+    cost = points_from_outcomes(out, DEFAULT, assume_llm_perfect=False)[0][0]
+    return {"mode": mode, "AGL": lat["AGL"], "AROL": lat["AROL"],
+            "accepted": lat["frac_accepted"], "acc": acc, "cost": cost,
+            "wall_s": time.time() - t0}, rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny", choices=list(SCALES))
+    ap.add_argument("--mode", default="FCV", choices=["SC", "RCV", "FCV"])
+    ap.add_argument("--tau", type=float, default=0.6)
+    ap.add_argument("--k", type=int, default=6)
+    ap.add_argument("--requests", type=int, default=24)
+    args = ap.parse_args()
+    x = SCALES[args.scale]
+
+    models = get_models(x)
+    llm = routing_lib.OracleLLM(accuracy=1.0, avg_out_tokens=60)
+    per = max(2, args.requests // len(IN_DOMAIN))
+    items = [it for b in IN_DOMAIN for it in eval_items(x, b)[:per]]
+    print(f"serving {len(items)} requests, mode={args.mode} "
+          f"k={args.k} tau={args.tau}")
+
+    # SATER cascade (stage2 model, early stop)
+    sater = make_slm(models["stage2"], x)
+    summ, rows = serve(sater, items, llm, args.mode, args.k, args.tau,
+                       jax.random.PRNGKey(0))
+    for it, o in zip(items, rows):
+        dest = "LLM" if o.routed else "SLM"
+        print(f"  [{dest:>3}] dec_t={o.decision_tokens:4d} "
+              f"spent={o.slm_out_tokens:5d} d={it.difficulty} "
+              f"{it.question[:52]}")
+
+    # vanilla SC baseline (base model, no confidence, no early stop)
+    base = make_slm(models["base"], x)
+    sc, _ = serve(base, items, llm, "SC", args.k, args.tau,
+                  jax.random.PRNGKey(0))
+
+    print(f"\n{'system':12s} {'acc':>6} {'cost':>7} {'AGL':>7} {'AROL':>7} "
+          f"{'kept':>6}")
+    for name, s in (("SC (base)", sc), (f"SATER/{args.mode}", summ)):
+        print(f"{name:12s} {s['acc']:6.2f} {s['cost']:7.3f} {s['AGL']:7.1f} "
+              f"{s['AROL']:7.1f} {s['accepted']:6.0%}")
+    if sc["AGL"]:
+        print(f"\nAGL cut: {100*(1-summ['AGL']/sc['AGL']):.0f}%   "
+              f"AROL cut: {100*(1-summ['AROL']/max(sc['AROL'],1e-9)):.0f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Beyond-paper demo: multi-tier cascading (paper Limitation §1 names
+this as future work).
+
+Chain: tier0 = SATER SLM at a strict threshold (cheap, answers only
+what it is confident about) -> tier1 = the same SATER model at a looser
+threshold with more votes (stands in for a mid-size model; in a real
+deployment this would be a separately-trained medium SLM) -> terminal
+oracle LLM.
+
+  PYTHONPATH=src python examples/multi_tier_cascade.py
+"""
+
+import jax
+
+from repro.core import cascade_multi as cm
+from repro.core.experiment import SCALES, eval_items, get_models, make_slm
+from repro.core.routing import OracleLLM
+
+
+def main():
+    x = SCALES["tiny"]
+    models = get_models(x)
+    sater = make_slm(models["stage2"], x)
+
+    items = []
+    for b in ("arith", "parity", "modchain"):
+        items.extend(eval_items(x, b)[:10])
+
+    tiers = [
+        cm.Tier(slm=sater, tau=0.45, mode="RCV", k=6, out_price=0.02,
+                in_price=0.005),
+        cm.Tier(slm=sater, tau=0.2, mode="RCV", k=10, out_price=0.08,
+                in_price=0.02),
+    ]
+    terminal = cm.TerminalTier(llm=OracleLLM(accuracy=1.0,
+                                             avg_out_tokens=40))
+
+    out = cm.run_cascade(tiers, terminal, items, jax.random.PRNGKey(0))
+    s = cm.summarize(out, len(tiers))
+    print("== 3-tier cascade (strict SATER -> loose SATER -> oracle) ==")
+    print(f"questions: {len(items)}")
+    print(f"tier histogram (answers per tier): {s['tier_histogram']}")
+    print(f"accuracy: {s['accuracy']:.2f}")
+    print(f"total cost: ${s['cost'] * 1e6:.1f} per 1M-question-scale "
+          f"(token prices are per-1M)")
+    print(f"AGL (tiers that answered): {s['AGL']:.1f} tokens")
+    print(f"AROL (fell to terminal): {s['AROL']:.1f} tokens")
+
+    # two-tier baseline for comparison
+    out2 = cm.run_cascade(tiers[1:], terminal, items, jax.random.PRNGKey(0))
+    s2 = cm.summarize(out2, 1)
+    print("\n== 2-tier baseline (loose SATER -> oracle) ==")
+    print(f"tier histogram: {s2['tier_histogram']}   "
+          f"accuracy: {s2['accuracy']:.2f}   cost: ${s2['cost'] * 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Pre-generation routing comparison: SATER (self-aware refusal) vs the
+classifier baselines (BERT-style, KNN, HybridLLM) on one benchmark.
+
+  PYTHONPATH=src python examples/pregen_route.py --scale tiny --benchmark modchain
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import baselines as bl
+from repro.core import metrics as metrics_lib
+from repro.core import routing as routing_lib
+from repro.core.cost import DEFAULT
+from repro.core.experiment import SCALES, eval_items, get_models, make_slm, \
+    stage_questions
+from repro.core.metrics import QuestionRecord
+from repro.data.pipeline import format_prompt
+from repro.data.tasks import is_correct
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny", choices=list(SCALES))
+    ap.add_argument("--benchmark", default="modchain")
+    args = ap.parse_args()
+    x = SCALES[args.scale]
+
+    models = get_models(x)
+    llm = routing_lib.OracleLLM(accuracy=1.0, avg_out_tokens=60)
+    items = eval_items(x, args.benchmark)
+    key = jax.random.PRNGKey(0)
+
+    # --- shared: SLM-only answers + golden ToGA ---
+    base = make_slm(models["base"], x)
+    (c_s, p_s), slm_corr, slm_out, _ = routing_lib.slm_only_endpoint(
+        base, items, llm, key, DEFAULT)
+    golden = metrics_lib.golden_toga_100(
+        slm_corr, [len(format_prompt(it)) for it in items], slm_out,
+        DEFAULT, [60] * len(items))
+
+    # --- classifier baselines: trained on Stage-question correctness ---
+    train_items = stage_questions(x)
+    samples = routing_lib.collect_samples(base, train_items, 4,
+                                          jax.random.PRNGKey(7))
+    train_prompts = [format_prompt(s.item) for s in samples]
+    soft = [s.accuracy for s in samples]
+    hard = [1.0 if s.accuracy >= 0.5 else 0.0 for s in samples]
+    eval_prompts = [format_prompt(it) for it in items]
+
+    def records(scores):
+        return [QuestionRecord(sc, lc, len(p), so, 60, float(s))
+                for sc, lc, p, so, s in zip(
+                    slm_corr, [llm.answer(it)[0] for it in items],
+                    eval_prompts, slm_out, scores)]
+
+    print(f"benchmark={args.benchmark}  SLM-only acc={p_s:.2f} cost={c_s:.3f}")
+    print(f"{'method':12s} {'ToA-100':>8} {'ToGR':>7}")
+    for name, router in (
+            ("KNN", bl.KNNRouter().fit(train_prompts, hard)),
+            ("HybridLLM", bl.HybridLLMRouter().fit(train_prompts, soft)),
+            ("BERT", bl.BERTRouter(epochs=4).fit(train_prompts, hard))):
+        recs = records(router.score(eval_prompts))
+        s = metrics_lib.toa_summary(recs, DEFAULT)
+        print(f"{name:12s} {s['toa_100']:8.3f} {s['togr']:7.3f}")
+
+    # --- SATER: behavioural refusal ---
+    sater = make_slm(models["stage2"], x)
+    out = routing_lib.pregen_outcomes_sater(sater, items, llm, key)
+    s = metrics_lib.outcome_toa_summary(out, DEFAULT, (c_s, p_s), golden)
+    print(f"{'SATER':12s} {s['toa_100']:8.3f} {s['togr']:7.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Quickstart: train a tiny SLM through both SATER stages on the
+synthetic suite, then route a few queries both ways.
+
+  PYTHONPATH=src python examples/quickstart.py [--scale tiny|small]
+
+Artifacts cache under benchmarks/artifacts so re-runs are instant.
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.core import routing as routing_lib
+from repro.core.cost import DEFAULT
+from repro.core.experiment import SCALES, eval_items, get_models, make_slm
+from repro.core.metrics import outcome_latency
+from repro.data.pipeline import format_prompt
+from repro.data.tasks import is_correct
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny", choices=list(SCALES))
+    args = ap.parse_args()
+    x = SCALES[args.scale]
+
+    print("== SATER quickstart ==")
+    models = get_models(x)
+    sater = make_slm(models["stage2"], x)
+    llm = routing_lib.OracleLLM(accuracy=1.0, avg_out_tokens=60)
+
+    items = eval_items(x, "modchain")[:8] + eval_items(x, "arith")[:8]
+
+    print("\n-- pre-generation routing (prompt at tau=0.6, route on refusal) --")
+    out = routing_lib.pregen_outcomes_sater(sater, items, llm,
+                                            jax.random.PRNGKey(0),
+                                            thresholds=[0.6])
+    for it, o in zip(items, out[0.6]):
+        dest = "LLM" if o.routed else "SLM"
+        ok = "?" if o.routed else ("OK" if o.slm_correct else "WRONG")
+        print(f"  [{dest:>3}] ({ok:>5}) d={it.difficulty} {it.question[:60]}")
+
+    print("\n-- cascade routing (FCV, early stop, tau=0.6) --")
+    cas = routing_lib.cascade_outcomes(sater, items, llm,
+                                       jax.random.PRNGKey(1), mode="FCV",
+                                       k=6, thresholds=[0.6])
+    lat = outcome_latency(cas[0.6])
+    acc = np.mean([(o.llm_correct if o.routed else o.slm_correct)
+                   for o in cas[0.6]])
+    print(f"  accepted {lat['frac_accepted']:.0%}  AGL={lat['AGL']:.0f} "
+          f"AROL={lat['AROL']:.0f}  accuracy={acc:.0%}")
+
+
+if __name__ == "__main__":
+    main()

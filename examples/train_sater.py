@@ -1,0 +1,66 @@
+"""End-to-end SATER training driver: base SFT -> Stage I (shortest-
+response DPO) -> Stage II (confidence-aware refusal SFT), with
+checkpoints after every stage and a token-compression report
+(the paper's Table 5/6 quantities).
+
+  PYTHONPATH=src python examples/train_sater.py --scale tiny
+  PYTHONPATH=src python examples/train_sater.py --scale small --force
+"""
+
+import argparse
+import os
+import shutil
+
+import jax
+import numpy as np
+
+from repro.core import routing as routing_lib
+from repro.core.experiment import (SCALES, eval_items, get_models, make_slm)
+from repro.data.pipeline import format_prompt
+from repro.data.tasks import IN_DOMAIN, is_correct
+
+
+def evaluate(slm, x, benchmarks, key):
+    rows = {}
+    for b in benchmarks:
+        items = eval_items(x, b)
+        texts, lens = routing_lib.batch_generate(
+            slm, [format_prompt(it) for it in items], key)
+        rows[b] = {
+            "acc": float(np.mean([is_correct(it, t)
+                                  for it, t in zip(items, texts)])),
+            "tokens": float(np.mean(lens)),
+        }
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", default="tiny", choices=list(SCALES))
+    ap.add_argument("--artifacts", default="benchmarks/artifacts")
+    ap.add_argument("--force", action="store_true",
+                    help="retrain even if cached checkpoints exist")
+    args = ap.parse_args()
+    x = SCALES[args.scale]
+    if args.force and os.path.isdir(args.artifacts):
+        for f in os.listdir(args.artifacts):
+            if f.startswith(x.tag + "_"):
+                os.remove(os.path.join(args.artifacts, f))
+
+    models = get_models(x, artifacts=args.artifacts)
+
+    print("\n== long-to-short effectiveness (paper Tables 5/6) ==")
+    key = jax.random.PRNGKey(42)
+    base_rows = evaluate(make_slm(models["base"], x, 0.0), x, IN_DOMAIN, key)
+    s1_rows = evaluate(make_slm(models["stage1"], x, 0.0), x, IN_DOMAIN, key)
+    print(f"{'benchmark':12s} {'acc0':>6} {'tok0':>6} {'acc1':>6} {'tok1':>6} "
+          f"{'dAcc':>7} {'dTok':>7}")
+    for b in IN_DOMAIN:
+        a0, t0 = base_rows[b]["acc"], base_rows[b]["tokens"]
+        a1, t1 = s1_rows[b]["acc"], s1_rows[b]["tokens"]
+        print(f"{b:12s} {a0:6.2f} {t0:6.0f} {a1:6.2f} {t1:6.0f} "
+              f"{100*(a1-a0):+6.1f}% {100*(t1-t0)/max(t0,1):+6.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,279 @@
+"""Config system: architecture configs, input shapes, and the registry.
+
+Every assigned architecture gets a ``ModelConfig`` built here and a module
+``src/repro/configs/<arch_id>.py`` that cites its source.  Reduced "smoke"
+variants (<=2 layers, d_model<=512, <=4 experts) are derived automatically
+for CPU tests via :func:`smoke_variant`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Unified decoder-LM configuration covering all assigned arch families.
+
+    arch_type is one of: dense | moe | ssm | hybrid | vlm | audio.
+    vlm/audio use the same decoder substrate; their modality frontend is a
+    stub (precomputed embeddings supplied through ``input_specs``).
+    """
+
+    name: str
+    arch_type: str
+    n_layers: int
+    d_model: int
+    vocab_size: int
+
+    # --- attention ---
+    n_heads: int = 0                      # 0 => attention-free (pure SSM)
+    n_kv_heads: int = 0
+    head_dim: int = 0                     # 0 => d_model // n_heads
+    rope_theta: float = 10000.0
+    sliding_window: int = 0               # 0 => full attention
+    global_every: int = 0                 # e.g. gemma3: 6 => layers 5,11,.. global
+    attn_logit_softcap: float = 0.0
+
+    # --- mlp ---
+    d_ff: int = 0                         # 0 => no dense MLP (pure SSM block)
+    mlp_gated: bool = True                # llama-style gated vs plain 2-layer
+    activation: str = "silu"              # silu | gelu | relu2
+    norm: str = "rmsnorm"                 # rmsnorm | layernorm
+
+    # --- moe ---
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_d_ff: int = 0                     # per-expert hidden dim
+    moe_shared_expert: bool = False       # llama4: shared expert alongside routed
+    moe_capacity_factor: float = 1.25
+    moe_aux_loss_coef: float = 0.01
+    moe_router_z_coef: float = 1e-3
+
+    # --- ssm (mamba2 / hymba) ---
+    ssm_state: int = 0                    # N (state dim); 0 => no SSM path
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+
+    # --- embeddings / head ---
+    tie_embeddings: bool = False
+    scale_embeddings: bool = False        # gemma: * sqrt(d_model)
+    embedding_inputs: bool = False        # vlm/audio: frontend stub supplies embeds
+
+    # --- numerics ---
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    rms_eps: float = 1e-6
+
+    # --- training-step knobs (used by the distributed step builders) ---
+    remat: bool = True
+    microbatches: int = 1
+    # §Perf lever: Megatron-SP-style sequence sharding of the residual
+    # stream over the 'model' axis (turns per-layer activation
+    # all-reduces into reduce-scatter/all-gather pairs). Only meaningful
+    # under a mesh with a 'model' axis; off by default.
+    seq_shard_activations: bool = False
+    # §Perf lever: constrain the MoE dispatch/combine buffers to be
+    # expert-sharded over 'model' so the token scatter lowers as
+    # reduce-scatter/all-to-all instead of a full-buffer all-reduce.
+    shard_moe_dispatch: bool = False
+    # Constrain (B,S,V) logits to be vocab-sharded over 'model' (needed
+    # to FIT the 128k-262k-vocab train steps; requires a mesh context).
+    shard_logits_vocab: bool = False
+    # Process MoE dispatch in token chunks (lax.scan) to bound the
+    # (E, C, D) buffers at long-sequence prefill/train; 1 = unchunked.
+    moe_dispatch_chunks: int = 1
+    # Store decode k/v caches in int8 with per-(slot, head) absmax
+    # scales (beyond-paper §Perf lever: halves the decode memory term).
+    kv_quant: bool = False
+    # Use the explicit shard_map all-to-all expert-parallel dispatch
+    # instead of GSPMD's scatter lowering (§Perf B; requires a mesh set
+    # via models.moe_shard_map.set_mesh and n_experts % model == 0).
+    moe_shard_map: bool = False
+
+    # provenance
+    source: str = ""
+
+    # ------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        if self.n_heads:
+            return self.d_model // self.n_heads
+        return 0
+
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        if not self.ssm_state:
+            return 0
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def has_attention(self) -> bool:
+        return self.n_heads > 0
+
+    @property
+    def has_ssm(self) -> bool:
+        return self.ssm_state > 0
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def layer_windows(self) -> Tuple[int, ...]:
+        """Per-layer attention window (0 = full/global) honoring global_every.
+
+        gemma3 pattern: 5 local layers then 1 global, repeating.
+        """
+        if not self.has_attention:
+            return tuple(0 for _ in range(self.n_layers))
+        if not self.sliding_window:
+            return tuple(0 for _ in range(self.n_layers))
+        if not self.global_every:
+            return tuple(self.sliding_window for _ in range(self.n_layers))
+        out = []
+        for i in range(self.n_layers):
+            is_global = (i % self.global_every) == (self.global_every - 1)
+            out.append(0 if is_global else self.sliding_window)
+        return tuple(out)
+
+    def param_count(self) -> int:
+        """Analytic parameter count (used for roofline MODEL_FLOPS)."""
+        d, dh = self.d_model, self.resolved_head_dim
+        n = self.vocab_size * d  # embed
+        if not self.tie_embeddings:
+            n += self.vocab_size * d
+        per_layer = 0
+        if self.has_attention:
+            per_layer += d * self.n_heads * dh            # q
+            per_layer += 2 * d * self.n_kv_heads * dh     # k, v
+            per_layer += self.n_heads * dh * d            # o
+        if self.has_ssm:
+            di = self.d_inner
+            g = 1
+            per_layer += d * (2 * di + 2 * g * self.ssm_state + self.n_ssm_heads)
+            per_layer += self.ssm_conv_width * (di + 2 * g * self.ssm_state)
+            per_layer += di * d                            # out proj
+            per_layer += 2 * self.n_ssm_heads              # A_log, D
+            per_layer += di                                # gated norm
+        if self.is_moe:
+            mult = 3 if self.mlp_gated else 2
+            per_layer += self.n_experts * mult * d * self.moe_d_ff
+            per_layer += d * self.n_experts                # router
+            if self.moe_shared_expert:
+                per_layer += mult * d * self.d_ff
+        elif self.d_ff:
+            mult = 3 if self.mlp_gated else 2
+            per_layer += mult * d * self.d_ff
+        per_layer += 2 * d                                 # two norms
+        n += self.n_layers * per_layer + d                 # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts instead of all)."""
+        if not self.is_moe:
+            return self.param_count()
+        mult = 3 if self.mlp_gated else 2
+        inactive = (self.n_experts - self.moe_top_k) * mult * self.d_model * self.moe_d_ff
+        return self.param_count() - self.n_layers * inactive
+
+
+# ----------------------------------------------------------------------
+# Input shapes assigned to this paper.
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+# ----------------------------------------------------------------------
+# Registry
+# ----------------------------------------------------------------------
+
+ARCH_IDS = (
+    "llama3-8b",
+    "starcoder2-7b",
+    "pixtral-12b",
+    "olmoe-1b-7b",
+    "hymba-1.5b",
+    "gemma3-1b",
+    "musicgen-medium",
+    "llama4-scout-17b-a16e",
+    "nemotron-4-15b",
+    "mamba2-1.3b",
+    # the paper's own experimental scale (SATER trains 3-8B SLMs); this is
+    # the paper-representative config used for the DPO train-step dry-run.
+    "sater-slm-8b",
+)
+
+_REGISTRY: dict = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _REGISTRY:
+        mod = name.replace("-", "_").replace(".", "_")
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[name]
+
+
+def all_arch_ids():
+    return ARCH_IDS
+
+
+def smoke_variant(cfg: ModelConfig) -> ModelConfig:
+    """Reduced same-family variant: 2 layers, d_model<=512, <=4 experts."""
+    d = min(cfg.d_model, 256)
+    n_heads = min(cfg.n_heads, 4) if cfg.n_heads else 0
+    n_kv = min(cfg.n_kv_heads, max(1, n_heads // 2)) if cfg.n_heads else 0
+    if n_heads and cfg.n_kv_heads == cfg.n_heads:
+        n_kv = n_heads  # keep MHA archs MHA
+    head_dim = d // n_heads if n_heads else 0
+    repl = dict(
+        name=cfg.name + "-smoke",
+        n_layers=2,
+        d_model=d,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=head_dim,
+        d_ff=min(cfg.d_ff, 512) if cfg.d_ff else 0,
+        vocab_size=min(cfg.vocab_size, 512),
+        sliding_window=min(cfg.sliding_window, 64) if cfg.sliding_window else 0,
+        global_every=min(cfg.global_every, 2) if cfg.global_every else 0,
+        n_experts=min(cfg.n_experts, 4) if cfg.n_experts else 0,
+        moe_top_k=min(cfg.moe_top_k, 2) if cfg.moe_top_k else 0,
+        moe_d_ff=min(cfg.moe_d_ff, 128) if cfg.moe_d_ff else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_head_dim=min(cfg.ssm_head_dim, 32) if cfg.ssm_state else 64,
+        ssm_chunk=16 if cfg.ssm_state else 128,
+        microbatches=1,
+        remat=False,
+    )
+    return dataclasses.replace(cfg, **repl)

@@ -1,0 +1,25 @@
+"""gemma3-1b — dense GQA(kv=1), 5:1 local:global, 262k vocab
+[hf:google/gemma-3-1b-pt]."""
+
+from repro.configs.base import ModelConfig, register
+
+GEMMA3_1B = register(ModelConfig(
+    name="gemma3-1b",
+    arch_type="dense",
+    n_layers=26,
+    d_model=1152,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=6912,
+    vocab_size=262144,
+    rope_theta=1000000.0,
+    sliding_window=512,
+    global_every=6,           # 5 local : 1 global
+    mlp_gated=True,
+    activation="gelu",
+    tie_embeddings=True,
+    scale_embeddings=True,
+    compute_dtype="bfloat16",
+    source="hf:google/gemma-3-1b-pt",
+))

@@ -1,0 +1,32 @@
+"""hymba-1.5b — hybrid: parallel attention + mamba heads in each block
+[arXiv:2411.13676].
+
+Hymba fuses attention heads and SSM heads inside one layer (outputs are
+mean-fused after per-path normalization).  Most layers use sliding-window
+attention; every global_every-th layer is global (Hymba uses 3 global
+layers; we approximate with the same local:global machinery as gemma3).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+HYMBA_1_5B = register(ModelConfig(
+    name="hymba-1.5b",
+    arch_type="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    head_dim=64,
+    d_ff=5504,
+    vocab_size=32001,
+    rope_theta=10000.0,
+    sliding_window=1024,
+    global_every=11,          # ~3 global layers out of 32
+    ssm_state=16,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    mlp_gated=True,
+    activation="silu",
+    compute_dtype="bfloat16",
+    source="arXiv:2411.13676 (Hymba: A Hybrid-head Architecture for SLMs)",
+))

@@ -1,0 +1,20 @@
+"""llama3-8b — dense GQA, 128k vocab [arXiv:2407.21783]."""
+
+from repro.configs.base import ModelConfig, register
+
+LLAMA3_8B = register(ModelConfig(
+    name="llama3-8b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    mlp_gated=True,
+    activation="silu",
+    compute_dtype="bfloat16",
+    source="arXiv:2407.21783 (The Llama 3 Herd of Models)",
+))

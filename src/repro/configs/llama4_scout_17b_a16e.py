@@ -1,0 +1,32 @@
+"""llama4-scout-17b-a16e — MoE 16 experts top-1 + shared expert, early
+fusion [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+17B *active* / ~109B total.  Every layer routes to 1 of 16 experts and
+additionally applies a shared expert.  Early-fusion multimodal inputs are
+modeled as embedding streams (``embedding_inputs=True``) per the brief's
+frontend-stub carve-out.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+LLAMA4_SCOUT = register(ModelConfig(
+    name="llama4-scout-17b-a16e",
+    arch_type="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=8192,                # shared-expert hidden dim
+    vocab_size=202048,
+    rope_theta=500000.0,
+    n_experts=16,
+    moe_top_k=1,
+    moe_d_ff=8192,
+    moe_shared_expert=True,
+    mlp_gated=True,
+    activation="silu",
+    embedding_inputs=True,
+    compute_dtype="bfloat16",
+    source="hf:meta-llama/Llama-4-Scout-17B-16E",
+))

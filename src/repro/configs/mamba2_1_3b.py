@@ -1,0 +1,28 @@
+"""mamba2-1.3b — attention-free SSM with SSD (state-space duality)
+[arXiv:2405.21060].
+
+48 layers of pure Mamba2 blocks: in_proj -> causal conv1d -> SSD scan ->
+gated RMSNorm -> out_proj.  d_inner = 2*d_model = 4096, head_dim 64 =>
+64 SSM heads, state N=128.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+MAMBA2_1_3B = register(ModelConfig(
+    name="mamba2-1.3b",
+    arch_type="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,               # attention-free
+    n_kv_heads=0,
+    d_ff=0,                  # no separate MLP; the block IS the mixer
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_head_dim=64,
+    ssm_conv_width=4,
+    ssm_chunk=128,
+    tie_embeddings=True,
+    compute_dtype="bfloat16",
+    source="arXiv:2405.21060 (Transformers are SSMs / Mamba-2)",
+))

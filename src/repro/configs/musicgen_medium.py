@@ -1,0 +1,29 @@
+"""musicgen-medium — decoder-only transformer over EnCodec tokens
+[arXiv:2306.05284].
+
+The EnCodec conv codec is a stub per the brief: ``input_specs`` supplies
+precomputed frame embeddings (sum of the delayed codebook embeddings), so
+``embedding_inputs=True``; the output head predicts the 2048-entry
+codebook vocabulary.  MusicGen's decoder is MHA (kv == heads).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+MUSICGEN_MEDIUM = register(ModelConfig(
+    name="musicgen-medium",
+    arch_type="audio",
+    n_layers=48,
+    d_model=1536,
+    n_heads=24,
+    n_kv_heads=24,
+    head_dim=64,
+    d_ff=6144,
+    vocab_size=2048,
+    rope_theta=10000.0,
+    mlp_gated=False,
+    activation="gelu",
+    norm="layernorm",
+    embedding_inputs=True,
+    compute_dtype="bfloat16",
+    source="arXiv:2306.05284 (Simple and Controllable Music Generation)",
+))

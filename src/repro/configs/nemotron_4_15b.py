@@ -1,0 +1,22 @@
+"""nemotron-4-15b — dense GQA, squared-ReLU non-gated MLP, LayerNorm
+[arXiv:2402.16819]."""
+
+from repro.configs.base import ModelConfig, register
+
+NEMOTRON_4_15B = register(ModelConfig(
+    name="nemotron-4-15b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=24576,
+    vocab_size=256000,
+    rope_theta=10000.0,
+    mlp_gated=False,
+    activation="relu2",
+    norm="layernorm",
+    compute_dtype="bfloat16",
+    source="arXiv:2402.16819 (Nemotron-4 15B Technical Report)",
+))

@@ -1,0 +1,23 @@
+"""olmoe-1b-7b — MoE, 64 experts top-8 [arXiv:2409.02060]."""
+
+from repro.configs.base import ModelConfig, register
+
+OLMOE_1B_7B = register(ModelConfig(
+    name="olmoe-1b-7b",
+    arch_type="moe",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=0,                 # every FFN is MoE
+    vocab_size=50304,
+    rope_theta=10000.0,
+    n_experts=64,
+    moe_top_k=8,
+    moe_d_ff=1024,
+    mlp_gated=True,
+    activation="silu",
+    compute_dtype="bfloat16",
+    source="arXiv:2409.02060 (OLMoE: Open Mixture-of-Experts Language Models)",
+))

@@ -1,0 +1,29 @@
+"""pixtral-12b — VLM: pixtral-ViT frontend + mistral-nemo decoder
+[hf:mistralai/Pixtral-12B-2409].
+
+Per the brief, only the transformer BACKBONE is modeled; the vision
+encoder + projector are a stub — ``input_specs`` supplies precomputed
+patch embeddings interleaved with text-token embeddings
+(``embedding_inputs=True``).  Mistral-Nemo decoder: head_dim 128
+(d_model 5120 with 32 heads -> q-proj 5120->4096).
+"""
+
+from repro.configs.base import ModelConfig, register
+
+PIXTRAL_12B = register(ModelConfig(
+    name="pixtral-12b",
+    arch_type="vlm",
+    n_layers=40,
+    d_model=5120,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=131072,
+    rope_theta=1000000.0,
+    mlp_gated=True,
+    activation="silu",
+    embedding_inputs=True,
+    compute_dtype="bfloat16",
+    source="hf:mistralai/Pixtral-12B-2409",
+))

@@ -1,0 +1,26 @@
+"""sater-slm-8b — the paper's own experimental scale.
+
+SATER fine-tunes Llama-3.1-8B-Instruct / Qwen2.5-7B / Qwen2.5-3B with
+LoRA r=8.  This config is the paper-representative entry used for the
+DPO train-step dry-run (policy = base (+) LoRA, reference = base), shape
+train_4k.  Architecturally identical to llama3-8b.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+SATER_SLM_8B = register(ModelConfig(
+    name="sater-slm-8b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    mlp_gated=True,
+    activation="silu",
+    compute_dtype="bfloat16",
+    source="SATER (EMNLP 2025) experimental setup; arch = Llama-3.1-8B",
+))

@@ -1,0 +1,24 @@
+"""starcoder2-7b — dense GQA, RoPE [arXiv:2402.19173].
+
+StarCoder2 uses a non-gated GELU MLP and LayerNorm.
+"""
+
+from repro.configs.base import ModelConfig, register
+
+STARCODER2_7B = register(ModelConfig(
+    name="starcoder2-7b",
+    arch_type="dense",
+    n_layers=32,
+    d_model=4608,
+    n_heads=36,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=18432,
+    vocab_size=49152,
+    rope_theta=100000.0,
+    mlp_gated=False,
+    activation="gelu",
+    norm="layernorm",
+    compute_dtype="bfloat16",
+    source="arXiv:2402.19173 (StarCoder 2 and The Stack v2)",
+))

@@ -1,0 +1,229 @@
+"""Routing baselines the paper compares against (Table 1 / Table 7).
+
+Pre-generation:
+  * BERTRouter   — transformer encoder classifier on the prompt (the
+    paper trains a BERT; ours reuses the model substrate at ~BERT-tiny
+    scale with a pooled binary head).
+  * KNNRouter    — hashed char-n-gram features, k-NN over train labels
+    (RouterBench-style).
+  * HybridLLMRouter — MLP on the same features trained with SOFT labels
+    (empirical SLM accuracy from multi-sampling), per Ding et al. 2024.
+Cascade-adjacent scorers:
+  * margin_scores   — top1-top2 vote margin from SC samples
+    (margin-sampling baseline, Table 7).
+  * FrugalGPTScorer — correctness classifier on (prompt, generated
+    answer) pairs, per Chen et al. 2023.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.voting import vote_scores
+from repro.data.tokenizer import CharTokenizer, default_tokenizer
+from repro.models import model as model_lib
+from repro.training.optimizer import adamw, cosine_warmup_schedule
+
+
+# ----------------------------------------------------------------------
+# Hashed n-gram featurizer (shared by KNN / HybridLLM / FrugalGPT)
+# ----------------------------------------------------------------------
+
+def featurize(texts: Sequence[str], dim: int = 512, n: int = 3) -> np.ndarray:
+    out = np.zeros((len(texts), dim), np.float32)
+    for i, t in enumerate(texts):
+        for j in range(max(len(t) - n + 1, 1)):
+            h = int(hashlib.blake2s(t[j:j + n].encode(), digest_size=4
+                                    ).hexdigest(), 16)
+            out[i, h % dim] += 1.0
+    norms = np.linalg.norm(out, axis=1, keepdims=True)
+    return out / np.maximum(norms, 1e-8)
+
+
+# ----------------------------------------------------------------------
+# KNN
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KNNRouter:
+    k: int = 15
+    dim: int = 512
+
+    def fit(self, texts: Sequence[str], labels: Sequence[float]):
+        self.x = featurize(texts, self.dim)
+        self.y = np.asarray(labels, np.float32)
+        return self
+
+    def score(self, texts: Sequence[str]) -> np.ndarray:
+        q = featurize(texts, self.dim)
+        sims = q @ self.x.T
+        idx = np.argsort(-sims, axis=1)[:, :self.k]
+        return self.y[idx].mean(axis=1)
+
+
+# ----------------------------------------------------------------------
+# MLP on soft labels (HybridLLM)
+# ----------------------------------------------------------------------
+
+class HybridLLMRouter:
+    def __init__(self, dim: int = 512, hidden: int = 128, epochs: int = 200,
+                 lr: float = 3e-3, seed: int = 0):
+        self.dim, self.hidden, self.epochs, self.lr = dim, hidden, epochs, lr
+        self.seed = seed
+
+    def fit(self, texts: Sequence[str], soft_labels: Sequence[float]):
+        x = jnp.asarray(featurize(texts, self.dim))
+        y = jnp.asarray(np.asarray(soft_labels, np.float32))
+        key = jax.random.PRNGKey(self.seed)
+        k1, k2 = jax.random.split(key)
+        params = {
+            "w1": jax.random.normal(k1, (self.dim, self.hidden)) * 0.05,
+            "b1": jnp.zeros((self.hidden,)),
+            "w2": jax.random.normal(k2, (self.hidden, 1)) * 0.05,
+            "b2": jnp.zeros((1,)),
+        }
+
+        def logit(p, x):
+            h = jnp.tanh(x @ p["w1"] + p["b1"])
+            return (h @ p["w2"] + p["b2"])[:, 0]
+
+        def loss(p):
+            z = logit(p, x)
+            return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+        opt = adamw(lambda s: self.lr, weight_decay=1e-4, clip_norm=0.0)
+        state = opt.init(params)
+
+        @jax.jit
+        def step(params, state):
+            g = jax.grad(loss)(params)
+            return opt.update(g, state, params)
+
+        for _ in range(self.epochs):
+            params, state = step(params, state)
+        self.params = params
+        self._logit = jax.jit(logit)
+        return self
+
+    def score(self, texts: Sequence[str]) -> np.ndarray:
+        x = jnp.asarray(featurize(texts, self.dim))
+        return np.asarray(jax.nn.sigmoid(self._logit(self.params, x)))
+
+
+# ----------------------------------------------------------------------
+# Transformer ("BERT") classifier on the model substrate
+# ----------------------------------------------------------------------
+
+def _cls_config(vocab: int) -> ModelConfig:
+    return ModelConfig(
+        name="bert-router", arch_type="dense", n_layers=2, d_model=128,
+        n_heads=4, n_kv_heads=4, head_dim=32, d_ff=256, vocab_size=vocab,
+        remat=False, source="baseline classifier")
+
+
+class BERTRouter:
+    def __init__(self, tokenizer: Optional[CharTokenizer] = None,
+                 max_len: int = 256, epochs: int = 8, batch: int = 32,
+                 lr: float = 3e-4, seed: int = 0):
+        self.tok = tokenizer or default_tokenizer()
+        self.max_len, self.epochs, self.batch, self.lr = max_len, epochs, batch, lr
+        self.seed = seed
+        self.cfg = _cls_config(self.tok.vocab_size)
+
+    def _encode(self, texts):
+        out = np.zeros((len(texts), self.max_len), np.int32)
+        mask = np.zeros((len(texts), self.max_len), np.float32)
+        for i, t in enumerate(texts):
+            ids = self.tok.encode(t, bos=True)[: self.max_len]
+            out[i, : len(ids)] = ids
+            mask[i, : len(ids)] = 1.0
+        return out, mask
+
+    def fit(self, texts: Sequence[str], labels: Sequence[float]):
+        x, m = self._encode(texts)
+        y = np.asarray(labels, np.float32)
+        key = jax.random.PRNGKey(self.seed)
+        params = {
+            "lm": model_lib.init_params(self.cfg, key),
+            "head": jax.random.normal(key, (self.cfg.d_model,)) * 0.02,
+            "bias": jnp.zeros(()),
+        }
+
+        def logit(p, toks, mask):
+            _, _, hidden = model_lib.forward(p["lm"], self.cfg, tokens=toks,
+                                             return_hidden=True)
+            pooled = jnp.sum(hidden * mask[..., None], 1) / jnp.maximum(
+                jnp.sum(mask, 1, keepdims=True), 1.0)
+            return pooled @ p["head"] + p["bias"]
+
+        def loss(p, toks, mask, yy):
+            z = logit(p, toks, mask)
+            return jnp.mean(jnp.maximum(z, 0) - z * yy +
+                            jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+        n_steps = max(1, (len(texts) // self.batch) * self.epochs)
+        opt = adamw(cosine_warmup_schedule(self.lr, n_steps), clip_norm=1.0)
+        state = opt.init(params)
+
+        @jax.jit
+        def step(params, state, toks, mask, yy):
+            g = jax.grad(loss)(params, toks, mask, yy)
+            return opt.update(g, state, params)
+
+        rng = np.random.RandomState(self.seed)
+        for _ in range(self.epochs):
+            order = rng.permutation(len(texts))
+            for i in range(0, len(order) - self.batch + 1, self.batch):
+                j = order[i:i + self.batch]
+                params, state = step(params, state, jnp.asarray(x[j]),
+                                     jnp.asarray(m[j]), jnp.asarray(y[j]))
+        self.params = params
+        self._logit = jax.jit(logit)
+        return self
+
+    def score(self, texts: Sequence[str]) -> np.ndarray:
+        x, m = self._encode(texts)
+        out = []
+        for i in range(0, len(texts), 64):
+            z = self._logit(self.params, jnp.asarray(x[i:i + 64]),
+                            jnp.asarray(m[i:i + 64]))
+            out.append(np.asarray(jax.nn.sigmoid(z)))
+        return np.concatenate(out)
+
+
+# ----------------------------------------------------------------------
+# Margin sampling + FrugalGPT
+# ----------------------------------------------------------------------
+
+def margin_scores(votes_by_item) -> np.ndarray:
+    """Top1-top2 weighted-vote margin from SC samples."""
+    out = []
+    for votes in votes_by_item:
+        scores, _ = vote_scores(votes)
+        vals = sorted(scores.values(), reverse=True)
+        if not vals:
+            out.append(0.0)
+        elif len(vals) == 1:
+            out.append(vals[0])
+        else:
+            out.append(vals[0] - vals[1])
+    return np.asarray(out, np.float32)
+
+
+class FrugalGPTScorer(HybridLLMRouter):
+    """Correctness classifier on (prompt || answer) text."""
+
+    def fit_pairs(self, prompts, answers, correct):
+        texts = [p + " || " + a for p, a in zip(prompts, answers)]
+        return super().fit(texts, np.asarray(correct, np.float32))
+
+    def score_pairs(self, prompts, answers):
+        texts = [p + " || " + a for p, a in zip(prompts, answers)]
+        return super().score(texts)

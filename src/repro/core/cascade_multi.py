@@ -1,0 +1,126 @@
+"""Beyond-paper extension: multi-tier cascading.
+
+The paper's Limitation §1 names multi-model collaborative routing as
+future work.  This module generalizes SATER's two-model cascade to an
+ordered chain of tiers
+
+    tier_0 (cheapest SLM) -> tier_1 -> ... -> tier_{T-1} (terminal LLM)
+
+where every non-terminal tier is a SATER-trained model queried with its
+own (tau, mode, K) policy; a query falls through to the next tier when
+the confidence-weighted vote stays below that tier's threshold.  The
+terminal tier always answers.
+
+Semantics kept from the paper's single-hop cascade:
+  * per-tier K parallel samples + RCV/FCV weighted voting with early
+    stopping (voting.decide_with_early_stop),
+  * latency is token-count-based: AGL accumulates the *decision* latency
+    of every tier that ran plus the accepted tier's generation; AROL is
+    the overhead versus calling the terminal tier directly,
+  * cost is token-level per tier with per-tier prices.
+
+The two-tier special case reproduces routing.cascade_outcomes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import voting
+from repro.core.confidence import fcv_schedule, rcv_schedule
+from repro.core.routing import SLM, sample_k
+from repro.data.pipeline import format_prompt
+from repro.data.tasks import TaskItem
+
+
+@dataclasses.dataclass
+class Tier:
+    """A non-terminal cascade tier: a SATER model + its query policy."""
+    slm: SLM
+    tau: float = 0.6
+    mode: str = "FCV"            # RCV | FCV
+    k: int = 10
+    out_price: float = 0.08      # $ / 1M output tokens
+    in_price: float = 0.02
+
+    def levels(self) -> List[Optional[float]]:
+        return rcv_schedule(self.k) if self.mode == "RCV" \
+            else fcv_schedule(self.k)
+
+
+@dataclasses.dataclass
+class TerminalTier:
+    """The always-answers tier (API LLM or oracle)."""
+    llm: object                  # OracleLLM / ModelLLM
+    out_price: float = 1.10
+    in_price: float = 0.275
+
+
+@dataclasses.dataclass
+class MultiOutcome:
+    accepted_tier: int           # index in the chain (T-1 = terminal)
+    correct: bool
+    cost: float                  # absolute $ for this question
+    agl: int                     # generation latency if non-terminal won
+    arol: int                    # overhead latency if terminal answered
+
+
+def run_cascade(tiers: Sequence[Tier], terminal: TerminalTier,
+                items: Sequence[TaskItem], key) -> List[MultiOutcome]:
+    """Drive every question through the tier chain (batched per tier)."""
+    n = len(items)
+    votes_per_tier = []
+    for t_i, tier in enumerate(tiers):
+        key, sub = jax.random.split(key)
+        votes_per_tier.append(
+            sample_k(tier.slm, items, tier.levels(), sub, seed_offset=t_i))
+
+    out: List[MultiOutcome] = []
+    for qi, item in enumerate(items):
+        prompt_toks = len(format_prompt(item))
+        cost = 0.0
+        overhead = 0          # decision latency accumulated on the way down
+        decided: Optional[MultiOutcome] = None
+        for t_i, tier in enumerate(tiers):
+            dec = voting.decide_with_early_stop(votes_per_tier[t_i][qi],
+                                                tier.tau)
+            # tier cost: prompt once (KV cache shared across samples) +
+            # the sampled tokens actually generated before the decision
+            cost += (tier.in_price * prompt_toks
+                     + tier.out_price * dec.used_tokens) / 1e6
+            if dec.accepted:
+                decided = MultiOutcome(
+                    accepted_tier=t_i,
+                    correct=dec.answer == item.answer,
+                    cost=cost,
+                    agl=overhead + dec.decision_tokens,
+                    arol=0)
+                break
+            overhead += dec.decision_tokens
+        if decided is None:
+            lc, lt = terminal.llm.answer(item)
+            cost += (terminal.in_price * prompt_toks
+                     + terminal.out_price * lt) / 1e6
+            decided = MultiOutcome(
+                accepted_tier=len(tiers), correct=lc, cost=cost,
+                agl=0, arol=overhead)
+        out.append(decided)
+    return out
+
+
+def summarize(outcomes: Sequence[MultiOutcome], n_tiers: int) -> dict:
+    accepted = [o for o in outcomes if o.accepted_tier < n_tiers]
+    fell = [o for o in outcomes if o.accepted_tier == n_tiers]
+    return {
+        "accuracy": float(np.mean([o.correct for o in outcomes])),
+        "cost": float(sum(o.cost for o in outcomes)),
+        "tier_histogram": [
+            sum(1 for o in outcomes if o.accepted_tier == t)
+            for t in range(n_tiers + 1)],
+        "AGL": float(np.mean([o.agl for o in accepted])) if accepted else 0.0,
+        "AROL": float(np.mean([o.arol for o in fell])) if fell else 0.0,
+    }

@@ -1,0 +1,42 @@
+"""Behavioural confidence extraction (SATER's confidence channel).
+
+SATER never reads logits: a Stage-II model prompted at level p either
+answers (asserting confidence >= p) or emits the rejection template.
+This keeps the router API-compatible (works through a text interface),
+which is why the same trained model serves both routing modes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.data.tasks import extract_answer, is_rejection
+
+
+@dataclasses.dataclass
+class Vote:
+    answer: Optional[str]     # None => rejected / unparseable
+    confidence: float         # the prompted level p_k
+    gen_tokens: int           # output length (latency/cost proxy)
+    text: str = ""
+
+    @property
+    def rejected(self) -> bool:
+        return self.answer is None
+
+
+def parse_vote(text: str, prompted_level: float, gen_tokens: int) -> Vote:
+    if is_rejection(text):
+        return Vote(None, prompted_level, gen_tokens, text)
+    return Vote(extract_answer(text), prompted_level, gen_tokens, text)
+
+
+def rcv_schedule(k: int = 10):
+    """Ranged Confidence Voting: levels 0.1 .. 1.0."""
+    return [round((i + 1) / k, 1) for i in range(k)]
+
+
+def fcv_schedule(k: int = 10):
+    """Fixed Confidence Voting: all at 1.0."""
+    return [1.0] * k

@@ -1,0 +1,46 @@
+"""Token-level cost model (paper §2.1).
+
+Defaults follow the paper: SLM $0.08 / M output tokens (Groq pricing),
+LLM $1.10 (DeepSeek-V3) => output-cost ratio 1:13.75; input price is 1/4
+of the respective output price.  Alternative ratios 1:25/1:50/1:100 are
+explored in §5.1 — build them with :func:`with_ratio`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    slm_out: float = 0.08
+    llm_out: float = 1.10
+    input_fraction: float = 0.25
+
+    @property
+    def slm_in(self) -> float:
+        return self.slm_out * self.input_fraction
+
+    @property
+    def llm_in(self) -> float:
+        return self.llm_out * self.input_fraction
+
+    @property
+    def ratio(self) -> float:
+        return self.llm_out / self.slm_out
+
+    def slm_cost(self, t_in: int, t_out: int) -> float:
+        return self.slm_in * t_in + self.slm_out * t_out
+
+    def llm_cost(self, t_in: int, t_out: float) -> float:
+        return self.llm_in * t_in + self.llm_out * t_out
+
+
+def with_ratio(ratio: float, llm_out: float = 1.10) -> CostModel:
+    """Cost model with a given LLM:SLM output-price ratio."""
+    return CostModel(slm_out=llm_out / ratio, llm_out=llm_out)
+
+
+DEFAULT = CostModel()          # 1:13.75
+RATIOS = {13.75: DEFAULT, 25: with_ratio(25), 50: with_ratio(50),
+          100: with_ratio(100)}

@@ -1,0 +1,124 @@
+"""SATER Stage I: shortest-response preference optimization.
+
+Loss (paper Eq. 4-5):  L = L_DPO + lambda * L_SFT
+  * L_DPO: sigmoid preference loss, beta = 1.0,
+  * L_SFT: NLL of the chosen (shortest-correct) response,
+  * lambda = 0.2 stabilizes training (paper: lower beta/lambda collapses
+    output quality).
+
+Reference model: with LoRA, pi_ref == the base model (adapters off) and
+pi_theta == base (+) adapters, so one weight set serves both — two
+forward passes, no second model copy (DESIGN.md §2).
+
+Batches are token-level:
+  {"chosen": (B,S), "chosen_mask": (B,S), "rejected": (B,S),
+   "rejected_mask": (B,S)}
+where *_mask is 1 on response tokens (the prompt prefix and padding are
+excluded from both the preference log-ratios and the SFT term).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.training import lora as lora_lib
+from repro.training.optimizer import Optimizer
+
+
+@dataclasses.dataclass(frozen=True)
+class DPOConfig:
+    beta: float = 1.0
+    sft_lambda: float = 0.2
+
+
+def sequence_logprob(params, cfg: ModelConfig, tokens, resp_mask):
+    """Sum log p(token_t | <t) over response tokens.  tokens: (B,S).
+
+    Same fused max/exp-sum/one-hot-dot formulation as model.lm_loss: no
+    f32 (B,S,V) materialization and vocab-sharded reductions under a
+    mesh (cfg.shard_logits_vocab)."""
+    inputs = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    mask = resp_mask[:, 1:].astype(jnp.float32)
+    logits, _ = model_lib.forward(params, cfg, tokens=inputs)
+    logits = model_lib._maybe_vocab_shard(cfg, logits)
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    onehot = labels[..., None] == jnp.arange(lf.shape[-1], dtype=labels.dtype)
+    label_logit = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)
+    ll = label_logit - lse
+    return jnp.sum(ll * mask, axis=-1), jnp.sum(mask, axis=-1)
+
+
+def dpo_loss(policy_params, ref_params, cfg: ModelConfig, batch,
+             dcfg: DPOConfig):
+    """Combined DPO + SFT loss on one preference batch."""
+    b = batch["chosen"].shape[0]
+    # one forward for policy, one for reference, each on [chosen; rejected]
+    tokens = jnp.concatenate([batch["chosen"], batch["rejected"]], axis=0)
+    masks = jnp.concatenate([batch["chosen_mask"], batch["rejected_mask"]], axis=0)
+    lp_pol, ntok = sequence_logprob(policy_params, cfg, tokens, masks)
+    lp_ref, _ = sequence_logprob(ref_params, cfg, tokens, masks)
+    lp_ref = jax.lax.stop_gradient(lp_ref)
+
+    pol_c, pol_r = lp_pol[:b], lp_pol[b:]
+    ref_c, ref_r = lp_ref[:b], lp_ref[b:]
+    logits = dcfg.beta * ((pol_c - ref_c) - (pol_r - ref_r))
+    pref_loss = -jnp.mean(jax.nn.log_sigmoid(logits))
+    sft_loss = -jnp.mean(pol_c / jnp.maximum(ntok[:b], 1.0))
+    loss = pref_loss + dcfg.sft_lambda * sft_loss
+    metrics = {
+        "dpo_loss": pref_loss,
+        "sft_loss": sft_loss,
+        "reward_margin": jnp.mean(logits) / dcfg.beta,
+        "pref_acc": jnp.mean((logits > 0).astype(jnp.float32)),
+    }
+    return loss, metrics
+
+
+def make_dpo_step(cfg: ModelConfig, opt: Optimizer, lcfg: lora_lib.LoraConfig,
+                  dcfg: DPOConfig = DPOConfig()):
+    """LoRA DPO step.  state = {base, lora, opt_state, step}.
+
+    The reference forward reuses ``base`` directly (adapters off).
+    """
+
+    def step(state, batch):
+        def lf(lora_tree):
+            merged = lora_lib.merge(state["base"], lora_tree, lcfg)
+            return dpo_loss(merged, state["base"], cfg, batch, dcfg)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["lora"])
+        new_lora, new_opt = opt.update(grads, state["opt_state"], state["lora"])
+        metrics = dict(metrics, loss=loss)
+        return {"base": state["base"], "lora": new_lora, "opt_state": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+def make_full_dpo_step(cfg: ModelConfig, opt: Optimizer,
+                       dcfg: DPOConfig = DPOConfig()):
+    """Full-parameter DPO step (used for the tiny CPU-scale models where
+    LoRA capacity would bottleneck the reproduction).
+
+    state = {params, ref_params, opt_state, step}.
+    """
+
+    def step(state, batch):
+        def lf(p):
+            return dpo_loss(p, state["ref_params"], cfg, batch, dcfg)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        new_params, new_opt = opt.update(grads, state["opt_state"], state["params"])
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "ref_params": state["ref_params"],
+                "opt_state": new_opt, "step": state["step"] + 1}, metrics
+
+    return step

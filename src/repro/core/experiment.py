@@ -1,0 +1,253 @@
+"""Experiment pipeline: trains the tiny CPU-scale SLMs through the full
+SATER recipe and caches every artifact, so examples/ and benchmarks/
+share one set of models.
+
+Stages (mirrors the paper; DESIGN.md §1):
+  base    : SFT on mostly-verbose responses over the 4 in-domain
+            benchmarks (the "Instruct model" stand-in)
+  stage1  : sample K/question -> shortest-correct vs longest-incorrect
+            preference pairs -> DPO(beta=1) + 0.2*SFT   ["TE" model]
+  stage2  : resample with stage1 -> empirical accuracies -> confidence-
+            conditioned refusal SFT                      [SATER model]
+
+Artifacts are .npz checkpoints under --artifacts (default
+benchmarks/artifacts), keyed by the experiment scale tag.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import random
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import routing as routing_lib
+from repro.core.dpo import DPOConfig, make_full_dpo_step
+from repro.core.preferences import SampledQuestion, build_preference_pairs
+from repro.core.refusal import build_refusal_dataset
+from repro.data import tasks as tasks_lib
+from repro.data.pipeline import format_prompt, preference_batches, sft_batches
+from repro.data.tokenizer import default_tokenizer
+from repro.models import model as model_lib
+from repro.serving.engine import GenConfig
+from repro.training import checkpoint
+from repro.training.optimizer import adamw, cosine_warmup_schedule
+from repro.training.trainer import make_sft_step, train_loop
+
+
+@dataclasses.dataclass
+class ExperimentScale:
+    tag: str = "small"
+    d_model: int = 160
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 512
+    # data / training sizes
+    n_train_per_benchmark: int = 3000
+    n_stage_questions: int = 240      # questions sampled for stages I/II
+    n_eval: int = 60                  # eval questions per benchmark
+    sft_epochs: int = 3
+    dpo_epochs: int = 2
+    refusal_epochs: int = 3
+    batch_size: int = 16
+    max_len: int = 192
+    stage2_max_len: int = 224    # conf-prompt + sampled answer fits
+    k_samples: int = 8
+    max_new_tokens: int = 80
+    lane_budget: int = 80
+    seed: int = 0
+
+
+TINY = ExperimentScale(tag="tiny", d_model=128, n_layers=4, d_ff=384,
+                       n_train_per_benchmark=2000, n_stage_questions=320,
+                       n_eval=40, sft_epochs=4, dpo_epochs=6,
+                       refusal_epochs=2, k_samples=10, max_new_tokens=72,
+                       max_len=160, stage2_max_len=208)
+SMALL = ExperimentScale()
+# a larger local model usable as M_l (ModelLLM)
+LLM_SCALE = ExperimentScale(tag="llm", d_model=256, n_layers=6, n_heads=8,
+                            d_ff=768, sft_epochs=4)
+
+
+def model_config(x: ExperimentScale) -> ModelConfig:
+    tok = default_tokenizer()
+    return ModelConfig(
+        name=f"slm-{x.tag}", arch_type="dense", n_layers=x.n_layers,
+        d_model=x.d_model, n_heads=x.n_heads, n_kv_heads=x.n_heads,
+        head_dim=x.d_model // x.n_heads, d_ff=x.d_ff,
+        vocab_size=tok.vocab_size, remat=False,
+        source="SATER CPU-scale reproduction model")
+
+
+def make_slm(params, x: ExperimentScale, temperature: float = 0.7) -> routing_lib.SLM:
+    return routing_lib.SLM(
+        params, model_config(x), default_tokenizer(),
+        GenConfig(max_new_tokens=x.max_new_tokens, temperature=temperature,
+                  top_p=1.0),
+        max_prompt_len=x.max_len, lane_budget=x.lane_budget)
+
+
+# ----------------------------------------------------------------------
+# Data
+# ----------------------------------------------------------------------
+
+def base_sft_pairs(x: ExperimentScale) -> List[Tuple[str, str]]:
+    """Mostly-verbose SFT data (the paper's base models are verbose)."""
+    rng = random.Random(x.seed + 17)
+    items = tasks_lib.make_training_mix(x.n_train_per_benchmark, seed=x.seed)
+    pairs = []
+    for it in items:
+        if rng.random() < 0.8:
+            resp = it.verbose
+        else:
+            resp = it.response(rng.randint(0, len(it.steps)))
+        pairs.append((format_prompt(it), resp))
+    return pairs
+
+
+def stage_questions(x: ExperimentScale) -> List[tasks_lib.TaskItem]:
+    per = max(10, x.n_stage_questions // len(tasks_lib.IN_DOMAIN))
+    items = []
+    for b in tasks_lib.IN_DOMAIN:
+        items.extend(tasks_lib.make_benchmark(b, per, seed=x.seed + 101))
+    return items
+
+
+def eval_items(x: ExperimentScale, benchmark: str) -> List[tasks_lib.TaskItem]:
+    return tasks_lib.make_benchmark(benchmark, x.n_eval, seed=x.seed + 7777)
+
+
+# ----------------------------------------------------------------------
+# Training stages
+# ----------------------------------------------------------------------
+
+def train_base(x: ExperimentScale, log=print):
+    cfg = model_config(x)
+    tok = default_tokenizer()
+    pairs = base_sft_pairs(x)
+    steps_per_epoch = len(pairs) // x.batch_size
+    total = steps_per_epoch * x.sft_epochs
+    opt = adamw(cosine_warmup_schedule(3e-3, total), weight_decay=0.01)
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(x.seed))
+    state = {"params": params, "opt_state": opt.init(params),
+             "step": jnp.int32(0)}
+    step = make_sft_step(cfg, opt)
+    batches = ({k: jnp.asarray(v) for k, v in b.items()}
+               for b in sft_batches(pairs, tok, x.batch_size, x.max_len,
+                                    seed=x.seed, epochs=x.sft_epochs))
+
+    def ckpt(state, i):
+        checkpoint.save(f"benchmarks/artifacts/{x.tag}_base_step{i}",
+                        state["params"])
+
+    state, hist = train_loop(step, state, batches, log_every=50, log_fn=log,
+                             checkpoint_every=250, checkpoint_fn=ckpt)
+    return state["params"], hist
+
+
+def run_stage1(x: ExperimentScale, base_params, log=print):
+    """Long-to-short DPO.  Returns (params, sampled_questions, pairs)."""
+    cfg = model_config(x)
+    tok = default_tokenizer()
+    slm = make_slm(base_params, x)
+    items = stage_questions(x)
+    log(f"[stage1] sampling {len(items)} questions x {x.k_samples}")
+    samples = routing_lib.collect_samples(slm, items, x.k_samples,
+                                          jax.random.PRNGKey(x.seed + 1))
+    prefs = build_preference_pairs(samples)
+    log(f"[stage1] {len(prefs)} preference pairs "
+        f"(mean acc {np.mean([s.accuracy for s in samples]):.2f})")
+    if not prefs:
+        log("[stage1] WARNING: no pairs; returning base params")
+        return base_params, samples, prefs
+    steps_per_epoch = max(1, len(prefs) // x.batch_size)
+    total = steps_per_epoch * x.dpo_epochs
+    opt = adamw(cosine_warmup_schedule(1e-4, total), weight_decay=0.01)
+    step = make_full_dpo_step(cfg, opt, DPOConfig())
+    state = {"params": base_params, "ref_params": base_params,
+             "opt_state": opt.init(base_params), "step": jnp.int32(0)}
+    batches = ({k: jnp.asarray(v) for k, v in b.items()}
+               for b in preference_batches(prefs, tok, min(x.batch_size, 8),
+                                           x.max_len, seed=x.seed,
+                                           epochs=x.dpo_epochs))
+    state, hist = train_loop(step, state, batches, log_every=20, log_fn=log)
+    return state["params"], samples, prefs
+
+
+def run_stage2(x: ExperimentScale, stage1_params, log=print):
+    """Confidence-aware refusal SFT.  Returns params."""
+    cfg = model_config(x)
+    tok = default_tokenizer()
+    slm = make_slm(stage1_params, x)
+    items = stage_questions(x)
+    log(f"[stage2] resampling {len(items)} questions x {x.k_samples}")
+    samples = routing_lib.collect_samples(slm, items, x.k_samples,
+                                          jax.random.PRNGKey(x.seed + 2))
+    data = build_refusal_dataset(samples, seed=x.seed)
+    log(f"[stage2] {len(data)} refusal-SFT examples")
+    steps_per_epoch = max(1, len(data) // x.batch_size)
+    total = steps_per_epoch * x.refusal_epochs
+    opt = adamw(cosine_warmup_schedule(1e-3, total), weight_decay=0.01)
+    step = make_sft_step(cfg, opt)
+    state = {"params": stage1_params, "opt_state": opt.init(stage1_params),
+             "step": jnp.int32(0)}
+    batches = ({k: jnp.asarray(v) for k, v in b.items()}
+               for b in sft_batches(data, tok, x.batch_size, x.stage2_max_len,
+                                    seed=x.seed + 3, epochs=x.refusal_epochs))
+    state, hist = train_loop(step, state, batches, log_every=50, log_fn=log)
+    return state["params"]
+
+
+# ----------------------------------------------------------------------
+# Cached pipeline
+# ----------------------------------------------------------------------
+
+def artifact_path(artifacts: str, x: ExperimentScale, name: str) -> str:
+    return os.path.join(artifacts, f"{x.tag}_{name}")
+
+
+def get_models(x: ExperimentScale, artifacts: str = "benchmarks/artifacts",
+               log=print):
+    """Returns {"base","stage1","stage2"} params, training+caching as needed."""
+    os.makedirs(artifacts, exist_ok=True)
+    out = {}
+    p_base = artifact_path(artifacts, x, "base")
+    if os.path.exists(p_base + ".npz"):
+        out["base"] = checkpoint.restore(p_base)
+        log(f"[cache] base <- {p_base}")
+    else:
+        t0 = time.time()
+        out["base"], _ = train_base(x, log=log)
+        checkpoint.save(p_base, out["base"])
+        log(f"[train] base in {time.time()-t0:.0f}s")
+
+    p_s1 = artifact_path(artifacts, x, "stage1")
+    if os.path.exists(p_s1 + ".npz"):
+        out["stage1"] = checkpoint.restore(p_s1)
+        log(f"[cache] stage1 <- {p_s1}")
+    else:
+        t0 = time.time()
+        out["stage1"], _, _ = run_stage1(x, out["base"], log=log)
+        checkpoint.save(p_s1, out["stage1"])
+        log(f"[train] stage1 in {time.time()-t0:.0f}s")
+
+    p_s2 = artifact_path(artifacts, x, "stage2")
+    if os.path.exists(p_s2 + ".npz"):
+        out["stage2"] = checkpoint.restore(p_s2)
+        log(f"[cache] stage2 <- {p_s2}")
+    else:
+        t0 = time.time()
+        out["stage2"] = run_stage2(x, out["stage1"], log=log)
+        checkpoint.save(p_s2, out["stage2"])
+        log(f"[train] stage2 in {time.time()-t0:.0f}s")
+    return out
+
+
+SCALES = {"tiny": TINY, "small": SMALL}

@@ -1,0 +1,258 @@
+"""Evaluation framework (paper §2): cost-performance curves, ToA / ToGA /
+ToA-100 / ToGR, and the latency metrics AGL / AROL.
+
+Conventions (faithful to the paper):
+  * costs are normalized so LLM-only == 1  (sum_i C_i^l in the denominator),
+  * M_l's per-question output tokens are replaced by the dataset-level
+    average (avoids the curve shifting right on long LLM outputs),
+  * in cascade mode the prompt is prefilled once regardless of K samples,
+  * "-100" variants assume M_l answers everything correctly,
+  * ToA is trapezoid area of the curve over the [C_s, C_l] x [P_s, ...]
+    box, normalized so random routing = 0.5; ToGA = ToA - 0.5;
+    ToGR = ToGA-100(router) / ToGA-100(golden router).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost import CostModel
+
+
+@dataclasses.dataclass
+class QuestionRecord:
+    """Per-question evaluation record (one benchmark)."""
+    slm_correct: bool            # SLM's final (voted or single) answer correct
+    llm_correct: bool
+    slm_in_tokens: int
+    slm_out_tokens: int          # SLM output tokens if answered by SLM
+    llm_out_tokens: int          # LLM output tokens (actual)
+    score: float                 # router confidence s_i (higher => keep on SLM)
+    # cascade-only extras
+    cascade_out_tokens: Optional[int] = None   # sum over lanes until stop
+    decision_tokens: Optional[int] = None      # AGL/AROL latency proxy
+    accepted: Optional[bool] = None            # cascade accepted (not routed)
+
+
+THRESHOLDS = [round(0.1 * i, 1) for i in range(11)]
+
+
+def _llm_avg_out(records: Sequence[QuestionRecord]) -> float:
+    return float(np.mean([r.llm_out_tokens for r in records]))
+
+
+def curve_points(records: Sequence[QuestionRecord], cm: CostModel,
+                 cascade: bool = False, assume_llm_perfect: bool = False,
+                 thresholds: Sequence[float] = THRESHOLDS):
+    """Cost-performance points (cost normalized to LLM-only = 1).
+
+    Pre-generation: route iff score < tau  (tau=0 => all SLM).
+    Cascade: SLM always generates (cascade_out_tokens); route adds LLM cost.
+    """
+    llm_avg = _llm_avg_out(records)
+    denom = sum(cm.llm_cost(r.slm_in_tokens, llm_avg) for r in records)
+    pts = []
+    for tau in thresholds:
+        cost = 0.0
+        perf = 0.0
+        for r in records:
+            routed = r.score < tau
+            p_llm = 1.0 if assume_llm_perfect else float(r.llm_correct)
+            if cascade:
+                # prompt prefilled once (KV cache), K lanes' output tokens
+                cost += cm.slm_cost(r.slm_in_tokens, r.cascade_out_tokens)
+                if routed:
+                    cost += cm.llm_cost(r.slm_in_tokens, llm_avg)
+                    perf += p_llm
+                else:
+                    perf += float(r.slm_correct)
+            else:
+                if routed:
+                    cost += cm.llm_cost(r.slm_in_tokens, llm_avg)
+                    perf += p_llm
+                else:
+                    cost += cm.slm_cost(r.slm_in_tokens, r.slm_out_tokens)
+                    perf += float(r.slm_correct)
+        pts.append((cost / denom, perf / len(records)))
+    return pts
+
+
+def toa(points, c_s: float, p_s: float, c_l: float = 1.0) -> float:
+    """Normalized trade-off area over the [c_s, c_l] x [p_s, ..] box.
+
+    Curve points are (cost, perf); reference lines Cost=c_l and Perf=p_s.
+    Random routing (straight segment) yields 0.5 by construction.
+    """
+    pts = sorted(set(points))
+    # clip to the box and integrate (perf - p_s) d cost
+    xs = [p[0] for p in pts]
+    ys = [p[1] for p in pts]
+    area = 0.0
+    for i in range(len(pts) - 1):
+        x0, x1 = xs[i], xs[i + 1]
+        y0, y1 = ys[i], ys[i + 1]
+        if x1 <= c_s or x0 >= c_l or x1 <= x0:
+            continue
+        # clip segment to [c_s, c_l]
+        if x0 < c_s:
+            y0 = y0 + (y1 - y0) * (c_s - x0) / (x1 - x0)
+            x0 = c_s
+        if x1 > c_l:
+            y1 = y0 + (y1 - y0) * (c_l - x0) / (x1 - x0)
+            x1 = c_l
+        area += 0.5 * (max(y0 - p_s, 0.0) + max(y1 - p_s, 0.0)) * (x1 - x0)
+    p_l = ys[-1] if ys else p_s
+    box = (c_l - c_s) * (p_l - p_s)
+    if box <= 1e-12:
+        return 0.5
+    return float(area / box)
+
+
+def _endpoints(records, cm: CostModel, assume_llm_perfect: bool):
+    llm_avg = _llm_avg_out(records)
+    denom = sum(cm.llm_cost(r.slm_in_tokens, llm_avg) for r in records)
+    c_s = sum(cm.slm_cost(r.slm_in_tokens, r.slm_out_tokens) for r in records) / denom
+    p_s = float(np.mean([r.slm_correct for r in records]))
+    p_l = 1.0 if assume_llm_perfect else float(np.mean([r.llm_correct for r in records]))
+    return c_s, p_s, 1.0, p_l
+
+
+def toa_summary(records: Sequence[QuestionRecord], cm: CostModel,
+                cascade: bool = False) -> dict:
+    """ToA, ToGA, ToA-100, ToGA-100, ToGR for one benchmark."""
+    out = {}
+    for perfect in (False, True):
+        pts = curve_points(records, cm, cascade=cascade,
+                           assume_llm_perfect=perfect)
+        c_s, p_s, c_l, p_l = _endpoints(records, cm, perfect)
+        pts = [(c_s, p_s)] + pts + [(c_l, p_l)]
+        a = toa(pts, c_s, p_s, c_l)
+        key = "toa_100" if perfect else "toa"
+        out[key] = a
+        out["toga_100" if perfect else "toga"] = a - 0.5
+
+    # golden router: score = 1 if SLM correct else 0 (assume_llm_perfect)
+    golden = [dataclasses.replace(r, score=1.0 if r.slm_correct else 0.0)
+              for r in records]
+    gpts = curve_points(golden, cm, cascade=cascade, assume_llm_perfect=True,
+                        thresholds=[0.0, 0.5, 1.0])
+    c_s, p_s, c_l, p_l = _endpoints(golden, cm, True)
+    gpts = [(c_s, p_s)] + gpts + [(c_l, p_l)]
+    golden_toga = toa(gpts, c_s, p_s, c_l) - 0.5
+    out["toga_100_golden"] = golden_toga
+    out["togr"] = out["toga_100"] / golden_toga if abs(golden_toga) > 1e-9 else 0.0
+    return out
+
+
+# ----------------------------------------------------------------------
+# Latency metrics (cascade)
+# ----------------------------------------------------------------------
+
+def latency_summary(records: Sequence[QuestionRecord]) -> dict:
+    """AGL: mean decision tokens over questions answered by the SLM.
+    AROL: mean decision tokens over questions that fell back to the LLM
+    (the extra wait vs. calling the LLM directly)."""
+    agl = [r.decision_tokens for r in records if r.accepted]
+    arol = [r.decision_tokens for r in records if not r.accepted]
+    return {
+        "AGL": float(np.mean(agl)) if agl else 0.0,
+        "AROL": float(np.mean(arol)) if arol else 0.0,
+        "frac_accepted": len(agl) / max(len(records), 1),
+    }
+
+
+def accuracy_cost(records: Sequence[QuestionRecord], cm: CostModel,
+                  tau: float, cascade: bool = False,
+                  assume_llm_perfect: bool = False) -> dict:
+    pts = curve_points(records, cm, cascade=cascade,
+                       assume_llm_perfect=assume_llm_perfect,
+                       thresholds=[tau])
+    return {"cost": pts[0][0], "accuracy": pts[0][1]}
+
+
+# ----------------------------------------------------------------------
+# Outcome-based API (SATER pre-gen & cascade, where behaviour depends on
+# the prompted threshold itself rather than a fixed scalar score)
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RouteOutcome:
+    """What happened for one question at one threshold."""
+    routed: bool
+    slm_correct: bool            # correctness of the SLM answer (if kept)
+    slm_engaged: bool            # SLM saw the prompt (always true in cascade)
+    slm_in_tokens: int
+    slm_out_tokens: int          # SLM output tokens spent at this threshold
+    llm_correct: bool
+    llm_out_tokens: int
+    decision_tokens: int = 0     # cascade latency proxy
+
+
+def points_from_outcomes(outcomes_by_tau, cm: CostModel,
+                         assume_llm_perfect: bool = False):
+    """outcomes_by_tau: {tau: [RouteOutcome,...]} -> sorted curve points."""
+    any_rows = next(iter(outcomes_by_tau.values()))
+    llm_avg = float(np.mean([o.llm_out_tokens for o in any_rows]))
+    denom = sum(cm.llm_cost(o.slm_in_tokens, llm_avg) for o in any_rows)
+    pts = []
+    for tau in sorted(outcomes_by_tau):
+        cost, perf = 0.0, 0.0
+        rows = outcomes_by_tau[tau]
+        for o in rows:
+            if o.slm_engaged:
+                cost += cm.slm_cost(o.slm_in_tokens, o.slm_out_tokens)
+            if o.routed:
+                cost += cm.llm_cost(o.slm_in_tokens, llm_avg)
+                perf += 1.0 if assume_llm_perfect else float(o.llm_correct)
+            else:
+                perf += float(o.slm_correct)
+        pts.append((cost / denom, perf / len(rows)))
+    return pts
+
+
+def golden_toga_100(slm_correct: Sequence[bool], slm_in: Sequence[int],
+                    slm_out: Sequence[int], cm: CostModel,
+                    llm_out: Sequence[int]) -> float:
+    """ToGA-100 of the perfect router (routes exactly the SLM-wrong set)."""
+    recs = [QuestionRecord(sc, True, i, o, lo, 1.0 if sc else 0.0)
+            for sc, i, o, lo in zip(slm_correct, slm_in, slm_out, llm_out)]
+    pts = curve_points(recs, cm, assume_llm_perfect=True,
+                       thresholds=[0.0, 0.5, 1.0])
+    c_s, p_s, c_l, p_l = _endpoints(recs, cm, True)
+    pts = [(c_s, p_s)] + pts + [(c_l, p_l)]
+    return toa(pts, c_s, p_s, c_l) - 0.5
+
+
+def outcome_toa_summary(outcomes_by_tau, cm: CostModel,
+                        endpoint_slm: tuple, golden: float) -> dict:
+    """ToA metrics from threshold-dependent outcomes.
+
+    endpoint_slm: (C_s, P_s) of single-sample SLM-only inference.
+    golden: golden ToGA-100 for this benchmark (method-independent).
+    """
+    out = {}
+    c_s, p_s = endpoint_slm
+    for perfect in (False, True):
+        pts = points_from_outcomes(outcomes_by_tau, cm, assume_llm_perfect=perfect)
+        any_rows = next(iter(outcomes_by_tau.values()))
+        p_l = 1.0 if perfect else float(np.mean([o.llm_correct for o in any_rows]))
+        pts = [(c_s, p_s)] + pts + [(1.0, p_l)]
+        a = toa(pts, c_s, p_s, 1.0)
+        out["toa_100" if perfect else "toa"] = a
+        out["toga_100" if perfect else "toga"] = a - 0.5
+    out["toga_100_golden"] = golden
+    out["togr"] = out["toga_100"] / golden if abs(golden) > 1e-9 else 0.0
+    return out
+
+
+def outcome_latency(outcomes: Sequence[RouteOutcome]) -> dict:
+    agl = [o.decision_tokens for o in outcomes if not o.routed]
+    arol = [o.decision_tokens for o in outcomes if o.routed]
+    return {
+        "AGL": float(np.mean(agl)) if agl else 0.0,
+        "AROL": float(np.mean(arol)) if arol else 0.0,
+        "frac_accepted": len(agl) / max(len(outcomes), 1),
+    }

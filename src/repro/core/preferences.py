@@ -1,0 +1,60 @@
+"""SATER Stage-I data construction (paper §3 Stage I).
+
+Sample each training question K=10 times; positive = shortest *correct*
+response; negative = longest *incorrect* response whose length is at
+least 1.5x the positive's.  Questions lacking either side are skipped.
+(The paper notes using the longest *correct* response as the negative
+instead costs >2% accuracy — we keep their choice.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.confidence import Vote
+from repro.data.tasks import TaskItem, is_correct
+from repro.data.pipeline import format_prompt
+
+MIN_LEN_RATIO = 1.5
+
+
+@dataclasses.dataclass
+class SampledQuestion:
+    item: TaskItem
+    texts: List[str]          # K sampled responses
+    gen_lens: List[int]       # token lengths
+
+    @property
+    def correct_flags(self) -> List[bool]:
+        return [is_correct(self.item, t) for t in self.texts]
+
+    @property
+    def accuracy(self) -> float:
+        f = self.correct_flags
+        return sum(f) / len(f) if f else 0.0
+
+
+def build_preference_pairs(samples: Sequence[SampledQuestion],
+                           min_ratio: float = MIN_LEN_RATIO
+                           ) -> List[Tuple[str, str, str]]:
+    """Returns (prompt, chosen, rejected) triples."""
+    pairs = []
+    for sq in samples:
+        flags = sq.correct_flags
+        correct = [(t, l) for t, l, f in zip(sq.texts, sq.gen_lens, flags) if f]
+        wrong = [(t, l) for t, l, f in zip(sq.texts, sq.gen_lens, flags) if not f]
+        if not correct or not wrong:
+            continue
+        chosen, c_len = min(correct, key=lambda x: x[1])
+        rejected, r_len = max(wrong, key=lambda x: x[1])
+        if r_len < min_ratio * c_len:
+            continue
+        pairs.append((format_prompt(sq.item), chosen, rejected))
+    return pairs
+
+
+def empirical_accuracies(samples: Sequence[SampledQuestion]) -> np.ndarray:
+    return np.array([sq.accuracy for sq in samples], np.float32)

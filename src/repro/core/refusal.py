@@ -1,0 +1,43 @@
+"""SATER Stage-II data construction: confidence-aware refusal tuning
+(paper §3 Stage II).
+
+Resample each question K=10 times with the Stage-I model; empirical
+accuracy acc in {0, 0.1, ..., 1.0}.  For each threshold t in
+{0.1, ..., 1.0}: prepend "Please respond with a confidence level of [t]:";
+target = a random correct sample if acc >= t, else the rejection template
+"Sorry, I can't answer that."  Trained with plain SFT (same LoRA setup as
+Stage I, no preference loss).
+"""
+
+from __future__ import annotations
+
+import random
+from typing import List, Sequence, Tuple
+
+from repro.core.confidence import rcv_schedule
+from repro.core.preferences import SampledQuestion
+from repro.data.pipeline import format_prompt
+from repro.data.tasks import REJECTION
+
+
+def build_refusal_dataset(samples: Sequence[SampledQuestion],
+                          seed: int = 0,
+                          thresholds: Sequence[float] = None
+                          ) -> List[Tuple[str, str]]:
+    """Returns (prompt_with_confidence, target_response) pairs."""
+    rng = random.Random(seed)
+    thresholds = thresholds or rcv_schedule()
+    out = []
+    for sq in samples:
+        flags = sq.correct_flags
+        correct_texts = [t for t, f in zip(sq.texts, flags) if f]
+        acc = sq.accuracy
+        for t in thresholds:
+            prompt = format_prompt(sq.item, conf_level=t)
+            if acc >= t and correct_texts:
+                target = rng.choice(correct_texts)
+            else:
+                target = REJECTION
+            out.append((prompt, target))
+    rng.shuffle(out)
+    return out

@@ -1,0 +1,219 @@
+"""Routing drivers: pre-generation and cascade, for SATER models and the
+SC baselines — ties together engine + confidence + voting + metrics.
+
+An ``SLM`` bundles params/config/tokenizer/generation settings.  The LLM
+side is an :class:`OracleLLM` (configurable accuracy/length profile —
+the paper's "(100)" setting is ``OracleLLM(accuracy=1.0)``) or a
+:class:`ModelLLM` wrapping a larger locally-trained model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import voting
+from repro.core.confidence import Vote, fcv_schedule, parse_vote, rcv_schedule
+from repro.core.metrics import RouteOutcome, THRESHOLDS
+from repro.core.preferences import SampledQuestion
+from repro.data.pipeline import encode_prompts, format_prompt
+from repro.data.tasks import TaskItem, is_correct
+from repro.data.tokenizer import CharTokenizer
+from repro.serving.engine import GenConfig, decode_texts, generate
+
+
+@dataclasses.dataclass
+class SLM:
+    params: dict
+    cfg: ModelConfig
+    tokenizer: CharTokenizer
+    gcfg: GenConfig
+    max_prompt_len: int = 320
+    lane_budget: int = 96        # max batch lanes per engine call
+
+
+@dataclasses.dataclass
+class OracleLLM:
+    """LLM stand-in with a difficulty-dependent accuracy profile."""
+    accuracy: float = 1.0
+    avg_out_tokens: int = 60
+    per_difficulty_decay: float = 0.0   # acc - decay * difficulty
+    seed: int = 0
+
+    def answer(self, item: TaskItem) -> tuple:
+        rng = random.Random((hash(item.question) ^ self.seed) & 0xFFFFFFFF)
+        acc = max(0.0, self.accuracy - self.per_difficulty_decay * item.difficulty)
+        correct = rng.random() < acc
+        toks = max(8, int(rng.gauss(self.avg_out_tokens,
+                                    self.avg_out_tokens * 0.25)))
+        return correct, toks
+
+
+@dataclasses.dataclass
+class ModelLLM:
+    """A larger locally-trained model acting as M_l."""
+    slm: SLM
+
+    def answer(self, item: TaskItem) -> tuple:
+        texts, lens = batch_generate(self.slm, [format_prompt(item)],
+                                     jax.random.PRNGKey(hash(item.question) & 0xFFFF))
+        return is_correct(item, texts[0]), int(lens[0])
+
+
+# ----------------------------------------------------------------------
+# Batched generation over prompt lists
+# ----------------------------------------------------------------------
+
+def batch_generate(slm: SLM, prompts: Sequence[str], key):
+    """Generate one response per prompt (chunked to lane_budget)."""
+    texts: List[str] = []
+    lens: List[int] = []
+    for i in range(0, len(prompts), slm.lane_budget):
+        chunk = prompts[i:i + slm.lane_budget]
+        toks, tlens = encode_prompts(chunk, slm.tokenizer, slm.max_prompt_len)
+        key, sub = jax.random.split(key)
+        gen, glens = generate(slm.params, slm.cfg, toks, tlens, sub, slm.gcfg)
+        texts.extend(decode_texts(slm.tokenizer, gen))
+        lens.extend(int(g) for g in glens)
+    return texts, lens
+
+
+def sample_k(slm: SLM, items: Sequence[TaskItem], levels: Sequence[Optional[float]],
+             key, seed_offset: int = 0) -> List[List[Vote]]:
+    """K = len(levels) samples per item; level None = no confidence prompt
+    (vanilla SC).  Returns votes[item][k]."""
+    prompts = []
+    for item in items:
+        for lvl in levels:
+            prompts.append(format_prompt(item, conf_level=lvl))
+    key = jax.random.fold_in(key, seed_offset)
+    texts, lens = batch_generate(slm, prompts, key)
+    votes: List[List[Vote]] = []
+    k = len(levels)
+    for qi in range(len(items)):
+        vs = []
+        for j, lvl in enumerate(levels):
+            t = texts[qi * k + j]
+            vs.append(parse_vote(t, lvl if lvl is not None else voting.MEAN_CONF,
+                                 lens[qi * k + j]))
+        votes.append(vs)
+    return votes
+
+
+def collect_samples(slm: SLM, items: Sequence[TaskItem], k: int, key,
+                    level: Optional[float] = None) -> List[SampledQuestion]:
+    """K same-level samples per item (Stage-I/II data collection)."""
+    votes = sample_k(slm, items, [level] * k, key)
+    return [SampledQuestion(item, [v.text for v in vs], [v.gen_tokens for v in vs])
+            for item, vs in zip(items, votes)]
+
+
+# ----------------------------------------------------------------------
+# Pre-generation routing (SATER: prompt at tau, route on rejection)
+# ----------------------------------------------------------------------
+
+def pregen_outcomes_sater(slm: SLM, items: Sequence[TaskItem], llm, key,
+                          thresholds: Sequence[float] = None
+                          ) -> Dict[float, List[RouteOutcome]]:
+    """One generation per (item, level); threshold tau uses level tau.
+
+    tau = 0.0 keeps everything on the SLM (uses the lowest level's
+    response); tau = 1.0-level rejections route.
+    """
+    thresholds = thresholds or THRESHOLDS
+    levels = rcv_schedule()                      # 0.1 .. 1.0
+    votes = sample_k(slm, items, levels, key)
+    llm_ans = [llm.answer(it) for it in items]
+    out: Dict[float, List[RouteOutcome]] = {}
+    for tau in thresholds:
+        lvl_idx = 0 if tau <= levels[0] else min(
+            range(len(levels)), key=lambda i: abs(levels[i] - tau))
+        rows = []
+        for qi, item in enumerate(items):
+            v = votes[qi][lvl_idx]
+            routed = v.rejected and tau > 0.0
+            correct = (not v.rejected) and is_correct(item, v.text)
+            lc, lt = llm_ans[qi]
+            rows.append(RouteOutcome(
+                routed=routed, slm_correct=correct, slm_engaged=True,
+                slm_in_tokens=len(format_prompt(item)),
+                slm_out_tokens=v.gen_tokens,
+                llm_correct=lc, llm_out_tokens=lt,
+                decision_tokens=v.gen_tokens))
+        out[tau] = rows
+    return out
+
+
+# ----------------------------------------------------------------------
+# Cascade routing
+# ----------------------------------------------------------------------
+
+CASCADE_MODES = ("SC", "RCV", "FCV")
+
+
+def cascade_outcomes(slm: SLM, items: Sequence[TaskItem], llm, key,
+                     mode: str = "RCV", k: int = 10,
+                     thresholds: Sequence[float] = None,
+                     early_stop: Optional[bool] = None
+                     ) -> Dict[float, List[RouteOutcome]]:
+    """Cascade with K parallel samples and weighted voting.
+
+    mode: SC  — no confidence prompts, uniform weights, no early stop
+          RCV — levels 0.1..1.0, early stop
+          FCV — all at 1.0, early stop
+    """
+    thresholds = thresholds or THRESHOLDS
+    if mode == "SC":
+        levels: List[Optional[float]] = [None] * k
+        early = False if early_stop is None else early_stop
+    elif mode == "RCV":
+        levels = rcv_schedule(k)
+        early = True if early_stop is None else early_stop
+    elif mode == "FCV":
+        levels = fcv_schedule(k)
+        early = True if early_stop is None else early_stop
+    else:
+        raise ValueError(mode)
+    votes = sample_k(slm, items, levels, key)
+    llm_ans = [llm.answer(it) for it in items]
+
+    out: Dict[float, List[RouteOutcome]] = {}
+    for tau in thresholds:
+        rows = []
+        for qi, item in enumerate(items):
+            vs = votes[qi]
+            if early:
+                dec = voting.decide_with_early_stop(vs, tau)
+            else:
+                dec = voting.decide_no_early_stop(vs, tau)
+            correct = dec.accepted and dec.answer == item.answer
+            lc, lt = llm_ans[qi]
+            rows.append(RouteOutcome(
+                routed=not dec.accepted, slm_correct=correct, slm_engaged=True,
+                slm_in_tokens=len(format_prompt(item)),
+                slm_out_tokens=dec.used_tokens,
+                llm_correct=lc, llm_out_tokens=lt,
+                decision_tokens=dec.decision_tokens))
+        out[tau] = rows
+    return out
+
+
+# ----------------------------------------------------------------------
+# SLM-only endpoint (single unprompted inference) for curve endpoints
+# ----------------------------------------------------------------------
+
+def slm_only_endpoint(slm: SLM, items: Sequence[TaskItem], llm, key, cm):
+    texts, lens = batch_generate(slm, [format_prompt(it) for it in items], key)
+    llm_avg = float(np.mean([llm.answer(it)[1] for it in items]))
+    denom = sum(cm.llm_cost(len(format_prompt(it)), llm_avg) for it in items)
+    c_s = sum(cm.slm_cost(len(format_prompt(it)), l)
+              for it, l in zip(items, lens)) / denom
+    p_s = float(np.mean([is_correct(it, t) for it, t in zip(items, texts)]))
+    slm_out = [int(l) for l in lens]
+    slm_corr = [is_correct(it, t) for it, t in zip(items, texts)]
+    return (c_s, p_s), slm_corr, slm_out, texts

@@ -1,0 +1,144 @@
+"""Confidence-weighted majority voting + early stopping (paper §3, Eq. 6).
+
+Weight: w_k = 0.55 + alpha * (p_k - 0.55), alpha = 0.5 (0.55 = the
+average confidence).  Score of candidate A_m:
+    delta(A_m) = sum_k w_k * 1[a_k == A_m] / sum_k w_k
+over ALL K votes — rejected votes contribute weight to the denominator
+but to no candidate, so heavy rejection drives every delta below tau and
+the query routes to the LLM.
+
+Early stopping (parallel sampling semantics, paper §2.2 "Latency"):
+samples complete in gen-length order; after each completion we check
+whether the final decision is already determined no matter how the
+still-running samples vote — if the best candidate's guaranteed lower
+bound >= tau we accept now, if even the optimistic upper bound of every
+candidate (incl. unseen ones) < tau we route now.  Otherwise we wait;
+the fallback decision time is the longest sample.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import List, Optional, Sequence, Tuple
+
+from repro.core.confidence import Vote
+
+ALPHA = 0.5
+MEAN_CONF = 0.55
+
+
+def weight(p: float, alpha: float = ALPHA) -> float:
+    return MEAN_CONF + alpha * (p - MEAN_CONF)
+
+
+def vote_scores(votes: Sequence[Vote], alpha: float = ALPHA):
+    """delta(A_m) over all candidates.  Returns (scores dict, total_w)."""
+    total_w = sum(weight(v.confidence, alpha) for v in votes)
+    scores = defaultdict(float)
+    for v in votes:
+        if not v.rejected and v.answer is not None:
+            scores[v.answer] += weight(v.confidence, alpha)
+    if total_w <= 0:
+        return {}, 0.0
+    return {a: w / total_w for a, w in scores.items()}, total_w
+
+
+def best_answer(votes: Sequence[Vote], alpha: float = ALPHA
+                ) -> Tuple[Optional[str], float]:
+    scores, _ = vote_scores(votes, alpha)
+    if not scores:
+        return None, 0.0
+    a = max(scores, key=scores.get)
+    return a, scores[a]
+
+
+@dataclasses.dataclass
+class CascadeDecision:
+    answer: Optional[str]        # None => route to LLM
+    score: float
+    accepted: bool
+    decision_tokens: int         # latency proxy at decision time
+    used_tokens: int             # cost proxy: sum of per-lane tokens until stop
+    n_votes_seen: int
+
+
+def decide_with_early_stop(votes: List[Vote], tau: float,
+                           alpha: float = ALPHA) -> CascadeDecision:
+    """Simulate parallel sampling with early stopping.
+
+    All K lanes generate concurrently; lane k finishes at time
+    votes[k].gen_tokens.  We process completions in time order and stop
+    as soon as the accept/route decision is forced.
+    """
+    if tau <= 0:
+        # tau=0 = SLM-only endpoint: never route, take the full vote
+        return decide_no_early_stop(votes, tau, alpha)
+    k = len(votes)
+    order = sorted(range(k), key=lambda i: votes[i].gen_tokens)
+    all_w = [weight(v.confidence, alpha) for v in votes]
+    total_w = sum(all_w)
+
+    seen_w = defaultdict(float)   # candidate -> accumulated weight
+    decision_t = votes[order[-1]].gen_tokens if k else 0
+    n_seen = k
+    accepted = False
+    answer, score = None, 0.0
+
+    pending_w = total_w
+    for rank, i in enumerate(order):
+        v = votes[i]
+        pending_w -= all_w[i]
+        if not v.rejected and v.answer is not None:
+            seen_w[v.answer] += all_w[i]
+        best_seen = max(seen_w.values()) if seen_w else 0.0
+        # lower bound: leader gets nothing more; upper bound: any candidate
+        # (even unseen) could still absorb all pending weight
+        lo = best_seen / total_w
+        hi = (best_seen + pending_w) / total_w if seen_w else pending_w / total_w
+        if seen_w and lo >= tau:
+            accepted = True
+            answer = max(seen_w, key=seen_w.get)
+            score = lo
+            decision_t = v.gen_tokens
+            n_seen = rank + 1
+            break
+        if hi < tau:
+            accepted = False
+            answer = None
+            score = hi
+            decision_t = v.gen_tokens
+            n_seen = rank + 1
+            break
+    else:
+        # all samples finished: final decision from complete scores
+        scores, _ = vote_scores(votes, alpha)
+        if scores:
+            a = max(scores, key=scores.get)
+            if scores[a] >= tau:
+                accepted, answer, score = True, a, scores[a]
+            else:
+                accepted, answer, score = False, None, scores[a]
+        elif tau <= 0:
+            accepted = True          # tau=0: never route (SLM-only endpoint)
+        decision_t = votes[order[-1]].gen_tokens if k else 0
+        n_seen = k
+
+    # cost: every lane ran until min(its completion, decision time)
+    used = sum(min(v.gen_tokens, decision_t) for v in votes)
+    return CascadeDecision(answer, score, accepted, decision_t, used, n_seen)
+
+
+def decide_no_early_stop(votes: List[Vote], tau: float,
+                         alpha: float = ALPHA) -> CascadeDecision:
+    """Vanilla SC-style decision: wait for all samples (baseline)."""
+    scores, _ = vote_scores(votes, alpha)
+    t_max = max((v.gen_tokens for v in votes), default=0)
+    used = sum(v.gen_tokens for v in votes)
+    if scores:
+        a = max(scores, key=scores.get)
+        if scores[a] >= tau:
+            return CascadeDecision(a, scores[a], True, t_max, used, len(votes))
+        return CascadeDecision(None, scores[a], False, t_max, used, len(votes))
+    # no parseable answer at all: tau=0 still keeps the query on the SLM
+    return CascadeDecision(None, 0.0, tau <= 0, t_max, used, len(votes))

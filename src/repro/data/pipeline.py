@@ -1,0 +1,86 @@
+"""Batching: task items -> padded token batches (host-side numpy, device
+conversion at the jitted step boundary).
+
+Batch kinds:
+  * SFT:        {"tokens": (B,S), "loss_mask": (B,S)}  — mask on response
+  * preference: {"chosen","chosen_mask","rejected","rejected_mask"}
+  * prompts:    (B,S) left-padded token prompts + lengths, for the engine
+"""
+
+from __future__ import annotations
+
+import random
+from typing import Iterator, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.data.tasks import CONF_PROMPT, TaskItem
+from repro.data.tokenizer import CharTokenizer, default_tokenizer
+
+
+def format_prompt(item: TaskItem, conf_level: Optional[float] = None) -> str:
+    p = f"Q: {item.question}\nA: "
+    if conf_level is not None:
+        p = CONF_PROMPT.format(level=conf_level) + p
+    return p
+
+
+def encode_pair(tok: CharTokenizer, prompt: str, response: str,
+                max_len: int) -> Tuple[np.ndarray, np.ndarray]:
+    p_ids = tok.encode(prompt, bos=True)
+    r_ids = tok.encode(response, eos=True)
+    ids = (p_ids + r_ids)[:max_len]
+    mask = ([0] * len(p_ids) + [1] * len(r_ids))[:max_len]
+    toks = np.full((max_len,), tok.pad_id, np.int32)
+    m = np.zeros((max_len,), np.int32)
+    toks[: len(ids)] = ids
+    m[: len(mask)] = mask
+    return toks, m
+
+
+def sft_batches(pairs: Sequence[Tuple[str, str]], tok: CharTokenizer,
+                batch_size: int, max_len: int, seed: int = 0,
+                epochs: int = 1, drop_remainder: bool = True) -> Iterator[dict]:
+    """pairs: list of (prompt, response) strings."""
+    rng = random.Random(seed)
+    idx = list(range(len(pairs)))
+    for _ in range(epochs):
+        rng.shuffle(idx)
+        for i in range(0, len(idx) - (batch_size - 1 if drop_remainder else 0),
+                       batch_size):
+            chunk = idx[i:i + batch_size]
+            if drop_remainder and len(chunk) < batch_size:
+                break
+            toks, masks = zip(*(encode_pair(tok, *pairs[j], max_len) for j in chunk))
+            yield {"tokens": np.stack(toks), "loss_mask": np.stack(masks)}
+
+
+def preference_batches(prefs: Sequence[Tuple[str, str, str]], tok: CharTokenizer,
+                       batch_size: int, max_len: int, seed: int = 0,
+                       epochs: int = 1) -> Iterator[dict]:
+    """prefs: list of (prompt, chosen_response, rejected_response)."""
+    rng = random.Random(seed)
+    idx = list(range(len(prefs)))
+    for _ in range(epochs):
+        rng.shuffle(idx)
+        for i in range(0, len(idx) - batch_size + 1, batch_size):
+            chunk = idx[i:i + batch_size]
+            enc_c = [encode_pair(tok, prefs[j][0], prefs[j][1], max_len) for j in chunk]
+            enc_r = [encode_pair(tok, prefs[j][0], prefs[j][2], max_len) for j in chunk]
+            yield {
+                "chosen": np.stack([e[0] for e in enc_c]),
+                "chosen_mask": np.stack([e[1] for e in enc_c]),
+                "rejected": np.stack([e[0] for e in enc_r]),
+                "rejected_mask": np.stack([e[1] for e in enc_r]),
+            }
+
+
+def encode_prompts(prompts: Sequence[str], tok: CharTokenizer,
+                   max_len: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Right-padded prompt batch + lengths (engine prefill format)."""
+    ids = [tok.encode(p, bos=True)[:max_len] for p in prompts]
+    lens = np.array([len(i) for i in ids], np.int32)
+    out = np.full((len(ids), max_len), tok.pad_id, np.int32)
+    for r, i in enumerate(ids):
+        out[r, : len(i)] = i
+    return out, lens

@@ -1,0 +1,183 @@
+"""Synthetic task suite with machine-checkable answers and controllable
+difficulty + verbosity.
+
+Why synthetic: the container is offline (no MMLU/GSM8K/HF checkpoints),
+and SATER's pipeline needs exactly two properties from its data — (1)
+per-question correctness is checkable (drives Stage-II confidence labels
+and all routing metrics) and (2) responses have a verbose and a concise
+surface form (gives Stage-I something to compress).  Difficulty knobs let
+benchmarks span "SLM solves easily" to "only the LLM (oracle) solves",
+mirroring the paper's six benchmarks of varying type and complexity.
+
+Benchmarks (paper analogue in brackets):
+  modchain     [GSM8K]     chained modular arithmetic, diff = chain length
+  kbhop        [MMLU]      multi-hop lookup over an in-context KB, diff = hops
+  parity       [ReClor]    logical parity over bit strings, diff = length
+  arith        [ARC-E]     single-op arithmetic, easy
+  modchain-xl  [MATH-500]  OOD: longer chains than trained on
+  kbhop-xl     [ARC-C]     OOD: more hops/entities than trained on
+
+Responses always terminate with ``Answer: <ans>.``; verbose responses
+prepend step-by-step working (the redundancy Stage-I learns to cut).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+import re
+from typing import Callable, Dict, List, Optional
+
+REJECTION = "Sorry, I can't answer that."
+CONF_PROMPT = "Please respond with a confidence level of [{level:.1f}]:\n"
+ANSWER_RE = re.compile(r"Answer:\s*([^\s.]+)")
+
+
+@dataclasses.dataclass
+class TaskItem:
+    benchmark: str
+    difficulty: int
+    question: str
+    answer: str
+    steps: List[str]               # verbose working lines
+
+    def response(self, verbosity: int) -> str:
+        """verbosity v in [0, len(steps)]: include the last v steps."""
+        v = max(0, min(verbosity, len(self.steps)))
+        lines = self.steps[:v] if v else []
+        return " ".join(lines + [f"Answer: {self.answer}."])
+
+    @property
+    def concise(self) -> str:
+        return self.response(0)
+
+    @property
+    def verbose(self) -> str:
+        return self.response(len(self.steps))
+
+
+def extract_answer(text: str) -> Optional[str]:
+    m = ANSWER_RE.search(text)
+    return m.group(1) if m else None
+
+
+def is_correct(item: TaskItem, text: str) -> bool:
+    return extract_answer(text) == item.answer
+
+
+def is_rejection(text: str) -> bool:
+    return text.strip().startswith(REJECTION[:10])
+
+
+# ----------------------------------------------------------------------
+# Generators
+# ----------------------------------------------------------------------
+
+def gen_modchain(rng: random.Random, difficulty: int, mod: int = 10) -> TaskItem:
+    """((a op b) op c ...) mod p — difficulty = number of ops.
+
+    mod=10 keeps every intermediate a single digit so a char-level model
+    can learn the (digit, op, digit) transition table; longer chains
+    compound error => a clean difficulty gradient (the GSM8K stand-in).
+    Step strings are compact ("s1:+3=9.") so verbose responses fit the
+    CPU-scale generation budget."""
+    vals = [rng.randint(2, 9) for _ in range(difficulty + 1)]
+    ops = [rng.choice(["+", "*"]) for _ in range(difficulty)]
+    acc = vals[0]
+    steps = []
+    for i, op in enumerate(ops):
+        nxt = vals[i + 1]
+        acc = (acc + nxt) % mod if op == "+" else (acc * nxt) % mod
+        steps.append(f"s{i+1}:{op}{nxt}={acc}.")
+    expr = str(vals[0]) + "".join(f" {o} {v}" for o, v in zip(ops, vals[1:]))
+    q = f"Compute ({expr}) mod {mod}."
+    return TaskItem("modchain", difficulty, q, str(acc), steps)
+
+
+def gen_kbhop(rng: random.Random, difficulty: int, n_entities: int = 6) -> TaskItem:
+    """Multi-hop chasing over in-context facts — difficulty = hops.
+
+    Compact surface form ("Bo>Ka.") keeps the whole prompt + verbose
+    response inside the CPU-scale max_len; the skill tested (in-context
+    pointer chasing / induction) is unchanged."""
+    names = rng.sample([f"{a}{b}" for a in "BCDFGHJKLMNP" for b in "aeiou"],
+                       n_entities)
+    succ = {names[i]: names[(i + rng.randint(1, n_entities - 1)) % n_entities]
+            for i in range(n_entities)}
+    facts = [f"{a}>{b}." for a, b in succ.items()]
+    rng.shuffle(facts)
+    start = rng.choice(names)
+    cur = start
+    steps = []
+    for h in range(difficulty):
+        cur = succ[cur]
+        steps.append(f"h{h+1}:{cur}.")
+    q = (" ".join(facts) +
+         f" From {start} follow > {difficulty} times. Who?")
+    return TaskItem("kbhop", difficulty, q, cur, steps)
+
+
+def gen_parity(rng: random.Random, difficulty: int) -> TaskItem:
+    """Parity of a bit string — difficulty = length/4."""
+    n = 4 * difficulty
+    bits = [rng.randint(0, 1) for _ in range(n)]
+    ones = sum(bits)
+    steps = [f"b{i+1}:{sum(bits[4*i:4*i+4])}."
+             for i in range(difficulty)]
+    q = f"Is the number of 1s in {''.join(map(str, bits))} even or odd?"
+    return TaskItem("parity", difficulty, q, "even" if ones % 2 == 0 else "odd", steps)
+
+
+def gen_arith(rng: random.Random, difficulty: int) -> TaskItem:
+    """Single-op small arithmetic (easy benchmark)."""
+    a = rng.randint(2, 9 + 5 * difficulty)
+    b = rng.randint(2, 9)
+    op = rng.choice(["+", "-"])
+    ans = a + b if op == "+" else a - b
+    return TaskItem("arith", difficulty, f"Compute {a} {op} {b}.", str(ans),
+                    [f"s1:{a}{op}{b}={ans}."])
+
+
+GENERATORS: Dict[str, Callable] = {
+    "modchain": gen_modchain,
+    "kbhop": gen_kbhop,
+    "parity": gen_parity,
+    "arith": gen_arith,
+}
+
+# benchmark -> (generator, difficulty range)
+BENCHMARKS: Dict[str, tuple] = {
+    # in-domain (training distributions)
+    "modchain": ("modchain", (1, 6)),
+    "kbhop": ("kbhop", (1, 4)),
+    "parity": ("parity", (1, 5)),
+    "arith": ("arith", (1, 3)),
+    # out-of-domain (harder variants, never trained on)
+    "modchain-xl": ("modchain", (7, 10)),
+    "kbhop-xl": ("kbhop", (5, 7)),
+}
+
+IN_DOMAIN = ("modchain", "kbhop", "parity", "arith")
+OUT_OF_DOMAIN = ("modchain-xl", "kbhop-xl")
+
+
+def make_benchmark(name: str, n: int, seed: int = 0) -> List[TaskItem]:
+    gen_name, (lo, hi) = BENCHMARKS[name]
+    gen = GENERATORS[gen_name]
+    rng = random.Random(seed * 7919 + hash(name) % 10000)
+    items = []
+    for i in range(n):
+        d = lo + (i % (hi - lo + 1))
+        it = gen(rng, d)
+        it.benchmark = name
+        items.append(it)
+    return items
+
+
+def make_training_mix(n_per_benchmark: int, seed: int = 0) -> List[TaskItem]:
+    items = []
+    for b in IN_DOMAIN:
+        items.extend(make_benchmark(b, n_per_benchmark, seed=seed + 1))
+    rng = random.Random(seed)
+    rng.shuffle(items)
+    return items

@@ -1,0 +1,52 @@
+"""Character-level tokenizer.
+
+Offline container => no sentencepiece/BPE assets; the synthetic task
+suite is ASCII so a char vocab is lossless, keeps the tiny-model vocab
+small, and makes output-token counts (the paper's latency/cost proxy)
+directly comparable across methods.
+"""
+
+from __future__ import annotations
+
+import string
+from typing import List
+
+PAD, BOS, EOS = 0, 1, 2
+_SPECIALS = ["<pad>", "<bos>", "<eos>"]
+_CHARS = string.printable  # 100 chars
+
+
+class CharTokenizer:
+    def __init__(self):
+        self.itos = list(_SPECIALS) + list(_CHARS)
+        self.stoi = {c: i for i, c in enumerate(self.itos)}
+        self.vocab_size = len(self.itos)
+        self.pad_id, self.bos_id, self.eos_id = PAD, BOS, EOS
+
+    def encode(self, text: str, bos: bool = False, eos: bool = False) -> List[int]:
+        ids = [self.stoi[c] for c in text if c in self.stoi]
+        if bos:
+            ids = [BOS] + ids
+        if eos:
+            ids = ids + [EOS]
+        return ids
+
+    def decode(self, ids) -> str:
+        out = []
+        for i in ids:
+            i = int(i)
+            if i == EOS:
+                break
+            if i >= len(_SPECIALS):
+                out.append(self.itos[i])
+        return "".join(out)
+
+
+_DEFAULT = None
+
+
+def default_tokenizer() -> CharTokenizer:
+    global _DEFAULT
+    if _DEFAULT is None:
+        _DEFAULT = CharTokenizer()
+    return _DEFAULT

@@ -1,0 +1,198 @@
+"""PartitionSpec rules for every architecture family.
+
+Conventions (DESIGN.md §5):
+  * weights: attention heads / FFN hidden / vocab on ``model``;
+    MoE expert dim on ``model``; huge MoE stacks (llama4-scout, ~109B
+    total) additionally FSDP-shard the expert d_model dim over ``data``.
+  * batch over ("pod","data"); long_500k (batch=1) shards the KV-cache
+    sequence axis over ``data`` instead (context-parallel decode).
+  * optimizer moments: ZeRO-style — the first replicated, divisible dim
+    of each moment leaf is sharded over ``data``.
+
+jit input shardings must divide exactly, so every rule checks
+divisibility against the mesh axis size and falls back to the next
+candidate dim (e.g. mamba2's 50280 vocab is not 16-divisible -> the
+embedding shards d_model instead).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.launch.mesh import batch_axes, data_axis_size, model_axis_size
+
+FSDP_PARAM_THRESHOLD = 3e10     # params above this get expert-dim FSDP
+
+
+def _leaf_name(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", str(last))
+
+
+def _in_module(path, *names) -> bool:
+    keys = {getattr(p, "key", None) for p in path}
+    return any(n in keys for n in names)
+
+
+def _spec_with(nd: int, assignments: dict) -> P:
+    parts = [None] * nd
+    for dim, axis in assignments.items():
+        parts[dim] = axis
+    return P(*parts)
+
+
+def param_spec(cfg: ModelConfig, path, leaf, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter leaf (leading dim may be layers)."""
+    name = _leaf_name(path)
+    fsdp = cfg.param_count() > FSDP_PARAM_THRESHOLD
+    nd = leaf.ndim
+    shape = leaf.shape
+    msz = mesh.shape["model"]
+    dsz = mesh.shape["data"]
+
+    def div(dim, sz=msz):
+        return shape[dim] % sz == 0
+
+    if name == "embedding":                      # (V, D)
+        if div(0):
+            return P("model", None)
+        if div(1):
+            return P(None, "model")
+        return P(None, None)
+    if name == "lm_head":                        # (D, V)
+        if div(1):
+            return P(None, "model")
+        if div(0):
+            return P("model", None)
+        return P(None, None)
+    if _in_module(path, "moe") and name != "router":
+        if _in_module(path, "shared"):           # (L, D, F) / (L, F, D)
+            if name in ("wi_gate", "wi_up", "wi"):
+                return _spec_with(nd, {nd - 1: "model"} if div(nd - 1) else {})
+            return _spec_with(nd, {nd - 2: "model"} if div(nd - 2) else {})
+        if nd == 4:                              # (L, E, D, F) / (L, E, F, D)
+            a = {}
+            if div(1):
+                a[1] = "model"
+            if fsdp and shape[2] % dsz == 0:
+                a[2] = "data"
+            # multipod: FSDP-scale expert weights also shard the last
+            # dim over 'pod' (llama4 multipod: 25.2 -> fits; §Perf C8)
+            if fsdp and "pod" in mesh.shape and                     shape[3] % mesh.shape["pod"] == 0:
+                a[3] = "pod"
+            return _spec_with(nd, a)
+        return P(*([None] * nd))
+    if name in ("wq", "wk", "wv", "wi_gate", "wi_up", "wi", "in_proj"):
+        if div(nd - 1):
+            return _spec_with(nd, {nd - 1: "model"})   # shard output dim
+        return P(*([None] * nd))
+    if name in ("wo", "out_proj"):
+        if div(nd - 2):
+            return _spec_with(nd, {nd - 2: "model"})   # shard input dim
+        return P(*([None] * nd))
+    if name == "conv_w" and div(nd - 1):         # (L, W, 1, Cc)
+        return _spec_with(nd, {nd - 1: "model"})
+    if name in ("conv_b", "norm_scale") and _in_module(path, "ssm") \
+            and div(nd - 1):
+        return _spec_with(nd, {nd - 1: "model"})
+    return P(*([None] * nd))                     # norms, router, A_log, ...
+
+
+def param_specs(cfg: ModelConfig, params_tree, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(cfg, path, leaf, mesh), params_tree)
+
+
+def zero_spec(spec: P, shape, data_size: int) -> P:
+    """ZeRO the first replicated dim that the data axis divides (no-op if
+    the spec already consumes the data axis, e.g. FSDP expert weights)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    used = set()
+    for p in parts:
+        if p is None:
+            continue
+        used.update((p,) if isinstance(p, str) else p)
+    if "data" in used:
+        return P(*parts)
+    for i, (p, s) in enumerate(zip(parts, shape)):
+        if p is None and s % data_size == 0 and s >= data_size:
+            parts[i] = "data"
+            return P(*parts)
+    return P(*parts)
+
+
+def opt_state_specs(cfg: ModelConfig, params_tree, mesh: Mesh):
+    """Moments: param spec + ZeRO over data; step: replicated."""
+    dsz = mesh.shape["data"]
+    mom = jax.tree_util.tree_map_with_path(
+        lambda path, leaf: zero_spec(param_spec(cfg, path, leaf, mesh),
+                                     leaf.shape, dsz),
+        params_tree)
+    return {"mu": mom, "nu": mom, "step": P()}
+
+
+# ----------------------------------------------------------------------
+# Activations / inputs / cache
+# ----------------------------------------------------------------------
+
+def tokens_spec(mesh: Mesh, batch: int) -> P:
+    ax = batch_axes(mesh)
+    if batch % data_axis_size(mesh) == 0:
+        return P(ax, None)
+    return P(None, None)
+
+
+def _kv_axes(cfg: ModelConfig, mesh: Mesh):
+    """(kv_head_axis, head_dim_axis) for cache sharding (divisible only)."""
+    m = model_axis_size(mesh)
+    if cfg.n_kv_heads and cfg.n_kv_heads % m == 0:
+        return "model", None
+    if cfg.resolved_head_dim % m == 0:
+        return None, "model"
+    return None, None
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq_len: int = 0,
+                mode: str = "auto"):
+    """Spec tree matching model.init_decode_state's structure.
+
+    mode="auto": shard kv-heads (or head_dim) over 'model' — plain TP.
+    mode="seq" (§Perf lever): shard the cache SEQUENCE axis over 'model'
+    (flash-decode style): per-shard partial attention + tiny stat
+    collectives instead of all-gathering scores/cache.
+    """
+    shard_batch = batch % data_axis_size(mesh) == 0
+    bax = batch_axes(mesh) if shard_batch else None
+    # context-parallel at batch=1: shard the cache sequence axis instead
+    seq_ax = None if shard_batch else "data"
+    spec = {"pos": P(bax if shard_batch else None)}
+    if cfg.has_attention:
+        if mode == "seq":
+            kv_ax, dh_ax = None, None
+            seq_ax = "model" if shard_batch else ("data", "model")
+        else:
+            kv_ax, dh_ax = _kv_axes(cfg, mesh)
+        spec["k"] = P(None, bax, seq_ax, kv_ax, dh_ax)
+        spec["v"] = P(None, bax, seq_ax, kv_ax, dh_ax)
+        if cfg.kv_quant:
+            spec["k_scale"] = P(None, bax, seq_ax, kv_ax)
+            spec["v_scale"] = P(None, bax, seq_ax, kv_ax)
+        spec["cache_pos"] = P(bax, seq_ax)
+    if cfg.has_ssm:
+        msz = model_axis_size(mesh)
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        conv_ax = "model" if conv_ch % msz == 0 else None
+        h_ax = "model" if cfg.n_ssm_heads % msz == 0 else None
+        spec["conv"] = P(None, bax, None, conv_ax)
+        spec["ssm"] = P(None, bax, h_ax, None, None)
+    return spec
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

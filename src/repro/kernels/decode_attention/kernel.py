@@ -1,0 +1,101 @@
+"""Single-token GQA decode attention over a long KV cache — Pallas TPU.
+
+SATER's cascade decodes K vote lanes simultaneously; the per-step cost is
+reading the KV cache (memory-bound).  This kernel streams the cache in
+(block_k x D) VMEM tiles with flash-decode online softmax, masking
+invalid slots by per-lane length and optional sliding window.
+
+Grid: (batch, q_heads, S_cache/block_k); the last axis is sequential so
+m/l/acc carry in VMEM scratch.  Lengths live in a (B,) int32 input block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+MIN_LANE = 128
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                   acc_ref, *, scale: float, block_k: int, window: int):
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[0]
+    k_start = ki * block_k
+    in_range = k_start < length
+    in_window = True if window <= 0 else (k_start + block_k - 1 >= length - window)
+
+    @pl.when(in_range & in_window)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, bk)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        mask = kpos < length
+        if window > 0:
+            mask = mask & (kpos >= length - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                    # (1, 128)
+        m_cur = jnp.max(s, axis=-1)[:, None]
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        p = jnp.exp(s - m_new[:, :1])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)[:, None]
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, :1] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k, v, lengths, *, block_k: int = 512,
+                            window: int = 0, interpret: bool = False):
+    """q: (B, H, 1, D); k, v: (B, KV, S, D); lengths: (B,) -> (B, H, 1, D).
+
+    Valid cache slots for lane b are [0, lengths[b]) (or the last
+    ``window`` of them); the new token's k/v must already be written.
+    """
+    b, h, one, d = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    group = h // kv
+    grid = (b, h, pl.cdiv(s, block_k))
+    kernel = functools.partial(_decode_kernel, scale=d ** -0.5,
+                               block_k=block_k, window=window)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bb, hh, ki: (bb,)),
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, ki: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, ki: (bb, hh // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, ki: (bb, hh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bb, hh, ki: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, MIN_LANE), jnp.float32),
+            pltpu.VMEM((1, MIN_LANE), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths, q, k, v)

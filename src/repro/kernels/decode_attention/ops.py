@@ -1,0 +1,30 @@
+"""Jitted public wrapper for decode attention."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import decode_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_k", "interpret"))
+def decode_attention(q, k, v, lengths, window: int = 0, block_k: int = 512,
+                     interpret: bool = None):
+    """q: (B, 1, H, D); k, v: (B, S, KV, D); lengths: (B,)."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    s = kt.shape[2]
+    pad = (-s) % block_k
+    if pad:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = decode_attention_pallas(qt, kt, vt, lengths.astype(jnp.int32),
+                                  block_k=block_k, window=window,
+                                  interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

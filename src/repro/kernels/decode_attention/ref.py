@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, lengths, window: int = 0):
+    """q: (B, H, 1, D); k, v: (B, KV, S, D); lengths: (B,) -> (B, H, 1, D)."""
+    b, h, _, d = q.shape
+    kv, s = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32) * d ** -0.5
+    s_mat = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32))
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos < lengths[:, None]
+    if window > 0:
+        mask = mask & (kpos >= lengths[:, None] - window)
+    s_mat = jnp.where(mask[:, None, None, :], s_mat, NEG_INF)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, 1, d).astype(q.dtype)

@@ -1,0 +1,117 @@
+"""Flash (streaming-softmax) causal GQA attention — Pallas TPU kernel.
+
+The cascade engine's prefill is generation-latency-critical for SATER
+(the SLM must prefill K vote lanes); this kernel keeps the working set
+in VMEM with (block_q x block_k) tiles and never materializes the
+(S x S) score matrix.
+
+Grid: (batch, q_heads, S_q/block_q, S_k/block_k) — the last axis is
+sequential on TPU, so online-softmax state (m, l, acc) lives in VMEM
+scratch and carries across k-blocks.  m/l are lane-replicated to 128
+(MIN_LANE) so vector ops stay register-shaped on the VPU; block sizes
+should be multiples of 128 for MXU alignment (enforced in ops.py).
+
+Supports GQA via index-mapped kv heads, causal masking, and optional
+sliding windows (window == 0 -> full causal).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+MIN_LANE = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, block_q: int, block_k: int, window: int,
+                 softcap: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+    # skip blocks that are entirely in the causal future / outside window
+    in_causal = k_start <= q_start + block_q - 1
+    in_window = True if window <= 0 else \
+        (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(in_causal & in_window)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (bq, bk)
+        if softcap and softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = kpos <= qpos
+        if window > 0:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                   # (bq, 128)
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=-1)[:, None]                  # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        p = jnp.exp(s - m_new[:, :1])
+        corr = jnp.exp(m_prev - m_new)
+        l_new = l_prev * corr + jnp.sum(p, axis=-1)[:, None]
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_ref[...] * corr[:, :1] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, block_q: int = 128, block_k: int = 128,
+                           window: int = 0, softcap: float = 0.0,
+                           interpret: bool = False):
+    """q: (B, H, S, D); k, v: (B, KV, S, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    assert h % kv == 0
+    group = h // kv
+    scale = d ** -0.5
+    grid = (b, h, pl.cdiv(s, block_q), pl.cdiv(s, block_k))
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, block_q=block_q, block_k=block_k,
+        window=window, softcap=softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, qi, ki: (bb, hh // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda bb, hh, qi, ki: (bb, hh // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda bb, hh, qi, ki: (bb, hh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),   # m
+            pltpu.VMEM((block_q, MIN_LANE), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),          # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

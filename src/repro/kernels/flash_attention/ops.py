@@ -1,0 +1,45 @@
+"""Jitted public wrapper: layout handling + CPU-interpret dispatch."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("window", "softcap", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q, k, v, window: int = 0, softcap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = None):
+    """q: (B, S, H, D); k, v: (B, S, KV, D) — model-layout entry point.
+
+    Pads S to a block multiple, runs the Pallas kernel (interpret mode on
+    non-TPU backends), unpads.  Padding sits in the causal future of real
+    queries so results are unaffected.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    b, s, h, d = q.shape
+    qt = jnp.swapaxes(q, 1, 2)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    pad = (-s) % max(block_q, block_k)
+    if pad:
+        qt = jnp.pad(qt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = flash_attention_pallas(qt, kt, vt, block_q=block_q, block_k=block_k,
+                                 window=window, softcap=softcap,
+                                 interpret=interpret)
+    if pad:
+        out = out[:, :, :s]
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, window: int = 0, softcap: float = 0.0):
+    """q: (B, H, S, D); k, v: (B, KV, S, D) -> (B, H, S, D)."""
+    b, h, s, d = q.shape
+    kv = k.shape[1]
+    g = h // kv
+    scale = d ** -0.5
+    qg = q.reshape(b, kv, g, s, d).astype(jnp.float32) * scale
+    s_mat = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32))
+    if softcap and softcap > 0:
+        s_mat = jnp.tanh(s_mat / softcap) * softcap
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos <= qpos
+    if window > 0:
+        mask = mask & (kpos > qpos - window)
+    s_mat = jnp.where(mask, s_mat, NEG_INF)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, s, d).astype(q.dtype)

@@ -1,0 +1,58 @@
+"""Grouped expert matmul — Pallas TPU kernel.
+
+The MoE dispatch buffer (E, C, D) times per-expert weights (E, D, F) is
+the compute hot-spot of the MoE archs (olmoe: 64 experts; llama4: 16).
+Blocking: grid (E, C/bc, F/bf, D/bd), accumulating over the D axis in a
+(bc x bf) f32 VMEM scratch — standard MXU-tiled matmul per expert, with
+the expert dim as the outermost grid axis so weights stream once per
+expert.  Block sizes are 128-multiples (MXU systolic dims).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_ref):
+    di = pl.program_id(3)
+    n_d = pl.num_programs(3)
+
+    @pl.when(di == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # (bc, bd)
+    w = w_ref[0].astype(jnp.float32)        # (bd, bf)
+    acc_ref[...] += jax.lax.dot_general(x, w, (((1,), (0,)), ((), ())))
+
+    @pl.when(di == n_d - 1)
+    def _emit():
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def moe_gmm_pallas(x, w, *, block_c: int = 128, block_f: int = 128,
+                   block_d: int = 256, interpret: bool = False):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F)."""
+    e, c, d = x.shape
+    f = w.shape[-1]
+    grid = (e, pl.cdiv(c, block_c), pl.cdiv(f, block_f), pl.cdiv(d, block_d))
+    return pl.pallas_call(
+        _gmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_d),
+                         lambda ee, ci, fi, di: (ee, ci, di)),
+            pl.BlockSpec((1, block_d, block_f),
+                         lambda ee, ci, fi, di: (ee, di, fi)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda ee, ci, fi, di: (ee, ci, fi)),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

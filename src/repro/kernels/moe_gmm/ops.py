@@ -1,0 +1,29 @@
+"""Jitted public wrapper for the grouped expert matmul."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gmm.kernel import moe_gmm_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_d",
+                                             "interpret"))
+def moe_gmm(x, w, block_c: int = 128, block_f: int = 128, block_d: int = 256,
+            interpret: bool = None):
+    """x: (E, C, D); w: (E, D, F) -> (E, C, F); pads C/F/D to blocks."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    e, c, d = x.shape
+    f = w.shape[-1]
+    pc, pf, pd = (-c) % block_c, (-f) % block_f, (-d) % block_d
+    if pc or pd:
+        x = jnp.pad(x, ((0, 0), (0, pc), (0, pd)))
+    if pd or pf:
+        w = jnp.pad(w, ((0, 0), (0, pd), (0, pf)))
+    out = moe_gmm_pallas(x, w, block_c=block_c, block_f=block_f,
+                         block_d=block_d, interpret=interpret)
+    return out[:, :c, :f]

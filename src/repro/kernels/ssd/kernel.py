@@ -1,0 +1,91 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+The SSD duality splits the recurrence into an intra-chunk quadratic part
+(two (Q x Q) / (Q x N) matmuls -> MXU work) and an inter-chunk state
+recurrence.  On TPU the natural mapping is: grid (batch, heads, chunks)
+with the chunk axis sequential, carrying the (P x N) state in VMEM
+scratch — the HBM->VMEM streaming unit is one chunk of x/B/C per step.
+
+Inputs (pre-chunked by ops.py):
+  xbar: (B, H, T, Q, P)   x * dt
+  a:    (B, H, T, Q)      dt * A   (log-decay, <= 0)
+  bmat: (B, T, Q, N)      shared across heads (G=1)
+  cmat: (B, T, Q, N)
+Output: y (B, H, T, Q, P) plus the final state (B, H, P, N).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref, h_ref, *,
+                chunk: int):
+    ti = pl.program_id(2)
+    n_t = pl.num_programs(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)           # (Q, P)
+    a = a_ref[0, 0, 0].astype(jnp.float32)           # (Q,)
+    bm = b_ref[0, 0].astype(jnp.float32)             # (Q, N)
+    cm = c_ref[0, 0].astype(jnp.float32)             # (Q, N)
+
+    cum_a = jnp.cumsum(a)                            # (Q,)
+    # intra-chunk: scores[i,j] = (C_i . B_j) * exp(cum_a[i] - cum_a[j]), j<=i
+    dec = cum_a[:, None] - cum_a[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    l_mat = jnp.where(tri, jnp.exp(dec), 0.0)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ()))) * l_mat
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())))      # (Q, P)
+
+    # inter-chunk: y += exp(cum_a)[:,None] * (C @ h^T);  h: (P, N)
+    h = h_ref[...]
+    y += jnp.exp(cum_a)[:, None] * jax.lax.dot_general(
+        cm, h, (((1,), (1,)), ((), ())))
+
+    # state update: h' = exp(a_tot) * h + x^T @ (B * exp(cum_a[-1]-cum_a))
+    dec_end = jnp.exp(cum_a[-1] - cum_a)[:, None]                     # (Q,1)
+    new_state = jax.lax.dot_general(x, bm * dec_end, (((0,), (0,)), ((), ())))
+    h_ref[...] = jnp.exp(cum_a[-1]) * h + new_state
+
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(ti == n_t - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = h_ref[...].astype(state_out_ref.dtype)
+
+
+def ssd_pallas(xbar, a, bmat, cmat, *, interpret: bool = False):
+    """xbar: (B,H,T,Q,P); a: (B,H,T,Q); bmat/cmat: (B,T,Q,N)."""
+    b, h, t, q, p = xbar.shape
+    n = bmat.shape[-1]
+    kernel = functools.partial(_ssd_kernel, chunk=q)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, t),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bb, hh, ti: (bb, hh, ti, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda bb, hh, ti: (bb, hh, ti, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bb, hh, ti: (bb, ti, 0, 0)),
+            pl.BlockSpec((1, 1, q, n), lambda bb, hh, ti: (bb, ti, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, p), lambda bb, hh, ti: (bb, hh, ti, 0, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bb, hh, ti: (bb, hh, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, t, q, p), xbar.dtype),
+            jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xbar, a, bmat, cmat)

@@ -1,0 +1,37 @@
+"""Jitted public wrapper for the SSD scan kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(xbar, a, bmat, cmat, chunk: int = 128, interpret: bool = None):
+    """xbar: (B,S,H,P); a: (B,S,H); bmat/cmat: (B,S,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).  Pads S to a chunk
+    multiple with zeros (dt = 0 => identity decay, no state change).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, p = xbar.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    t = xbar.shape[1] // chunk
+    xk = xbar.reshape(b, t, chunk, h, p).transpose(0, 3, 1, 2, 4)
+    ak = a.reshape(b, t, chunk, h).transpose(0, 3, 1, 2)
+    bk = bmat.reshape(b, t, chunk, n)
+    ck = cmat.reshape(b, t, chunk, n)
+    y, state = ssd_pallas(xk, ak, bk, ck, interpret=interpret)
+    y = y.transpose(0, 2, 3, 1, 4).reshape(b, t * chunk, h, p)
+    return y[:, :s], state

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the SSD kernel: the sequential recurrence itself
+(the ground-truth semantics, not the chunked algorithm)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xbar, a, bmat, cmat):
+    """Sequential scan.
+
+    xbar: (B,S,H,P); a: (B,S,H); bmat/cmat: (B,S,N) (G=1, shared heads).
+    Returns y (B,S,H,P), final state (B,H,P,N).
+    """
+    bsz, s, h, p = xbar.shape
+    n = bmat.shape[-1]
+
+    def step(hstate, xs):
+        xb, at, bt, ct = xs           # (B,H,P), (B,H), (B,N), (B,N)
+        hstate = hstate * jnp.exp(at)[:, :, None, None] + \
+            jnp.einsum("bhp,bn->bhpn", xb, bt)
+        y = jnp.einsum("bhpn,bn->bhp", hstate, ct)
+        return hstate, y
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    xs = (jnp.swapaxes(xbar.astype(jnp.float32), 0, 1),
+          jnp.swapaxes(a.astype(jnp.float32), 0, 1),
+          jnp.swapaxes(bmat.astype(jnp.float32), 0, 1),
+          jnp.swapaxes(cmat.astype(jnp.float32), 0, 1))
+    hlast, ys = jax.lax.scan(step, h0, xs)
+    return jnp.swapaxes(ys, 0, 1).astype(xbar.dtype), hlast

@@ -1,0 +1,261 @@
+"""Analytic FLOP/byte models + HLO collective accounting with while-loop
+trip-count multipliers.
+
+Why analytic: XLA's HLO cost analysis counts a while-loop *body once*
+(scan-over-layers => ~1/L of real FLOPs).  We therefore (1) parse the
+optimized HLO and multiply collective bytes by the enclosing loops' trip
+counts (structural, from the compiled artifact), and (2) compute the
+compute/memory roofline terms from an explicit per-component FLOP/byte
+model of the lowered step, cross-checked against the raw HLO numbers
+(recorded alongside).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from repro.configs.base import ModelConfig, InputShape
+
+
+# ----------------------------------------------------------------------
+# Analytic FLOPs (global, whole step)
+# ----------------------------------------------------------------------
+
+def _layer_matmul_flops_per_token(cfg: ModelConfig) -> float:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    f = 0.0
+    if cfg.has_attention:
+        f += 2 * d * (cfg.n_heads + 2 * cfg.n_kv_heads) * dh    # qkv proj
+        f += 2 * cfg.n_heads * dh * d                            # o proj
+    if cfg.has_ssm:
+        di = cfg.d_inner
+        n, h = cfg.ssm_state, cfg.n_ssm_heads
+        proj_out = 2 * di + 2 * n + h
+        f += 2 * d * proj_out + 2 * di * d                       # in/out proj
+        q = cfg.ssm_chunk
+        p = cfg.ssm_head_dim
+        # SSD per token: scores 2*q*n, y_intra 2*q*p, states 2*n*p, y_inter 2*n*p
+        f += 2 * h * (q * (n + p) + 2 * n * p)
+        f += 2 * cfg.ssm_conv_width * (di + 2 * n)               # conv
+    if cfg.is_moe:
+        mult = 3 if cfg.mlp_gated else 2
+        f += cfg.moe_top_k * mult * 2 * d * cfg.moe_d_ff
+        f += 2 * d * cfg.n_experts                               # router
+        if cfg.moe_shared_expert:
+            f += mult * 2 * d * cfg.d_ff
+    elif cfg.d_ff:
+        mult = 3 if cfg.mlp_gated else 2
+        f += mult * 2 * d * cfg.d_ff
+    return f
+
+
+def _attn_context_flops_per_token(cfg: ModelConfig, ctx: float) -> float:
+    """qk^T + pv against an average context of ``ctx`` positions."""
+    if not cfg.has_attention:
+        return 0.0
+    return 2 * 2 * cfg.n_heads * cfg.resolved_head_dim * ctx
+
+
+def _avg_context(cfg: ModelConfig, s: int, decode: bool) -> float:
+    windows = cfg.layer_windows()
+    ctxs = []
+    for w in windows:
+        full = float(s) if decode else s / 2.0
+        ctxs.append(min(float(w), full) if w > 0 else full)
+    return sum(ctxs) / max(len(ctxs), 1)
+
+
+def analytic_flops(cfg: ModelConfig, shp: InputShape) -> float:
+    b, s = shp.global_batch, shp.seq_len
+    per_tok_layer = _layer_matmul_flops_per_token(cfg)
+    head = 2 * cfg.d_model * cfg.vocab_size
+    if shp.kind == "train":
+        n_tok = b * s
+        ctx = _avg_context(cfg, s, decode=False)
+        layer_f = (per_tok_layer + _attn_context_flops_per_token(cfg, ctx)) \
+            * n_tok * cfg.n_layers
+        # fwd + bwd (2x fwd) + remat fwd
+        mult = 4.0 if cfg.remat else 3.0
+        return layer_f * mult + head * n_tok * 3.0 * 2  # head fwd+bwd, tied embed grad
+    if shp.kind == "prefill":
+        n_tok = b * s
+        ctx = _avg_context(cfg, s, decode=False)
+        layer_f = (per_tok_layer + _attn_context_flops_per_token(cfg, ctx)) \
+            * n_tok * cfg.n_layers
+        return layer_f + head * b                        # last_only head
+    # decode: 1 token/lane against a seq_len cache
+    ctx = _avg_context(cfg, s, decode=True)
+    layer_f = (per_tok_layer + _attn_context_flops_per_token(cfg, ctx)) \
+        * b * cfg.n_layers
+    return layer_f + head * b
+
+
+# ----------------------------------------------------------------------
+# Analytic HBM bytes (global, whole step)
+# ----------------------------------------------------------------------
+
+def _param_bytes(cfg: ModelConfig, dtype_bytes: int) -> float:
+    return cfg.param_count() * dtype_bytes
+
+
+def analytic_bytes(cfg: ModelConfig, shp: InputShape) -> float:
+    """HBM traffic model: weight streams + activations + cache/states.
+
+    Train: weights read fwd+bwd(+remat fwd) in compute dtype, grads
+    written+read, f32 master params+moments read+written (AdamW), layer
+    activations written+read once (remat saves the rest).
+    Decode: weights once, KV cache read+append, activations negligible.
+    """
+    b, s = shp.global_batch, shp.seq_len
+    d = cfg.d_model
+    cdt = 2 if cfg.compute_dtype == "bfloat16" else 4
+    if shp.kind == "train":
+        pb = _param_bytes(cfg, 4)                       # f32 params
+        reads = pb * (3 if cfg.remat else 2)            # fwd+bwd(+remat)
+        grads = pb * 2                                  # write + read
+        adam = pb * 2 * 2 + pb * 2                      # mu/nu rw + param write
+        acts = b * s * d * cdt * cfg.n_layers * 2       # saved layer inputs rw
+        logits = b * s * cfg.vocab_size * cdt * 2
+        return reads + grads + adam + acts + logits
+    if shp.kind == "prefill":
+        pb = _param_bytes(cfg, cdt)
+        acts = b * s * d * cdt * cfg.n_layers * 2
+        cache = _cache_bytes(cfg, b, s, cdt)
+        return pb + acts + cache
+    # decode
+    pb = _param_bytes(cfg, cdt)
+    cache = _cache_bytes(cfg, b, s, cdt)                # read full cache
+    return pb + cache
+
+
+def _cache_bytes(cfg: ModelConfig, b: int, s: int, cdt: int) -> float:
+    total = 0.0
+    if cfg.has_attention:
+        windows = cfg.layer_windows()
+        # int8 kv cache: 1 byte per element + a 4-byte scale per head-slot
+        kv_b = (1 + 4.0 / cfg.resolved_head_dim) if cfg.kv_quant else cdt
+        for w in windows:
+            sc = min(w, s) if w > 0 else s
+            total += 2 * b * sc * cfg.n_kv_heads * cfg.resolved_head_dim * kv_b
+    if cfg.has_ssm:
+        total += cfg.n_layers * b * cfg.n_ssm_heads * cfg.ssm_head_dim * \
+            cfg.ssm_state * 4
+    return total
+
+
+# ----------------------------------------------------------------------
+# HLO collective accounting with loop multipliers
+# ----------------------------------------------------------------------
+
+_DTYPE_BYTES = {"f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4,
+                "u32": 4, "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_TYPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\]\s+constant\((\d+)\)")
+
+
+def _type_bytes(segment: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_RE.findall(segment):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for dim in dims.split(","):
+            if dim:
+                n *= int(dim)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur = None
+    entry = None
+    for raw in hlo.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if raw.startswith("ENTRY") or line.startswith("ENTRY"):
+                    entry = cur
+        else:
+            if line == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps, entry
+
+
+def collective_bytes_structural(hlo: str) -> dict:
+    """Per-device collective bytes with while-loop trip multipliers."""
+    comps, entry = _split_computations(hlo)
+
+    # while info: body -> (cond, owner unknown); trip from condition consts
+    trip_of_body: Dict[str, int] = {}
+    children: Dict[str, list] = {c: [] for c in comps}
+    for name, lines in comps.items():
+        for line in lines:
+            bm = _BODY_RE.search(line)
+            cm = _COND_RE.search(line)
+            if bm:
+                body = bm.group(1)
+                trip = 1
+                if cm and cm.group(1) in comps:
+                    consts = [int(x) for ln in comps[cm.group(1)]
+                              for x in _CONST_RE.findall(ln)]
+                    consts = [c for c in consts if 2 <= c <= 10**7]
+                    if consts:
+                        trip = max(consts)
+                children[name].append((body, trip))
+                if cm:
+                    children[name].append((cm.group(1), trip))
+            for call in _CALL_RE.findall(line):
+                if call in comps:
+                    children[name].append((call, 1))
+
+    # propagate multipliers from entry
+    mult: Dict[str, int] = {}
+
+    def visit(name, m):
+        if name not in comps:
+            return
+        mult[name] = max(mult.get(name, 0), m)
+        for child, t in children.get(name, []):
+            if child != name:
+                visit(child, m * t)
+
+    if entry:
+        visit(entry, 1)
+    else:
+        for c in comps:
+            mult.setdefault(c, 1)
+
+    out = {c: 0 for c in COLLECTIVES}
+    counts = {c: 0 for c in COLLECTIVES}
+    op_re = re.compile(
+        r"=\s*\(?([a-z0-9\[\]\{\}, ]+)\)?\s+([a-z0-9-]+)\(", re.I)
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for line in lines:
+            om = op_re.search(line)
+            if not om:
+                continue
+            op = om.group(2)
+            base = op[:-6] if op.endswith("-start") else op
+            if op.endswith("-done"):
+                continue
+            if base in COLLECTIVES:
+                out[base] += _type_bytes(om.group(1)) * m
+                counts[base] += m
+    total = sum(out.values())
+    return {**out, **{f"n_{k}": v for k, v in counts.items()},
+            "total": total}

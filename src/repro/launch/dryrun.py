@@ -1,0 +1,525 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) pair on
+the production meshes, with no device allocation (ShapeDtypeStruct).
+
+Shapes:
+  train_4k    -> train_step   (full fwd+bwd+AdamW update; sater-slm-8b
+                               lowers the SATER DPO LoRA step instead)
+  prefill_32k -> prefill_step (last-position logits + cache build)
+  decode_32k  -> serve_step   (1 new token against a seq_len cache)
+  long_500k   -> serve_step   (batch=1; dense archs use the sliding-
+                               window variant, DESIGN.md §4)
+
+Per run we record compiled.memory_analysis(), compiled.cost_analysis(),
+and collective bytes parsed from the optimized HLO -- the roofline
+inputs (EXPERIMENTS.md §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all --mesh pod --out benchmarks/results
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, ModelConfig, get_config
+from repro.distributed import sharding as sh
+from repro.launch.analytics import (analytic_bytes, analytic_flops,
+                                    collective_bytes_structural)
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models import model as model_lib
+from repro.training import lora as lora_lib
+from repro.training.optimizer import adamw, cosine_warmup_schedule
+
+SLIDING_FALLBACK_WINDOW = 8192
+
+# archs whose long_500k run uses the sliding-window variant (full
+# attention otherwise quadratic/cache-infeasible at 500k)
+_NATIVE_SUBQUADRATIC = {"mamba2-1.3b", "hymba-1.5b", "gemma3-1b"}
+
+
+def shape_config(cfg: ModelConfig, shape_name: str) -> ModelConfig:
+    """Shape-specific config tweaks (long-context sliding variant)."""
+    if shape_name == "long_500k" and cfg.name not in _NATIVE_SUBQUADRATIC \
+            and cfg.has_attention:
+        cfg = dataclasses.replace(cfg, sliding_window=SLIDING_FALLBACK_WINDOW,
+                                  global_every=0)
+    return cfg
+
+
+# ----------------------------------------------------------------------
+# Abstract inputs
+# ----------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def abstract_params(cfg: ModelConfig, dtype_override=None):
+    tree = jax.eval_shape(lambda k: model_lib.init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if dtype_override is not None:
+        dt = jnp.dtype(dtype_override)
+        tree = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(
+                l.shape, dt if jnp.issubdtype(l.dtype, jnp.floating) else l.dtype),
+            tree)
+    return tree
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, mesh, cache_mode: str = "auto"):
+    """(abstract args, in_specs) for the step function of this shape."""
+    shp = INPUT_SHAPES[shape_name]
+    b, s = shp.global_batch, shp.seq_len
+    tok_spec = sh.tokens_spec(mesh, b)
+    bax = tok_spec[0]
+    if shp.kind == "train":
+        if cfg.embedding_inputs:
+            batch = {"embeds": _sds((b, s, cfg.d_model), cfg.compute_dtype),
+                     "labels": _sds((b, s), jnp.int32),
+                     "loss_mask": _sds((b, s), jnp.int32)}
+            specs = {"embeds": P(bax, None, None), "labels": tok_spec,
+                     "loss_mask": tok_spec}
+        else:
+            batch = {"tokens": _sds((b, s), jnp.int32),
+                     "loss_mask": _sds((b, s), jnp.int32)}
+            specs = {"tokens": tok_spec, "loss_mask": tok_spec}
+        return batch, specs
+    if shp.kind == "prefill":
+        if cfg.embedding_inputs:
+            batch = {"embeds": _sds((b, s, cfg.d_model), cfg.compute_dtype),
+                     "lengths": _sds((b,), jnp.int32)}
+            specs = {"embeds": P(bax, None, None), "lengths": P(bax)}
+        else:
+            batch = {"tokens": _sds((b, s), jnp.int32),
+                     "lengths": _sds((b,), jnp.int32)}
+            specs = {"tokens": tok_spec, "lengths": P(bax)}
+        return batch, specs
+    # decode: one token per lane + cache of seq_len
+    cache = jax.eval_shape(
+        lambda: model_lib.init_decode_state(cfg, b, s,
+                                            jnp.dtype(cfg.compute_dtype)))
+    cache_spec = sh.cache_specs(cfg, mesh, b, mode=cache_mode)
+    batch = {"tokens": _sds((b,), jnp.int32), "cache": cache}
+    specs = {"tokens": P(bax), "cache": cache_spec}
+    return batch, specs
+
+
+# ----------------------------------------------------------------------
+# Step builders
+# ----------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, gspecs=None, batch_spec0="data"):
+    """gspecs (§Perf iteration): pin gradients to the parameter sharding
+    so FSDP-sharded weights get reduce-scattered grads instead of
+    full-tensor all-reduces.  batch_spec0: mesh axes of the batch dim
+    (used to keep microbatch slices data-sharded)."""
+    opt = adamw(cosine_warmup_schedule(1e-4, 1000))
+    # NOTE: an explicit f32->bf16 whole-tree cast here (mixed-precision
+    # "compute copy") was tried and REFUTED: XLA keeps both copies live
+    # and temp grew ~3 GB/dev (llama4, pixtral) with no collective win —
+    # the per-use astype inside the layers already converts post-gather.
+    # See EXPERIMENTS.md §Perf.
+
+    def loss_fn(params, batch):
+        if cfg.embedding_inputs:
+            logits, aux = model_lib.forward(params, cfg, embeds=batch["embeds"])
+            labels, mask = batch["labels"], batch["loss_mask"]
+        else:
+            logits, aux = model_lib.forward(params, cfg,
+                                            tokens=batch["tokens"][:, :-1])
+            labels = batch["tokens"][:, 1:]
+            mask = batch["loss_mask"][:, 1:]
+        loss, metrics = model_lib.lm_loss(cfg, logits, labels, mask, aux)
+        return loss, metrics
+
+    def microbatched_loss(params, batch):
+        mb = cfg.microbatches
+        if mb <= 1:
+            return loss_fn(params, batch)
+
+        # checkpoint the microbatch body: without it, scan-based grad
+        # accumulation saves every microbatch's residuals simultaneously
+        # and the peak is no better than the unsplit batch.
+        @jax.checkpoint
+        def one(carry, sub):
+            loss, metrics = loss_fn(params, sub)
+            return carry, (loss, metrics)
+
+        def split(x):
+            # Keep the per-microbatch batch dim data-sharded: without the
+            # constraint GSPMD tries to shard the (tiny) microbatch axis
+            # and falls back to full replication of the batch (101 GB/dev
+            # regression on llama3 train_4k — EXPERIMENTS.md §Perf).
+            y = x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+            spec = P(None, batch_spec0, *([None] * (y.ndim - 2)))
+            return jax.lax.with_sharding_constraint(y, spec)
+
+        subs = jax.tree.map(split, batch)
+        _, (losses, ms) = jax.lax.scan(one, 0, subs)
+        return jnp.mean(losses), jax.tree.map(jnp.mean, ms)
+
+    def step(state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            microbatched_loss, has_aux=True)(state["params"], batch)
+        if gspecs is not None:
+            grads = jax.lax.with_sharding_constraint(grads, gspecs)
+        new_params, new_opt = opt.update(grads, state["opt_state"],
+                                         state["params"])
+        return {"params": new_params, "opt_state": new_opt,
+                "step": state["step"] + 1}, dict(metrics, loss=loss)
+
+    return step
+
+
+def make_dpo_train_step(cfg: ModelConfig, pspecs=None, batch_spec0="data"):
+    """SATER Stage-I step (LoRA policy vs base reference) — the
+    paper-representative train config (sater-slm-8b x train_4k).
+
+    pspecs pins the merged (base + LoRA) weights to the base sharding
+    (§Perf iteration 3 — stops XLA all-gathering merged weights)."""
+    from repro.core.dpo import DPOConfig, dpo_loss
+    lcfg = lora_lib.LoraConfig()
+    opt = adamw(cosine_warmup_schedule(1e-4, 1000))
+    dcfg = DPOConfig()
+
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def cast(tree):
+        # §Perf iteration 4: carry scanned weights in compute dtype so
+        # per-layer weight movement/collectives are bf16, not f32
+        return jax.tree.map(
+            lambda p: p.astype(cdt) if p.dtype == jnp.float32 else p, tree)
+
+    def microbatched(base_c, lt, batch):
+        # The base+LoRA merge happens INSIDE the checkpointed microbatch
+        # body: the backward scan then carries d(lora) (rank-8 factors,
+        # KBs) instead of d(merged_weights) — carrying the latter
+        # materialized + all-gathered two full f32 weight stacks
+        # (2 x 7.5 GB/dev on sater-slm-8b; EXPERIMENTS.md §Perf).
+        def merged_loss(sub):
+            merged = lora_lib.merge(base_c, lt, lcfg, spec_tree=pspecs)
+            return dpo_loss(merged, base_c, cfg, sub, dcfg)
+
+        mb = cfg.microbatches
+        if mb <= 1:
+            return merged_loss(batch)
+
+        def split(x):
+            y = x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+            spec = P(None, batch_spec0, *([None] * (y.ndim - 2)))
+            return jax.lax.with_sharding_constraint(y, spec)
+
+        @jax.checkpoint
+        def one(carry, sub):
+            loss, metrics = merged_loss(sub)
+            return carry, (loss, metrics)
+
+        subs = jax.tree.map(split, batch)
+        _, (losses, ms) = jax.lax.scan(one, 0, subs)
+        return jnp.mean(losses), jax.tree.map(jnp.mean, ms)
+
+    def step(state, batch):
+        base_c = cast(state["base"])
+
+        def lf(lt):
+            return microbatched(base_c, cast(lt), batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["lora"])
+        new_lora, new_opt = opt.update(grads, state["opt_state"], state["lora"])
+        return {"base": state["base"], "lora": new_lora,
+                "opt_state": new_opt, "step": state["step"] + 1}, \
+            dict(metrics, loss=loss)
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def step(params, batch):
+        if cfg.embedding_inputs:
+            return model_lib.prefill(params, cfg, embeds=batch["embeds"],
+                                     lengths=batch["lengths"], last_only=True)
+        return model_lib.prefill(params, cfg, tokens=batch["tokens"],
+                                 lengths=batch["lengths"], last_only=True)
+    return step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def step(params, batch):
+        return model_lib.decode_step(params, cfg, batch["tokens"],
+                                     batch["cache"])
+    return step
+
+
+# ----------------------------------------------------------------------
+# Runner
+# ----------------------------------------------------------------------
+
+def run_one(arch: str, shape_name: str, mesh_kind: str,
+            microbatches: int = 0, save_hlo: str = "",
+            seq_shard: bool = False, cache_mode: str = "auto",
+            moe_shard: bool = False, moe_chunks_override: int = 0,
+            kv_quant: bool = False, moe_shard_map: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    cfg = get_config(arch)
+    cfg = shape_config(cfg, shape_name)
+    shp = INPUT_SHAPES[shape_name]
+    # Baseline fit requirements (16 GB HBM / v5e chip; DESIGN.md §5):
+    #  * vocab-sharded logits (128k-262k vocabs don't fit unsharded),
+    #  * expert-sharded MoE dispatch buffers,
+    #  * grad-accumulation microbatches for the 1M-token train step.
+    msz = int(mesh.shape["model"])
+    n_tok = shp.global_batch * shp.seq_len
+    moe_chunks = 1
+    if cfg.is_moe and shp.kind in ("train", "prefill") and n_tok > 32768:
+        # bound the replicated (T*k, D) dispatch rows to ~32k tokens/chunk
+        per_call = n_tok if shp.kind == "prefill" else n_tok // 8
+        moe_chunks = max(1, per_call // 32768)
+    if moe_chunks_override:
+        moe_chunks = moe_chunks_override
+    cfg = dataclasses.replace(
+        cfg,
+        shard_logits_vocab=(cfg.vocab_size % msz == 0),
+        shard_moe_dispatch=cfg.is_moe,
+        moe_dispatch_chunks=moe_chunks,
+        microbatches=(microbatches or
+                      ((16 if cfg.param_count() > 3e10 else 8)
+                       if shp.kind == "train" else 1)))
+    # each microbatch slice must still cover every batch shard: a slice
+    # smaller than the (pod x data) batch sharding forces replication
+    # (llama4 multipod train regressed to 33.6 GB/dev — §Perf C2 class)
+    if shp.kind == "train" and cfg.microbatches > 1:
+        shards = 1
+        for ax in (("pod", "data") if mesh_kind == "multipod" else ("data",)):
+            shards *= int(mesh.shape[ax])
+        eff_batch = shp.global_batch // (2 if arch == "sater-slm-8b" else 1)
+        cfg = dataclasses.replace(
+            cfg, microbatches=max(1, min(cfg.microbatches,
+                                         eff_batch // shards)))
+    if seq_shard:
+        cfg = dataclasses.replace(cfg, seq_shard_activations=True)
+    if kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    if moe_shard_map:
+        from repro.models import moe_shard_map as msm
+        msm.set_mesh(mesh)
+        cfg = dataclasses.replace(cfg, moe_shard_map=True)
+    if moe_shard:
+        cfg = dataclasses.replace(cfg, shard_moe_dispatch=True)
+
+    # Decode/prefill cache sharding: when kv heads don't divide the model
+    # axis, head-dim sharding forces a per-layer cache reshard (the k/v
+    # projections are fused-head sharded).  Sequence-sharding the cache
+    # (flash-decode) avoids it entirely: -99.9% decode collectives on
+    # llama3 (EXPERIMENTS.md §Perf).  kv%msz==0 archs keep plain head TP.
+    if cache_mode == "auto" and cfg.has_attention and shp.kind != "train" \
+            and cfg.n_kv_heads % msz != 0:
+        cache_mode = "seq"
+    batch, batch_specs = input_specs(cfg, shape_name, mesh, cache_mode)
+    result = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+              "devices": int(len(mesh.devices.flatten())),
+              "params": cfg.param_count(),
+              "active_params": cfg.active_param_count(),
+              "microbatches": cfg.microbatches,
+              "seq_shard": seq_shard, "cache_mode": cache_mode}
+
+    if shp.kind == "train":
+        if arch == "sater-slm-8b":
+            params = abstract_params(cfg)
+            lcfg = lora_lib.LoraConfig()
+            lora_tree = jax.eval_shape(
+                lambda k: lora_lib.init_lora(params, lcfg, k),
+                jax.ShapeDtypeStruct((2,), jnp.uint32))
+            opt = adamw(cosine_warmup_schedule(1e-4, 1000))
+            opt_state = jax.eval_shape(opt.init, lora_tree)
+            pspecs = sh.param_specs(cfg, params, mesh)
+            lspecs = jax.tree.map(lambda l: P(*([None] * l.ndim)), lora_tree)
+            state = {"base": params, "lora": lora_tree,
+                     "opt_state": opt_state,
+                     "step": _sds((), jnp.int32)}
+            state_specs = {
+                "base": pspecs,
+                "lora": lspecs,
+                "opt_state": {"mu": lspecs, "nu": lspecs, "step": P()},
+                "step": P()}
+            # DPO batches: chosen/rejected pairs at half batch (2x forward)
+            b, s = shp.global_batch // 2, shp.seq_len
+            tok_spec = sh.tokens_spec(mesh, b)
+            step = make_dpo_train_step(cfg, batch_spec0=tok_spec[0])
+            batch = {k: _sds((b, s), jnp.int32)
+                     for k in ("chosen", "chosen_mask", "rejected",
+                               "rejected_mask")}
+            batch_specs = {k: tok_spec for k in batch}
+            result["step_kind"] = "dpo_train"
+        else:
+            params = abstract_params(cfg)
+            opt = adamw(cosine_warmup_schedule(1e-4, 1000))
+            opt_state = jax.eval_shape(opt.init, params)
+            pspecs = sh.param_specs(cfg, params, mesh)
+            state = {"params": params, "opt_state": opt_state,
+                     "step": _sds((), jnp.int32)}
+            state_specs = {"params": pspecs,
+                           "opt_state": sh.opt_state_specs(cfg, params, mesh),
+                           "step": P()}
+            step = make_train_step(cfg, gspecs=(pspecs if seq_shard else None),
+                                   batch_spec0=sh.tokens_spec(mesh, shp.global_batch)[0])
+            result["step_kind"] = "train"
+        args = (state, batch)
+        specs = (state_specs, batch_specs)
+        donate = (0,)
+    else:
+        params = abstract_params(cfg, dtype_override=cfg.compute_dtype)
+        pspecs = sh.param_specs(cfg, params, mesh)
+        b = shp.global_batch
+        bax = sh.tokens_spec(mesh, b)[0]
+        if shp.kind == "prefill":
+            step = make_prefill_step(cfg)
+            result["step_kind"] = "prefill"
+            donate = ()
+            # out: (last-position logits (B,V), cache) — the cache MUST
+            # be head/batch-sharded or it alone is 10-40 GB/dev at 32k.
+            out_specs = (P(bax, None),
+                         sh.cache_specs(cfg, mesh, b, mode=cache_mode))
+        else:
+            step = make_serve_step(cfg)
+            result["step_kind"] = "serve"
+            donate = (1,)          # cache buffers are update-in-place
+            out_specs = (P(bax, None),
+                         sh.cache_specs(cfg, mesh, b, mode=cache_mode))
+        args = (params, batch)
+        specs = (pspecs, batch_specs)
+
+    in_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                                is_leaf=lambda x: isinstance(x, P))
+    out_shardings = None
+    if shp.kind in ("prefill", "decode"):
+        out_shardings = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                                     out_specs,
+                                     is_leaf=lambda x: isinstance(x, P))
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, in_shardings=in_shardings,
+                          out_shardings=out_shardings,
+                          donate_argnums=donate).lower(*args)
+        result["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        result["compile_s"] = round(time.time() - t1, 1)
+
+    mem = compiled.memory_analysis()
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                result[attr] = int(v)
+    cost = compiled.cost_analysis()
+    if cost:
+        result["hlo_flops"] = float(cost.get("flops", -1))
+        result["hlo_bytes"] = float(cost.get("bytes accessed", -1))
+        result["hlo_transcendentals"] = float(cost.get("transcendentals", -1))
+    hlo = compiled.as_text()
+    result["collectives"] = collective_bytes_structural(hlo)
+    result["hlo_size"] = len(hlo)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    n_tok = shp.global_batch * shp.seq_len
+    act = cfg.active_param_count()
+    if shp.kind == "train":
+        result["model_flops"] = 6 * act * n_tok
+    elif shp.kind == "prefill":
+        result["model_flops"] = 2 * act * n_tok
+    else:
+        result["model_flops"] = 2 * act * shp.global_batch
+    # analytic global step FLOPs/bytes (HLO cost analysis counts scan
+    # bodies once — see launch/analytics.py)
+    result["analytic_flops"] = analytic_flops(cfg, shp)
+    result["analytic_bytes"] = analytic_bytes(cfg, shp)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--moe-chunks", type=int, default=0)
+    ap.add_argument("--kv-quant", action="store_true",
+                    help="§Perf: int8 decode kv cache + absmax scales")
+    ap.add_argument("--moe-shard-map", action="store_true",
+                    help="§Perf: explicit shard_map all-to-all MoE dispatch")
+    ap.add_argument("--save-hlo", default="")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="§Perf: sequence-shard residual activations")
+    ap.add_argument("--moe-shard", action="store_true",
+                    help="§Perf: expert-shard MoE dispatch buffers")
+    ap.add_argument("--cache-mode", default="auto", choices=["auto", "seq"],
+                    help="§Perf: decode cache sharding scheme")
+    ap.add_argument("--tag", default="",
+                    help="suffix for the output JSON (perf experiments)")
+    args = ap.parse_args()
+
+    runs = []
+    if args.all:
+        for arch in ARCH_IDS:
+            shapes = list(INPUT_SHAPES)
+            if arch == "sater-slm-8b":
+                shapes = ["train_4k"]       # paper-representative extra row
+            for s in shapes:
+                runs.append((arch, s))
+    else:
+        runs.append((args.arch, args.shape))
+
+    os.makedirs(args.out, exist_ok=True)
+    for arch, shape in runs:
+        tag = f"{arch}__{shape}__{args.mesh}" + \
+            (f"__{args.tag}" if args.tag else "")
+        path = os.path.join(args.out, f"dryrun_{tag}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            res = run_one(arch, shape, args.mesh,
+                          microbatches=args.microbatches,
+                          save_hlo=args.save_hlo,
+                          seq_shard=args.seq_shard,
+                          cache_mode=args.cache_mode,
+                          moe_shard=args.moe_shard,
+                          moe_chunks_override=args.moe_chunks,
+                          kv_quant=args.kv_quant,
+                          moe_shard_map=args.moe_shard_map)
+            res["ok"] = True
+        except Exception as e:  # noqa: BLE001 — record failure, keep sweeping
+            res = {"arch": arch, "shape": shape, "mesh": args.mesh,
+                   "ok": False, "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            print(f"[FAIL] {tag}: {res['error']}", flush=True)
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        if res.get("ok"):
+            print(f"[ok] {tag} compile={res.get('compile_s')}s "
+                  f"flops={res.get('hlo_flops', 0):.3e} "
+                  f"coll={sum(v for k, v in res['collectives'].items() if not k.startswith('n_')):.3e}B",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

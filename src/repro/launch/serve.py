@@ -1,0 +1,71 @@
+"""Distributed serving launcher: pjit'd prefill + decode steps on the
+production mesh (or host mesh with --smoke), driving batched requests
+through the generation engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
+      --requests 4 --new-tokens 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, smoke_variant
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as model_lib
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+        mesh = make_host_mesh()
+    else:
+        mesh = make_production_mesh()
+
+    key = jax.random.PRNGKey(0)
+    params = model_lib.init_params(cfg, key)
+    b, s = args.requests, args.prompt_len
+    rng = np.random.RandomState(0)
+    prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32)
+    lengths = jnp.full((b,), s, jnp.int32)
+
+    with mesh:
+        t0 = time.time()
+        last, cache = jax.jit(
+            lambda p, t, l: model_lib.prefill(
+                p, cfg, tokens=t, lengths=l,
+                max_len=s + args.new_tokens, last_only=True)
+        )(params, prompts, lengths)
+        print(f"prefill {b}x{s} in {time.time()-t0:.2f}s")
+
+        decode = jax.jit(lambda p, t, c: model_lib.decode_step(p, cfg, t, c))
+        tok = jnp.argmax(last, -1).astype(jnp.int32)
+        t0 = time.time()
+        out = [tok]
+        for _ in range(args.new_tokens - 1):
+            logits, cache = decode(params, tok, cache)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            out.append(tok)
+        jax.block_until_ready(tok)
+        dt = time.time() - t0
+        print(f"decoded {args.new_tokens} tokens x {b} lanes in {dt:.2f}s "
+              f"({1000*dt/args.new_tokens:.1f} ms/tok)")
+        print("sample lane 0 tokens:", [int(t[0]) for t in out][:16])
+
+
+if __name__ == "__main__":
+    main()

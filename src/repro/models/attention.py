@@ -1,0 +1,275 @@
+"""Attention: MHA/GQA/MQA with RoPE, causal + sliding-window masks.
+
+Two execution paths:
+  * ``direct``  — full (S x S) score materialization, used for short seqs
+    and as the semantic reference.
+  * ``chunked`` — lax.scan over KV blocks with online (flash-style)
+    softmax; the pure-JAX analogue of the Pallas flash kernel and the
+    path used for long sequences so prefill memory stays O(S * block).
+
+Decode attends one new token against the cache.  The cache stores keys
+*post-RoPE* together with the absolute position of every slot
+(``cache_pos``, -1 = empty), which makes full and ring-buffer
+(sliding-window) caches uniform: validity and window masks are derived
+from positions, not slot indices.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(cfg: ModelConfig, key, dtype):
+    dh = cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(k1, cfg.d_model, cfg.n_heads * dh, dtype),
+        "wk": dense_init(k2, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wv": dense_init(k3, cfg.d_model, cfg.n_kv_heads * dh, dtype),
+        "wo": dense_init(k4, cfg.n_heads * dh, cfg.d_model, dtype),
+    }
+
+
+# ----------------------------------------------------------------------
+# RoPE
+# ----------------------------------------------------------------------
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, Dh); positions: (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                                # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# Score masking helpers
+# ----------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, window, valid_k=None):
+    """Additive bias (…, S_q, S_k): causal + optional sliding window.
+
+    window == 0 means full attention.  q_pos/k_pos broadcast as
+    (..., S_q, 1) vs (..., 1, S_k).
+    """
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = kp <= qp
+    ok = ok & jnp.where(window > 0, kp > qp - window, True)
+    if valid_k is not None:
+        ok = ok & valid_k[..., None, :]
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def _softcap(scores, cap: float):
+    if cap and cap > 0:
+        return jnp.tanh(scores / cap) * cap
+    return scores
+
+
+# ----------------------------------------------------------------------
+# Core attention (q already grouped for GQA)
+# ----------------------------------------------------------------------
+
+def _gqa_scores_einsum(q, k):
+    # q: (B, Sq, KV, G, Dh)   k: (B, Sk, KV, Dh).  Inputs stay in the
+    # cache dtype (bf16 on TPU configs) with f32 accumulation — casting
+    # k/v to f32 materializes a full-cache f32 copy (4.8 GB/dev on
+    # musicgen decode_32k; EXPERIMENTS.md §Perf).
+    return jnp.einsum("bqkgd,bskd->bkgqs", q.astype(k.dtype), k,
+                      preferred_element_type=jnp.float32)
+
+
+def direct_attention(cfg: ModelConfig, q, k, v, q_pos, k_pos, window, valid_k=None):
+    """q: (B,Sq,H,Dh), k/v: (B,Sk,KV,Dh). Returns (B,Sq,H,Dh)."""
+    b, sq, h, dh = q.shape
+    kv = k.shape[2]
+    g = h // kv
+    scale = dh ** -0.5
+    qg = q.reshape(b, sq, kv, g, dh)
+    scores = _gqa_scores_einsum(qg * scale, k)
+    scores = _softcap(scores, cfg.attn_logit_softcap)
+    bias = _mask_bias(q_pos, k_pos, window, valid_k)                 # (B,Sq,Sk)
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, h, dh).astype(q.dtype)
+
+
+def chunked_attention(cfg: ModelConfig, q, k, v, q_pos, k_pos, window,
+                      valid_k=None, block: int = 512):
+    """Online-softmax attention, scanning KV in blocks of ``block``.
+
+    Semantics identical to :func:`direct_attention`; memory is
+    O(Sq * block) instead of O(Sq * Sk).  This mirrors the Pallas flash
+    kernel's streaming structure (kernels/flash_attention).  The scan
+    body is checkpointed: under AD the per-block (Sq x block) score/prob
+    tensors would otherwise ALL be saved, silently restoring the O(Sq*Sk)
+    footprint the chunking exists to avoid.
+    """
+    b, sq, h, dh = q.shape
+    sk = k.shape[1]
+    kv = k.shape[2]
+    g = h // kv
+    scale = dh ** -0.5
+    pad = (-sk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, ((0, 0), (0, pad)), constant_values=-1)
+        vk = jnp.ones((b, sk), bool) if valid_k is None else valid_k
+        valid_k = jnp.pad(vk, ((0, 0), (0, pad)), constant_values=False)
+    n_blocks = k.shape[1] // block
+
+    qg = (q * scale).reshape(b, sq, kv, g, dh)
+    kb = k.reshape(b, n_blocks, block, kv, dh)
+    vb = v.reshape(b, n_blocks, block, kv, dh)
+    kpb = k_pos.reshape(b, n_blocks, block)
+    vkb = None if valid_k is None else valid_k.reshape(b, n_blocks, block)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        m, l, acc = carry
+        if vkb is None:
+            k_blk, v_blk, kp_blk = xs
+            vk_blk = None
+        else:
+            k_blk, v_blk, kp_blk, vk_blk = xs
+        s = _gqa_scores_einsum(qg, k_blk)                            # (B,KV,G,Sq,blk) f32
+        s = _softcap(s, cfg.attn_logit_softcap)
+        bias = _mask_bias(q_pos, kp_blk, window, vk_blk)             # (B,Sq,blk)
+        s = s + bias[:, None, None, :, :]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_new = acc * corr + jnp.einsum("bkgqs,bskd->bkgqd",
+                                          p.astype(v_blk.dtype), v_blk,
+                                          preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, dh), jnp.float32)
+    xs = (jnp.swapaxes(kb, 0, 1), jnp.swapaxes(vb, 0, 1), jnp.swapaxes(kpb, 0, 1))
+    if vkb is not None:
+        xs = xs + (jnp.swapaxes(vkb, 0, 1),)
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)
+    out = jnp.transpose(out, (0, 3, 1, 2, 4)).reshape(b, sq, h, dh)  # (B,Sq,H,Dh)
+    return out.astype(q.dtype)
+
+
+# ----------------------------------------------------------------------
+# Layer-level entry points
+# ----------------------------------------------------------------------
+
+CHUNKED_THRESHOLD = 2048
+
+
+def attention_forward(cfg: ModelConfig, p, x, positions, window):
+    """Full-sequence attention (train/prefill).  Returns (out, (k, v))."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, s, _ = x.shape
+    dh = cfg.resolved_head_dim
+    x = x.astype(cdt)
+    q = (x @ p["wq"].astype(cdt)).reshape(b, s, cfg.n_heads, dh)
+    k = (x @ p["wk"].astype(cdt)).reshape(b, s, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"].astype(cdt)).reshape(b, s, cfg.n_kv_heads, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cfg.seq_shard_activations:
+        # §Perf (context-parallel attention): queries stay sequence-
+        # sharded over 'model'; only the (much thinner) k/v are gathered.
+        # Position-based causal masks make the sharded-q math exact.
+        from jax.sharding import PartitionSpec as P
+        U = P.UNCONSTRAINED
+        q = jax.lax.with_sharding_constraint(q, P(U, "model", U, U))
+        k = jax.lax.with_sharding_constraint(k, P(U, None, U, U))
+        v = jax.lax.with_sharding_constraint(v, P(U, None, U, U))
+    if s > CHUNKED_THRESHOLD:
+        out = chunked_attention(cfg, q, k, v, positions, positions, window)
+    else:
+        out = direct_attention(cfg, q, k, v, positions, positions, window)
+    out = out.reshape(b, s, cfg.n_heads * dh) @ p["wo"].astype(cdt)
+    return out, (k, v)
+
+
+def quantize_kv(x):
+    """x (..., dh) -> (int8 q, f32 absmax scale (...,))."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    q = jnp.round(x.astype(jnp.float32) / jnp.maximum(s, 1e-8)[..., None])
+    return q.astype(jnp.int8), s
+
+
+def dequantize_kv(q, s, dtype):
+    return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
+
+
+def attention_decode(cfg: ModelConfig, p, x, pos, k_cache, v_cache, cache_pos, window,
+                     k_scale=None, v_scale=None):
+    """One-token decode.
+
+    x: (B,1,D); pos: (B,) absolute position of the new token.
+    k_cache/v_cache: (B,Sc,KV,Dh) — this layer's slice; the new token is
+    written at slot pos %% Sc and the UPDATED slice is returned.  The
+    caller (model.decode_step) threads the stacked cache as a scan CARRY
+    with dynamic_update_index_in_dim so XLA updates it in place —
+    stacking updated slices as scan ys instead doubles the cache
+    footprint (2 x 4.8 GB/dev on musicgen decode_32k; §Perf).
+    cache_pos: (B,Sc) absolute positions per slot (-1 = empty), already
+    including the new token's slot.
+    Returns (out (B,1,D), k_cache, v_cache).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    sc = k_cache.shape[1]
+    x = x.astype(cdt)
+    q = (x @ p["wq"].astype(cdt)).reshape(b, 1, cfg.n_heads, dh)
+    k = (x @ p["wk"].astype(cdt)).reshape(b, 1, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"].astype(cdt)).reshape(b, 1, cfg.n_kv_heads, dh)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    slot = (pos % sc).astype(jnp.int32)
+    bidx = jnp.arange(b)
+    quant = k_scale is not None
+    if quant:
+        kq, ks = quantize_kv(k[:, 0])
+        vq, vs = quantize_kv(v[:, 0])
+        k_cache = k_cache.at[bidx, slot].set(kq)
+        v_cache = v_cache.at[bidx, slot].set(vq)
+        k_scale = k_scale.at[bidx, slot].set(ks)
+        v_scale = v_scale.at[bidx, slot].set(vs)
+        # transient per-layer dequantized view (one layer at a time)
+        k_att = dequantize_kv(k_cache, k_scale, cdt)
+        v_att = dequantize_kv(v_cache, v_scale, cdt)
+    else:
+        k_cache = k_cache.at[bidx, slot].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, slot].set(v[:, 0].astype(v_cache.dtype))
+        k_att, v_att = k_cache, v_cache
+
+    valid = cache_pos >= 0                                            # (B,Sc)
+    if sc > 64 * 1024:
+        out = chunked_attention(cfg, q, k_att, v_att, pos[:, None], cache_pos,
+                                window, valid_k=valid, block=8192)
+    else:
+        out = direct_attention(cfg, q, k_att, v_att, pos[:, None], cache_pos,
+                               window, valid_k=valid)
+    out = out.reshape(b, 1, cfg.n_heads * dh) @ p["wo"].astype(cdt)
+    if quant:
+        return out, k_cache, v_cache, k_scale, v_scale
+    return out, k_cache, v_cache

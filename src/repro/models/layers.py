@@ -1,0 +1,118 @@
+"""Basic layers: norms, MLPs, embeddings — pure-JAX, functional style.
+
+Params are plain nested dicts of jnp arrays; every module is a pair of
+``init_*`` / ``apply_*`` functions so layer stacks can be vmapped/scanned.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def _dtype(name: str):
+    return jnp.dtype(name)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / (d_in ** 0.5)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------------
+# Norms
+# ----------------------------------------------------------------------
+
+def norm_init(cfg: ModelConfig, d: int, dtype):
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.rms_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + cfg.rms_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rmsnorm_gated(p_scale, x, gate, eps=1e-6):
+    """Mamba2 gated RMSNorm: norm(x * silu(gate)) * scale."""
+    x = x * jax.nn.silu(gate)
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps) * p_scale.astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------------
+# MLP
+# ----------------------------------------------------------------------
+
+def _act(name: str, x):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(f"unknown activation {name}")
+
+
+def mlp_init(cfg: ModelConfig, key, d: int, d_ff: int, dtype):
+    if cfg.mlp_gated:
+        k1, k2, k3 = jax.random.split(key, 3)
+        return {
+            "wi_gate": dense_init(k1, d, d_ff, dtype),
+            "wi_up": dense_init(k2, d, d_ff, dtype),
+            "wo": dense_init(k3, d_ff, d, dtype),
+        }
+    k1, k2 = jax.random.split(key)
+    return {"wi": dense_init(k1, d, d_ff, dtype), "wo": dense_init(k2, d_ff, d, dtype)}
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    cdt = _dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    if cfg.mlp_gated:
+        h = _act(cfg.activation, x @ p["wi_gate"].astype(cdt)) * (x @ p["wi_up"].astype(cdt))
+        return h @ p["wo"].astype(cdt)
+    h = _act(cfg.activation, x @ p["wi"].astype(cdt))
+    return h @ p["wo"].astype(cdt)
+
+
+# ----------------------------------------------------------------------
+# Embeddings / head
+# ----------------------------------------------------------------------
+
+def embed_init(cfg: ModelConfig, key, dtype):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": (jax.random.normal(k1, (cfg.vocab_size, cfg.d_model)) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def embed_tokens(cfg: ModelConfig, p, tokens):
+    cdt = _dtype(cfg.compute_dtype)
+    x = p["embedding"].astype(cdt)[tokens]
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, cdt)
+    return x
+
+
+def logits_from_hidden(cfg: ModelConfig, p, x):
+    cdt = _dtype(cfg.compute_dtype)
+    if cfg.tie_embeddings:
+        return x.astype(cdt) @ p["embedding"].astype(cdt).T
+    return x.astype(cdt) @ p["lm_head"].astype(cdt)

@@ -1,0 +1,458 @@
+"""Unified decoder LM covering all assigned architecture families.
+
+Layers are stacked on a leading axis and executed with ``jax.lax.scan``
+so compile time is depth-independent (crucial for the 48-layer dry-run
+configs on the CPU host).  Per-layer heterogeneity (gemma3 5:1
+local:global windows) flows through the scan as a per-layer window array.
+
+Entry points:
+  * init_params(cfg, key)
+  * forward(params, cfg, tokens|embeds, positions)        -> logits, aux
+  * prefill(params, cfg, tokens|embeds, positions)        -> logits, cache
+  * decode_step(params, cfg, tokens, cache)               -> logits, cache
+  * init_decode_state(cfg, batch, cache_len)              -> empty cache
+  * lm_loss(cfg, logits, labels, mask, aux)               -> scalar, metrics
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    apply_mlp,
+    apply_norm,
+    embed_init,
+    embed_tokens,
+    logits_from_hidden,
+    mlp_init,
+    norm_init,
+)
+
+
+# ----------------------------------------------------------------------
+# Init
+# ----------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key, dtype):
+    ks = jax.random.split(key, 5)
+    p = {"norm1": norm_init(cfg, cfg.d_model, dtype)}
+    if cfg.has_attention:
+        p["attn"] = attn_mod.attn_init(cfg, ks[0], dtype)
+    if cfg.has_ssm:
+        p["ssm"] = ssm_mod.ssm_init(cfg, ks[1], dtype)
+    if cfg.is_moe:
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+        p["moe"] = moe_mod.moe_init(cfg, ks[2], dtype)
+    elif cfg.d_ff:
+        p["norm2"] = norm_init(cfg, cfg.d_model, dtype)
+        p["mlp"] = mlp_init(cfg, ks[3], cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_embed, k_layers, k_final = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(lambda k: _init_layer(cfg, k, dtype))(layer_keys)
+    return {
+        "embed": embed_init(cfg, k_embed, dtype),
+        "layers": layers,
+        "final_norm": norm_init(cfg, cfg.d_model, dtype),
+    }
+
+
+# ----------------------------------------------------------------------
+# Blocks
+# ----------------------------------------------------------------------
+
+def _zero_aux(cfg: ModelConfig):
+    return {"moe_lb": jnp.float32(0.0), "moe_z": jnp.float32(0.0),
+            "moe_dropped": jnp.float32(0.0)}
+
+
+def _maybe_seq_shard(cfg: ModelConfig, x):
+    """§Perf: constrain the residual stream to be sequence-sharded over
+    the 'model' axis (GSPMD then uses reduce-scatter/all-gather around
+    the tensor-parallel matmuls instead of full all-reduces)."""
+    if not cfg.seq_shard_activations or x.ndim != 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+    U = P.UNCONSTRAINED
+    return jax.lax.with_sharding_constraint(x, P(U, "model", U))
+
+
+def _mixer_forward(cfg: ModelConfig, lp, x, positions, window):
+    """Token mixer (attention / ssm / both), full sequence.
+
+    Returns (mix_out, cache_parts) where cache_parts has the per-layer
+    state needed for decode (k/v and/or conv/ssm states).
+    """
+    parts = {}
+    h = apply_norm(cfg, lp["norm1"], x)
+    outs = []
+    if cfg.has_attention:
+        a_out, (k, v) = attn_mod.attention_forward(cfg, lp["attn"], h, positions, window)
+        outs.append(a_out)
+        parts["k"], parts["v"] = k, v
+    if cfg.has_ssm:
+        s_out, (conv_state, ssm_state) = ssm_mod.ssm_forward(cfg, lp["ssm"], h)
+        outs.append(s_out)
+        parts["conv"], parts["ssm"] = conv_state, ssm_state
+    if len(outs) == 2:       # hymba: parallel heads, mean-fused
+        mix = (outs[0] + outs[1]) * 0.5
+    else:
+        mix = outs[0]
+    return mix, parts
+
+
+def _channel_forward(cfg: ModelConfig, lp, x):
+    """FFN / MoE sublayer.  Returns (out, aux)."""
+    if cfg.is_moe:
+        h = apply_norm(cfg, lp["norm2"], x)
+        return moe_mod.apply_moe(cfg, lp["moe"], h)
+    if cfg.d_ff:
+        h = apply_norm(cfg, lp["norm2"], x)
+        return apply_mlp(cfg, lp["mlp"], h), None
+    return None, None
+
+
+def _block_forward(cfg: ModelConfig, lp, x, positions, window):
+    mix, parts = _mixer_forward(cfg, lp, x, positions, window)
+    x = _maybe_seq_shard(cfg, x + mix)
+    ch, aux = _channel_forward(cfg, lp, x)
+    if ch is not None:
+        x = _maybe_seq_shard(cfg, x + ch)
+    return x, parts, aux
+
+
+# ----------------------------------------------------------------------
+# Full-sequence forward (training) — no cache retained
+# ----------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens=None, embeds=None, positions=None,
+            return_hidden: bool = False):
+    """Returns (logits (B,S,V), aux dict) or (logits, aux, hidden)."""
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = embed_tokens(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    def block(carry, layer):
+        x, aux = carry
+        lp, window = layer
+        x, _, la = _block_forward(cfg, lp, x, positions, window)
+        if la is not None:
+            aux = {k: aux[k] + la[k] for k in aux}
+        return (x, aux), None
+
+    if cfg.remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(block, (x, _zero_aux(cfg)),
+                               (params["layers"], windows))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params["embed"], x)
+    if cfg.is_moe:
+        aux = dict(aux)
+        aux["moe_dropped"] = aux["moe_dropped"] / cfg.n_layers
+    if return_hidden:
+        return logits, aux, x
+    return logits, aux
+
+
+def _maybe_vocab_shard(cfg: ModelConfig, logits):
+    """Constrain the logits' vocab dim to the 'model' mesh axis.
+
+    With a 128k-262k vocab, unsharded (B,S,V) logits alone exceed HBM at
+    train_4k scale (e.g. gemma3: 65k tok/dev x 262144 x 2B = 34 GB/dev).
+    The embedding is already vocab-sharded, so constraining the logits
+    keeps the whole loss pipeline sharded; the softmax reductions below
+    then lower to tiny (B,S) all-reduces over 'model'."""
+    if not cfg.shard_logits_vocab or logits.ndim != 3:
+        return logits
+    from jax.sharding import PartitionSpec as P
+    U = P.UNCONSTRAINED
+    return jax.lax.with_sharding_constraint(logits, P(U, U, "model"))
+
+
+def lm_loss(cfg: ModelConfig, logits, labels, mask, aux=None):
+    """Mean cross-entropy over masked positions + MoE aux losses.
+
+    Written as explicit max / exp-sum / one-hot-dot reductions (instead
+    of log_softmax + take_along_axis) so that (a) no f32 (B,S,V) array
+    has to be materialized — XLA fuses the exp into the reduce — and (b)
+    every reduction is over the (possibly 'model'-sharded) vocab axis,
+    keeping cross-shard traffic at O(B*S) stats instead of all-gathering
+    logits."""
+    logits = _maybe_vocab_shard(cfg, logits)
+    v = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    m = jnp.max(lf, axis=-1, keepdims=True)                      # (B,S,1)
+    lse = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]  # (B,S)
+    onehot = labels[..., None] == jnp.arange(v, dtype=labels.dtype)
+    label_logit = jnp.sum(jnp.where(onehot, lf, 0.0), axis=-1)   # (B,S)
+    ll = label_logit - lse
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = -jnp.sum(ll * mask) / denom
+    loss = ce
+    metrics = {"ce": ce, "n_tokens": jnp.sum(mask)}
+    if aux is not None and cfg.is_moe:
+        loss = loss + aux["moe_lb"] + aux["moe_z"]
+        metrics.update({k: aux[k] for k in ("moe_lb", "moe_z", "moe_dropped")})
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * mask) / denom
+    metrics["token_acc"] = acc
+    return loss, metrics
+
+
+# ----------------------------------------------------------------------
+# Cache
+# ----------------------------------------------------------------------
+
+def cache_length(cfg: ModelConfig, seq_len: int) -> int:
+    """Uniform per-layer cache length.
+
+    If every attention layer is windowed (sliding variant), the cache is
+    a ring buffer of the max window; any global layer forces full length.
+    """
+    if not cfg.has_attention:
+        return 0
+    windows = cfg.layer_windows()
+    if all(w > 0 for w in windows):
+        return min(seq_len, max(windows))
+    return seq_len
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int,
+                      cache_dtype=None):
+    """Empty cache sized for sequences up to seq_len.
+
+    cfg.kv_quant stores k/v in int8 with a per-(slot, kv-head) f32
+    absmax scale — halves the decode memory term (the dominant roofline
+    term for decode_32k after the §Perf cache fixes)."""
+    cdt = cache_dtype or jnp.dtype(cfg.compute_dtype)
+    L = cfg.n_layers
+    cache = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.has_attention:
+        sc = cache_length(cfg, seq_len)
+        dh = cfg.resolved_head_dim
+        kv_dt = jnp.int8 if cfg.kv_quant else cdt
+        cache["k"] = jnp.zeros((L, batch, sc, cfg.n_kv_heads, dh), kv_dt)
+        cache["v"] = jnp.zeros((L, batch, sc, cfg.n_kv_heads, dh), kv_dt)
+        if cfg.kv_quant:
+            cache["k_scale"] = jnp.zeros((L, batch, sc, cfg.n_kv_heads),
+                                         jnp.float32)
+            cache["v_scale"] = jnp.zeros((L, batch, sc, cfg.n_kv_heads),
+                                         jnp.float32)
+        cache["cache_pos"] = jnp.full((batch, sc), -1, jnp.int32)
+    if cfg.has_ssm:
+        di, n, h, conv_ch, _ = ssm_mod.ssm_dims(cfg)
+        cache["conv"] = jnp.zeros((L, batch, cfg.ssm_conv_width, conv_ch), cdt)
+        cache["ssm"] = jnp.zeros((L, batch, h, cfg.ssm_head_dim, n), jnp.float32)
+    return cache
+
+
+# ----------------------------------------------------------------------
+# Prefill
+# ----------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
+            positions=None, lengths=None, max_len=None,
+            last_only: bool = False):
+    """Process the prompt, return (logits, cache).
+
+    ``lengths`` (B,) marks per-lane prompt length (tokens beyond are
+    right-padding); cache ``pos`` is set to lengths.  ``max_len`` sizes
+    the cache for subsequent decoding (default: prompt length only).
+    ``last_only`` applies the LM head only at each lane's last prompt
+    position (returns (B,V)) — avoids materializing (B,S,V) logits,
+    which dominates prefill memory at 32k x 128k-vocab scale.
+    """
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = embed_tokens(cfg, params["embed"], tokens)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    if lengths is None:
+        lengths = jnp.full((b,), s, jnp.int32)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    sc = cache_length(cfg, max(max_len or s, s))
+    kept = min(s, sc)
+
+    def block(carry, layer):
+        x, aux = carry
+        lp, window = layer
+        x, parts, la = _block_forward(cfg, lp, x, positions, window)
+        if la is not None:
+            aux = {k: aux[k] + la[k] for k in aux}
+        out_parts = {}
+        if cfg.has_attention:
+            k, v = parts["k"], parts["v"]
+            if kept < s:
+                k, v = k[:, s - kept:], v[:, s - kept:]
+            out_parts["k"], out_parts["v"] = k, v
+        if cfg.has_ssm:
+            out_parts["conv"], out_parts["ssm"] = parts["conv"], parts["ssm"]
+        return (x, aux), out_parts
+
+    if cfg.remat:
+        block = jax.checkpoint(block, prevent_cse=False)
+    (x, aux), layer_caches = jax.lax.scan(block, (x, _zero_aux(cfg)),
+                                          (params["layers"], windows))
+    x = apply_norm(cfg, params["final_norm"], x)
+    if last_only:
+        idx = (lengths - 1)[:, None, None].astype(jnp.int32)
+        x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+            idx, (b, 1, x.shape[-1])), axis=1)[:, 0]
+        logits = logits_from_hidden(cfg, params["embed"], x_last)      # (B,V)
+    else:
+        logits = logits_from_hidden(cfg, params["embed"], x)
+
+    cache = {"pos": lengths.astype(jnp.int32)}
+    if cfg.has_attention:
+        L = cfg.n_layers
+        dh = cfg.resolved_head_dim
+        kept_pos = positions[:, s - kept:]                             # (B,kept)
+        if kept == s and sc == s:
+            # Full cache, whole prompt kept: position p lives at slot p,
+            # i.e. the scatter below would be the identity permutation.
+            # Writing the scan output through directly avoids the
+            # zeros+scatter round-trip (which at 32k x 48L materializes
+            # several full-cache temp copies — see EXPERIMENTS.md §Perf).
+            k_cache, v_cache = layer_caches["k"], layer_caches["v"]
+            cache_pos = jnp.where(kept_pos < lengths[:, None], kept_pos, -1)
+        else:
+            # slots: position p lives at slot p % sc; the kept positions
+            # are contiguous so the slot map is injective -> ring scatter.
+            slots = (kept_pos % sc).astype(jnp.int32)
+            bidx = jnp.arange(b)[:, None]
+            cdt = layer_caches["k"].dtype
+            k_cache = jnp.zeros((L, b, sc, cfg.n_kv_heads, dh), cdt
+                                ).at[:, bidx, slots].set(layer_caches["k"])
+            v_cache = jnp.zeros((L, b, sc, cfg.n_kv_heads, dh), cdt
+                                ).at[:, bidx, slots].set(layer_caches["v"])
+            cache_pos = jnp.full((b, sc), -1, jnp.int32
+                                 ).at[bidx, slots].set(kept_pos)
+            # mark right-padding invalid
+            cache_pos = jnp.where(cache_pos < lengths[:, None], cache_pos, -1)
+        cache["k"], cache["v"], cache["cache_pos"] = k_cache, v_cache, cache_pos
+    if cfg.has_ssm:
+        cache["conv"], cache["ssm"] = layer_caches["conv"], layer_caches["ssm"]
+    return logits, cache
+
+
+# ----------------------------------------------------------------------
+# Decode
+# ----------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
+    """One decode step.  tokens: (B,) int32 (or embeds (B,1,D)).
+
+    Returns (logits (B,V), new cache).
+    """
+    if embeds is not None:
+        x = embeds.astype(jnp.dtype(cfg.compute_dtype))
+    else:
+        x = embed_tokens(cfg, params["embed"], tokens[:, None])
+    b = x.shape[0]
+    pos = cache["pos"]                                                 # (B,)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+
+    cache_pos = None
+    if cfg.has_attention:
+        sc = cache["k"].shape[2]
+        slot = (pos % sc).astype(jnp.int32)
+        cache_pos = cache["cache_pos"].at[jnp.arange(b), slot].set(pos)
+
+    has_attn = cfg.has_attention
+
+    quant = has_attn and "k_scale" in cache
+
+    def block(carry, layer):
+        # The stacked k/v caches ride in the scan CARRY and are updated
+        # with dynamic_update_index_in_dim at the current layer index:
+        # XLA keeps a single in-place loop buffer.  Returning updated
+        # per-layer slices as scan ys instead materializes a second full
+        # cache stack (2 x 4.8 GB/dev on musicgen decode_32k; §Perf).
+        x, k_stack, v_stack, ks_stack, vs_stack = carry
+        lp = layer["lp"]
+        window = layer["window"]
+        idx = layer["idx"]
+        new_parts = {}
+        h = apply_norm(cfg, lp["norm1"], x)
+        outs = []
+        if has_attn:
+            k_l = jax.lax.dynamic_index_in_dim(k_stack, idx, 0, keepdims=False)
+            v_l = jax.lax.dynamic_index_in_dim(v_stack, idx, 0, keepdims=False)
+            if quant:
+                ks_l = jax.lax.dynamic_index_in_dim(ks_stack, idx, 0,
+                                                    keepdims=False)
+                vs_l = jax.lax.dynamic_index_in_dim(vs_stack, idx, 0,
+                                                    keepdims=False)
+                a_out, k_l, v_l, ks_l, vs_l = attn_mod.attention_decode(
+                    cfg, lp["attn"], h, pos, k_l, v_l, cache_pos, window,
+                    k_scale=ks_l, v_scale=vs_l)
+                ks_stack = jax.lax.dynamic_update_index_in_dim(
+                    ks_stack, ks_l, idx, 0)
+                vs_stack = jax.lax.dynamic_update_index_in_dim(
+                    vs_stack, vs_l, idx, 0)
+            else:
+                a_out, k_l, v_l = attn_mod.attention_decode(
+                    cfg, lp["attn"], h, pos, k_l, v_l, cache_pos, window)
+            outs.append(a_out)
+            k_stack = jax.lax.dynamic_update_index_in_dim(k_stack, k_l, idx, 0)
+            v_stack = jax.lax.dynamic_update_index_in_dim(v_stack, v_l, idx, 0)
+        if cfg.has_ssm:
+            s_out, (conv_s, ssm_s) = ssm_mod.ssm_decode(
+                cfg, lp["ssm"], h, layer["conv"], layer["ssm"])
+            outs.append(s_out)
+            new_parts["conv"], new_parts["ssm"] = conv_s, ssm_s
+        mix = (outs[0] + outs[1]) * 0.5 if len(outs) == 2 else outs[0]
+        x = x + mix
+        ch, _ = _channel_forward(cfg, lp, x)
+        if ch is not None:
+            x = x + ch
+        return (x, k_stack, v_stack, ks_stack, vs_stack), new_parts
+
+    L = cfg.n_layers
+    xs = {"lp": params["layers"], "window": windows,
+          "idx": jnp.arange(L, dtype=jnp.int32)}
+    for key in ("conv", "ssm"):
+        if key in cache:
+            xs[key] = cache[key]
+
+    zero = jnp.zeros((), x.dtype)
+    k0 = cache.get("k") if has_attn else zero
+    v0 = cache.get("v") if has_attn else zero
+    ks0 = cache.get("k_scale") if quant else zero
+    vs0 = cache.get("v_scale") if quant else zero
+    (x, k_stack, v_stack, ks_stack, vs_stack), new_layer_caches = \
+        jax.lax.scan(block, (x, k0, v0, ks0, vs0), xs)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params["embed"], x[:, 0])
+
+    new_cache = {"pos": pos + 1}
+    if has_attn:
+        new_cache["k"] = k_stack
+        new_cache["v"] = v_stack
+        if quant:
+            new_cache["k_scale"] = ks_stack
+            new_cache["v_scale"] = vs_stack
+        new_cache["cache_pos"] = cache_pos
+    if cfg.has_ssm:
+        new_cache["conv"] = new_layer_caches["conv"]
+        new_cache["ssm"] = new_layer_caches["ssm"]
+    return logits, new_cache

@@ -1,0 +1,186 @@
+"""Mixture-of-Experts: top-k router with capacity-based dispatch.
+
+Dispatch is the GShard/Switch capacity scheme done with gather/scatter
+(no (T, E, C) one-hot dispatch tensor):
+
+  1. router softmax over E experts, top-k per token,
+  2. position-in-expert via cumsum of assignment one-hots,
+  3. tokens beyond capacity C = ceil(cf * T * k / E) are dropped,
+  4. scatter into an (E, C, D) buffer, expert-sharded einsum FFN,
+  5. gather back and combine with router weights.
+
+The (E, C, D) buffer is what pjit shards over the ``model`` axis (expert
+dim) — the all-to-all emerges from the scatter/gather resharding.
+Aux losses: Switch load-balance loss + router z-loss.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act, dense_init, mlp_init, apply_mlp
+
+
+def moe_init(cfg: ModelConfig, key, dtype):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 6)
+    scale_in = 1.0 / math.sqrt(d)
+    scale_out = 1.0 / math.sqrt(f)
+
+    def ew(k, din, dout, scale):
+        return (jax.random.normal(k, (e, din, dout)) * scale).astype(dtype)
+
+    p = {"router": dense_init(ks[0], d, e, jnp.float32)}
+    if cfg.mlp_gated:
+        p["wi_gate"] = ew(ks[1], d, f, scale_in)
+        p["wi_up"] = ew(ks[2], d, f, scale_in)
+        p["wo"] = ew(ks[3], f, d, scale_out)
+    else:
+        p["wi"] = ew(ks[1], d, f, scale_in)
+        p["wo"] = ew(ks[2], f, d, scale_out)
+    if cfg.moe_shared_expert:
+        p["shared"] = mlp_init(cfg, ks[4], d, cfg.d_ff, dtype)
+    return p
+
+
+def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
+    c = int(math.ceil(cfg.moe_capacity_factor * n_tokens * cfg.moe_top_k / cfg.n_experts))
+    return max(cfg.moe_top_k, min(c, n_tokens))
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (out (B,S,D), aux dict of scalars).
+
+    With cfg.moe_dispatch_chunks > 1 the token stream is processed in
+    chunks via lax.scan, bounding the (E, C, D) dispatch buffers (and the
+    position-in-expert cumsum) to one chunk at a time — at 1M-token
+    prefill the unchunked buffers alone are tens of GB/device (olmoe:
+    145 GB/dev -> fits after chunking; EXPERIMENTS.md §Perf)."""
+    b, s, d = x.shape
+    if cfg.moe_shard_map and cfg.mlp_gated:
+        from repro.models import moe_shard_map as msm
+        mesh = msm.get_mesh()
+        if mesh is not None and cfg.n_experts % int(mesh.shape["model"]) == 0:
+            out, aux = msm.apply_moe_shard_map(cfg, p, x)
+            if cfg.moe_shared_expert:
+                # the shared expert is dense — GSPMD tensor parallelism
+                # handles it fine outside the shard_map region
+                out = out + apply_mlp(cfg, p["shared"],
+                                      x.astype(jnp.dtype(cfg.compute_dtype)))
+            return out, aux
+    nc = cfg.moe_dispatch_chunks
+    t = b * s
+    x = x.astype(jnp.dtype(cfg.compute_dtype))
+    if nc > 1 and s % nc != 0:
+        # train steps see S-1 tokens (next-token shift): pick the
+        # smallest divisor of s giving at least the requested chunk
+        # count, else fall back to unchunked.  (4095 % 4 != 0 silently
+        # disabling the chunking cost 25 GB/dev on olmoe train — §Perf.)
+        nc = next((c for c in range(nc, min(4 * nc, s) + 1) if s % c == 0), 1)
+    if nc > 1 and s % nc == 0 and (t // nc) >= cfg.n_experts:
+        # Chunk along the SEQUENCE dim: each (B, S/nc, D) slice keeps the
+        # batch dim (and hence the data sharding) intact.  Chunking the
+        # flat token stream instead makes every chunk live on a few
+        # devices and GSPMD all-gathers the whole stream (17 GB/dev on
+        # olmoe prefill — EXPERIMENTS.md §Perf).
+        xs = jnp.swapaxes(x.reshape(b, nc, s // nc, d), 0, 1)  # (nc,B,S/nc,D)
+        if cfg.shard_moe_dispatch:
+            from jax.sharding import PartitionSpec as P
+            U = P.UNCONSTRAINED
+            xs = jax.lax.with_sharding_constraint(xs, P(None, "data", U, U))
+
+        def one(carry, xc):
+            bc, sc, _ = xc.shape
+            out_c, aux_c = _moe_tokens(cfg, p, xc.reshape(bc * sc, d))
+            return carry, (out_c.reshape(bc, sc, d), aux_c)
+
+        _, (outs, auxs) = jax.lax.scan(one, 0, xs)
+        out = jnp.swapaxes(outs, 0, 1).reshape(b, s, d)
+        aux = jax.tree.map(jnp.mean, auxs)
+        return out, aux
+    out, aux = _moe_tokens(cfg, p, x.reshape(t, d))
+    return out.reshape(b, s, d), aux
+
+
+def _moe_tokens(cfg: ModelConfig, p, xf):
+    """Core top-k capacity dispatch on a flat token batch (T, D)."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.moe_top_k
+    xf = xf.astype(cdt)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])                  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                           # (T, k)
+    gate = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    # --- aux losses ---
+    me = jnp.mean(probs, axis=0)                                     # (E,)
+    assign = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(1.0) / (t * k)
+    lb_loss = e * jnp.sum(me * assign)
+    z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+
+    # --- capacity dispatch ---
+    cap = moe_capacity(cfg, t)
+    flat_e = top_i.reshape(-1)                                       # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)              # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - onehot                        # pos BEFORE this row
+    pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = pos_in_e < cap
+    pos_safe = jnp.where(keep, pos_in_e, cap)                        # cap => dropped
+
+    tok_idx = jnp.repeat(jnp.arange(t), k)
+    xd = jnp.zeros((e, cap, d), cdt)
+    xd = xd.at[flat_e, pos_safe].set(xf[tok_idx], mode="drop")       # (E, C, D)
+    if cfg.shard_moe_dispatch:
+        from jax.sharding import PartitionSpec as P
+        U = P.UNCONSTRAINED
+        if cfg.param_count() > 3e10 and d % 16 == 0:
+            # FSDP-scale MoE (llama4-scout, ~109B): the expert weights'
+            # d_model dim is data-sharded; shard the dispatch buffer's D
+            # dim the same way so the expert einsum contracts local
+            # slices with a partial-sum all-reduce instead of
+            # all-gathering 4 GB of expert weights per layer.
+            xd = jax.lax.with_sharding_constraint(xd, P("model", U, "data"))
+        else:
+            # NOTE: additionally data-sharding the capacity dim was tried
+            # (hoping the scatter lowers as all-to-all) and REFUTED:
+            # -3% temp on prefill but +112% collective bytes (GSPMD
+            # lowers it as gather+reshard).  EXPERIMENTS.md §Perf B5.
+            xd = jax.lax.with_sharding_constraint(xd, P("model", U, U))
+
+    if cfg.mlp_gated:
+        h = _act(cfg.activation, jnp.einsum("ecd,edf->ecf", xd, p["wi_gate"].astype(cdt)))
+        h = h * jnp.einsum("ecd,edf->ecf", xd, p["wi_up"].astype(cdt))
+    else:
+        h = _act(cfg.activation, jnp.einsum("ecd,edf->ecf", xd, p["wi"].astype(cdt)))
+    if cfg.shard_moe_dispatch and cfg.param_count() > 3e10:
+        from jax.sharding import PartitionSpec as P
+        U = P.UNCONSTRAINED
+        # keep the hidden dim data-sharded to match wo's FSDP'd F dim
+        f_ax = "data" if h.shape[-1] % 16 == 0 else U
+        h = jax.lax.with_sharding_constraint(h, P("model", U, f_ax))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(cdt))          # (E, C, D)
+    if cfg.shard_moe_dispatch:
+        from jax.sharding import PartitionSpec as P
+        U = P.UNCONSTRAINED
+        ye = jax.lax.with_sharding_constraint(ye, P("model", U, U))
+
+    y_tok = ye.at[flat_e, pos_safe].get(mode="fill", fill_value=0)   # (T*k, D)
+    y_tok = y_tok * (keep[:, None] * gate.reshape(-1)[:, None]).astype(cdt)
+    out = jnp.sum(y_tok.reshape(t, k, d), axis=1)
+
+    if cfg.moe_shared_expert:
+        out = out + apply_mlp(cfg, p["shared"], xf)
+
+    frac_dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+    aux = {
+        "moe_lb": cfg.moe_aux_loss_coef * lb_loss,
+        "moe_z": cfg.moe_router_z_coef * z_loss,
+        "moe_dropped": frac_dropped,
+    }
+    return out, aux

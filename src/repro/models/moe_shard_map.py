@@ -1,0 +1,143 @@
+"""Expert-parallel MoE dispatch with an explicit shard_map all-to-all
+schedule (§Perf track B's identified next move).
+
+GSPMD lowers the capacity scatter/gather as full-buffer gathers and
+reshards (~2x the necessary bytes; EXPERIMENTS.md §Perf B1–B5).  This
+module makes the communication explicit and minimal:
+
+  1. each device routes + capacity-dispatches ITS OWN token slice
+     (tokens are additionally split across the 'model' axis so the 16
+     model-replicas don't duplicate router work),
+  2. one all-to-all over 'model' moves token buffers to the devices
+     owning their experts,
+  3. local (E_loc, C, D) x (E_loc, D, F) einsums — weights never move,
+  4. the reverse all-to-all + a local combine + one all-gather restore
+     the token-major layout.
+
+Per-device collective bytes ~= 2 x |dispatch slice| + |token slice|,
+independent of the expert count.  Differentiable (collective transposes
+exist), so the same path serves train steps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _act
+
+# set by the launcher (dryrun/train/serve) before lowering; model code
+# cannot otherwise see the mesh from inside jit.
+_MESH = None
+
+
+def set_mesh(mesh):
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh():
+    return _MESH
+
+
+def _batch_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)
+
+
+def apply_moe_shard_map(cfg: ModelConfig, p, x):
+    """x: (B, S, D) -> (out, aux).  Requires set_mesh() with a mesh whose
+    'model' axis divides n_experts."""
+    mesh = get_mesh()
+    msz = int(mesh.shape["model"])
+    bax = _batch_axes(mesh)
+    all_axes = tuple(mesh.shape.keys())
+    cdt = jnp.dtype(cfg.compute_dtype)
+    e, k = cfg.n_experts, cfg.moe_top_k
+    b, s, d = x.shape
+
+    def body(xb, router, wi_gate, wi_up, wo):
+        bl, sl, _ = xb.shape
+        t_loc = bl * sl
+        xf = xb.reshape(t_loc, d).astype(cdt)
+        # split this device's tokens across the model axis (the input is
+        # replicated over 'model'); pad so the chunk divides evenly
+        chunk = -(-t_loc // msz)
+        pad = chunk * msz - t_loc
+        if pad:
+            xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        r = jax.lax.axis_index("model")
+        xt = jax.lax.dynamic_slice_in_dim(xf, r * chunk, chunk, axis=0)
+
+        logits = xt.astype(jnp.float32) @ router                  # (Tc, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        top_p, top_i = jax.lax.top_k(probs, k)
+        gate = top_p / jnp.maximum(jnp.sum(top_p, -1, keepdims=True), 1e-9)
+
+        # aux losses over the LOCAL token slice, averaged across devices
+        me = jnp.mean(probs, axis=0)
+        assign = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(
+            1.0) / (chunk * k)
+        lb_loss = e * jnp.sum(me * assign)
+        z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+
+        # local capacity dispatch (capacity per token-chunk)
+        import math
+        cap = max(k, int(math.ceil(
+            cfg.moe_capacity_factor * chunk * k / e)))
+        cap = cap + (-cap) % msz            # a2a needs cap % msz == 0
+        flat_e = top_i.reshape(-1)
+        onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        pos_in_e = jnp.take_along_axis(pos, flat_e[:, None], 1)[:, 0]
+        keep = pos_in_e < cap
+        pos_safe = jnp.where(keep, pos_in_e, cap)
+        tok_idx = jnp.repeat(jnp.arange(chunk), k)
+        xd = jnp.zeros((e, cap, d), cdt).at[flat_e, pos_safe].set(
+            xt[tok_idx], mode="drop")                              # (E,C,D)
+
+        # ---- all-to-all: expert-major -> expert-local ----
+        xd = jax.lax.all_to_all(xd, "model", split_axis=0,
+                                concat_axis=1, tiled=True)        # (E/m, C*m, D)
+
+        h = _act(cfg.activation,
+                 jnp.einsum("ecd,edf->ecf", xd, wi_gate.astype(cdt)))
+        h = h * jnp.einsum("ecd,edf->ecf", xd, wi_up.astype(cdt))
+        ye = jnp.einsum("ecf,efd->ecd", h, wo.astype(cdt))        # (E/m,C*m,D)
+
+        # ---- reverse all-to-all ----
+        ye = jax.lax.all_to_all(ye, "model", split_axis=1,
+                                concat_axis=0, tiled=True)        # (E,C,D)
+
+        y_tok = ye.at[flat_e, pos_safe].get(mode="fill", fill_value=0)
+        y_tok = y_tok * (keep[:, None] * gate.reshape(-1)[:, None]).astype(cdt)
+        out_t = jnp.sum(y_tok.reshape(chunk, k, d), axis=1)       # (Tc, D)
+
+        # reassemble all token chunks on every model replica
+        out = jax.lax.all_gather(out_t, "model", axis=0, tiled=True)
+        if pad:
+            out = out[:t_loc]
+        out = out.reshape(bl, sl, d)
+
+        frac_dropped = 1.0 - jnp.mean(keep.astype(jnp.float32))
+        aux = {
+            "moe_lb": cfg.moe_aux_loss_coef * lb_loss,
+            "moe_z": cfg.moe_router_z_coef * z_loss,
+            "moe_dropped": frac_dropped,
+        }
+        aux = {kk: jax.lax.pmean(v, all_axes) for kk, v in aux.items()}
+        return out, aux
+
+    fn = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bax, None, None),            # x
+                  P(None, None),                 # router (replicated)
+                  P("model", None, None),        # wi_gate (E sharded)
+                  P("model", None, None),        # wi_up
+                  P("model", None, None)),       # wo
+        out_specs=(P(bax, None, None),
+                   {"moe_lb": P(), "moe_z": P(), "moe_dropped": P()}),
+        check_vma=False)
+    return fn(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])

@@ -1,0 +1,237 @@
+"""Mamba2 SSD (state-space duality) block — chunked scan for training /
+prefill, single-step recurrence for decode.
+
+Block: in_proj -> [z | x | B | C | dt] -> causal depthwise conv1d on
+(x|B|C) -> SiLU -> SSD -> gated RMSNorm(z) -> out_proj.
+
+SSD semantics (per head h, state width N, head dim P):
+    h_t = exp(dt_t * A) * h_{t-1} + B_t (x_t * dt_t)^T
+    y_t = C_t . h_t + D * x_t
+The chunked algorithm computes intra-chunk contributions with a masked
+(C B^T) "attention" matrix and carries inter-chunk states with lax.scan —
+this is the structure the Pallas kernel (kernels/ssd) tiles for VMEM.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+G = 1  # n_groups for B/C projections
+
+
+def ssm_dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    n = cfg.ssm_state
+    h = cfg.n_ssm_heads
+    conv_ch = di + 2 * G * n
+    proj_out = 2 * di + 2 * G * n + h
+    return di, n, h, conv_ch, proj_out
+
+
+def ssm_init(cfg: ModelConfig, key, dtype):
+    di, n, h, conv_ch, proj_out = ssm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    # dt bias: softplus^-1 of dt in [1e-3, 1e-1]
+    u = jax.random.uniform(ks[2], (h,), minval=math.log(1e-3), maxval=math.log(1e-1))
+    dt = jnp.exp(u)
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+    a_init = jax.random.uniform(ks[3], (h,), minval=1.0, maxval=16.0)
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv_width, 1, conv_ch)) /
+                   math.sqrt(cfg.ssm_conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(a_init).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": dt_bias.astype(jnp.float32),
+        "norm_scale": jnp.ones((di,), dtype),
+        "out_proj": dense_init(jax.random.split(ks[0])[1], di, cfg.d_model, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt):
+    di, n, h, _, _ = ssm_dims(cfg)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * G * n]
+    dt = zxbcdt[..., di + di + 2 * G * n:]
+    return z, xbc, dt
+
+
+def _conv_full(p, u):
+    """Causal depthwise conv over (B, S, C)."""
+    w = p["conv_w"]                                       # (W, 1, C)
+    width = w.shape[0]
+    out = jax.lax.conv_general_dilated(
+        u, w.astype(u.dtype),
+        window_strides=(1,),
+        padding=[(width - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=u.shape[-1],
+    )
+    return out + p["conv_b"].astype(u.dtype)
+
+
+def _conv_step(p, conv_state, u_t):
+    """conv_state: (B, W, C) last W inputs INCLUDING current after update."""
+    conv_state = jnp.concatenate([conv_state[:, 1:], u_t[:, None]], axis=1)
+    w = p["conv_w"][:, 0, :].astype(u_t.dtype)            # (W, C)
+    y = jnp.einsum("bwc,wc->bc", conv_state, w) + p["conv_b"].astype(u_t.dtype)
+    return conv_state, y
+
+
+# ----------------------------------------------------------------------
+# SSD core
+# ----------------------------------------------------------------------
+
+def ssd_chunked(xbar, a, b, c, chunk: int, init_state=None):
+    """Chunked SSD scan (pure-jnp oracle shared with kernels/ssd/ref.py).
+
+    xbar: (B,S,H,P)  -- x * dt
+    a:    (B,S,H)    -- dt * A  (log-decay, <= 0)
+    b,c:  (B,S,G,N)  -- broadcast over heads
+    Returns y (B,S,H,P), final_state (B,H,P,N).
+    """
+    bsz, s, h, p_dim = xbar.shape
+    n = b.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    t = xbar.shape[1] // chunk
+    q = chunk
+    xb = xbar.reshape(bsz, t, q, h, p_dim).astype(jnp.float32)
+    ab = a.reshape(bsz, t, q, h).astype(jnp.float32)
+    bb = b.reshape(bsz, t, q, G, n).astype(jnp.float32)
+    cb = c.reshape(bsz, t, q, G, n).astype(jnp.float32)
+
+    cum_a = jnp.cumsum(ab, axis=2)                                    # (B,T,Q,H)
+
+    # intra-chunk: scores[i,j] = (C_i . B_j) exp(cum_a[i]-cum_a[j]), j <= i
+    dec = cum_a[:, :, :, None, :] - cum_a[:, :, None, :, :]           # (B,T,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    dec = jnp.where(mask[None, None, :, :, None], dec, -jnp.inf)
+    cb_h = cb[:, :, :, 0, :]                                          # (B,T,Q,N) (G=1)
+    bb_h = bb[:, :, :, 0, :]
+    scores = jnp.einsum("btin,btjn->btij", cb_h, bb_h)                # (B,T,Qi,Qj)
+    # w is the one O(Q^2 * H) tensor; when the model computes in bf16,
+    # keep it bf16 with f32 accumulation (hymba prefill_32k: ~8 GB/dev
+    # saved).  f32 inputs (CPU-scale models, kernel oracle) stay f32.
+    wdt = jnp.bfloat16 if xbar.dtype == jnp.bfloat16 else jnp.float32
+    w = (scores[..., None] * jnp.exp(dec)).astype(wdt)                # (B,T,Qi,Qj,H)
+    y_intra = jnp.einsum("btijh,btjhp->btihp", w, xb.astype(wdt),
+                         preferred_element_type=jnp.float32)
+
+    # chunk states: S_t = sum_j exp(cum_a[last]-cum_a[j]) B_j (xbar_j)^T
+    dec_end = jnp.exp(cum_a[:, :, -1:, :] - cum_a)                    # (B,T,Q,H)
+    state_t = jnp.einsum("btjn,btjh,btjhp->bthpn", bb_h, dec_end, xb)  # (B,T,H,P,N)
+
+    # inter-chunk recurrence
+    a_tot = jnp.exp(cum_a[:, :, -1, :])                               # (B,T,H)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p_dim, n), jnp.float32)
+    else:
+        init_state = init_state.astype(jnp.float32)
+
+    def step(hprev, xs):
+        at, st = xs                                                   # (B,H), (B,H,P,N)
+        hnew = hprev * at[:, :, None, None] + st
+        return hnew, hprev
+
+    hlast, h_before = jax.lax.scan(
+        step, init_state,
+        (jnp.swapaxes(a_tot, 0, 1), jnp.swapaxes(state_t, 0, 1)))
+    h_before = jnp.swapaxes(h_before, 0, 1)                           # (B,T,H,P,N)
+
+    # inter-chunk output: y_i += C_i . (exp(cum_a[i]) * h_before)
+    y_inter = jnp.einsum("btin,bthpn,btih->btihp",
+                         cb_h, h_before, jnp.exp(cum_a))
+    y = (y_intra + y_inter).reshape(bsz, t * q, h, p_dim)[:, :s]
+    return y, hlast
+
+
+def ssd_decode_step(xbar_t, a_t, b_t, c_t, state):
+    """One-step recurrence.
+
+    xbar_t: (B,H,P); a_t: (B,H); b_t/c_t: (B,G,N); state: (B,H,P,N).
+    """
+    b_h = b_t[:, 0, :]                                                # (B,N)
+    c_h = c_t[:, 0, :]
+    state = (state * jnp.exp(a_t.astype(jnp.float32))[:, :, None, None]
+             + jnp.einsum("bhp,bn->bhpn", xbar_t.astype(jnp.float32),
+                          b_h.astype(jnp.float32)))
+    y = jnp.einsum("bhpn,bn->bhp", state, c_h.astype(jnp.float32))
+    return y, state
+
+
+# ----------------------------------------------------------------------
+# Layer-level entry points
+# ----------------------------------------------------------------------
+
+def _ssd_inputs(cfg: ModelConfig, p, xbc_conv, dt_raw):
+    """Split post-conv channels and build SSD inputs."""
+    di, n, h, _, _ = ssm_dims(cfg)
+    p_dim = cfg.ssm_head_dim
+    xs = xbc_conv[..., :di]
+    b = xbc_conv[..., di:di + G * n]
+    c = xbc_conv[..., di + G * n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    a_neg = -jnp.exp(p["A_log"])                                      # (H,) < 0
+    shp = xs.shape[:-1]
+    xh = xs.reshape(*shp, h, p_dim)
+    xbar = xh * dt[..., None]
+    a = dt * a_neg
+    return xh, xbar, a, b.reshape(*shp, G, n), c.reshape(*shp, G, n), dt
+
+
+def ssm_forward(cfg: ModelConfig, p, x, init_state=None):
+    """Full-sequence SSM mixer.  x: (B,S,D).
+
+    Returns y (B,S,D), (conv_state (B,W,Cc), ssm_state (B,H,P,N)).
+    """
+    from repro.models.layers import rmsnorm_gated
+    cdt = jnp.dtype(cfg.compute_dtype)
+    di, n, h, conv_ch, _ = ssm_dims(cfg)
+    width = cfg.ssm_conv_width
+    x = x.astype(cdt)
+    zxbcdt = x @ p["in_proj"].astype(cdt)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    # final conv state: last W raw (pre-conv) channel inputs
+    bsz, s, _ = xbc.shape
+    if s >= width:
+        conv_state = xbc[:, s - width:, :]
+    else:
+        conv_state = jnp.pad(xbc, ((0, 0), (width - s, 0), (0, 0)))
+    xbc_c = jax.nn.silu(_conv_full(p, xbc))
+    xh, xbar, a, b, c, dt = _ssd_inputs(cfg, p, xbc_c, dt_raw)
+    y, ssm_state = ssd_chunked(xbar, a, b, c, cfg.ssm_chunk, init_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, di).astype(cdt)
+    y = rmsnorm_gated(p["norm_scale"], y, z)
+    return y @ p["out_proj"].astype(cdt), (conv_state, ssm_state)
+
+
+def ssm_decode(cfg: ModelConfig, p, x_t, conv_state, ssm_state):
+    """One-token step.  x_t: (B,1,D) -> (y (B,1,D), new states)."""
+    from repro.models.layers import rmsnorm_gated
+    cdt = jnp.dtype(cfg.compute_dtype)
+    di, n, h, conv_ch, _ = ssm_dims(cfg)
+    x_t = x_t[:, 0].astype(cdt)                                       # (B,D)
+    zxbcdt = x_t @ p["in_proj"].astype(cdt)
+    z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_state, xbc_c = _conv_step(p, conv_state, xbc)
+    xbc_c = jax.nn.silu(xbc_c)
+    xh, xbar, a, b, c, dt = _ssd_inputs(cfg, p, xbc_c, dt_raw)
+    y, ssm_state = ssd_decode_step(xbar, a, b, c, ssm_state)
+    y = y + p["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(-1, di).astype(cdt)
+    y = rmsnorm_gated(p["norm_scale"], y, z)
+    y = y @ p["out_proj"].astype(cdt)
+    return y[:, None, :], (conv_state, ssm_state)

@@ -1,0 +1,23 @@
+"""Token sampling: temperature + top-p (nucleus), greedy fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_tokens(key, logits, temperature: float = 0.7, top_p: float = 1.0):
+    """logits: (B, V) -> (B,) int32 samples."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        sorted_probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(sorted_probs, axis=-1)
+        # keep smallest prefix with cumulative prob >= top_p
+        keep = cum - sorted_probs < top_p
+        cutoff = jnp.min(jnp.where(keep, sorted_logits, jnp.inf), axis=-1,
+                         keepdims=True)
+        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,75 @@
+"""Checkpointing: pytrees -> .npz + a JSON treedef manifest.
+
+No orbax offline; this is a dependency-free save/restore that round-trips
+arbitrary nested dict/list pytrees of jnp arrays, including optimizer
+state and LoRA adapter trees (None leaves preserved).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree, prefix="", out=None, meta=None):
+    out = {} if out is None else out
+    meta = {} if meta is None else meta
+    if tree is None:
+        meta[prefix] = "none"
+    elif isinstance(tree, dict):
+        meta[prefix] = {"dict": sorted(tree.keys())}
+        for k in sorted(tree.keys()):
+            _flatten(tree[k], f"{prefix}/{k}", out, meta)
+    elif isinstance(tree, (list, tuple)):
+        meta[prefix] = {"list": len(tree), "tuple": isinstance(tree, tuple)}
+        for i, v in enumerate(tree):
+            _flatten(v, f"{prefix}/{i}", out, meta)
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype == jnp.bfloat16:
+            out[prefix] = arr.view(np.uint16)
+            meta[prefix] = "bfloat16"
+        else:
+            out[prefix] = arr
+            meta[prefix] = "array"
+    return out, meta
+
+
+def _unflatten(prefix, arrays, meta):
+    m = meta[prefix]
+    if m == "none":
+        return None
+    if m == "array":
+        return jnp.asarray(arrays[prefix])
+    if m == "bfloat16":
+        return jnp.asarray(arrays[prefix].view(np.uint16)).view(jnp.bfloat16)
+    if isinstance(m, dict) and "dict" in m:
+        return {k: _unflatten(f"{prefix}/{k}", arrays, meta) for k in m["dict"]}
+    if isinstance(m, dict) and "list" in m:
+        items = [_unflatten(f"{prefix}/{i}", arrays, meta) for i in range(m["list"])]
+        return tuple(items) if m.get("tuple") else items
+    raise ValueError(f"bad meta at {prefix}: {m}")
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays, meta = _flatten(jax.device_get(tree))
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    mpath = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    with open(mpath, "w") as f:
+        json.dump(meta, f)
+
+
+def restore(path: str) -> Any:
+    npz = path if path.endswith(".npz") else path + ".npz"
+    mpath = (path[:-4] if path.endswith(".npz") else path) + ".meta.json"
+    with np.load(npz) as data:
+        arrays = {k: data[k] for k in data.files}
+    with open(mpath) as f:
+        meta = json.load(f)
+    return _unflatten("", arrays, meta)

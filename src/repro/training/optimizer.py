@@ -1,0 +1,83 @@
+"""AdamW + cosine-with-warmup LR schedule, implemented from scratch
+(no optax in this container).
+
+The paper trains both SATER stages with AdamW lr=1e-4, cosine schedule,
+10% warmup, for one epoch (Appendix C) — those are the defaults here.
+API mirrors optax's (init, update) pair so it drops into pjit'd steps.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state)
+
+
+def cosine_warmup_schedule(base_lr: float, total_steps: int,
+                           warmup_ratio: float = 0.1,
+                           final_lr_ratio: float = 0.0):
+    warmup = max(1, int(total_steps * warmup_ratio))
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / warmup
+        t = jnp.clip((step - warmup) / max(1, total_steps - warmup), 0.0, 1.0)
+        cos = final_lr_ratio + (1 - final_lr_ratio) * 0.5 * (1 + jnp.cos(math.pi * t))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+
+    return lr
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def adamw(lr_fn, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01, clip_norm: float = 1.0) -> Optimizer:
+    """AdamW with decoupled weight decay and global-norm clipping.
+
+    Moments are kept in f32 regardless of param dtype (mixed-precision
+    master-moment convention); params are updated in their own dtype.
+    """
+
+    def init(params):
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"mu": zeros, "nu": jax.tree.map(jnp.zeros_like, zeros),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9)) if clip_norm else 1.0
+        lr = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, mu, nu, p):
+            g = g.astype(jnp.float32) * scale
+            mu = b1 * mu + (1 - b1) * g
+            nu = b2 * nu + (1 - b2) * g * g
+            mhat = mu / bc1
+            nhat = nu / bc2
+            delta = mhat / (jnp.sqrt(nhat) + eps) + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), mu, nu
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_mu = treedef.flatten_up_to(state["mu"])
+        flat_nu = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, n, p) for g, m, n, p in zip(flat_g, flat_mu, flat_nu, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_mu = treedef.unflatten([o[1] for o in out])
+        new_nu = treedef.unflatten([o[2] for o in out])
+        return new_p, {"mu": new_mu, "nu": new_nu, "step": step}
+
+    return Optimizer(init, update)

@@ -1,0 +1,124 @@
+"""Generic training loop + SFT step builders (full-params or LoRA).
+
+Steps are pure functions built once per (cfg, optimizer) and jitted by
+the caller; the distributed launcher wraps the same builders in pjit
+with sharding annotations (see launch/train.py).
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.training import lora as lora_lib
+from repro.training.optimizer import Optimizer
+
+
+# ----------------------------------------------------------------------
+# Loss on a packed batch {tokens, loss_mask}
+# ----------------------------------------------------------------------
+
+def batch_loss(params, cfg: ModelConfig, batch):
+    tokens = batch["tokens"]
+    inputs = tokens[:, :-1]
+    labels = tokens[:, 1:]
+    mask = batch["loss_mask"][:, 1:]
+    logits, aux = model_lib.forward(params, cfg, tokens=inputs)
+    return model_lib.lm_loss(cfg, logits, labels, mask, aux)
+
+
+def _microbatched(loss_fn, microbatches: int):
+    """Split the batch on axis 0 and average loss via lax.scan (grad
+    accumulation happens implicitly through the scan's linearization)."""
+    if microbatches <= 1:
+        return loss_fn
+
+    def wrapped(params, cfg, batch):
+        def one(carry, mb):
+            loss, metrics = loss_fn(params, cfg, mb)
+            return carry, (loss, metrics)
+
+        mbs = jax.tree.map(
+            lambda x: x.reshape(microbatches, x.shape[0] // microbatches, *x.shape[1:]),
+            batch)
+        _, (losses, metrics) = jax.lax.scan(one, 0, mbs)
+        return jnp.mean(losses), jax.tree.map(jnp.mean, metrics)
+
+    return wrapped
+
+
+# ----------------------------------------------------------------------
+# Step builders
+# ----------------------------------------------------------------------
+
+def make_sft_step(cfg: ModelConfig, opt: Optimizer,
+                  loss_fn: Callable = batch_loss):
+    """Full-parameter SFT step: state = {params, opt_state, step}."""
+    loss_fn = _microbatched(loss_fn, cfg.microbatches)
+
+    def step(state, batch):
+        def lf(p):
+            return loss_fn(p, cfg, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["params"])
+        new_params, new_opt = opt.update(grads, state["opt_state"], state["params"])
+        metrics = dict(metrics, loss=loss)
+        return {"params": new_params, "opt_state": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+def make_lora_sft_step(cfg: ModelConfig, opt: Optimizer, lcfg: lora_lib.LoraConfig,
+                       loss_fn: Callable = batch_loss):
+    """LoRA SFT step: state = {base, lora, opt_state, step}; grads only
+    touch the adapter tree (base is stop-grad inside merge)."""
+    loss_fn = _microbatched(loss_fn, cfg.microbatches)
+
+    def step(state, batch):
+        def lf(lora_tree):
+            merged = lora_lib.merge(state["base"], lora_tree, lcfg)
+            return loss_fn(merged, cfg, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(state["lora"])
+        new_lora, new_opt = opt.update(grads, state["opt_state"], state["lora"])
+        metrics = dict(metrics, loss=loss)
+        return {"base": state["base"], "lora": new_lora, "opt_state": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+# ----------------------------------------------------------------------
+# Loop
+# ----------------------------------------------------------------------
+
+def train_loop(step_fn, state, batches: Iterable, log_every: int = 20,
+               log_fn=print, max_steps: Optional[int] = None,
+               checkpoint_every: Optional[int] = None,
+               checkpoint_fn: Optional[Callable] = None):
+    step_fn = jax.jit(step_fn)
+    history = []
+    t0 = time.time()
+    for i, batch in enumerate(batches):
+        if max_steps is not None and i >= max_steps:
+            break
+        state, metrics = step_fn(state, batch)
+        if checkpoint_every and checkpoint_fn and i and i % checkpoint_every == 0:
+            checkpoint_fn(state, i)
+        if i % log_every == 0 or (max_steps and i == max_steps - 1):
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = i
+            m["wall_s"] = round(time.time() - t0, 2)
+            history.append(m)
+            if log_fn:
+                log_fn(f"step {i:5d} " + " ".join(
+                    f"{k}={v:.4f}" for k, v in m.items()
+                    if k not in ("step", "wall_s", "n_tokens")))
+    return state, history

@@ -1,0 +1,9 @@
+"""Initialize jax's device count (1 CPU device) before any test module
+can import repro.launch.dryrun, which sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 for the dry-run
+process.  Touching jax.devices() here locks the backend first, so tests
+always see exactly one device."""
+
+import jax
+
+jax.devices()

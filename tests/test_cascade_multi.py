@@ -1,0 +1,98 @@
+"""Multi-tier cascade (beyond-paper extension) — semantic tests using a
+scripted fake SLM (no model inference)."""
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import cascade_multi as cm
+from repro.core import voting
+from repro.core.confidence import Vote
+from repro.core.routing import OracleLLM
+from repro.data import tasks as T
+
+
+class FakeSLM:
+    """Monkeypatch target — cascade_multi only calls sample_k(slm, ...)."""
+
+
+def _fake_votes(answer, conf, n, tok=10):
+    return [Vote(answer=answer, confidence=conf, gen_tokens=tok)
+            for _ in range(n)]
+
+
+def test_two_tier_reduces_to_terminal_fallthrough(monkeypatch):
+    items = T.make_benchmark("arith", 6, seed=0)
+    # tier 0 always rejects -> everything reaches the terminal oracle
+    def fake_sample_k(slm, its, levels, key, seed_offset=0):
+        return [_fake_votes(None, 1.0, len(levels)) for _ in its]
+
+    monkeypatch.setattr(cm, "sample_k", fake_sample_k)
+    tier = cm.Tier(slm=FakeSLM(), tau=0.6, mode="FCV", k=4)
+    term = cm.TerminalTier(llm=OracleLLM(accuracy=1.0, avg_out_tokens=20))
+    out = cm.run_cascade([tier], term, items, jax.random.PRNGKey(0))
+    s = cm.summarize(out, 1)
+    assert s["tier_histogram"] == [0, 6]
+    assert s["accuracy"] == 1.0
+    assert s["AROL"] > 0          # rejection overhead was paid
+
+
+def test_first_tier_accepts_when_confident(monkeypatch):
+    items = T.make_benchmark("arith", 5, seed=1)
+
+    def fake_sample_k(slm, its, levels, key, seed_offset=0):
+        return [_fake_votes(it.answer, 1.0, len(levels)) for it in its]
+
+    monkeypatch.setattr(cm, "sample_k", fake_sample_k)
+    tier = cm.Tier(slm=FakeSLM(), tau=0.6, mode="FCV", k=4)
+    term = cm.TerminalTier(llm=OracleLLM(accuracy=1.0))
+    out = cm.run_cascade([tier], term, items, jax.random.PRNGKey(0))
+    s = cm.summarize(out, 1)
+    assert s["tier_histogram"] == [5, 0]
+    assert s["accuracy"] == 1.0
+    assert s["AROL"] == 0.0
+
+
+def test_middle_tier_catches_what_tier0_rejects(monkeypatch):
+    items = T.make_benchmark("modchain", 8, seed=2)
+    calls = []
+
+    def fake_sample_k(slm, its, levels, key, seed_offset=0):
+        calls.append(seed_offset)
+        if seed_offset == 0:       # tier 0 rejects all
+            return [_fake_votes(None, 1.0, len(levels)) for _ in its]
+        return [_fake_votes(it.answer, 1.0, len(levels)) for it in its]
+
+    monkeypatch.setattr(cm, "sample_k", fake_sample_k)
+    tiers = [cm.Tier(slm=FakeSLM(), tau=0.6, k=4, out_price=0.02),
+             cm.Tier(slm=FakeSLM(), tau=0.6, k=4, out_price=0.08)]
+    term = cm.TerminalTier(llm=OracleLLM(accuracy=1.0))
+    out = cm.run_cascade(tiers, term, items, jax.random.PRNGKey(0))
+    s = cm.summarize(out, 2)
+    assert s["tier_histogram"] == [0, 8, 0]
+    # AGL of the winning tier includes the tier-0 decision overhead
+    assert s["AGL"] > 0
+    assert calls == [0, 1]
+
+
+def test_cost_monotone_in_tier_depth(monkeypatch):
+    """Falling further down the chain can only cost more."""
+    items = T.make_benchmark("arith", 4, seed=3)
+
+    def rejecting(slm, its, levels, key, seed_offset=0):
+        return [_fake_votes(None, 1.0, len(levels)) for _ in its]
+
+    def accepting(slm, its, levels, key, seed_offset=0):
+        return [_fake_votes(it.answer, 1.0, len(levels)) for it in its]
+
+    term = cm.TerminalTier(llm=OracleLLM(accuracy=1.0, avg_out_tokens=40))
+    tier = cm.Tier(slm=FakeSLM(), tau=0.6, k=4)
+
+    monkeypatch.setattr(cm, "sample_k", accepting)
+    cheap = cm.summarize(cm.run_cascade([tier], term, items,
+                                        jax.random.PRNGKey(0)), 1)
+    monkeypatch.setattr(cm, "sample_k", rejecting)
+    costly = cm.summarize(cm.run_cascade([tier], term, items,
+                                         jax.random.PRNGKey(0)), 1)
+    assert costly["cost"] > cheap["cost"]

@@ -1,0 +1,110 @@
+"""Data pipeline + serving engine tests."""
+
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.data import tasks as tasks_lib
+from repro.data.pipeline import (encode_pair, encode_prompts, format_prompt,
+                                 preference_batches, sft_batches)
+from repro.data.tokenizer import default_tokenizer
+from repro.models import model as M
+from repro.serving.engine import GenConfig, decode_texts, generate
+
+
+def test_tokenizer_roundtrip():
+    tok = default_tokenizer()
+    s = "Q: Compute (3 + 4) mod 97.\nA: Answer: 7."
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_task_generators_verifiable():
+    rng = random.Random(0)
+    for name, gen in tasks_lib.GENERATORS.items():
+        for d in (1, 3):
+            it = gen(rng, d)
+            assert it.answer
+            assert tasks_lib.is_correct(it, it.verbose)
+            assert tasks_lib.is_correct(it, it.concise)
+            assert len(it.verbose) >= len(it.concise)
+            assert not tasks_lib.is_correct(it, "Answer: nope_xyz.")
+
+
+def test_modchain_answer_math():
+    rng = random.Random(1)
+    it = tasks_lib.gen_modchain(rng, 3)
+    # recompute from the question text
+    expr = it.question.split("(")[1].split(")")[0]
+    mod = int(it.question.rsplit("mod", 1)[1].strip(". "))
+    acc = None
+    toks = expr.split()
+    acc = int(toks[0])
+    i = 1
+    while i < len(toks):
+        op, v = toks[i], int(toks[i + 1])
+        acc = (acc + v) % mod if op == "+" else (acc * v) % mod
+        i += 2
+    assert str(acc) == it.answer
+
+
+def test_rejection_detection():
+    assert tasks_lib.is_rejection(tasks_lib.REJECTION)
+    assert tasks_lib.is_rejection("Sorry, I can't answer that. extra")
+    assert not tasks_lib.is_rejection("Answer: 7.")
+
+
+def test_encode_pair_masks():
+    tok = default_tokenizer()
+    toks, mask = encode_pair(tok, "Q: x\nA: ", "Answer: 1.", 64)
+    n_prompt = len(tok.encode("Q: x\nA: ", bos=True))
+    assert mask[:n_prompt].sum() == 0
+    assert mask[n_prompt:].sum() == len(tok.encode("Answer: 1.", eos=True))
+
+
+def test_batch_iterators():
+    tok = default_tokenizer()
+    pairs = [("Q: a\nA: ", "Answer: 1.")] * 10
+    batches = list(sft_batches(pairs, tok, 4, 48, epochs=2))
+    assert len(batches) == 4           # 2 per epoch, drop remainder
+    assert batches[0]["tokens"].shape == (4, 48)
+    prefs = [("Q: a\nA: ", "Answer: 1.", "Answer: 2. blah blah")] * 8
+    pb = list(preference_batches(prefs, tok, 4, 48))
+    assert len(pb) == 2
+    assert set(pb[0]) == {"chosen", "chosen_mask", "rejected", "rejected_mask"}
+
+
+def test_generate_greedy_deterministic_and_eos():
+    tok = default_tokenizer()
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=32,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                      vocab_size=tok.vocab_size, remat=False, source="test")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompts, lens = encode_prompts(["Q: hi\nA: ", "Q: longer prompt\nA: "],
+                                   tok, 40)
+    g = GenConfig(max_new_tokens=12, temperature=0.0)
+    t1, l1 = generate(params, cfg, prompts, lens, jax.random.PRNGKey(1), g)
+    t2, l2 = generate(params, cfg, prompts, lens, jax.random.PRNGKey(2), g)
+    np.testing.assert_array_equal(t1, t2)      # greedy ignores key
+    assert t1.shape == (2, 12)
+    assert all(1 <= l <= 12 for l in l1)
+    texts = decode_texts(tok, t1)
+    assert all(isinstance(t, str) for t in texts)
+
+
+def test_generate_gen_len_counts_eos():
+    tok = default_tokenizer()
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                      vocab_size=tok.vocab_size, remat=False, source="test")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompts, lens = encode_prompts(["abc"], tok, 8)
+    g = GenConfig(max_new_tokens=6, temperature=0.9)
+    toks, glen = generate(params, cfg, prompts, lens, jax.random.PRNGKey(0), g)
+    row = toks[0]
+    eos = np.nonzero(row == g.eos_id)[0]
+    expect = int(eos[0]) + 1 if len(eos) else 6
+    assert glen[0] == expect

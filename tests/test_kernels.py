@@ -1,0 +1,153 @@
+"""Per-kernel correctness: Pallas (interpret=True on CPU) vs pure-jnp
+oracle, sweeping shapes and dtypes.  (Deliverable c.)"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gmm.ops import moe_gmm
+from repro.kernels.moe_gmm.ref import moe_gmm_ref
+from repro.kernels.ssd.ops import ssd_scan
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# flash attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,d,window", [
+    (1, 4, 4, 256, 64, 0),       # MHA full causal
+    (2, 4, 2, 256, 64, 0),       # GQA
+    (1, 4, 1, 384, 64, 0),       # MQA, non-block-multiple S
+    (1, 2, 2, 256, 64, 96),      # sliding window
+])
+def test_flash_attention_vs_ref(b, h, kv, s, d, window, dtype):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv_ = jax.random.split(key, 3)
+    q = (jax.random.normal(kq, (b, s, h, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(kk, (b, s, kv, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(kv_, (b, s, kv, d)) * 0.5).astype(dtype)
+    out = flash_attention(q, k, v, window=window, block_q=128, block_k=128,
+                          interpret=True)
+    qt, kt, vt = (jnp.swapaxes(x, 1, 2) for x in (q, k, v))
+    ref = jnp.swapaxes(attention_ref(qt, kt, vt, window=window), 1, 2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_softcap():
+    key = jax.random.PRNGKey(1)
+    q = jax.random.normal(key, (1, 128, 2, 64))
+    k = jax.random.normal(key, (1, 128, 2, 64))
+    v = jax.random.normal(key, (1, 128, 2, 64))
+    out = flash_attention(q, k, v, softcap=20.0, interpret=True)
+    qt, kt, vt = (jnp.swapaxes(x, 1, 2) for x in (q, k, v))
+    ref = jnp.swapaxes(attention_ref(qt, kt, vt, softcap=20.0), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ----------------------------------------------------------------------
+# decode attention
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,h,kv,s,d,window", [
+    (2, 4, 2, 1024, 64, 0),
+    (2, 4, 1, 1000, 64, 0),      # ragged S
+    (1, 2, 2, 2048, 128, 512),   # window
+])
+def test_decode_attention_vs_ref(b, h, kv, s, d, window, dtype):
+    key = jax.random.PRNGKey(2)
+    kq, kk, kv_, kl = jax.random.split(key, 4)
+    q = (jax.random.normal(kq, (b, 1, h, d)) * 0.5).astype(dtype)
+    k = (jax.random.normal(kk, (b, s, kv, d)) * 0.5).astype(dtype)
+    v = (jax.random.normal(kv_, (b, s, kv, d)) * 0.5).astype(dtype)
+    lengths = jax.random.randint(kl, (b,), s // 2, s + 1)
+    out = decode_attention(q, k, v, lengths, window=window, block_k=256,
+                           interpret=True)
+    qt, kt, vt = (jnp.swapaxes(x, 1, 2) for x in (q, k, v))
+    ref = jnp.swapaxes(decode_attention_ref(qt, kt, vt, lengths,
+                                            window=window), 1, 2)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))
+
+
+# ----------------------------------------------------------------------
+# SSD scan
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 128, 2, 32, 16, 32),
+    (1, 100, 4, 16, 8, 32),      # ragged S
+    (1, 256, 2, 64, 128, 64),    # mamba2-like state width
+])
+def test_ssd_vs_sequential_ref(b, s, h, p, n, chunk, dtype):
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 4)
+    xbar = (jax.random.normal(ks[0], (b, s, h, p)) * 0.3).astype(dtype)
+    # realistic decays: a = dt * A <= 0
+    a = (-jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))).astype(jnp.float32)
+    bmat = (jax.random.normal(ks[2], (b, s, n)) * 0.3).astype(dtype)
+    cmat = (jax.random.normal(ks[3], (b, s, n)) * 0.3).astype(dtype)
+    y, state = ssd_scan(xbar, a, bmat, cmat, chunk=chunk, interpret=True)
+    y_ref, state_ref = ssd_ref(xbar, a, bmat, cmat)
+    tol = dict(rtol=5e-2, atol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_ref, np.float32), **tol)
+    np.testing.assert_allclose(np.asarray(state), np.asarray(state_ref),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_ssd_matches_model_ssd():
+    """Kernel agrees with the model substrate's chunked implementation."""
+    from repro.models.ssm import ssd_chunked
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 4)
+    b, s, h, p, n = 1, 64, 2, 16, 8
+    xbar = jax.random.normal(ks[0], (b, s, h, p)) * 0.3
+    a = -jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    bm = jax.random.normal(ks[2], (b, s, n)) * 0.3
+    cm = jax.random.normal(ks[3], (b, s, n)) * 0.3
+    y_k, st_k = ssd_scan(xbar, a, bm, cm, chunk=16, interpret=True)
+    y_m, st_m = ssd_chunked(xbar, a, bm[:, :, None, :], cm[:, :, None, :],
+                            chunk=16)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m), rtol=1e-4,
+                               atol=1e-4)
+    # model state layout (B,H,P,N) matches kernel
+    np.testing.assert_allclose(np.asarray(st_k), np.asarray(st_m), rtol=1e-4,
+                               atol=1e-4)
+
+
+# ----------------------------------------------------------------------
+# MoE grouped matmul
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("e,c,d,f", [
+    (4, 128, 256, 128),
+    (2, 100, 130, 70),           # ragged everything
+    (8, 256, 128, 512),
+])
+def test_moe_gmm_vs_ref(e, c, d, f, dtype):
+    key = jax.random.PRNGKey(5)
+    k1, k2 = jax.random.split(key)
+    x = (jax.random.normal(k1, (e, c, d)) / np.sqrt(d)).astype(dtype)
+    w = (jax.random.normal(k2, (e, d, f)) / np.sqrt(d)).astype(dtype)
+    out = moe_gmm(x, w, interpret=True)
+    ref = moe_gmm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **_tol(dtype))

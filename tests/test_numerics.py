@@ -1,0 +1,194 @@
+"""Numerical-equivalence tests for the memory-optimized execution paths
+(EXPERIMENTS.md §Perf): each optimized path must match its naive
+reference on CPU-sized shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.models import moe as moe_mod
+from repro.models.attention import chunked_attention, direct_attention
+
+
+def _dense_cfg(**kw):
+    base = dict(name="t", arch_type="dense", n_layers=3, d_model=64,
+                n_heads=4, n_kv_heads=2, head_dim=16, d_ff=128,
+                vocab_size=50)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+# ----------------------------------------------------------------------
+# fused CE == log_softmax + take_along_axis
+# ----------------------------------------------------------------------
+
+def test_fused_ce_matches_reference():
+    cfg = _dense_cfg()
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (2, 7, cfg.vocab_size)) * 4
+    labels = jax.random.randint(jax.random.PRNGKey(1), (2, 7), 0,
+                                cfg.vocab_size)
+    mask = (jax.random.uniform(jax.random.PRNGKey(2), (2, 7)) > 0.3
+            ).astype(jnp.int32)
+    loss, _ = M.lm_loss(cfg, logits, labels, mask)
+    logp = jax.nn.log_softmax(logits, -1)
+    ll = jnp.take_along_axis(logp, labels[..., None], -1)[..., 0]
+    ref = -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    np.testing.assert_allclose(float(loss), float(ref), rtol=1e-5)
+
+
+# ----------------------------------------------------------------------
+# chunked MoE dispatch == unchunked (incl. the S % nc != 0 divisor path)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,nc", [(16, 4), (15, 4), (12, 2)])
+def test_moe_chunked_matches_unchunked(s, nc):
+    cfg = ModelConfig(name="m", arch_type="moe", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=0,
+                      vocab_size=50, n_experts=4, moe_top_k=2, moe_d_ff=48,
+                      moe_capacity_factor=8.0)   # high cap: no drops
+    p = moe_mod.moe_init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, s, 32))
+    out0, aux0 = moe_mod.apply_moe(cfg, p, x)
+    import dataclasses
+    cfg_c = dataclasses.replace(cfg, moe_dispatch_chunks=nc)
+    out1, aux1 = moe_mod.apply_moe(cfg_c, p, x)
+    np.testing.assert_allclose(np.asarray(out0), np.asarray(out1),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_chunk_divisor_fallback():
+    """s=13 (prime) with nc=4 must fall back to unchunked, not crash."""
+    cfg = ModelConfig(name="m", arch_type="moe", n_layers=1, d_model=32,
+                      n_heads=2, n_kv_heads=2, head_dim=16, d_ff=0,
+                      vocab_size=50, n_experts=4, moe_top_k=1, moe_d_ff=48,
+                      moe_dispatch_chunks=4)
+    p = moe_mod.moe_init(cfg, jax.random.PRNGKey(0), jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 13, 32))
+    out, _ = moe_mod.apply_moe(cfg, p, x)
+    assert out.shape == (2, 13, 32)
+    assert not bool(jnp.any(jnp.isnan(out)))
+
+
+# ----------------------------------------------------------------------
+# chunked (online-softmax, checkpointed) attention == direct
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("window", [0, 8])
+def test_chunked_attention_matches_direct(window):
+    cfg = _dense_cfg()
+    b, s, h, kv, dh = 2, 24, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kv, dh))
+    v = jax.random.normal(ks[2], (b, s, kv, dh))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    o_direct = direct_attention(cfg, q, k, v, pos, pos, jnp.int32(window))
+    o_chunked = chunked_attention(cfg, q, k, v, pos, pos, jnp.int32(window),
+                                  block=8)
+    np.testing.assert_allclose(np.asarray(o_direct), np.asarray(o_chunked),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_chunked_attention_grads_match():
+    cfg = _dense_cfg()
+    b, s, h, kv, dh = 1, 16, 2, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (b, s, h, dh))
+    k = jax.random.normal(ks[1], (b, s, kv, dh))
+    v = jax.random.normal(ks[2], (b, s, kv, dh))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+    def f_direct(q):
+        return jnp.sum(direct_attention(cfg, q, k, v, pos, pos,
+                                        jnp.int32(0)) ** 2)
+
+    def f_chunked(q):
+        return jnp.sum(chunked_attention(cfg, q, k, v, pos, pos,
+                                         jnp.int32(0), block=4) ** 2)
+
+    g1 = jax.grad(f_direct)(q)
+    g2 = jax.grad(f_chunked)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=5e-3, atol=5e-4)
+
+
+# ----------------------------------------------------------------------
+# carry-based decode == full forward (dense + hybrid)
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["dense", "hybrid"])
+def test_decode_matches_forward(arch):
+    if arch == "dense":
+        cfg = _dense_cfg()
+    else:
+        cfg = ModelConfig(name="h", arch_type="hybrid", n_layers=2,
+                          d_model=64, n_heads=4, n_kv_heads=2, head_dim=16,
+                          d_ff=128, vocab_size=50, ssm_state=8,
+                          ssm_head_dim=16, ssm_chunk=4)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 3,
+                              cfg.vocab_size)
+    logits_full, _ = M.forward(params, cfg, tokens=toks)
+    last, cache = M.prefill(params, cfg, tokens=toks[:, :6],
+                            lengths=jnp.array([6, 6]), max_len=9,
+                            last_only=True)
+    np.testing.assert_allclose(np.asarray(last),
+                               np.asarray(logits_full[:, 5]),
+                               rtol=5e-3, atol=5e-3)
+    cur = cache
+    for t in range(6, 8):
+        lg, cur = M.decode_step(params, cfg, toks[:, t], cur)
+        np.testing.assert_allclose(np.asarray(lg),
+                                   np.asarray(logits_full[:, t]),
+                                   rtol=1e-2, atol=1e-2)
+
+
+def test_prefill_identity_cache_path():
+    """max_len == prompt len triggers the scatter-free cache build."""
+    cfg = _dense_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 3,
+                              cfg.vocab_size)
+    _, cache_id = M.prefill(params, cfg, tokens=toks,
+                            lengths=jnp.array([8, 5]), last_only=True)
+    _, cache_sc = M.prefill(params, cfg, tokens=toks,
+                            lengths=jnp.array([8, 5]), max_len=12,
+                            last_only=True)
+    # identity-path cache slots [0..8) must equal the scatter-path ones
+    np.testing.assert_allclose(np.asarray(cache_id["k"]),
+                               np.asarray(cache_sc["k"][:, :, :8]),
+                               rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(cache_id["cache_pos"]),
+                                  np.asarray(cache_sc["cache_pos"][:, :8]))
+
+
+# ----------------------------------------------------------------------
+# int8 kv-cache decode (beyond-paper §Perf A5) stays close to bf16
+# ----------------------------------------------------------------------
+
+def test_kv_quant_decode_close():
+    import dataclasses
+    from repro.models.attention import quantize_kv
+    cfg = _dense_cfg()
+    cfgq = dataclasses.replace(cfg, kv_quant=True)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 10), 3,
+                              cfg.vocab_size)
+    _, cache = M.prefill(params, cfg, tokens=toks[:, :6],
+                         lengths=jnp.array([6, 6]), max_len=10,
+                         last_only=True)
+    kq, ks = quantize_kv(cache["k"])
+    vq, vs = quantize_kv(cache["v"])
+    cq = dict(cache, k=kq, v=vq, k_scale=ks, v_scale=vs)
+    c1, c2 = cache, cq
+    for t in range(6, 10):
+        l1, c1 = M.decode_step(params, cfg, toks[:, t], c1)
+        l2, c2 = M.decode_step(params, cfgq, toks[:, t], c2)
+        dev = float(jnp.max(jnp.abs(jax.nn.softmax(l1) - jax.nn.softmax(l2))))
+        assert dev < 0.05, dev
+    assert c2["k"].dtype == jnp.int8

@@ -1,0 +1,125 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import voting
+from repro.core.confidence import Vote
+from repro.core.cost import with_ratio
+from repro.core.metrics import QuestionRecord, curve_points, toa
+from repro.data.tokenizer import default_tokenizer
+from repro.launch.analytics import _type_bytes
+
+conf_levels = st.sampled_from([round(0.1 * i, 1) for i in range(1, 11)])
+answers = st.sampled_from(["a", "b", "c", None])
+
+
+@st.composite
+def vote_lists(draw, min_size=1, max_size=12):
+    n = draw(st.integers(min_size, max_size))
+    return [Vote(draw(answers), draw(conf_levels),
+                 draw(st.integers(1, 200))) for _ in range(n)]
+
+
+@given(vote_lists())
+@settings(max_examples=200, deadline=None)
+def test_vote_scores_normalized(votes):
+    scores, total_w = voting.vote_scores(votes)
+    assert all(0.0 <= v <= 1.0 + 1e-9 for v in scores.values())
+    assert sum(scores.values()) <= 1.0 + 1e-9
+
+
+@given(vote_lists())
+@settings(max_examples=200, deadline=None)
+def test_vote_scores_permutation_invariant(votes):
+    import random
+    shuffled = votes[:]
+    random.Random(0).shuffle(shuffled)
+    s1, _ = voting.vote_scores(votes)
+    s2, _ = voting.vote_scores(shuffled)
+    assert set(s1) == set(s2)
+    for k in s1:
+        assert abs(s1[k] - s2[k]) < 1e-12
+
+
+@given(vote_lists(), st.sampled_from([0.1, 0.3, 0.5, 0.7, 0.9, 1.0]))
+@settings(max_examples=300, deadline=None)
+def test_early_stop_agrees_with_full(votes, tau):
+    """Early stopping must never change the accept/route decision and
+    must never be slower than waiting for every sample."""
+    es = voting.decide_with_early_stop(votes, tau)
+    full = voting.decide_no_early_stop(votes, tau)
+    assert es.accepted == full.accepted
+    assert es.decision_tokens <= full.decision_tokens
+    assert es.used_tokens <= full.used_tokens
+
+
+@given(vote_lists(), st.sampled_from([0.2, 0.5, 0.8]))
+@settings(max_examples=200, deadline=None)
+def test_used_tokens_bounds(votes, tau):
+    dec = voting.decide_with_early_stop(votes, tau)
+    lo = 0
+    hi = sum(v.gen_tokens for v in votes)
+    assert lo <= dec.used_tokens <= hi
+    assert dec.decision_tokens <= max(v.gen_tokens for v in votes)
+
+
+@given(st.text(alphabet=st.characters(min_codepoint=32, max_codepoint=126),
+               max_size=200))
+@settings(max_examples=200, deadline=None)
+def test_tokenizer_roundtrip_property(s):
+    tok = default_tokenizer()
+    assert tok.decode(tok.encode(s)) == s
+
+
+@st.composite
+def record_lists(draw):
+    n = draw(st.integers(5, 40))
+    recs = []
+    for _ in range(n):
+        recs.append(QuestionRecord(
+            slm_correct=draw(st.booleans()),
+            llm_correct=draw(st.booleans()),
+            slm_in_tokens=draw(st.integers(1, 100)),
+            slm_out_tokens=draw(st.integers(1, 200)),
+            llm_out_tokens=draw(st.integers(1, 200)),
+            score=draw(st.floats(0, 1, allow_nan=False))))
+    return recs
+
+
+@given(record_lists(), st.sampled_from([13.75, 25, 50, 100]))
+@settings(max_examples=100, deadline=None)
+def test_curve_monotone_cost_in_tau(recs, ratio):
+    """Pre-gen routing: raising tau routes a superset of questions, so
+    normalized cost is non-decreasing in tau (LLM is the dearer model)."""
+    cm = with_ratio(ratio)
+    pts = curve_points(recs, cm, assume_llm_perfect=True)
+    costs = [c for c, _ in pts]
+    assert all(c2 >= c1 - 1e-9 for c1, c2 in zip(costs, costs[1:]))
+    # routing is strict (score < tau): only score==1.0 questions stay on
+    # the SLM at tau=1.0, so perf there is bounded below by the routed mass
+    n = len(recs)
+    kept = [r for r in recs if r.score >= 1.0]
+    lower = (n - len(kept)) / n
+    assert pts[-1][1] >= lower - 1e-9
+
+
+@given(record_lists())
+@settings(max_examples=100, deadline=None)
+def test_toa_bounded(recs):
+    cm = with_ratio(25)
+    pts = curve_points(recs, cm, assume_llm_perfect=True)
+    c_s = min(c for c, _ in pts)
+    p_s = pts[0][1]
+    val = toa([(c_s, p_s)] + pts + [(1.0, 1.0)], c_s, p_s, 1.0)
+    assert -0.5 <= val <= 1.5
+
+
+@given(st.sampled_from(["f32", "bf16", "s32", "pred"]),
+       st.lists(st.integers(1, 64), min_size=0, max_size=3))
+@settings(max_examples=100, deadline=None)
+def test_hlo_type_bytes(dtype, dims):
+    seg = f"{dtype}[{','.join(map(str, dims))}]"
+    n = int(np.prod(dims)) if dims else 1
+    per = {"f32": 4, "bf16": 2, "s32": 4, "pred": 1}[dtype]
+    assert _type_bytes(seg) == n * per

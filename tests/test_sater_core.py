@@ -1,0 +1,192 @@
+"""SATER core unit tests: voting (Eq. 6), early stopping, preference-pair
+construction (Stage I), refusal data (Stage II), metrics, cost model."""
+
+import numpy as np
+import pytest
+
+from repro.core import metrics as metrics_lib
+from repro.core import voting
+from repro.core.confidence import Vote, fcv_schedule, parse_vote, rcv_schedule
+from repro.core.cost import DEFAULT, with_ratio
+from repro.core.metrics import QuestionRecord
+from repro.core.preferences import SampledQuestion, build_preference_pairs
+from repro.core.refusal import build_refusal_dataset
+from repro.data import tasks as tasks_lib
+
+
+def V(ans, conf=1.0, toks=10):
+    return Vote(ans, conf, toks)
+
+
+# ----------------------------------------------------------------------
+# Voting (paper Eq. 6)
+# ----------------------------------------------------------------------
+
+def test_weight_formula():
+    assert voting.weight(0.55) == pytest.approx(0.55)
+    assert voting.weight(1.0) == pytest.approx(0.55 + 0.5 * 0.45)
+    assert voting.weight(0.1) == pytest.approx(0.55 - 0.5 * 0.45)
+
+
+def test_vote_scores_rejections_dilute():
+    votes = [V("a", 1.0), V(None, 1.0), V(None, 1.0)]
+    scores, _ = voting.vote_scores(votes)
+    assert scores["a"] == pytest.approx(1 / 3)
+
+
+def test_higher_confidence_wins_ties():
+    votes = [V("a", 1.0), V("b", 0.1)]
+    scores, _ = voting.vote_scores(votes)
+    assert scores["a"] > scores["b"]
+
+
+def test_early_stop_accept_when_decided():
+    # equal weights: after 2 of 4 votes land on "a", its guaranteed lower
+    # bound is 2/4 = 0.5 >= tau -> accept at t=10, not t=100
+    votes = [V("a", 1.0, 5), V("a", 1.0, 10), V("a", 1.0, 15),
+             V("b", 1.0, 100)]
+    dec = voting.decide_with_early_stop(votes, 0.5)
+    assert dec.accepted and dec.answer == "a"
+    assert dec.decision_tokens == 10          # didn't wait for the 100-token lane
+    assert dec.used_tokens == 5 + 10 + 10 + 10  # lanes truncated at decision
+    full = voting.decide_no_early_stop(votes, 0.5)
+    assert full.decision_tokens == 100
+    assert dec.used_tokens < full.used_tokens
+
+
+def test_early_stop_route_when_unreachable():
+    # all rejections: tau can never be reached; route as soon as provable
+    votes = [V(None, 1.0, t) for t in (3, 4, 5, 6)]
+    dec = voting.decide_with_early_stop(votes, 0.6)
+    assert not dec.accepted
+    assert dec.decision_tokens <= 6
+
+
+def test_early_stop_matches_full_decision():
+    rng = np.random.RandomState(0)
+    for _ in range(200):
+        k = rng.randint(1, 10)
+        votes = [V(rng.choice(["a", "b", None]),
+                   float(rng.choice(rcv_schedule())),
+                   int(rng.randint(1, 50))) for _ in range(k)]
+        tau = float(rng.choice([0.1, 0.3, 0.5, 0.7, 0.9]))
+        es = voting.decide_with_early_stop(votes, tau)
+        full = voting.decide_no_early_stop(votes, tau)
+        assert es.accepted == full.accepted, (votes, tau)
+        # note: on accept the chosen answer also matches unless a later
+        # vote only reorders non-winning candidates
+        if es.accepted:
+            assert es.score >= tau - 1e-9
+
+
+# ----------------------------------------------------------------------
+# Stage I preference pairs
+# ----------------------------------------------------------------------
+
+def _sq(answer="7", texts_lens=()):
+    item = tasks_lib.TaskItem("t", 1, "q?", answer, ["s1."])
+    texts = [t for t, _ in texts_lens]
+    lens = [l for _, l in texts_lens]
+    return SampledQuestion(item, texts, lens)
+
+
+def test_preference_pair_selection():
+    sq = _sq("7", [("Answer: 7.", 10), ("s1. Answer: 7.", 20),
+                   ("Answer: 3.", 40), ("s1. Answer: 3.", 25)])
+    pairs = build_preference_pairs([sq])
+    assert len(pairs) == 1
+    _, chosen, rejected = pairs[0]
+    assert chosen == "Answer: 7."          # shortest correct
+    assert rejected == "Answer: 3."        # longest incorrect (40 >= 1.5*10)
+
+
+def test_preference_pair_length_ratio_filter():
+    sq = _sq("7", [("Answer: 7.", 30), ("Answer: 3.", 40)])  # 40 < 1.5*30
+    assert build_preference_pairs([sq]) == []
+
+
+def test_preference_pair_needs_both_sides():
+    assert build_preference_pairs([_sq("7", [("Answer: 7.", 10)])]) == []
+    assert build_preference_pairs([_sq("7", [("Answer: 3.", 10)])]) == []
+
+
+# ----------------------------------------------------------------------
+# Stage II refusal data
+# ----------------------------------------------------------------------
+
+def test_refusal_dataset_thresholds():
+    sq = _sq("7", [("Answer: 7.", 10), ("Answer: 3.", 12),
+                   ("Answer: 7.", 11), ("Answer: 1.", 9)])   # acc = 0.5
+    data = build_refusal_dataset([sq], seed=0)
+    assert len(data) == 10
+    rejects = [t for _, t in data if t == tasks_lib.REJECTION]
+    answers = [t for _, t in data if t != tasks_lib.REJECTION]
+    assert len(rejects) == 5               # thresholds 0.6..1.0
+    assert all("Answer: 7." in a for a in answers)
+    # every prompt carries its confidence level
+    assert all("confidence level of [" in p for p, _ in data)
+
+
+# ----------------------------------------------------------------------
+# Confidence parsing
+# ----------------------------------------------------------------------
+
+def test_parse_vote_rejection_and_answer():
+    v = parse_vote("Sorry, I can't answer that.", 0.8, 9)
+    assert v.rejected and v.confidence == 0.8
+    v2 = parse_vote("step1: ok. Answer: 42.", 0.3, 15)
+    assert v2.answer == "42" and not v2.rejected
+
+
+def test_schedules():
+    assert rcv_schedule() == [0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0]
+    assert fcv_schedule() == [1.0] * 10
+
+
+# ----------------------------------------------------------------------
+# Metrics
+# ----------------------------------------------------------------------
+
+def _records(n=40, seed=0):
+    rng = np.random.RandomState(seed)
+    recs = []
+    for i in range(n):
+        sc = bool(rng.rand() < 0.6)
+        recs.append(QuestionRecord(
+            slm_correct=sc, llm_correct=bool(rng.rand() < 0.9),
+            slm_in_tokens=50, slm_out_tokens=int(rng.randint(10, 80)),
+            llm_out_tokens=int(rng.randint(30, 90)),
+            score=(0.8 * rng.rand() + 0.2) if sc else 0.6 * rng.rand()))
+    return recs
+
+
+def test_random_router_toa_half():
+    # scores independent of correctness => ToA ~ 0.5
+    rng = np.random.RandomState(1)
+    recs = [QuestionRecord(bool(rng.rand() < 0.5), True, 50, 40, 40,
+                           float(rng.rand())) for _ in range(4000)]
+    s = metrics_lib.toa_summary(recs, DEFAULT)
+    assert abs(s["toa_100"] - 0.5) < 0.05
+
+
+def test_informed_router_beats_random():
+    recs = _records()
+    s = metrics_lib.toa_summary(recs, DEFAULT)
+    assert s["toa_100"] > 0.5
+    assert 0 < s["togr"] <= 1.25    # golden may be imperfectly matched
+
+
+def test_golden_router_togr_is_one():
+    recs = _records()
+    golden = [metrics_lib.QuestionRecord(
+        r.slm_correct, r.llm_correct, r.slm_in_tokens, r.slm_out_tokens,
+        r.llm_out_tokens, 1.0 if r.slm_correct else 0.0) for r in recs]
+    s = metrics_lib.toa_summary(golden, DEFAULT)
+    assert s["togr"] == pytest.approx(1.0, abs=0.05)
+
+
+def test_cost_model_ratios():
+    cm = with_ratio(50)
+    assert cm.ratio == pytest.approx(50)
+    assert cm.slm_in == pytest.approx(cm.slm_out * 0.25)
+    assert DEFAULT.ratio == pytest.approx(13.75)

@@ -1,0 +1,144 @@
+"""Sharding-rule unit tests + a 1-device pjit smoke of the distributed
+step builders (the 512-device lower/compile runs live in the dry-run
+sweep, launch/dryrun.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, smoke_variant
+from repro.distributed import sharding as sh
+from repro.launch.analytics import (analytic_flops, collective_bytes_structural)
+from repro.launch.mesh import make_host_mesh
+
+
+class FakeMesh:
+    """Mesh stand-in with production axis sizes (no jax device state)."""
+    def __init__(self, shape):
+        self.shape = dict(shape)
+        self.axis_names = tuple(shape)
+
+
+POD = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _abstract_params(cfg):
+    from repro.models import model as M
+    return jax.eval_shape(lambda k: M.init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh", [POD, MULTI], ids=["pod", "multipod"])
+def test_param_specs_divisible(arch, mesh):
+    cfg = get_config(arch)
+    params = _abstract_params(cfg)
+    specs = sh.param_specs(cfg, params, mesh)
+
+    def check(path, leaf, spec):
+        for dim, axis in enumerate(spec):
+            if axis is None:
+                continue
+            axes = (axis,) if isinstance(axis, str) else axis
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            assert leaf.shape[dim] % size == 0, (arch, path, leaf.shape, spec)
+
+    jax.tree_util.tree_map_with_path(
+        lambda path, leaf, spec: check(path, leaf, spec), params, specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mamba2-1.3b", "hymba-1.5b",
+                                  "gemma3-1b", "olmoe-1b-7b"])
+def test_cache_specs_divisible(arch):
+    from repro.models import model as M
+    cfg = get_config(arch)
+    for shape_name in ("decode_32k", "long_500k"):
+        shp = INPUT_SHAPES[shape_name]
+        spec = sh.cache_specs(cfg, POD, shp.global_batch)
+        cache = jax.eval_shape(
+            lambda: M.init_decode_state(cfg, shp.global_batch,
+                                        min(shp.seq_len, 16384)))
+        def check(leaf, sp):
+            for dim, axis in enumerate(sp):
+                if axis is None:
+                    continue
+                axes = (axis,) if isinstance(axis, str) else axis
+                size = 1
+                for a in axes:
+                    size *= POD.shape[a]
+                assert leaf.shape[dim] % size == 0, (arch, shape_name,
+                                                     leaf.shape, sp)
+        jax.tree.map(check, cache, spec, is_leaf=lambda x: isinstance(x, P))
+
+
+def test_llama4_gets_fsdp_expert_sharding():
+    cfg = get_config("llama4-scout-17b-a16e")
+    assert cfg.param_count() > sh.FSDP_PARAM_THRESHOLD
+    params = _abstract_params(cfg)
+    specs = sh.param_specs(cfg, params, POD)
+    moe_spec = specs["layers"]["moe"]["wi_gate"]
+    assert moe_spec == P(None, "model", "data", None)
+
+
+def test_zero_spec_picks_divisible_dim():
+    assert sh.zero_spec(P(None, "model"), (48, 32), 16) == P("data", "model")
+    assert sh.zero_spec(P(None, None), (7, 32), 16) == P(None, "data")
+    assert sh.zero_spec(P(None,), (7,), 16) == P(None)
+
+
+def test_host_mesh_pjit_train_step_runs():
+    """The distributed train step executes on a 1x1 mesh (CPU)."""
+    from repro.launch.dryrun import input_specs, make_train_step
+    mesh = make_host_mesh()
+    cfg = smoke_variant(get_config("llama3-8b"))
+    from repro.models import model as M
+    from repro.training.optimizer import adamw, cosine_warmup_schedule
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw(cosine_warmup_schedule(1e-3, 10))
+    state = {"params": params, "opt_state": opt.init(params),
+             "step": jnp.int32(0)}
+    step = make_train_step(cfg)
+    b, s = 2, 32
+    batch = {"tokens": jnp.ones((b, s), jnp.int32),
+             "loss_mask": jnp.ones((b, s), jnp.int32)}
+    with mesh:
+        new_state, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_state["step"]) == 1
+
+
+def test_analytic_flops_positive_all_pairs():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shp in INPUT_SHAPES.values():
+            f = analytic_flops(cfg, shp)
+            assert f > 0, (arch, shp.name)
+
+
+def test_collective_parser_loop_multiplier():
+    hlo = """
+HloModule test
+%body.1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %ar = f32[8] all-reduce(f32[8] %x), to_apply=%add
+  ROOT %t = (s32[], f32[8]) tuple(%i, %ar)
+}
+%cond.1 (p: (s32[], f32[8])) -> pred[] {
+  %c = s32[] constant(26)
+  ROOT %cmp = pred[] compare(s32[] %i, s32[] %c), direction=LT
+}
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %w = (s32[], f32[8]) while((s32[], f32[8]) %init), condition=%cond.1, body=%body.1
+  %ag = f32[16] all-gather(f32[8] %a)
+  ROOT %r = f32[8] get-tuple-element(%w), index=1
+}
+"""
+    res = collective_bytes_structural(hlo)
+    assert res["all-reduce"] == 26 * 8 * 4
+    assert res["all-gather"] == 16 * 4
+    assert res["n_all-reduce"] == 26

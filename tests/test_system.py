@@ -1,0 +1,110 @@
+"""End-to-end behaviour tests: engine -> sampling -> voting -> routing ->
+metrics, on a tiny model (mechanism-level; the learning-quality runs live
+in examples/ and benchmarks/)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import metrics as metrics_lib
+from repro.core import routing as routing_lib
+from repro.core.cost import DEFAULT, with_ratio
+from repro.data import tasks as tasks_lib
+from repro.data.tokenizer import default_tokenizer
+from repro.serving.engine import GenConfig
+
+
+def tiny_cfg(vocab):
+    return ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                       d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                       d_ff=128, vocab_size=vocab, remat=False,
+                       source="test")
+
+
+@pytest.fixture(scope="module")
+def slm():
+    from repro.models import model as M
+    tok = default_tokenizer()
+    cfg = tiny_cfg(tok.vocab_size)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return routing_lib.SLM(params, cfg, tok,
+                           GenConfig(max_new_tokens=24, temperature=0.7),
+                           max_prompt_len=160, lane_budget=40)
+
+
+@pytest.fixture(scope="module")
+def items():
+    return tasks_lib.make_benchmark("arith", 6, seed=1)
+
+
+def test_batch_generate_shapes(slm):
+    texts, lens = routing_lib.batch_generate(
+        slm, ["Q: Compute 1 + 1.\nA: ", "Q: hi\nA: "], jax.random.PRNGKey(1))
+    assert len(texts) == 2 and len(lens) == 2
+    assert all(l >= 1 for l in lens)
+
+
+def test_cascade_outcomes_structure(slm, items):
+    llm = routing_lib.OracleLLM(accuracy=1.0, avg_out_tokens=40)
+    out = routing_lib.cascade_outcomes(slm, items, llm, jax.random.PRNGKey(2),
+                                       mode="FCV", k=4,
+                                       thresholds=[0.0, 0.6, 1.0])
+    assert set(out) == {0.0, 0.6, 1.0}
+    for tau, rows in out.items():
+        assert len(rows) == len(items)
+        for r in rows:
+            assert r.slm_engaged
+            assert r.slm_out_tokens >= 0
+            assert r.decision_tokens >= 0
+    # tau=0: nothing routed (any score >= 0)
+    assert not any(r.routed for r in out[0.0])
+
+
+def test_cascade_early_stop_cheaper_than_full(slm, items):
+    llm = routing_lib.OracleLLM()
+    key = jax.random.PRNGKey(3)
+    es = routing_lib.cascade_outcomes(slm, items, llm, key, mode="FCV", k=4,
+                                      thresholds=[0.6], early_stop=True)
+    full = routing_lib.cascade_outcomes(slm, items, llm, key, mode="FCV", k=4,
+                                        thresholds=[0.6], early_stop=False)
+    t_es = sum(r.slm_out_tokens for r in es[0.6])
+    t_full = sum(r.slm_out_tokens for r in full[0.6])
+    assert t_es <= t_full
+
+
+def test_pregen_outcomes_and_toa(slm, items):
+    llm = routing_lib.OracleLLM(accuracy=0.9, avg_out_tokens=40)
+    key = jax.random.PRNGKey(4)
+    out = routing_lib.pregen_outcomes_sater(slm, items, llm, key,
+                                            thresholds=[0.0, 0.5, 1.0])
+    (c_s, p_s), slm_corr, slm_out, _ = routing_lib.slm_only_endpoint(
+        slm, items, llm, key, DEFAULT)
+    golden = metrics_lib.golden_toga_100(
+        slm_corr, [len(routing_lib.format_prompt(it)) for it in items],
+        slm_out, DEFAULT, [40] * len(items))
+    summ = metrics_lib.outcome_toa_summary(out, DEFAULT, (c_s, p_s), golden)
+    for k in ("toa", "toa_100", "togr"):
+        assert np.isfinite(summ[k])
+
+
+def test_latency_metrics(slm, items):
+    llm = routing_lib.OracleLLM()
+    out = routing_lib.cascade_outcomes(slm, items, llm, jax.random.PRNGKey(5),
+                                       mode="RCV", k=4, thresholds=[0.6])
+    lat = metrics_lib.outcome_latency(out[0.6])
+    assert lat["AGL"] >= 0 and lat["AROL"] >= 0
+    assert 0 <= lat["frac_accepted"] <= 1
+
+
+def test_cost_ratio_scaling(slm, items):
+    # higher LLM cost ratio makes routing everything more expensive
+    llm = routing_lib.OracleLLM()
+    out = routing_lib.cascade_outcomes(slm, items, llm, jax.random.PRNGKey(6),
+                                       mode="SC", k=3, thresholds=[1.0])
+    pts_cheap = metrics_lib.points_from_outcomes(out, with_ratio(13.75))
+    pts_dear = metrics_lib.points_from_outcomes(out, with_ratio(100))
+    # with costs normalized to LLM-only, the SLM overhead term shrinks as
+    # the ratio grows, so normalized cascade cost is LOWER at ratio 100
+    assert pts_dear[0][0] <= pts_cheap[0][0] + 1e-9
