@@ -42,6 +42,8 @@ def main():
     ap.add_argument("--tau", type=float, default=0.6)
     ap.add_argument("--k", type=int, default=6)
     ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--streamed", action="store_true",
+                    help="also run the scheduler's true compute early stop")
     args = ap.parse_args()
     x = SCALES[args.scale]
 
@@ -61,6 +63,17 @@ def main():
         print(f"  [{dest:>3}] dec_t={o.decision_tokens:4d} "
               f"spent={o.slm_out_tokens:5d} d={it.difficulty} "
               f"{it.question[:52]}")
+
+    if args.streamed:
+        # true compute early stop: VoteEarlyStop kills decided vote
+        # groups mid-flight inside the continuous-batching scheduler
+        for early in (False, True):
+            rows2, st = routing_lib.cascade_outcomes_streamed(
+                sater, items, llm, jax.random.PRNGKey(0), mode=args.mode,
+                k=args.k, tau=args.tau, early_stop=early)
+            print(f"  streamed early_stop={early}: "
+                  f"{st.generated_tokens} tokens decoded, "
+                  f"{st.cancelled} lanes killed, {st.wall_s:.2f}s wall")
 
     # vanilla SC baseline (base model, no confidence, no early stop)
     base = make_slm(models["base"], x)

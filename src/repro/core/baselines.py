@@ -17,6 +17,7 @@ Cascade-adjacent scorers:
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
 from typing import List, Optional, Sequence
@@ -29,6 +30,7 @@ from repro.configs.base import ModelConfig
 from repro.core.voting import vote_scores
 from repro.data.tokenizer import CharTokenizer, default_tokenizer
 from repro.models import model as model_lib
+from repro.serving.batch import make_buckets, pick_bucket
 from repro.training.optimizer import adamw, cosine_warmup_schedule
 
 
@@ -189,13 +191,31 @@ class BERTRouter:
         return self
 
     def score(self, texts: Sequence[str]) -> np.ndarray:
-        x, m = self._encode(texts)
-        out = []
-        for i in range(0, len(texts), 64):
-            z = self._logit(self.params, jnp.asarray(x[i:i + 64]),
-                            jnp.asarray(m[i:i + 64]))
-            out.append(np.asarray(jax.nn.sigmoid(z)))
-        return np.concatenate(out)
+        """Bucketed scoring (same padding scheme as serving/batch):
+        texts are grouped by the smallest length bucket that fits and
+        chunk sizes padded to powers of two, so short prompts don't pay
+        max_len FLOPs and the jitted logit compiles once per bucket
+        pair instead of once per ragged batch."""
+        len_buckets = make_buckets(self.max_len)
+        chunk_buckets = make_buckets(64, 8)
+        ids = [self.tok.encode(t, bos=True)[: self.max_len] for t in texts]
+        groups = collections.defaultdict(list)
+        for i, seq in enumerate(ids):
+            groups[pick_bucket(len(seq), len_buckets)].append(i)
+        out = np.zeros((len(texts),), np.float32)
+        for width in sorted(groups):
+            idxs = groups[width]
+            for c0 in range(0, len(idxs), 64):
+                chunk = idxs[c0:c0 + 64]
+                n = pick_bucket(len(chunk), chunk_buckets)
+                x = np.zeros((n, width), np.int32)
+                m = np.zeros((n, width), np.float32)
+                for r, i in enumerate(chunk):
+                    x[r, : len(ids[i])] = ids[i]
+                    m[r, : len(ids[i])] = 1.0
+                z = self._logit(self.params, jnp.asarray(x), jnp.asarray(m))
+                out[chunk] = np.asarray(jax.nn.sigmoid(z))[: len(chunk)]
+        return out
 
 
 # ----------------------------------------------------------------------

@@ -11,6 +11,10 @@ own (tau, mode, K) policy; a query falls through to the next tier when
 the confidence-weighted vote stays below that tier's threshold.  The
 terminal tier always answers.
 
+Questions are streamed: each tier batches only its surviving questions
+through the serving scheduler, and with ``stream_early_stop`` a tier's
+vote lanes are killed in compute as soon as its tau is decided.
+
 Semantics kept from the paper's single-hop cascade:
   * per-tier K parallel samples + RCV/FCV weighted voting with early
     stopping (voting.decide_with_early_stop),
@@ -32,7 +36,7 @@ import numpy as np
 
 from repro.core import voting
 from repro.core.confidence import fcv_schedule, rcv_schedule
-from repro.core.routing import SLM, sample_k
+from repro.core.routing import SLM, sample_k, sample_k_streamed
 from repro.data.pipeline import format_prompt
 from repro.data.tasks import TaskItem
 
@@ -70,45 +74,64 @@ class MultiOutcome:
 
 
 def run_cascade(tiers: Sequence[Tier], terminal: TerminalTier,
-                items: Sequence[TaskItem], key) -> List[MultiOutcome]:
-    """Drive every question through the tier chain (batched per tier)."""
+                items: Sequence[TaskItem], key,
+                stream_early_stop: bool = False) -> List[MultiOutcome]:
+    """Drive every question through the tier chain.
+
+    Each tier streams only the questions that fell through every tier
+    above it through the scheduler (continuous batching over the
+    surviving K-lane vote groups), so deeper tiers never generate for
+    already-answered questions.  With stream_early_stop=True, a tier's
+    vote groups are additionally killed mid-flight by the VoteEarlyStop
+    policy the moment that tier's tau is decided (true compute early
+    stop); otherwise lanes run to completion and early stopping is the
+    paper's token-accounting simulation (voting.decide_with_early_stop).
+    """
     n = len(items)
-    votes_per_tier = []
+    prompt_toks = [len(format_prompt(it)) for it in items]
+    cost = [0.0] * n
+    overhead = [0] * n        # decision latency accumulated on the way down
+    out: List[Optional[MultiOutcome]] = [None] * n
+    alive = list(range(n))
+
     for t_i, tier in enumerate(tiers):
         key, sub = jax.random.split(key)
-        votes_per_tier.append(
-            sample_k(tier.slm, items, tier.levels(), sub, seed_offset=t_i))
-
-    out: List[MultiOutcome] = []
-    for qi, item in enumerate(items):
-        prompt_toks = len(format_prompt(item))
-        cost = 0.0
-        overhead = 0          # decision latency accumulated on the way down
-        decided: Optional[MultiOutcome] = None
-        for t_i, tier in enumerate(tiers):
-            dec = voting.decide_with_early_stop(votes_per_tier[t_i][qi],
-                                                tier.tau)
+        if not alive:
+            continue
+        sub_items = [items[i] for i in alive]
+        if stream_early_stop:
+            results, _ = sample_k_streamed(tier.slm, sub_items, tier.levels(),
+                                           sub, tier.tau, seed_offset=t_i)
+            decisions = [r.decision for r in results]
+        else:
+            votes = sample_k(tier.slm, sub_items, tier.levels(), sub,
+                             seed_offset=t_i)
+            decisions = [voting.decide_with_early_stop(vs, tier.tau)
+                         for vs in votes]
+        next_alive: List[int] = []
+        for dec, qi in zip(decisions, alive):
             # tier cost: prompt once (KV cache shared across samples) +
             # the sampled tokens actually generated before the decision
-            cost += (tier.in_price * prompt_toks
-                     + tier.out_price * dec.used_tokens) / 1e6
+            cost[qi] += (tier.in_price * prompt_toks[qi]
+                         + tier.out_price * dec.used_tokens) / 1e6
             if dec.accepted:
-                decided = MultiOutcome(
+                out[qi] = MultiOutcome(
                     accepted_tier=t_i,
-                    correct=dec.answer == item.answer,
-                    cost=cost,
-                    agl=overhead + dec.decision_tokens,
+                    correct=dec.answer == items[qi].answer,
+                    cost=cost[qi],
+                    agl=overhead[qi] + dec.decision_tokens,
                     arol=0)
-                break
-            overhead += dec.decision_tokens
-        if decided is None:
-            lc, lt = terminal.llm.answer(item)
-            cost += (terminal.in_price * prompt_toks
+            else:
+                overhead[qi] += dec.decision_tokens
+                next_alive.append(qi)
+        alive = next_alive
+
+    for qi in alive:
+        lc, lt = terminal.llm.answer(items[qi])
+        cost[qi] += (terminal.in_price * prompt_toks[qi]
                      + terminal.out_price * lt) / 1e6
-            decided = MultiOutcome(
-                accepted_tier=len(tiers), correct=lc, cost=cost,
-                agl=0, arol=overhead)
-        out.append(decided)
+        out[qi] = MultiOutcome(accepted_tier=len(tiers), correct=lc,
+                               cost=cost[qi], agl=0, arol=overhead[qi])
     return out
 
 

@@ -9,9 +9,10 @@ the paper's "(100)" setting is ``OracleLLM(accuracy=1.0)``) or a
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import random
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Mapping, Optional, Sequence
 
 import jax
 import numpy as np
@@ -21,10 +22,12 @@ from repro.core import voting
 from repro.core.confidence import Vote, fcv_schedule, parse_vote, rcv_schedule
 from repro.core.metrics import RouteOutcome, THRESHOLDS
 from repro.core.preferences import SampledQuestion
-from repro.data.pipeline import encode_prompts, format_prompt
-from repro.data.tasks import TaskItem, is_correct
+from repro.data.pipeline import format_prompt
+from repro.data.tasks import TaskItem, is_correct, stable_hash
 from repro.data.tokenizer import CharTokenizer
-from repro.serving.engine import GenConfig, decode_texts, generate
+from repro.serving.batch import GenConfig, make_buckets, pick_bucket
+from repro.serving.scheduler import (Completion, Request, SchedStats,
+                                     Scheduler, StopPolicy)
 
 
 @dataclasses.dataclass
@@ -34,7 +37,8 @@ class SLM:
     tokenizer: CharTokenizer
     gcfg: GenConfig
     max_prompt_len: int = 320
-    lane_budget: int = 96        # max batch lanes per engine call
+    lane_budget: int = 96        # max concurrent decode lanes
+    round_tokens: int = 16       # decode round length (early-stop grain)
 
 
 @dataclasses.dataclass
@@ -46,7 +50,8 @@ class OracleLLM:
     seed: int = 0
 
     def answer(self, item: TaskItem) -> tuple:
-        rng = random.Random((hash(item.question) ^ self.seed) & 0xFFFFFFFF)
+        rng = random.Random((stable_hash(item.question) ^ self.seed)
+                            & 0xFFFFFFFF)
         acc = max(0.0, self.accuracy - self.per_difficulty_decay * item.difficulty)
         correct = rng.random() < acc
         toks = max(8, int(rng.gauss(self.avg_out_tokens,
@@ -60,49 +65,64 @@ class ModelLLM:
     slm: SLM
 
     def answer(self, item: TaskItem) -> tuple:
-        texts, lens = batch_generate(self.slm, [format_prompt(item)],
-                                     jax.random.PRNGKey(hash(item.question) & 0xFFFF))
+        texts, lens = batch_generate(
+            self.slm, [format_prompt(item)],
+            jax.random.PRNGKey(stable_hash(item.question) & 0xFFFF))
         return is_correct(item, texts[0]), int(lens[0])
 
 
 # ----------------------------------------------------------------------
-# Batched generation over prompt lists
+# Streaming generation through the continuous-batching scheduler
 # ----------------------------------------------------------------------
 
+def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
+    """Scheduler over the SLM's lane pool.  The pool width is bucketed
+    to the request count so small calls don't decode a full-width pool
+    while big ones still compile once per width bucket."""
+    n_lanes = pick_bucket(min(max(n_requests, 1), slm.lane_budget),
+                          make_buckets(slm.lane_budget, 1))
+    return Scheduler(slm.params, slm.cfg, slm.tokenizer, slm.gcfg,
+                     n_lanes=n_lanes, round_tokens=slm.round_tokens,
+                     max_prompt_len=slm.max_prompt_len)
+
+
 def batch_generate(slm: SLM, prompts: Sequence[str], key):
-    """Generate one response per prompt (chunked to lane_budget)."""
-    texts: List[str] = []
-    lens: List[int] = []
-    for i in range(0, len(prompts), slm.lane_budget):
-        chunk = prompts[i:i + slm.lane_budget]
-        toks, tlens = encode_prompts(chunk, slm.tokenizer, slm.max_prompt_len)
-        key, sub = jax.random.split(key)
-        gen, glens = generate(slm.params, slm.cfg, toks, tlens, sub, slm.gcfg)
-        texts.extend(decode_texts(slm.tokenizer, gen))
-        lens.extend(int(g) for g in glens)
-    return texts, lens
+    """Generate one response per prompt, streamed through the scheduler
+    (requests beyond the lane pool are admitted as lanes free up)."""
+    reqs = [Request(uid=i, prompt=p) for i, p in enumerate(prompts)]
+    comps, _ = make_scheduler(slm, len(reqs)).run(reqs, key)
+    return [c.text for c in comps], [int(c.gen_len) for c in comps]
+
+
+def _vote_requests(items: Sequence[TaskItem],
+                   levels: Sequence[Optional[float]]) -> List[Request]:
+    k = len(levels)
+    return [Request(uid=qi * k + j, prompt=format_prompt(item, conf_level=lvl),
+                    group=qi, meta={"level": lvl})
+            for qi, item in enumerate(items) for j, lvl in enumerate(levels)]
+
+
+def _parse_completion(comp: Completion) -> Vote:
+    lvl = comp.meta.get("level") if comp.meta else None
+    return parse_vote(comp.text, lvl if lvl is not None else voting.MEAN_CONF,
+                      int(comp.gen_len))
 
 
 def sample_k(slm: SLM, items: Sequence[TaskItem], levels: Sequence[Optional[float]],
              key, seed_offset: int = 0) -> List[List[Vote]]:
     """K = len(levels) samples per item; level None = no confidence prompt
-    (vanilla SC).  Returns votes[item][k]."""
-    prompts = []
-    for item in items:
-        for lvl in levels:
-            prompts.append(format_prompt(item, conf_level=lvl))
+    (vanilla SC).  Returns votes[item][k].
+
+    Every lane runs to EOS/budget (no StopPolicy) so the returned votes
+    support post-hoc multi-tau early-stop simulation; use
+    sample_k_streamed for generation that actually stops.
+    """
+    reqs = _vote_requests(items, levels)
     key = jax.random.fold_in(key, seed_offset)
-    texts, lens = batch_generate(slm, prompts, key)
-    votes: List[List[Vote]] = []
+    comps, _ = make_scheduler(slm, len(reqs)).run(reqs, key)
     k = len(levels)
-    for qi in range(len(items)):
-        vs = []
-        for j, lvl in enumerate(levels):
-            t = texts[qi * k + j]
-            vs.append(parse_vote(t, lvl if lvl is not None else voting.MEAN_CONF,
-                                 lens[qi * k + j]))
-        votes.append(vs)
-    return votes
+    return [[_parse_completion(c) for c in comps[qi * k:(qi + 1) * k]]
+            for qi in range(len(items))]
 
 
 def collect_samples(slm: SLM, items: Sequence[TaskItem], k: int, key,
@@ -111,6 +131,114 @@ def collect_samples(slm: SLM, items: Sequence[TaskItem], k: int, key,
     votes = sample_k(slm, items, [level] * k, key)
     return [SampledQuestion(item, [v.text for v in vs], [v.gen_tokens for v in vs])
             for item, vs in zip(items, votes)]
+
+
+# ----------------------------------------------------------------------
+# Vote-aware early stopping as a scheduler StopPolicy
+# ----------------------------------------------------------------------
+
+class VoteEarlyStop(StopPolicy):
+    """Kills all K lanes of a question the moment the confidence-weighted
+    vote is decided — the scheduler-native form of
+    voting.decide_with_early_stop.
+
+    Lane weights are known *before* generation (they depend only on the
+    prompted confidence level), so after each lane finishes we can bound
+    the final score: if the current leader's guaranteed share already
+    clears tau we accept, and if even the optimistic share of any
+    candidate stays below tau we route; either way the remaining lanes
+    of that group are evicted mid-flight.
+    """
+
+    def __init__(self, tau: float,
+                 group_levels: Mapping[int, Sequence[Optional[float]]],
+                 alpha: float = voting.ALPHA, parse=None):
+        self.tau, self.alpha = tau, alpha
+        self._parse = parse or _parse_completion
+        self._total_w: Dict[int, float] = {}
+        self._pending_w: Dict[int, float] = {}
+        self._pending_n: Dict[int, int] = {}
+        self._seen: Dict[int, Dict[str, float]] = {}
+        self._votes: Dict[int, List[Vote]] = {}
+        for g, levels in group_levels.items():
+            ws = [voting.weight(l if l is not None else voting.MEAN_CONF,
+                                alpha) for l in levels]
+            self._total_w[g] = sum(ws)
+            self._pending_w[g] = sum(ws)
+            self._pending_n[g] = len(ws)
+            self._seen[g] = collections.defaultdict(float)
+            self._votes[g] = []
+        self.decisions: Dict[int, voting.CascadeDecision] = {}
+
+    def observe(self, comp: Completion):
+        g = comp.group
+        if g not in self._total_w or g in self.decisions:
+            return ()
+        v = self._parse(comp)
+        self._votes[g].append(v)
+        self._pending_w[g] -= voting.weight(v.confidence, self.alpha)
+        self._pending_n[g] -= 1
+        if not v.rejected and v.answer is not None:
+            self._seen[g][v.answer] += voting.weight(v.confidence, self.alpha)
+        total_w, seen = self._total_w[g], self._seen[g]
+        n_seen = len(self._votes[g])
+        if self.tau > 0 and total_w > 0:
+            best = max(seen.values()) if seen else 0.0
+            pend = max(self._pending_w[g], 0.0)
+            lo = best / total_w
+            hi = (best + pend) / total_w if seen else pend / total_w
+            if seen and lo >= self.tau:
+                ans = max(seen, key=seen.get)
+                self.decisions[g] = voting.CascadeDecision(
+                    ans, lo, True, v.gen_tokens, 0, n_seen)
+                return (g,)
+            if hi < self.tau:
+                self.decisions[g] = voting.CascadeDecision(
+                    None, hi, False, v.gen_tokens, 0, n_seen)
+                return (g,)
+        if self._pending_n[g] == 0:    # group complete: full-vote decision
+            self.decisions[g] = voting.decide_no_early_stop(
+                self._votes[g], self.tau, self.alpha)
+        return ()
+
+
+@dataclasses.dataclass
+class StreamResult:
+    """Per-question outcome of a streamed (true early stop) vote run."""
+    decision: voting.CascadeDecision
+    votes: List[Vote]
+    generated_tokens: int        # tokens actually decoded across K lanes
+
+
+def sample_k_streamed(slm: SLM, items: Sequence[TaskItem],
+                      levels: Sequence[Optional[float]], key, tau: float,
+                      seed_offset: int = 0, early_stop: bool = True):
+    """K vote lanes per item through the scheduler with (optionally) the
+    VoteEarlyStop policy actually cancelling decided groups mid-flight.
+
+    Unlike sample_k, stopped lanes really generate fewer tokens; the
+    decisions come from the policy (or the full vote when it never
+    fired).  Returns ([StreamResult per item], SchedStats).
+    """
+    reqs = _vote_requests(items, levels)
+    key = jax.random.fold_in(key, seed_offset)
+    policy = (VoteEarlyStop(tau, {qi: levels for qi in range(len(items))})
+              if early_stop else None)
+    comps, stats = make_scheduler(slm, len(reqs)).run(reqs, key,
+                                                      stop_policy=policy)
+    k = len(levels)
+    out: List[StreamResult] = []
+    for qi in range(len(items)):
+        group = comps[qi * k:(qi + 1) * k]
+        votes = [_parse_completion(c) for c in group]
+        gen = int(sum(c.gen_len for c in group))
+        if policy is not None and qi in policy.decisions:
+            dec = dataclasses.replace(policy.decisions[qi], used_tokens=gen)
+        else:
+            dec = dataclasses.replace(
+                voting.decide_no_early_stop(votes, tau), used_tokens=gen)
+        out.append(StreamResult(dec, votes, gen))
+    return out, stats
 
 
 # ----------------------------------------------------------------------
@@ -156,6 +284,21 @@ def pregen_outcomes_sater(slm: SLM, items: Sequence[TaskItem], llm, key,
 CASCADE_MODES = ("SC", "RCV", "FCV")
 
 
+def mode_levels(mode: str, k: int) -> List[Optional[float]]:
+    """Confidence-level schedule for a cascade mode.
+
+    SC  — no confidence prompts (uniform weights); RCV — levels
+    0.1..1.0; FCV — all at 1.0.
+    """
+    if mode == "SC":
+        return [None] * k
+    if mode == "RCV":
+        return rcv_schedule(k)
+    if mode == "FCV":
+        return fcv_schedule(k)
+    raise ValueError(mode)
+
+
 def cascade_outcomes(slm: SLM, items: Sequence[TaskItem], llm, key,
                      mode: str = "RCV", k: int = 10,
                      thresholds: Sequence[float] = None,
@@ -168,17 +311,8 @@ def cascade_outcomes(slm: SLM, items: Sequence[TaskItem], llm, key,
           FCV — all at 1.0, early stop
     """
     thresholds = thresholds or THRESHOLDS
-    if mode == "SC":
-        levels: List[Optional[float]] = [None] * k
-        early = False if early_stop is None else early_stop
-    elif mode == "RCV":
-        levels = rcv_schedule(k)
-        early = True if early_stop is None else early_stop
-    elif mode == "FCV":
-        levels = fcv_schedule(k)
-        early = True if early_stop is None else early_stop
-    else:
-        raise ValueError(mode)
+    levels = mode_levels(mode, k)
+    early = (mode != "SC") if early_stop is None else early_stop
     votes = sample_k(slm, items, levels, key)
     llm_ans = [llm.answer(it) for it in items]
 
@@ -201,6 +335,36 @@ def cascade_outcomes(slm: SLM, items: Sequence[TaskItem], llm, key,
                 decision_tokens=dec.decision_tokens))
         out[tau] = rows
     return out
+
+
+def cascade_outcomes_streamed(slm: SLM, items: Sequence[TaskItem], llm, key,
+                              mode: str = "RCV", k: int = 10, tau: float = 0.6,
+                              early_stop: bool = True):
+    """Single-tau cascade where early stopping happens in *compute*:
+    decided questions' lanes are killed mid-flight by VoteEarlyStop and
+    the freed lanes serve the next pending request.
+
+    Unlike cascade_outcomes (which generates fully and simulates early
+    stop per tau), this runs one tau and returns
+    (rows, SchedStats) where SchedStats.generated_tokens counts tokens
+    the hardware actually decoded.
+    """
+    results, stats = sample_k_streamed(slm, items, mode_levels(mode, k),
+                                       key, tau, early_stop=early_stop)
+    llm_ans = [llm.answer(it) for it in items]
+    rows = []
+    for qi, item in enumerate(items):
+        dec = results[qi].decision
+        lc, lt = llm_ans[qi]
+        rows.append(RouteOutcome(
+            routed=not dec.accepted,
+            slm_correct=dec.accepted and dec.answer == item.answer,
+            slm_engaged=True,
+            slm_in_tokens=len(format_prompt(item)),
+            slm_out_tokens=dec.used_tokens,
+            llm_correct=lc, llm_out_tokens=lt,
+            decision_tokens=dec.decision_tokens))
+    return rows, stats
 
 
 # ----------------------------------------------------------------------

@@ -26,7 +26,15 @@ from __future__ import annotations
 import dataclasses
 import random
 import re
+import zlib
 from typing import Callable, Dict, List, Optional
+
+
+def stable_hash(text: str) -> int:
+    """Process-independent text hash.  Python's hash() is randomized per
+    process (PYTHONHASHSEED), so seeding data generation or oracles with
+    it makes benchmark items differ between runs; crc32 does not."""
+    return zlib.crc32(text.encode())
 
 REJECTION = "Sorry, I can't answer that."
 CONF_PROMPT = "Please respond with a confidence level of [{level:.1f}]:\n"
@@ -164,7 +172,7 @@ OUT_OF_DOMAIN = ("modchain-xl", "kbhop-xl")
 def make_benchmark(name: str, n: int, seed: int = 0) -> List[TaskItem]:
     gen_name, (lo, hi) = BENCHMARKS[name]
     gen = GENERATORS[gen_name]
-    rng = random.Random(seed * 7919 + hash(name) % 10000)
+    rng = random.Random(seed * 7919 + stable_hash(name) % 10000)
     items = []
     for i in range(n):
         d = lo + (i % (hi - lo + 1))

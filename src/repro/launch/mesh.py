@@ -11,19 +11,25 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _axis_type_kwargs(n) -> dict:
+    """Compat shim: jax.sharding.AxisType (explicit-sharding API) exists
+    only on newer JAX; older releases take no axis_types kwarg and treat
+    every axis as Auto, which is exactly what we want."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n}
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_host_mesh():
     """Single-device mesh for CPU smoke testing of the pjit code path."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return jax.make_mesh((1, 1), ("data", "model"), **_axis_type_kwargs(2))
 
 
 def batch_axes(mesh) -> tuple:

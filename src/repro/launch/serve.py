@@ -1,9 +1,14 @@
-"""Distributed serving launcher: pjit'd prefill + decode steps on the
-production mesh (or host mesh with --smoke), driving batched requests
-through the generation engine.
+"""Distributed serving launcher: the continuous-batching scheduler on
+the production mesh (or host mesh with --smoke).
+
+Requests stream through a fixed lane pool in rounds of --round-tokens;
+lanes freed by finished requests are refilled mid-flight, so a request
+backlog larger than the pool is served without idle lanes.  All jitted
+steps (bucketed prefill, round decode, lane insert) lower under the
+mesh context, keeping the pjit path exercised.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
-      --requests 4 --new-tokens 16
+      --requests 8 --lanes 4 --new-tokens 16 --round-tokens 8
 """
 
 from __future__ import annotations
@@ -12,21 +17,24 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import model as model_lib
+from repro.serving.batch import GenConfig
+from repro.serving.scheduler import Request, Scheduler
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--lanes", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--round-tokens", type=int, default=8)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -38,33 +46,35 @@ def main():
 
     key = jax.random.PRNGKey(0)
     params = model_lib.init_params(cfg, key)
-    b, s = args.requests, args.prompt_len
     rng = np.random.RandomState(0)
-    prompts = jnp.asarray(rng.randint(0, cfg.vocab_size, (b, s)), jnp.int32)
-    lengths = jnp.full((b,), s, jnp.int32)
+    # pre-tokenized random prompts with ragged lengths to exercise the
+    # prompt-length buckets (no tokenizer needed at this layer)
+    reqs = [Request(uid=i,
+                    tokens=rng.randint(0, cfg.vocab_size, (
+                        rng.randint(args.prompt_len // 2,
+                                    args.prompt_len + 1),)).tolist())
+            for i in range(args.requests)]
+    gcfg = GenConfig(max_new_tokens=args.new_tokens, temperature=0.0,
+                     eos_id=-1)     # greedy, run every request to budget
+    sched = Scheduler(params, cfg, tokenizer=None, gcfg=gcfg,
+                      n_lanes=args.lanes, round_tokens=args.round_tokens,
+                      max_prompt_len=args.prompt_len)
 
     with mesh:
         t0 = time.time()
-        last, cache = jax.jit(
-            lambda p, t, l: model_lib.prefill(
-                p, cfg, tokens=t, lengths=l,
-                max_len=s + args.new_tokens, last_only=True)
-        )(params, prompts, lengths)
-        print(f"prefill {b}x{s} in {time.time()-t0:.2f}s")
-
-        decode = jax.jit(lambda p, t, c: model_lib.decode_step(p, cfg, t, c))
-        tok = jnp.argmax(last, -1).astype(jnp.int32)
-        t0 = time.time()
-        out = [tok]
-        for _ in range(args.new_tokens - 1):
-            logits, cache = decode(params, tok, cache)
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-            out.append(tok)
-        jax.block_until_ready(tok)
+        comps, stats = sched.run(reqs, key)
         dt = time.time() - t0
-        print(f"decoded {args.new_tokens} tokens x {b} lanes in {dt:.2f}s "
-              f"({1000*dt/args.new_tokens:.1f} ms/tok)")
-        print("sample lane 0 tokens:", [int(t[0]) for t in out][:16])
+
+    tok_total = sum(c.gen_len for c in comps)
+    print(f"served {len(comps)} requests over {args.lanes} lanes in {dt:.2f}s")
+    print(f"  rounds={stats.rounds} prefills={stats.prefills} "
+          f"(prompts={stats.prefill_prompts}) "
+          f"generated={stats.generated_tokens} tokens")
+    print(f"  {tok_total} tokens total, "
+          f"{1000 * dt / max(tok_total, 1):.1f} ms/tok, "
+          f"lane occupancy {stats.lane_rounds / max(stats.rounds * args.lanes, 1):.0%}")
+    if comps:
+        print("sample request 0 tokens:", comps[0].tokens[:16].tolist())
 
 
 if __name__ == "__main__":

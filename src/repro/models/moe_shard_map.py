@@ -23,7 +23,11 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+
+try:                                    # newer JAX exports it at top level
+    from jax import shard_map
+except ImportError:                     # older releases: experimental module
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -130,6 +134,11 @@ def apply_moe_shard_map(cfg: ModelConfig, p, x):
         aux = {kk: jax.lax.pmean(v, all_axes) for kk, v in aux.items()}
         return out, aux
 
+    # replication checking was renamed check_rep -> check_vma across JAX
+    # releases; disable it under whichever name this JAX understands.
+    import inspect
+    check_kw = ("check_vma" if "check_vma" in
+                inspect.signature(shard_map).parameters else "check_rep")
     fn = shard_map(
         body, mesh=mesh,
         in_specs=(P(bax, None, None),            # x
@@ -139,5 +148,5 @@ def apply_moe_shard_map(cfg: ModelConfig, p, x):
                   P("model", None, None)),       # wo
         out_specs=(P(bax, None, None),
                    {"moe_lb": P(), "moe_z": P(), "moe_dropped": P()}),
-        check_vma=False)
+        **{check_kw: False})
     return fn(x, p["router"], p["wi_gate"], p["wi_up"], p["wo"])

@@ -1,0 +1,158 @@
+"""Shape-bucketed batching + round-chunked decode: the jitted primitives
+under both the one-shot engine (engine.py) and the continuous-batching
+scheduler (scheduler.py).
+
+Two ideas bound recompilation while keeping every compiled shape static:
+
+  * prompt-length *buckets* — prompts are right-padded to the smallest
+    bucket that fits, so prefill compiles once per (admit size, bucket)
+    pair instead of once per prompt length;
+  * *round-chunked* decode — instead of one ``lax.scan`` over the whole
+    token budget, decoding runs in rounds of R tokens with per-lane
+    liveness (``done``) carried across rounds.  Between rounds the host
+    can admit new requests into freed lanes, evict finished ones, and
+    ask a StopPolicy whether whole vote groups are already decided —
+    which is what turns SATER's early stopping from token *accounting*
+    into actually-skipped compute.
+
+PRNG contract: the token sampled at global decode step t uses
+``fold_in(key, t)``, so a lane's sample stream depends only on the
+master key and the global step at which it was admitted — not on how
+many rounds the scan was chunked into.  (It does depend on the lane
+pool width, because ``sample_tokens`` draws one noise tensor for the
+whole (B, V) batch; run with ``n_lanes == B`` for bit-equality with the
+single-scan engine.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.serving.sampler import sample_tokens
+
+
+@dataclasses.dataclass(frozen=True)
+class GenConfig:
+    max_new_tokens: int = 128
+    temperature: float = 0.7
+    top_p: float = 1.0
+    eos_id: int = 2
+    pad_id: int = 0
+
+
+# ----------------------------------------------------------------------
+# Buckets
+# ----------------------------------------------------------------------
+
+def make_buckets(max_len: int, min_bucket: int = 32) -> Tuple[int, ...]:
+    """Power-of-two ladder from min_bucket up, always ending at max_len."""
+    out: List[int] = []
+    b = min_bucket
+    while b < max_len:
+        out.append(b)
+        b *= 2
+    out.append(max_len)
+    return tuple(out)
+
+
+def pick_bucket(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n; the largest bucket if none fits (callers
+    truncate to it)."""
+    for b in buckets:
+        if n <= b:
+            return b
+    return max(buckets)
+
+
+def pad_token_rows(rows: Sequence[Sequence[int]], pad_id: int,
+                   width: int, n_rows: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Right-pad token id rows to (n_rows, width).  Rows beyond
+    len(rows) are dummies of length 1 (prefill indexes lengths-1)."""
+    toks = np.full((n_rows, width), pad_id, np.int32)
+    lens = np.ones((n_rows,), np.int32)
+    for i, ids in enumerate(rows):
+        ids = list(ids)[:width]
+        toks[i, : len(ids)] = ids
+        lens[i] = max(len(ids), 1)
+    return toks, lens
+
+
+# ----------------------------------------------------------------------
+# Jitted primitives
+# ----------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len"))
+def prefill_jit(params, cfg: ModelConfig, prompts, lengths, max_len: int):
+    """Bucket-shaped prefill: (last-token logits (B,V), cache sized for
+    max_len total positions)."""
+    return model_lib.prefill(params, cfg, tokens=prompts, lengths=lengths,
+                             max_len=max_len, last_only=True)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "gcfg", "rounds"))
+def decode_round(params, cfg: ModelConfig, gcfg: GenConfig, cache,
+                 cur_logits, done, key, step0, rounds: int):
+    """Decode `rounds` tokens for every lane; done lanes emit pad.
+
+    step0 is the global decode step of the first token in this round
+    (traced, so consecutive rounds share one executable); the step-t
+    sampling key is fold_in(key, step0 + t).
+
+    Returns (cache, next_logits, done, tokens (B, rounds)).
+    """
+    def step(carry, t):
+        cache, logits, done = carry
+        k_t = jax.random.fold_in(key, step0 + t)
+        tok = sample_tokens(k_t, logits, gcfg.temperature, gcfg.top_p)
+        tok = jnp.where(done, gcfg.pad_id, tok)
+        new_done = done | (tok == gcfg.eos_id)
+        next_logits, cache = model_lib.decode_step(params, cfg, tok, cache)
+        # keep the carry dtype stable: the scheduler's logits buffer may
+        # be wider than the model's compute dtype (sampling upcasts to
+        # f32 anyway, so this never changes the drawn token)
+        return (cache, next_logits.astype(logits.dtype), new_done), tok
+
+    (cache, logits, done), toks = jax.lax.scan(
+        step, (cache, cur_logits, done), jnp.arange(rounds, dtype=jnp.int32))
+    return cache, logits, done, jnp.swapaxes(toks, 0, 1)
+
+
+# cache entries stacked per layer carry the lane axis at position 1
+_LAYER_STACKED = ("k", "v", "k_scale", "v_scale", "conv", "ssm")
+
+
+@jax.jit
+def insert_lanes(cache, cur_logits, new_cache, new_logits, lanes):
+    """Scatter a freshly prefilled sub-batch into the global lane pool.
+
+    lanes: (Nb,) int32 target lane per new row; rows padded up to the
+    admit bucket carry an out-of-range sentinel (>= n_lanes) and are
+    dropped by the scatter.
+    """
+    out = {}
+    for name, val in cache.items():
+        new = new_cache[name]
+        if name in _LAYER_STACKED:
+            out[name] = val.at[:, lanes].set(new.astype(val.dtype),
+                                             mode="drop")
+        else:
+            out[name] = val.at[lanes].set(new.astype(val.dtype), mode="drop")
+    cur_logits = cur_logits.at[lanes].set(
+        new_logits.astype(cur_logits.dtype), mode="drop")
+    return out, cur_logits
+
+
+def first_eos_lengths(toks: np.ndarray, eos_id: int) -> np.ndarray:
+    """Per-row token count up to and including the first EOS (row width
+    if none) — vectorized, this runs on every harvested batch."""
+    eos = toks == eos_id
+    return np.where(eos.any(axis=1), eos.argmax(axis=1) + 1,
+                    toks.shape[1]).astype(np.int32)

@@ -1,61 +1,27 @@
-"""Batched generation engine: prefill + fixed-shape decode loop with
-per-lane EOS masking (the TPU-native analogue of vLLM's continuous
-batching at the granularity this paper needs — whole-request batches
-sampled K ways for cascade voting).
+"""One-shot batched generation: prefill + round-chunked decode over the
+full token budget in a single round.
 
-The decode loop is a single jitted ``lax.scan`` over max_new_tokens;
-finished lanes keep stepping but emit pad and stop extending their
-KV validity, so the compiled shape is static.  Host-side, the cascade
-driver (core/routing.py) implements SATER's *early stopping*: it decodes
-in rounds and drops the whole batch as soon as the vote is decided —
-that is where the paper's >80% AROL cut comes from.
+This is now a thin wrapper over the primitives in serving/batch.py —
+the same jitted prefill and ``decode_round`` the continuous-batching
+scheduler (serving/scheduler.py) uses, so a scheduler run with the same
+lane pool, padding and master key reproduces this engine bit-for-bit
+(tests/test_scheduler.py proves it).  Host-side callers that need lane
+admission/eviction and vote-aware early stopping mid-flight should go
+through the scheduler instead.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models import model as model_lib
-from repro.serving.sampler import sample_tokens
+from repro.serving.batch import (GenConfig, decode_round, first_eos_lengths,
+                                 prefill_jit)
 
-
-@dataclasses.dataclass(frozen=True)
-class GenConfig:
-    max_new_tokens: int = 128
-    temperature: float = 0.7
-    top_p: float = 1.0
-    eos_id: int = 2
-    pad_id: int = 0
-
-
-@functools.partial(jax.jit, static_argnames=("cfg", "gcfg", "prompt_len"))
-def _generate_jit(params, cfg: ModelConfig, prompts, lengths, key,
-                  gcfg: GenConfig, prompt_len: int):
-    b = prompts.shape[0]
-    max_len = prompt_len + gcfg.max_new_tokens
-    last, cache = model_lib.prefill(params, cfg, tokens=prompts,
-                                    lengths=lengths, max_len=max_len,
-                                    last_only=True)
-
-    def step(carry, key_t):
-        cache, cur_logits, done = carry
-        tok = sample_tokens(key_t, cur_logits, gcfg.temperature, gcfg.top_p)
-        tok = jnp.where(done, gcfg.pad_id, tok)
-        new_done = done | (tok == gcfg.eos_id)
-        next_logits, cache = model_lib.decode_step(params, cfg, tok, cache)
-        return (cache, next_logits, new_done), tok
-
-    keys = jax.random.split(key, gcfg.max_new_tokens)
-    done0 = jnp.zeros((b,), bool)
-    (_, _, done), toks = jax.lax.scan(step, (cache, last, done0), keys)
-    return jnp.swapaxes(toks, 0, 1), done                      # (B, T_new)
+__all__ = ["GenConfig", "generate", "decode_texts"]
 
 
 def generate(params, cfg: ModelConfig, prompts: np.ndarray,
@@ -64,16 +30,17 @@ def generate(params, cfg: ModelConfig, prompts: np.ndarray,
 
     Returns (generated (B, max_new_tokens) int32 incl. EOS, gen_len (B,)).
     """
-    toks, _ = _generate_jit(params, cfg, jnp.asarray(prompts),
-                            jnp.asarray(lengths), key, gcfg,
-                            int(prompts.shape[1]))
+    prompts = jnp.asarray(prompts)
+    lengths = jnp.asarray(lengths)
+    b, s = prompts.shape
+    last, cache = prefill_jit(params, cfg, prompts, lengths,
+                              int(s) + gcfg.max_new_tokens)
+    done0 = jnp.zeros((b,), bool)
+    _, _, _, toks = decode_round(params, cfg, gcfg, cache, last, done0,
+                                 key, jnp.int32(0), gcfg.max_new_tokens)
     toks = np.asarray(toks)
     # token count up to and including EOS (the paper's latency proxy)
-    gen_len = np.zeros((toks.shape[0],), np.int32)
-    for i, row in enumerate(toks):
-        eos = np.nonzero(row == gcfg.eos_id)[0]
-        gen_len[i] = int(eos[0]) + 1 if len(eos) else toks.shape[1]
-    return toks, gen_len
+    return toks, first_eos_lengths(toks, gcfg.eos_id)
 
 
 def decode_texts(tokenizer, toks: np.ndarray):

@@ -1,0 +1,246 @@
+"""Round-based continuous-batching scheduler.
+
+A fixed pool of ``n_lanes`` decode lanes shares one device cache pytree
+(leading lane axis) and advances in lockstep rounds of ``round_tokens``
+tokens (``batch.decode_round``).  Between rounds the host:
+
+  1. *admits* pending requests into free lanes — prompts are padded to
+     a length bucket and the admission wave to a power-of-two size, so
+     prefill compiles O(#buckets x #wave sizes) times total, then the
+     prefilled rows are scattered into the pool (``batch.insert_lanes``);
+  2. *harvests* the round's tokens per live lane, truncating at EOS or
+     the per-request budget and finalizing finished lanes (which frees
+     them for the next admission — continuous batching);
+  3. consults the ``StopPolicy``: every newly finished request is shown
+     to the policy in (gen_len, uid) order, and any vote *group* the
+     policy declares decided is killed mid-flight — its still-running
+     lanes are evicted with whatever they generated so far and its
+     never-admitted requests are dropped.  This is SATER's early stop
+     as real freed compute, not token accounting.
+
+Request lifecycle:  pending -> admitted (prefill + lane insert)
+  -> decoding (one round at a time) -> finished (EOS | budget)
+                                    -> cancelled (group decided)
+
+Determinism: step-t sampling uses fold_in(master_key, t) with t the
+*global* round-step counter, shared by all lanes.  A request's tokens
+therefore depend on its admission step and the lane-pool width, exactly
+like batch composition affects real serving engines.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.serving.batch import (GenConfig, decode_round, insert_lanes,
+                                 make_buckets, pad_token_rows, pick_bucket,
+                                 prefill_jit)
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``group`` ties the K vote lanes of a
+    question together for the StopPolicy; ``meta`` rides along to the
+    completion (e.g. the confidence level the prompt asked for)."""
+    uid: int
+    prompt: Optional[str] = None
+    tokens: Optional[Sequence[int]] = None   # pre-tokenized alternative
+    group: Optional[int] = None
+    max_new_tokens: Optional[int] = None     # default: gcfg.max_new_tokens
+    meta: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    group: Optional[int]
+    tokens: np.ndarray           # generated ids up to & incl. EOS
+    gen_len: int                 # == len(tokens)
+    text: str
+    cancelled: bool              # killed by StopPolicy before finishing
+    meta: Optional[dict] = None
+
+
+class StopPolicy:
+    """Hook consulted after every finished request.
+
+    ``observe`` returns the group ids that are now *decided*: the
+    scheduler evicts their running lanes and drops their pending
+    requests.  The base policy never stops anything.
+    """
+
+    def observe(self, completion: Completion) -> Iterable[int]:
+        return ()
+
+
+@dataclasses.dataclass
+class SchedStats:
+    rounds: int = 0              # decode_round invocations
+    lane_rounds: int = 0         # sum over rounds of live lanes
+    generated_tokens: int = 0    # tokens actually produced by live lanes
+    prefills: int = 0            # prefill executions (admission waves)
+    prefill_prompts: int = 0     # real prompts prefetched across waves
+    cancelled: int = 0           # requests killed by the StopPolicy
+    wall_s: float = 0.0
+
+
+@dataclasses.dataclass
+class _Lane:
+    req: Request
+    budget: int
+    parts: List[np.ndarray] = dataclasses.field(default_factory=list)
+    generated: int = 0
+
+
+class Scheduler:
+    def __init__(self, params, cfg: ModelConfig, tokenizer, gcfg: GenConfig,
+                 n_lanes: int = 32, round_tokens: int = 16,
+                 max_prompt_len: int = 256,
+                 buckets: Optional[Sequence[int]] = None,
+                 admit_buckets: Optional[Sequence[int]] = None):
+        self.params, self.cfg, self.tokenizer, self.gcfg = \
+            params, cfg, tokenizer, gcfg
+        self.n_lanes = n_lanes
+        self.round_tokens = round_tokens
+        self.buckets = tuple(sorted(buckets or make_buckets(max_prompt_len)))
+        self.admit_buckets = tuple(sorted(admit_buckets or
+                                          make_buckets(n_lanes, 1)))
+        # cache sized so any prompt bucket + any budget fits one lane
+        self.s_max = max(self.buckets) + gcfg.max_new_tokens
+
+    # ------------------------------------------------------------------
+    def _encode(self, req: Request) -> List[int]:
+        if req.tokens is not None:
+            return list(req.tokens)[: max(self.buckets)]
+        return self.tokenizer.encode(req.prompt, bos=True)[: max(self.buckets)]
+
+    def _budget(self, req: Request) -> int:
+        b = req.max_new_tokens or self.gcfg.max_new_tokens
+        return min(b, self.gcfg.max_new_tokens)
+
+    # ------------------------------------------------------------------
+    def run(self, requests: Sequence[Request], key,
+            stop_policy: Optional[StopPolicy] = None
+            ) -> Tuple[List[Completion], SchedStats]:
+        """Drive every request to completion; returns completions in
+        request order plus scheduling statistics."""
+        t0 = time.time()
+        if isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        stats = SchedStats()
+        pending = collections.deque(requests)
+        lanes: List[Optional[_Lane]] = [None] * self.n_lanes
+        host_done = np.ones((self.n_lanes,), bool)
+        cache = model_lib.init_decode_state(self.cfg, self.n_lanes, self.s_max)
+        cur_logits = jnp.zeros((self.n_lanes, self.cfg.vocab_size),
+                               jnp.float32)
+        completions: Dict[int, Completion] = {}
+        decided: set = set()
+        global_step = 0
+
+        def finalize(i: int, cancelled: bool):
+            lane = lanes[i]
+            toks = (np.concatenate(lane.parts) if lane.parts
+                    else np.zeros((0,), np.int32))
+            text = self.tokenizer.decode(toks) if self.tokenizer else ""
+            comp = Completion(lane.req.uid, lane.req.group, toks, len(toks),
+                              text, cancelled, lane.req.meta)
+            completions[lane.req.uid] = comp
+            lanes[i] = None
+            host_done[i] = True
+            if cancelled:
+                stats.cancelled += 1
+            return comp
+
+        while pending or any(l is not None for l in lanes):
+            # ---- admission: fill free lanes from the pending queue ----
+            free = [i for i in range(self.n_lanes) if lanes[i] is None]
+            wave: List[Request] = []
+            while pending and len(wave) < len(free):
+                req = pending.popleft()
+                if req.group in decided:
+                    completions[req.uid] = Completion(
+                        req.uid, req.group, np.zeros((0,), np.int32), 0, "",
+                        True, req.meta)
+                    stats.cancelled += 1
+                    continue
+                wave.append(req)
+            if wave:
+                by_bucket: Dict[int, List[Request]] = collections.defaultdict(list)
+                enc = {r.uid: self._encode(r) for r in wave}
+                for r in wave:
+                    by_bucket[pick_bucket(len(enc[r.uid]), self.buckets)
+                              ].append(r)
+                for bucket in sorted(by_bucket):
+                    grp = by_bucket[bucket]
+                    admit_n = pick_bucket(len(grp), self.admit_buckets)
+                    toks, lens = pad_token_rows([enc[r.uid] for r in grp],
+                                                self.gcfg.pad_id, bucket,
+                                                admit_n)
+                    lane_ids = np.full((admit_n,), self.n_lanes, np.int32)
+                    for j, r in enumerate(grp):
+                        i = free.pop(0)
+                        lane_ids[j] = i
+                        lanes[i] = _Lane(r, self._budget(r))
+                        host_done[i] = False
+                    last, new_cache = prefill_jit(
+                        self.params, self.cfg, jnp.asarray(toks),
+                        jnp.asarray(lens), self.s_max)
+                    cache, cur_logits = insert_lanes(
+                        cache, cur_logits, new_cache, last,
+                        jnp.asarray(lane_ids))
+                    stats.prefills += 1
+                    stats.prefill_prompts += len(grp)
+
+            live = [i for i in range(self.n_lanes) if lanes[i] is not None]
+            if not live:
+                continue           # only decided-group requests were queued
+
+            # ---- one decode round over the whole pool ----
+            r = self.round_tokens
+            cache, cur_logits, _, toks = decode_round(
+                self.params, self.cfg, self.gcfg, cache, cur_logits,
+                jnp.asarray(host_done), key, jnp.int32(global_step), r)
+            global_step += r
+            stats.rounds += 1
+            stats.lane_rounds += len(live)
+            toks_np = np.asarray(toks)
+
+            # ---- harvest: EOS / budget per live lane ----
+            newly: List[int] = []
+            for i in live:
+                lane = lanes[i]
+                take = toks_np[i, : min(r, lane.budget - lane.generated)]
+                eos = np.nonzero(take == self.gcfg.eos_id)[0]
+                finished = False
+                if len(eos):
+                    take = take[: int(eos[0]) + 1]
+                    finished = True
+                lane.parts.append(take)
+                lane.generated += len(take)
+                stats.generated_tokens += len(take)
+                if finished or lane.generated >= lane.budget:
+                    newly.append(i)
+
+            # ---- finalize + vote-aware early stop ----
+            newly.sort(key=lambda i: (lanes[i].generated, lanes[i].req.uid))
+            for i in newly:
+                comp = finalize(i, cancelled=False)
+                if stop_policy is not None:
+                    decided.update(stop_policy.observe(comp))
+            if decided:
+                for i in range(self.n_lanes):
+                    if lanes[i] is not None and lanes[i].req.group in decided:
+                        finalize(i, cancelled=True)
+
+        stats.wall_s = time.time() - t0
+        return [completions[r.uid] for r in requests], stats

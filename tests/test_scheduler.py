@@ -1,0 +1,196 @@
+"""Continuous-batching scheduler: round-chunked decode equivalence with
+the single-scan engine, lane admission/eviction over a backlog, bucket
+selection, and vote-aware early stopping as real (not accounted)
+token savings."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import routing as routing_lib
+from repro.core import voting
+from repro.core.confidence import Vote
+from repro.data.pipeline import encode_prompts
+from repro.data.tokenizer import default_tokenizer
+from repro.serving.batch import GenConfig, make_buckets, pick_bucket
+from repro.serving.engine import generate
+from repro.serving.scheduler import Request, Scheduler, StopPolicy
+
+MAXP = 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.models import model as M
+    tok = default_tokenizer()
+    cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                      d_ff=128, vocab_size=tok.vocab_size, remat=False,
+                      source="test")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return params, cfg, tok
+
+
+# ----------------------------------------------------------------------
+# Bucketing
+# ----------------------------------------------------------------------
+
+def test_make_buckets_ladder():
+    assert make_buckets(160) == (32, 64, 128, 160)
+    assert make_buckets(64) == (32, 64)
+    assert make_buckets(8, 1) == (1, 2, 4, 8)
+
+
+def test_pick_bucket_expected():
+    buckets = make_buckets(160)
+    assert pick_bucket(1, buckets) == 32
+    assert pick_bucket(32, buckets) == 32
+    assert pick_bucket(33, buckets) == 64
+    assert pick_bucket(100, buckets) == 128
+    assert pick_bucket(150, buckets) == 160
+    # longer than every bucket: callers truncate to the largest
+    assert pick_bucket(999, buckets) == 160
+
+
+# ----------------------------------------------------------------------
+# Equivalence: round-chunked decode == one-shot engine
+# ----------------------------------------------------------------------
+
+def test_round_decode_bitmatches_engine(setup):
+    """With the same lane pool, padding and master key, chunking the
+    decode into R-token rounds must not change a single sampled token."""
+    params, cfg, tok = setup
+    prompts = ["Q: Compute 1 + 1.\nA: ", "Q: hi\nA: ",
+               "Q: what is 9 * 9?\nA: ", "Q: x\nA: "]
+    gcfg = GenConfig(max_new_tokens=24, temperature=0.7)
+    toks, lens = encode_prompts(prompts, tok, MAXP)
+    key = jax.random.PRNGKey(7)
+    eng_toks, eng_lens = generate(params, cfg, toks, lens, key, gcfg)
+
+    sched = Scheduler(params, cfg, tok, gcfg, n_lanes=4, round_tokens=6,
+                      max_prompt_len=MAXP, buckets=(MAXP,), admit_buckets=(4,))
+    comps, stats = sched.run([Request(uid=i, prompt=p)
+                              for i, p in enumerate(prompts)], key)
+    for i, c in enumerate(comps):
+        assert c.gen_len == eng_lens[i]
+        assert np.array_equal(c.tokens, eng_toks[i][: eng_lens[i]])
+    assert stats.rounds == 4            # ceil(24 / 6)
+    assert stats.cancelled == 0
+
+
+# ----------------------------------------------------------------------
+# Continuous batching over a backlog
+# ----------------------------------------------------------------------
+
+def _no_eos(max_new):
+    # eos_id outside the vocab: every lane runs exactly to budget
+    return GenConfig(max_new_tokens=max_new, temperature=0.7, eos_id=-1)
+
+
+def test_backlog_streams_through_lane_pool(setup):
+    params, cfg, tok = setup
+    sched = Scheduler(params, cfg, tok, _no_eos(8), n_lanes=4,
+                      round_tokens=4, max_prompt_len=MAXP)
+    reqs = [Request(uid=i, prompt=f"Q: item {i}\nA: ") for i in range(10)]
+    comps, stats = sched.run(reqs, jax.random.PRNGKey(1))
+    assert [c.uid for c in comps] == list(range(10))
+    assert all(c.gen_len == 8 and not c.cancelled for c in comps)
+    # 10 requests x 2 rounds each over 4 lanes: at least 3 admission waves
+    assert stats.prefill_prompts == 10
+    assert stats.prefills >= 3
+    assert stats.generated_tokens == 80
+
+
+# ----------------------------------------------------------------------
+# Early stop: killed lanes really decode fewer tokens
+# ----------------------------------------------------------------------
+
+class _FirstFinishKills(StopPolicy):
+    def observe(self, comp):
+        return (comp.group,)
+
+
+def test_early_stopped_lanes_generate_strictly_fewer(setup):
+    params, cfg, tok = setup
+    gcfg = _no_eos(32)
+    sched = Scheduler(params, cfg, tok, gcfg, n_lanes=4, round_tokens=4,
+                      max_prompt_len=MAXP)
+    # lane 0 of each group exhausts its budget after round 1; the policy
+    # then kills the group's other lanes mid-flight
+    reqs = [Request(uid=i, prompt=f"Q: item {i}\nA: ", group=i // 5,
+                    max_new_tokens=(4 if i % 5 == 0 else 32))
+            for i in range(10)]
+    es, es_stats = sched.run(reqs, jax.random.PRNGKey(1),
+                             stop_policy=_FirstFinishKills())
+    full, full_stats = sched.run(reqs, jax.random.PRNGKey(1))
+
+    assert not es[0].cancelled and es[0].gen_len == 4
+    for c_es, c_full in zip(es[1:5], full[1:5]):
+        assert c_es.cancelled
+        assert c_es.gen_len < c_full.gen_len        # strictly fewer
+    assert es_stats.generated_tokens < full_stats.generated_tokens
+    assert es_stats.cancelled == 8
+    # the never-admitted request of each killed group costs zero tokens
+    assert es[4].gen_len == 0 and es[4].cancelled
+
+
+# ----------------------------------------------------------------------
+# VoteEarlyStop == decide_with_early_stop (decision equivalence)
+# ----------------------------------------------------------------------
+
+def _fake_completion(group, vote: Vote, uid=0):
+    from repro.serving.scheduler import Completion
+    return Completion(uid=uid, group=group, tokens=np.zeros((0,), np.int32),
+                      gen_len=vote.gen_tokens, text="", cancelled=False,
+                      meta={"vote": vote})
+
+
+@pytest.mark.parametrize("tau", [0.1, 0.5, 0.6, 0.9, 1.0])
+def test_vote_early_stop_matches_offline_simulation(tau):
+    """Feeding completions in gen-length order must reproduce the
+    accept/route decision of voting.decide_with_early_stop."""
+    rng = np.random.RandomState(int(tau * 10))
+    for trial in range(30):
+        k = rng.randint(1, 9)
+        votes = [Vote(answer=rng.choice(["a", "b", None]),
+                      confidence=float(rng.choice([0.3, 0.7, 1.0])),
+                      gen_tokens=int(rng.randint(1, 60)))
+                 for _ in range(k)]
+        policy = routing_lib.VoteEarlyStop(
+            tau, {0: [v.confidence for v in votes]},
+            parse=lambda c: c.meta["vote"])
+        order = sorted(range(k), key=lambda i: votes[i].gen_tokens)
+        for i in order:
+            if policy.observe(_fake_completion(0, votes[i], uid=i)):
+                break              # group killed: later lanes never finish
+        ref = voting.decide_with_early_stop(votes, tau)
+        assert 0 in policy.decisions
+        dec = policy.decisions[0]
+        assert dec.accepted == ref.accepted
+        assert dec.answer == ref.answer
+        assert dec.decision_tokens <= ref.decision_tokens + 0
+
+
+# ----------------------------------------------------------------------
+# Streamed sampling through routing
+# ----------------------------------------------------------------------
+
+def test_sample_k_streamed_saves_tokens_vs_full(setup):
+    params, cfg, tok = setup
+    slm = routing_lib.SLM(params, cfg, tok,
+                          GenConfig(max_new_tokens=24, temperature=0.7),
+                          max_prompt_len=MAXP, lane_budget=16,
+                          round_tokens=4)
+    import repro.data.tasks as tasks_lib
+    items = tasks_lib.make_benchmark("arith", 4, seed=1)
+    levels = [1.0] * 4
+    key = jax.random.PRNGKey(9)
+    es, es_stats = routing_lib.sample_k_streamed(slm, items, levels, key,
+                                                 tau=1.0, early_stop=True)
+    full, full_stats = routing_lib.sample_k_streamed(slm, items, levels, key,
+                                                     tau=1.0, early_stop=False)
+    assert es_stats.generated_tokens <= full_stats.generated_tokens
+    for r in es:
+        assert r.generated_tokens <= sum(v.gen_tokens for v in r.votes) + 1
+        assert r.decision.used_tokens == r.generated_tokens
