@@ -79,9 +79,18 @@ def _generated_row(slm, items, llm, tau: float, k: int, mode: str) -> dict:
             "generated_tokens": int(stats.generated_tokens),
             "wall_s": stats.wall_s, "rounds": stats.rounds,
             "cancelled_lanes": stats.cancelled,
+            # K/V footprint: peak bytes actually held vs the dense cache
+            # at the same lane count (equal when running dense)
+            "peak_cache_bytes": int(stats.peak_cache_bytes),
+            "dense_cache_bytes": int(stats.dense_cache_bytes),
+            "pool_blocks": int(stats.pool_blocks),
+            "peak_blocks_in_use": int(stats.peak_blocks_in_use),
+            "admission_blocked": int(stats.admission_blocked),
         }
     full = max(row["no_early_stop"]["generated_tokens"], 1)
     row["generated_cut"] = 1.0 - row["early_stop"]["generated_tokens"] / full
+    dense = max(row["early_stop"]["dense_cache_bytes"], 1)
+    row["cache_cut"] = 1.0 - row["early_stop"]["peak_cache_bytes"] / dense
     return row
 
 
@@ -98,39 +107,52 @@ def run_generated(scale, tau: float = 0.6, k=None, mode: str = "FCV",
 
 
 def run_generated_smoke(n_items: int = 8, k: int = 8, tau: float = 1.0,
-                        mode: str = "FCV"):
+                        mode: str = "FCV", paged: bool = False,
+                        block_size: int = 32):
     """No-training smoke: an untrained tiny SLM still shows the
     mechanism.  At tau=1.0 (the paper's strict column) the first
     rejected vote already forces routing, so whole groups are killed
     after their first lane completes and the remaining lanes really
-    decode fewer tokens."""
+    decode fewer tokens.  With ``paged=True`` the same run uses the
+    block-paged KV cache, and the cache columns show the peak block
+    footprint against the dense cache at the same lane count."""
     from repro.core.experiment import TINY, model_config
     from repro.models import model as model_lib
 
     params = model_lib.init_params(model_config(TINY), jax.random.PRNGKey(0))
     slm = make_slm(params, TINY)
     slm.round_tokens = 8       # finer rounds -> earlier kills in the smoke
+    slm.paged = paged
+    slm.block_size = block_size
     items = eval_items(TINY, "arith")[:n_items]
     llm = common.oracle_llm()
     return {"arith": _generated_row(slm, items, llm, tau, k, mode)}
 
 
 def format_generated(table, tau: float) -> str:
+    """One line per benchmark; ``cache(es)`` is the peak K/V footprint
+    of the early-stop run and ``dense-eq`` the dense cache at the same
+    lane count (identical unless the run was paged)."""
     lines = [f"compute early stop @ tau={tau}",
              f"{'benchmark':12s} {'gen(es)':>9s} {'gen(full)':>10s} "
-             f"{'cut':>6s} {'wall(es)':>9s} {'wall(full)':>11s} {'killed':>7s}"]
+             f"{'cut':>6s} {'wall(es)':>9s} {'wall(full)':>11s} {'killed':>7s}"
+             f" {'cache(es)':>10s} {'dense-eq':>10s} {'hbm-cut':>8s}"]
     for b, row in table.items():
         es, full = row["early_stop"], row["no_early_stop"]
         lines.append(
             f"{b:12s} {es['generated_tokens']:9d} "
             f"{full['generated_tokens']:10d} {row['generated_cut']:6.0%} "
             f"{es['wall_s']:8.2f}s {full['wall_s']:10.2f}s "
-            f"{es['cancelled_lanes']:7d}")
+            f"{es['cancelled_lanes']:7d} "
+            f"{es['peak_cache_bytes'] / 2**20:9.2f}M "
+            f"{es['dense_cache_bytes'] / 2**20:9.2f}M "
+            f"{row['cache_cut']:8.0%}")
     return "\n".join(lines)
 
 
 if __name__ == "__main__":
     import argparse
+    import json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -139,12 +161,26 @@ if __name__ == "__main__":
     ap.add_argument("--tau", type=float, default=None)
     ap.add_argument("--k", type=int, default=None,
                     help="default: 8 (smoke) / scale.k_samples")
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the block-paged KV cache "
+                         "(smoke only; reports peak blocks vs dense)")
+    ap.add_argument("--block-size", type=int, default=32,
+                    help="cache slots per block with --paged")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also dump the result table as JSON (CI artifact)")
     args = ap.parse_args()
     if args.smoke:
         args.tau = 1.0 if args.tau is None else args.tau
-        t = run_generated_smoke(tau=args.tau, k=args.k or 8)
+        t = run_generated_smoke(tau=args.tau, k=args.k or 8,
+                                paged=args.paged, block_size=args.block_size)
     else:
         from repro.core.experiment import SCALES
+        if args.paged:
+            ap.error("--paged is only wired for --smoke runs")
         args.tau = 0.6 if args.tau is None else args.tau
         t = run_generated(SCALES[args.scale], tau=args.tau, k=args.k)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"tau": args.tau, "paged": args.paged,
+                       "smoke": args.smoke, "table": t}, f, indent=2)
     print(format_generated(t, args.tau))

@@ -1,0 +1,77 @@
+#!/usr/bin/env python
+"""CI docs check: fail on broken relative links in README.md and
+docs/*.md.
+
+Checks every markdown inline link `[text](target)` whose target is
+neither absolute (http/https/mailto) nor a pure in-page anchor:
+the referenced file must exist relative to the linking file (anchors
+are stripped; directory targets must exist as directories).
+
+  python scripts/check_docs_links.py            # repo root inferred
+  python scripts/check_docs_links.py --root .   # explicit
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import sys
+
+# inline links, tolerating one level of nested brackets in the text;
+# reference-style definitions are rare here and intentionally ignored
+LINK_RE = re.compile(r"\[(?:[^\[\]]|\[[^\]]*\])*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check_file(path: str) -> list:
+    broken = []
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:        # code samples are not links
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), rel))
+                if not os.path.exists(resolved):
+                    broken.append((path, lineno, target))
+    return broken
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--root", default=None,
+                    help="repo root (default: parent of this script)")
+    args = ap.parse_args()
+    root = args.root or os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__)))
+    files = [os.path.join(root, "README.md")] + \
+        sorted(glob.glob(os.path.join(root, "docs", "*.md")))
+    broken = []
+    checked = 0
+    for path in files:
+        if not os.path.exists(path):
+            print(f"missing expected doc: {path}", file=sys.stderr)
+            broken.append((path, 0, "<file itself>"))
+            continue
+        checked += 1
+        broken.extend(check_file(path))
+    for path, lineno, target in broken:
+        print(f"{os.path.relpath(path, root)}:{lineno}: broken link -> "
+              f"{target}", file=sys.stderr)
+    print(f"checked {checked} files, {len(broken)} broken links")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

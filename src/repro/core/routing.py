@@ -39,6 +39,8 @@ class SLM:
     max_prompt_len: int = 320
     lane_budget: int = 96        # max concurrent decode lanes
     round_tokens: int = 16       # decode round length (early-stop grain)
+    paged: bool = False          # block-paged KV cache (serving/block_pool)
+    block_size: int = 32         # cache slots per block when paged
 
 
 @dataclasses.dataclass
@@ -83,7 +85,8 @@ def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
                           make_buckets(slm.lane_budget, 1))
     return Scheduler(slm.params, slm.cfg, slm.tokenizer, slm.gcfg,
                      n_lanes=n_lanes, round_tokens=slm.round_tokens,
-                     max_prompt_len=slm.max_prompt_len)
+                     max_prompt_len=slm.max_prompt_len, paged=slm.paged,
+                     block_size=slm.block_size)
 
 
 def batch_generate(slm: SLM, prompts: Sequence[str], key):

@@ -1,0 +1,124 @@
+"""Paged single-token GQA decode attention — Pallas TPU.
+
+The paged serving path (serving/scheduler.py ``paged=True``) keeps K/V
+in a pool of ``(block_size x D)`` pages shared by all lanes; each lane
+owns an ordered *block table* of page ids.  This kernel is the paged
+sibling of kernels/decode_attention: same flash-decode online softmax
+over a sequential cache-block grid axis, but the K/V tile for grid
+step ``ki`` is fetched *through the block table* — the BlockSpec index
+map reads ``block_table[b, ki]`` from a scalar-prefetch operand, so
+the gather happens in the DMA engine and the discontiguous pool is
+never materialized as a per-lane contiguous cache.
+
+Grid: (batch, q_heads, max_blocks); the last axis is sequential so the
+m/l/acc flash state carries in VMEM scratch.  Blocks at or past a
+lane's length are skipped (their DMA still runs — same trade as the
+dense decode kernel fetching past-length tiles).  The sliding window
+is a traced scalar operand (the model's per-layer window scan value),
+masking by absolute position ``ki * block_size + offset``.
+
+Page 0 is the allocator's trash block; block-table entries past a
+lane's allocation point at it and are always masked by length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+MIN_LANE = 128
+
+
+def _paged_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, block_size: int):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    window = win_ref[0]
+    k_start = ki * block_size
+    in_range = k_start < length
+    in_window = jnp.where(window > 0,
+                          k_start + block_size - 1 >= length - window, True)
+
+    @pl.when(in_range & in_window)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)                    # (bs, d)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, bs)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
+        mask = kpos < length
+        mask = mask & jnp.where(window > 0, kpos >= length - window, True)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                    # (1, 128)
+        m_cur = jnp.max(s, axis=-1)[:, None]
+        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+        p = jnp.exp(s - m_new[:, :1])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)[:, None]
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, :1] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention_pallas(q, k_pages, v_pages, block_tables, lengths,
+                                  window, *, interpret: bool = False):
+    """q: (B, H, 1, D); k_pages, v_pages: (P, KV, bs, D);
+    block_tables: (B, M) int32 page ids; lengths: (B,); window: (1,)
+    int32 (0 = full attention).  Returns (B, H, 1, D).
+
+    Valid slots for lane b are logical positions [0, lengths[b]), laid
+    out block-table order: position p lives in page
+    ``block_tables[b, p // bs]`` at offset ``p % bs``.  The new token's
+    K/V must already be written to its page.
+    """
+    b, h, _, d = q.shape
+    kv, bs = k_pages.shape[1], k_pages.shape[2]
+    m = block_tables.shape[1]
+    group = h // kv
+    grid = (b, h, m)
+    kernel = functools.partial(_paged_kernel, scale=d ** -0.5, block_size=bs)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,     # block_tables, lengths, window
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, ki, bt, ln, w:
+                         (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bb, hh, ki, bt, ln, w:
+                         (bt[bb, ki], hh // group, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d), lambda bb, hh, ki, bt, ln, w:
+                         (bt[bb, ki], hh // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bb, hh, ki, bt, ln, w:
+                               (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, MIN_LANE), jnp.float32),
+            pltpu.VMEM((1, MIN_LANE), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, window, q, k_pages, v_pages)

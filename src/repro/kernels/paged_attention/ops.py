@@ -1,0 +1,42 @@
+"""Jitted public wrapper for paged decode attention.
+
+Layout contract matches the model layer: q ``(B, 1, H, D)`` and pages
+``(P, bs, KV, D)`` (slot-major, like the dense cache's ``(B, S, KV,
+D)`` with (page, offset) replacing (lane, position)); the kernel wants
+heads outermost, so the wrapper transposes.  ``window`` may be a
+traced scalar (the model passes the per-layer window from inside the
+layer scan) — it is shipped to the kernel as a scalar-prefetch
+operand, not baked into the compiled executable.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_decode_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
+                           window=0, interpret: bool = None):
+    """q: (B, 1, H, D); k_pages, v_pages: (P, bs, KV, D);
+    block_tables: (B, M) int32; lengths: (B,); window: int or scalar
+    (0 = full).  Returns (B, 1, H, D).
+
+    Off-TPU this runs the kernel in Pallas interpret mode (slow, exact
+    semantics) so the whole paged path stays testable on CPU hosts.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt = jnp.swapaxes(q, 1, 2)                       # (B, H, 1, D)
+    kt = jnp.transpose(k_pages, (0, 2, 1, 3))        # (P, KV, bs, D)
+    vt = jnp.transpose(v_pages, (0, 2, 1, 3))
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    out = paged_decode_attention_pallas(qt, kt, vt, bt,
+                                        lengths.astype(jnp.int32), win,
+                                        interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

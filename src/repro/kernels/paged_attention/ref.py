@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for paged decode attention: gather pages into the
+contiguous per-lane layout, then plain masked decode attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths,
+                               window: int = 0):
+    """q: (B, H, 1, D); k_pages, v_pages: (P, KV, bs, D);
+    block_tables: (B, M); lengths: (B,) -> (B, H, 1, D)."""
+    b, h, _, d = q.shape
+    kv, bs = k_pages.shape[1], k_pages.shape[2]
+    m = block_tables.shape[1]
+    s = m * bs
+    g = h // kv
+    # (B, M, KV, bs, D) -> (B, KV, M*bs, D): lane-contiguous logical cache
+    k = jnp.transpose(k_pages[block_tables], (0, 2, 1, 3, 4)).reshape(b, kv, s, d)
+    v = jnp.transpose(v_pages[block_tables], (0, 2, 1, 3, 4)).reshape(b, kv, s, d)
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32) * d ** -0.5
+    s_mat = jnp.einsum("bkgd,bksd->bkgs", qg, k.astype(jnp.float32))
+    kpos = jnp.arange(s)[None, :]
+    mask = kpos < lengths[:, None]
+    if window > 0:
+        mask = mask & (kpos >= lengths[:, None] - window)
+    s_mat = jnp.where(mask[:, None, None, :], s_mat, NEG_INF)
+    p = jax.nn.softmax(s_mat, axis=-1)
+    out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(b, h, 1, d).astype(q.dtype)

@@ -35,6 +35,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--round-tokens", type=int, default=8)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the block-paged KV cache")
+    ap.add_argument("--block-size", type=int, default=32,
+                    help="cache slots per block with --paged")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -58,7 +62,8 @@ def main():
                      eos_id=-1)     # greedy, run every request to budget
     sched = Scheduler(params, cfg, tokenizer=None, gcfg=gcfg,
                       n_lanes=args.lanes, round_tokens=args.round_tokens,
-                      max_prompt_len=args.prompt_len)
+                      max_prompt_len=args.prompt_len, paged=args.paged,
+                      block_size=args.block_size)
 
     with mesh:
         t0 = time.time()
@@ -73,6 +78,11 @@ def main():
     print(f"  {tok_total} tokens total, "
           f"{1000 * dt / max(tok_total, 1):.1f} ms/tok, "
           f"lane occupancy {stats.lane_rounds / max(stats.rounds * args.lanes, 1):.0%}")
+    if args.paged:
+        print(f"  paged cache: peak {stats.peak_blocks_in_use}/"
+              f"{stats.pool_blocks} blocks "
+              f"({stats.peak_cache_bytes / 2**20:.2f} MiB vs dense "
+              f"{stats.dense_cache_bytes / 2**20:.2f} MiB)")
     if comps:
         print("sample request 0 tokens:", comps[0].tokens[:16].tolist())
 

@@ -218,6 +218,73 @@ def dequantize_kv(q, s, dtype):
     return (q.astype(jnp.float32) * s[..., None]).astype(dtype)
 
 
+def attention_decode_paged(cfg: ModelConfig, p, x, pos, k_pages, v_pages,
+                           write_slot, gather_idx, kpos, block_tables,
+                           window, use_kernel=None):
+    """One-token decode against a block-paged KV cache.
+
+    x: (B,1,D); pos: (B,) absolute position of the new token.
+    k_pages/v_pages: (P, bs, KV, Dh) — this layer's page pool (page 0 is
+    the trash block).  ``write_slot`` (B,) is the flat pool slot
+    ``block_id * bs + pos % bs`` for the new token, precomputed once by
+    the caller from the lane block tables; ``gather_idx`` (B, S) maps
+    each lane's logical position to its flat pool slot; ``kpos`` (S,)
+    are the logical positions themselves; ``block_tables`` (B, M) are
+    the per-lane page ids (consumed by the Pallas kernel path).  Slot
+    validity is derived
+    from positions (``kpos <= pos``), so the gathered view is laid out
+    exactly like the dense cache — greedy decoding through pages
+    bit-matches the dense path (tests/test_scheduler.py).
+
+    ``use_kernel=None`` picks the Pallas paged-attention kernel on TPU
+    and the pure-jnp gather path elsewhere; the jnp path is the
+    semantic reference the kernel is tested against.
+    Returns (out (B,1,D), k_pages, v_pages).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b = x.shape[0]
+    dh = cfg.resolved_head_dim
+    pb, bs = k_pages.shape[0], k_pages.shape[1]
+    x = x.astype(cdt)
+    q = (x @ p["wq"].astype(cdt)).reshape(b, 1, cfg.n_heads, dh)
+    k = (x @ p["wk"].astype(cdt)).reshape(b, 1, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"].astype(cdt)).reshape(b, 1, cfg.n_kv_heads, dh)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k = apply_rope(k, pos[:, None], cfg.rope_theta)
+
+    k_flat = k_pages.reshape(pb * bs, cfg.n_kv_heads, dh)
+    v_flat = v_pages.reshape(pb * bs, cfg.n_kv_heads, dh)
+    k_flat = k_flat.at[write_slot].set(k[:, 0].astype(k_flat.dtype))
+    v_flat = v_flat.at[write_slot].set(v[:, 0].astype(v_flat.dtype))
+
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if use_kernel:
+        from repro.kernels.paged_attention import paged_decode_attention
+        out = paged_decode_attention(
+            q, k_flat.reshape(pb, bs, cfg.n_kv_heads, dh),
+            v_flat.reshape(pb, bs, cfg.n_kv_heads, dh),
+            block_tables, pos + 1, window=window)
+    else:
+        # gather the lane's logical cache view (B, S, KV, Dh); transient
+        # per layer, exactly the dense layout so masking/softmax match
+        # the dense path bit-for-bit
+        k_att = k_flat[gather_idx]
+        v_att = v_flat[gather_idx]
+        k_positions = jnp.broadcast_to(kpos[None, :], gather_idx.shape)
+        valid = kpos[None, :] <= pos[:, None]
+        if kpos.shape[0] > 64 * 1024:     # same switch as the dense path
+            out = chunked_attention(cfg, q, k_att, v_att, pos[:, None],
+                                    k_positions, window, valid_k=valid,
+                                    block=8192)
+        else:
+            out = direct_attention(cfg, q, k_att, v_att, pos[:, None],
+                                   k_positions, window, valid_k=valid)
+    out = out.reshape(b, 1, cfg.n_heads * dh) @ p["wo"].astype(cdt)
+    return (out, k_flat.reshape(pb, bs, cfg.n_kv_heads, dh),
+            v_flat.reshape(pb, bs, cfg.n_kv_heads, dh))
+
+
 def attention_decode(cfg: ModelConfig, p, x, pos, k_cache, v_cache, cache_pos, window,
                      k_scale=None, v_scale=None):
     """One-token decode.

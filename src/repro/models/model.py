@@ -11,6 +11,7 @@ Entry points:
   * prefill(params, cfg, tokens|embeds, positions)        -> logits, cache
   * decode_step(params, cfg, tokens, cache)               -> logits, cache
   * init_decode_state(cfg, batch, cache_len)              -> empty cache
+  * init_paged_decode_state(cfg, batch, s_max, bs, n_blk) -> paged cache
   * lm_loss(cfg, logits, labels, mask, aux)               -> scalar, metrics
 """
 
@@ -263,6 +264,54 @@ def init_decode_state(cfg: ModelConfig, batch: int, seq_len: int,
     return cache
 
 
+def init_paged_decode_state(cfg: ModelConfig, batch: int, s_max: int,
+                            block_size: int, n_blocks: int,
+                            cache_dtype=None):
+    """Empty block-paged decode cache (the paged variant of
+    :func:`init_decode_state`).
+
+    K/V live in a shared pool of ``n_blocks`` allocatable blocks of
+    ``block_size`` slots (plus block 0, the trash block that absorbs
+    writes from evicted lanes), indexed per lane through a
+    ``(batch, max_blocks)`` block table managed by the host-side
+    allocator (serving/block_pool.py).  ``kpos`` is the static
+    ``arange(s_max)`` of logical positions — its shape carries the
+    lane's logical cache width through jit, and validity masks derive
+    from it (``kpos <= pos``), so no per-slot ``cache_pos`` is needed.
+
+    Constraints: attention-only caching (SSM state stays per-lane and
+    dense — it is O(1) per lane already), no kv_quant (the scheduler's
+    prefill-insert path never quantizes; same restriction as the dense
+    scheduler), and no pure-ring sliding-window configs (paged lanes
+    are append-only; windows are enforced by masking instead, any mix
+    with a global layer is fine).
+    """
+    if not cfg.has_attention:
+        raise ValueError("paged decode cache requires an attention model")
+    if cfg.kv_quant:
+        raise ValueError("paged decode cache does not support kv_quant")
+    if cache_length(cfg, s_max) != s_max:
+        raise ValueError("paged decode cache requires full-length caching "
+                         "(pure sliding-window ring configs decode dense)")
+    cdt = cache_dtype or jnp.dtype(cfg.compute_dtype)
+    L = cfg.n_layers
+    dh = cfg.resolved_head_dim
+    max_blocks = -(-s_max // block_size)
+    cache = {
+        "pos": jnp.zeros((batch,), jnp.int32),
+        "kpos": jnp.arange(s_max, dtype=jnp.int32),
+        "block_tables": jnp.zeros((batch, max_blocks), jnp.int32),
+        "k": jnp.zeros((L, n_blocks + 1, block_size, cfg.n_kv_heads, dh), cdt),
+        "v": jnp.zeros((L, n_blocks + 1, block_size, cfg.n_kv_heads, dh), cdt),
+    }
+    if cfg.has_ssm:
+        di, n, h, conv_ch, _ = ssm_mod.ssm_dims(cfg)
+        cache["conv"] = jnp.zeros((L, batch, cfg.ssm_conv_width, conv_ch), cdt)
+        cache["ssm"] = jnp.zeros((L, batch, h, cfg.ssm_head_dim, n),
+                                 jnp.float32)
+    return cache
+
+
 # ----------------------------------------------------------------------
 # Prefill
 # ----------------------------------------------------------------------
@@ -361,7 +410,11 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
 def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
     """One decode step.  tokens: (B,) int32 (or embeds (B,1,D)).
 
-    Returns (logits (B,V), new cache).
+    The cache may be dense (from :func:`init_decode_state` /
+    :func:`prefill`) or block-paged (from
+    :func:`init_paged_decode_state`) — the presence of
+    ``"block_tables"`` in the pytree selects the path statically under
+    jit.  Returns (logits (B,V), new cache).
     """
     if embeds is not None:
         x = embeds.astype(jnp.dtype(cfg.compute_dtype))
@@ -371,13 +424,29 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
     pos = cache["pos"]                                                 # (B,)
     windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
 
-    cache_pos = None
-    if cfg.has_attention:
+    has_attn = cfg.has_attention
+    paged = has_attn and "block_tables" in cache
+
+    cache_pos = bt = kpos = write_slot = gather_idx = None
+    if paged:
+        bt = cache["block_tables"]                                     # (B,M)
+        kpos = cache["kpos"]                                           # (S,)
+        bs = cache["k"].shape[2]
+        # flat pool slot for the new token.  Positions that outrun the
+        # block table clamp to its last entry; such writes are always
+        # discarded garbage — an evicted lane's table is all trash
+        # (block 0), and a live lane past its budget scribbles unread
+        # slots of blocks it still owns (freed at finalize, and the
+        # scheduler's reservation sizing keeps those slots inside the
+        # lane's own allocation until then)
+        blk = jnp.minimum(pos // bs, bt.shape[1] - 1)
+        bid = jnp.take_along_axis(bt, blk[:, None], axis=1)[:, 0]
+        write_slot = bid * bs + pos % bs                               # (B,)
+        gather_idx = bt[:, kpos // bs] * bs + (kpos % bs)[None, :]     # (B,S)
+    elif has_attn:
         sc = cache["k"].shape[2]
         slot = (pos % sc).astype(jnp.int32)
         cache_pos = cache["cache_pos"].at[jnp.arange(b), slot].set(pos)
-
-    has_attn = cfg.has_attention
 
     quant = has_attn and "k_scale" in cache
 
@@ -397,7 +466,11 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
         if has_attn:
             k_l = jax.lax.dynamic_index_in_dim(k_stack, idx, 0, keepdims=False)
             v_l = jax.lax.dynamic_index_in_dim(v_stack, idx, 0, keepdims=False)
-            if quant:
+            if paged:
+                a_out, k_l, v_l = attn_mod.attention_decode_paged(
+                    cfg, lp["attn"], h, pos, k_l, v_l, write_slot,
+                    gather_idx, kpos, bt, window)
+            elif quant:
                 ks_l = jax.lax.dynamic_index_in_dim(ks_stack, idx, 0,
                                                     keepdims=False)
                 vs_l = jax.lax.dynamic_index_in_dim(vs_stack, idx, 0,
@@ -448,10 +521,14 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
     if has_attn:
         new_cache["k"] = k_stack
         new_cache["v"] = v_stack
-        if quant:
-            new_cache["k_scale"] = ks_stack
-            new_cache["v_scale"] = vs_stack
-        new_cache["cache_pos"] = cache_pos
+        if paged:
+            new_cache["kpos"] = kpos
+            new_cache["block_tables"] = bt
+        else:
+            if quant:
+                new_cache["k_scale"] = ks_stack
+                new_cache["v_scale"] = vs_stack
+            new_cache["cache_pos"] = cache_pos
     if cfg.has_ssm:
         new_cache["conv"] = new_layer_caches["conv"]
         new_cache["ssm"] = new_layer_caches["ssm"]

@@ -21,7 +21,14 @@ master key and the global step at which it was admitted — not on how
 many rounds the scan was chunked into.  (It does depend on the lane
 pool width, because ``sample_tokens`` draws one noise tensor for the
 whole (B, V) batch; run with ``n_lanes == B`` for bit-equality with the
-single-scan engine.)
+one-shot engine, whose single round spans the whole budget.)
+
+The primitives are cache-layout agnostic where they can be:
+``decode_round`` steps whatever cache pytree ``model.decode_step``
+understands (dense or block-paged), while lane insertion is
+layout-specific — ``insert_lanes`` scatters dense cache rows,
+``insert_lanes_paged`` scatters prompt K/V into allocator-assigned
+pool pages (see serving/block_pool.py and serving/scheduler.py).
 """
 
 from __future__ import annotations
@@ -145,6 +152,50 @@ def insert_lanes(cache, cur_logits, new_cache, new_logits, lanes):
                                              mode="drop")
         else:
             out[name] = val.at[lanes].set(new.astype(val.dtype), mode="drop")
+    cur_logits = cur_logits.at[lanes].set(
+        new_logits.astype(cur_logits.dtype), mode="drop")
+    return out, cur_logits
+
+
+@jax.jit
+def insert_lanes_paged(cache, cur_logits, new_cache, new_logits, lanes,
+                       block_rows):
+    """Scatter a freshly prefilled sub-batch into the paged lane pool.
+
+    The wave was prefilled *dense* at its prompt bucket (``new_cache``
+    K/V are (L, Nb, bucket, KV, Dh)); this writes each row's prompt
+    positions into the pool pages its lane was allocated:
+
+        position p of row j  ->  flat slot block_rows[j, p // bs] * bs
+                                             + p % bs
+
+    block_rows: (Nb, max_blocks) int32 page ids, trash (0) beyond the
+    row's allocation — positions past a row's real blocks (right-pad of
+    the bucket, dummy rows padding the admit wave) therefore land in
+    the trash block, so no masking is needed;
+    lanes: (Nb,) target lane per row, >= n_lanes sentinel on dummy rows
+    (dropped by the lane-axis scatters, exactly as in insert_lanes).
+
+    The device block tables are NOT written here: the host owns them
+    (serving/block_pool.py) and pushes the full table before the next
+    decode round.
+    """
+    L, _, bucket = new_cache["k"].shape[:3]
+    pb, bs = cache["k"].shape[1], cache["k"].shape[2]
+    p = jnp.arange(bucket, dtype=jnp.int32)
+    tgt = (block_rows[:, p // bs] * bs + p[None, :] % bs).reshape(-1)
+
+    out = dict(cache)
+    for name in ("k", "v"):
+        flat = cache[name].reshape(L, pb * bs, *cache[name].shape[3:])
+        new = new_cache[name].reshape(L, -1, *new_cache[name].shape[3:])
+        out[name] = flat.at[:, tgt].set(new.astype(flat.dtype)).reshape(
+            cache[name].shape)
+    for name in ("conv", "ssm"):
+        if name in cache:
+            out[name] = cache[name].at[:, lanes].set(
+                new_cache[name].astype(cache[name].dtype), mode="drop")
+    out["pos"] = cache["pos"].at[lanes].set(new_cache["pos"], mode="drop")
     cur_logits = cur_logits.at[lanes].set(
         new_logits.astype(cur_logits.dtype), mode="drop")
     return out, cur_logits

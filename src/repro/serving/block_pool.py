@@ -1,0 +1,158 @@
+"""Host-side block-pool allocator for the paged KV cache.
+
+The paged serving path (``Scheduler(paged=True)``) stores K/V in a flat
+pool of fixed-size *blocks* — ``(n_layers, n_blocks + 1, block_size,
+n_kv_heads, head_dim)`` device arrays — instead of one dense
+``(n_lanes, s_max)`` slab per lane.  This class is the host-side
+book-keeper: a free-list of physical block ids plus a reservation
+counter that makes admission backpressure deadlock-free.
+
+Block id 0 is the *trash block*: it is never handed out, and every
+write that must go nowhere (evicted lanes still stepping in the jitted
+round, positions past a lane's budget) is routed to it.  Allocatable
+ids are ``1 .. n_blocks``.
+
+Two counters, two invariants:
+
+  * ``in_use``    — physical blocks currently held by lanes;
+  * ``reserved``  — blocks *promised* to admitted lanes but not yet
+    allocated (a lane admitted with prompt length P and decode budget
+    G reserves ``ceil((P + G) / block_size)`` blocks up front and draws
+    them lazily as it decodes).
+
+  Invariant 1: ``in_use + n_free == n_blocks`` (no leaks).
+  Invariant 2: ``reserved <= n_free`` (every promised block exists), so
+  a live lane can never fail to grow — admission is the only place
+  that can block.  This trades a little admission concurrency for a
+  preemption-free scheduler.
+
+Freed blocks return to the pool the moment a lane finishes — including
+lanes killed mid-flight by a ``StopPolicy`` such as ``VoteEarlyStop``,
+which is what turns SATER's confidence-based rejection into reclaimed
+HBM, not just skipped compute.
+
+Worked example (the block-size / n_lanes / HBM trade-off)
+---------------------------------------------------------
+Take an 8B-class config: 32 layers, 8 KV heads, head_dim 128, bf16.
+One cache *slot* (one token position, K+V, all layers) costs
+
+    32 layers * 8 heads * 128 dim * 2 bytes * 2 (K and V) = 128 KiB.
+
+Dense serving at ``n_lanes = 96`` and ``s_max = 4096`` pins
+
+    96 * 4096 * 128 KiB = 48 GiB
+
+of HBM whether lanes use it or not — the cache, not the FLOPs, caps
+``n_lanes``.  Paged with ``block_size = 32`` (4 MiB per block) holds
+only what lanes have actually written, rounded up to the block:
+SATER's shortest-response training plus vote early stop mean a typical
+lane dies after a few hundred tokens, so steady-state usage is
+
+    96 lanes * ~256 tokens ≈ 96 * 8 blocks * 4 MiB ≈ 3 GiB,
+
+a ~16x cut — or, holding HBM constant, ~16x more lanes.  Smaller
+blocks waste less in the final partial block per lane (expected waste
+is ``block_size / 2`` slots per lane) but mean longer block tables and
+more scatter/gather index traffic; 16-64 slots is the sweet spot
+(TPU tiling also wants the block's token axis >= 8 for f32 / 16 for
+bf16 — see ``kernels/paged_attention``).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+
+class BlockPool:
+    """Free-list allocator over ``n_blocks`` equal-size cache blocks.
+
+    All methods are O(blocks touched); nothing here touches the device
+    — the scheduler owns the device arrays and only consumes the ids.
+    """
+
+    TRASH = 0    # reserved block id: writes-to-nowhere land here
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 1:
+            raise ValueError("pool needs at least one allocatable block")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        # LIFO free-list: recently freed (still-warm) blocks are reused
+        # first.  Ids 1..n_blocks; 0 is the trash block, never listed.
+        # The set mirrors the list so free() can reject double-frees —
+        # the one misuse that would corrupt the cache silently (one
+        # physical block alloc'd to two live lanes) instead of erroring.
+        self._free: List[int] = list(range(n_blocks, 0, -1))
+        self._free_set = set(self._free)
+        self.reserved = 0
+        self.peak_in_use = 0
+
+    # -- queries -------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_blocks - len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Blocks neither allocated nor promised to an admitted lane —
+        what a *new* admission may reserve."""
+        return len(self._free) - self.reserved
+
+    # -- reservation (admission-time) ----------------------------------
+    def reserve(self, n: int) -> bool:
+        """Promise ``n`` blocks to a lane being admitted.  Returns False
+        (and reserves nothing) when the pool cannot guarantee them —
+        the scheduler then leaves the request queued: backpressure."""
+        if n > self.available:
+            return False
+        self.reserved += n
+        return True
+
+    def unreserve(self, n: int) -> None:
+        """Return an unused part of a reservation (lane finished or was
+        killed before drawing all its promised blocks)."""
+        if n > self.reserved:
+            raise ValueError(f"unreserve({n}) exceeds reserved={self.reserved}")
+        self.reserved -= n
+
+    # -- allocation ----------------------------------------------------
+    def alloc(self, n: int) -> List[int]:
+        """Draw ``n`` physical blocks from the lane's reservation.
+
+        Invariant 2 guarantees this never fails for a properly reserved
+        lane; a failure here is a scheduler accounting bug, not a
+        recoverable condition, hence the hard error.
+        """
+        if n > self.reserved:
+            raise RuntimeError(f"alloc({n}) exceeds reserved={self.reserved}: "
+                               "lane drew more blocks than it reserved")
+        if n > len(self._free):
+            raise RuntimeError(f"alloc({n}) with only {len(self._free)} free: "
+                               "reservation invariant violated")
+        ids = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(ids)
+        self.reserved -= n
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return ids
+
+    def free(self, ids: List[int]) -> None:
+        """Return physical blocks to the pool (eviction, EOS, or a
+        ``StopPolicy`` kill — the blocks are reusable immediately).
+        Double-frees raise: a block listed free twice would later be
+        allocated to two live lanes at once."""
+        for i in ids:
+            if not 1 <= i <= self.n_blocks:
+                raise ValueError(f"free: {i} is not an allocatable block id")
+        if len(set(ids)) != len(ids) or self._free_set & set(ids):
+            raise ValueError("free: double-free (block already in the pool)")
+        self._free_set.update(ids)
+        self._free.extend(ids)
+
+    def __repr__(self):
+        return (f"BlockPool(blocks={self.n_blocks}, bs={self.block_size}, "
+                f"in_use={self.in_use}, reserved={self.reserved}, "
+                f"peak={self.peak_in_use})")

@@ -1,13 +1,16 @@
-"""One-shot batched generation: prefill + round-chunked decode over the
-full token budget in a single round.
+"""One-shot batched generation: one prefill, then one ``decode_round``
+spanning the whole token budget.
 
-This is now a thin wrapper over the primitives in serving/batch.py —
-the same jitted prefill and ``decode_round`` the continuous-batching
+This is a thin wrapper over the primitives in serving/batch.py — the
+same jitted prefill and ``decode_round`` the continuous-batching
 scheduler (serving/scheduler.py) uses, so a scheduler run with the same
 lane pool, padding and master key reproduces this engine bit-for-bit
-(tests/test_scheduler.py proves it).  Host-side callers that need lane
-admission/eviction and vote-aware early stopping mid-flight should go
-through the scheduler instead.
+(tests/test_scheduler.py proves it, for both the dense and the paged
+scheduler cache).  The engine itself always decodes into a dense
+``(B, prompt + budget)`` cache: with a single fixed batch and no
+mid-flight admission there is nothing for a block pool to recycle.
+Host-side callers that need lane admission/eviction, vote-aware early
+stopping, or the paged KV cache should go through the scheduler.
 """
 
 from __future__ import annotations
@@ -28,7 +31,10 @@ def generate(params, cfg: ModelConfig, prompts: np.ndarray,
              lengths: np.ndarray, key, gcfg: GenConfig) -> Tuple[np.ndarray, np.ndarray]:
     """prompts: (B, S) right-padded int32; lengths: (B,).
 
-    Returns (generated (B, max_new_tokens) int32 incl. EOS, gen_len (B,)).
+    Every lane decodes the full ``gcfg.max_new_tokens`` budget in one
+    jitted round (lanes past their EOS keep stepping and emit pad);
+    truncation at EOS happens on the host afterwards.  Returns
+    (generated (B, max_new_tokens) int32 incl. EOS, gen_len (B,)).
     """
     prompts = jnp.asarray(prompts)
     lengths = jnp.asarray(lengths)

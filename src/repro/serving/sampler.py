@@ -6,18 +6,42 @@ import jax
 import jax.numpy as jnp
 
 
+def top_p_mask(logits, top_p: float):
+    """Mask logits outside the top-p nucleus to -inf.
+
+    The nucleus is the smallest prefix of the probability-sorted vocab
+    whose cumulative probability reaches ``top_p``; surviving logits
+    are those >= the smallest kept sorted logit.
+
+    Tie boundary (documented contract, tested in tests/test_sampler.py):
+    when several logits are exactly equal at the nucleus edge, the
+    ``>= cutoff`` comparison keeps ALL of them, even the ones whose
+    cumulative-probability rank falls outside ``top_p``.  Equal logits
+    are equally deserving — a sort-order-dependent subset would make
+    the kept set depend on how the backend's sort breaks ties — so the
+    effective nucleus mass may exceed ``top_p`` by up to
+    (n_tied - 1) * p_tied.  This matches common serving-engine
+    behaviour and keeps the mask permutation-invariant.
+    """
+    sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+    sorted_probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(sorted_probs, axis=-1)
+    # keep smallest prefix with cumulative prob >= top_p
+    keep = cum - sorted_probs < top_p
+    cutoff = jnp.min(jnp.where(keep, sorted_logits, jnp.inf), axis=-1,
+                     keepdims=True)
+    return jnp.where(logits >= cutoff, logits, -jnp.inf)
+
+
 def sample_tokens(key, logits, temperature: float = 0.7, top_p: float = 1.0):
-    """logits: (B, V) -> (B,) int32 samples."""
+    """logits: (B, V) -> (B,) int32 samples.
+
+    temperature <= 0 is greedy argmax (top_p ignored); otherwise
+    temperature-scaled nucleus sampling via :func:`top_p_mask` (see its
+    docstring for the tie-at-the-boundary contract)."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / temperature
     if top_p < 1.0:
-        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
-        sorted_probs = jax.nn.softmax(sorted_logits, axis=-1)
-        cum = jnp.cumsum(sorted_probs, axis=-1)
-        # keep smallest prefix with cumulative prob >= top_p
-        keep = cum - sorted_probs < top_p
-        cutoff = jnp.min(jnp.where(keep, sorted_logits, jnp.inf), axis=-1,
-                         keepdims=True)
-        logits = jnp.where(logits >= cutoff, logits, -jnp.inf)
+        logits = top_p_mask(logits, top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,4 +1,5 @@
-"""Round-based continuous-batching scheduler.
+"""Round-based continuous-batching scheduler, with an optional
+block-paged KV cache.
 
 A fixed pool of ``n_lanes`` decode lanes shares one device cache pytree
 (leading lane axis) and advances in lockstep rounds of ``round_tokens``
@@ -7,16 +8,37 @@ tokens (``batch.decode_round``).  Between rounds the host:
   1. *admits* pending requests into free lanes — prompts are padded to
      a length bucket and the admission wave to a power-of-two size, so
      prefill compiles O(#buckets x #wave sizes) times total, then the
-     prefilled rows are scattered into the pool (``batch.insert_lanes``);
+     prefilled rows are scattered into the pool (``batch.insert_lanes``
+     or, paged, ``batch.insert_lanes_paged``);
   2. *harvests* the round's tokens per live lane, truncating at EOS or
      the per-request budget and finalizing finished lanes (which frees
-     them for the next admission — continuous batching);
+     them — and, paged, their cache blocks — for the next admission);
   3. consults the ``StopPolicy``: every newly finished request is shown
      to the policy in (gen_len, uid) order, and any vote *group* the
      policy declares decided is killed mid-flight — its still-running
      lanes are evicted with whatever they generated so far and its
      never-admitted requests are dropped.  This is SATER's early stop
-     as real freed compute, not token accounting.
+     as real freed compute — and, paged, real freed HBM.
+
+Dense vs paged cache
+--------------------
+Dense (default): every lane owns ``s_max`` cache slots for its whole
+lifetime, so HBM cost is ``n_lanes * s_max`` slots regardless of how
+short responses actually are — with SATER's shortest-response training
+and vote early stop, most of that is never written.  Paged
+(``paged=True``): K/V live in a pool of ``block_size``-slot blocks
+(model.init_paged_decode_state) managed by a host-side free-list
+allocator (serving/block_pool.py).  A lane admitted with prompt length
+P and budget G *reserves* ``ceil((P+G)/bs)`` blocks (so it can always
+grow — no preemption needed), *allocates* ``ceil(P/bs)`` for the
+prompt, and draws the rest lazily, one round ahead of its decode
+position.  Admission blocks while the pool cannot cover a reservation
+(``SchedStats.admission_blocked`` counts those waits), and every
+finalize — EOS, budget, or a ``StopPolicy`` kill — returns the lane's
+blocks to the pool immediately.  Evicted lanes keep stepping inside
+the jitted round until their lane is re-admitted; their block-table
+rows are re-pointed at the allocator's trash block first, so those
+writes land nowhere.
 
 Request lifecycle:  pending -> admitted (prefill + lane insert)
   -> decoding (one round at a time) -> finished (EOS | budget)
@@ -25,7 +47,13 @@ Request lifecycle:  pending -> admitted (prefill + lane insert)
 Determinism: step-t sampling uses fold_in(master_key, t) with t the
 *global* round-step counter, shared by all lanes.  A request's tokens
 therefore depend on its admission step and the lane-pool width, exactly
-like batch composition affects real serving engines.
+like batch composition affects real serving engines.  The paged cache
+reproduces the dense cache's logical slot layout exactly (positions are
+contiguous within a lane's block table), so for greedy decoding the
+paged scheduler bit-matches the dense one and the one-shot engine
+(tests/test_scheduler.py proves both) — on the jnp attention path used
+off-TPU; the TPU Pallas paged-attention kernel is allclose to it, not
+bit-equal.
 """
 
 from __future__ import annotations
@@ -42,8 +70,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving.batch import (GenConfig, decode_round, insert_lanes,
-                                 make_buckets, pad_token_rows, pick_bucket,
-                                 prefill_jit)
+                                 insert_lanes_paged, make_buckets,
+                                 pad_token_rows, pick_bucket, prefill_jit)
+from repro.serving.block_pool import BlockPool
 
 
 @dataclasses.dataclass
@@ -61,6 +90,8 @@ class Request:
 
 @dataclasses.dataclass
 class Completion:
+    """A finished (or cancelled) request as returned by
+    :meth:`Scheduler.run`."""
     uid: int
     group: Optional[int]
     tokens: np.ndarray           # generated ids up to & incl. EOS
@@ -84,6 +115,14 @@ class StopPolicy:
 
 @dataclasses.dataclass
 class SchedStats:
+    """Counters for one :meth:`Scheduler.run` call.
+
+    The cache fields quantify the paged win: ``peak_cache_bytes`` is
+    the high-water K/V footprint (for dense, the full static cache; for
+    paged, peak blocks in use x block bytes), and ``dense_cache_bytes``
+    is what a dense cache at the same lane count pins — their ratio is
+    the HBM cut the block pool delivers.
+    """
     rounds: int = 0              # decode_round invocations
     lane_rounds: int = 0         # sum over rounds of live lanes
     generated_tokens: int = 0    # tokens actually produced by live lanes
@@ -91,6 +130,11 @@ class SchedStats:
     prefill_prompts: int = 0     # real prompts prefetched across waves
     cancelled: int = 0           # requests killed by the StopPolicy
     wall_s: float = 0.0
+    admission_blocked: int = 0   # admissions deferred on pool pressure
+    pool_blocks: int = 0         # allocatable blocks (paged only)
+    peak_blocks_in_use: int = 0  # allocator high-water mark (paged only)
+    peak_cache_bytes: int = 0    # peak K/V footprint actually held
+    dense_cache_bytes: int = 0   # dense-equivalent K/V footprint
 
 
 @dataclasses.dataclass
@@ -99,14 +143,44 @@ class _Lane:
     budget: int
     parts: List[np.ndarray] = dataclasses.field(default_factory=list)
     generated: int = 0
+    # paged bookkeeping
+    prompt_len: int = 0
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    reserved: int = 0            # promised-but-undrawn pool blocks
 
 
 class Scheduler:
+    """Continuous-batching engine over a fixed lane pool.
+
+    Parameters
+    ----------
+    params, cfg, tokenizer, gcfg:
+        Model weights/config, tokenizer (None for pre-tokenized
+        requests) and generation settings.
+    n_lanes, round_tokens:
+        Lane-pool width and decode-round length (the early-stop grain:
+        a StopPolicy can kill a group at most ``round_tokens`` tokens
+        after the deciding lane finished).
+    max_prompt_len, buckets, admit_buckets:
+        Prompt-length bucket ladder and admission-wave size ladder;
+        compiled shapes are bounded by their product.
+    paged, block_size, pool_blocks:
+        ``paged=True`` swaps the dense per-lane cache for the
+        block-paged pool: ``block_size`` slots per block,
+        ``pool_blocks`` allocatable blocks (default: enough for every
+        lane at full ``s_max`` — set it lower to trade admission
+        concurrency for HBM, the allocator backpressures admission
+        instead of overflowing).  Must cover at least one worst-case
+        lane (``ceil(s_max / block_size)`` blocks).
+    """
+
     def __init__(self, params, cfg: ModelConfig, tokenizer, gcfg: GenConfig,
                  n_lanes: int = 32, round_tokens: int = 16,
                  max_prompt_len: int = 256,
                  buckets: Optional[Sequence[int]] = None,
-                 admit_buckets: Optional[Sequence[int]] = None):
+                 admit_buckets: Optional[Sequence[int]] = None,
+                 paged: bool = False, block_size: int = 32,
+                 pool_blocks: Optional[int] = None):
         self.params, self.cfg, self.tokenizer, self.gcfg = \
             params, cfg, tokenizer, gcfg
         self.n_lanes = n_lanes
@@ -116,6 +190,21 @@ class Scheduler:
                                           make_buckets(n_lanes, 1)))
         # cache sized so any prompt bucket + any budget fits one lane
         self.s_max = max(self.buckets) + gcfg.max_new_tokens
+        self.paged = paged
+        self.block_size = block_size
+        self.pool: Optional[BlockPool] = None    # most recent run's pool
+        if paged:
+            self.max_blocks = -(-self.s_max // block_size)
+            self.pool_blocks = (n_lanes * self.max_blocks
+                                if pool_blocks is None else pool_blocks)
+            if self.pool_blocks < self.max_blocks:
+                raise ValueError(
+                    f"pool_blocks={self.pool_blocks} cannot hold one "
+                    f"worst-case lane ({self.max_blocks} blocks): admission "
+                    "could never make progress")
+            # fail fast on configs the paged cache cannot serve
+            model_lib.init_paged_decode_state(cfg, 1, self.s_max,
+                                              block_size, 1)
 
     # ------------------------------------------------------------------
     def _encode(self, req: Request) -> List[int]:
@@ -126,6 +215,11 @@ class Scheduler:
     def _budget(self, req: Request) -> int:
         b = req.max_new_tokens or self.gcfg.max_new_tokens
         return min(b, self.gcfg.max_new_tokens)
+
+    def _reservation(self, prompt_len: int, budget: int) -> int:
+        """Blocks a lane may touch over its lifetime: prompt + budget,
+        rounded up to whole blocks."""
+        return -(-(prompt_len + budget) // self.block_size)
 
     # ------------------------------------------------------------------
     def run(self, requests: Sequence[Request], key,
@@ -140,14 +234,29 @@ class Scheduler:
         pending = collections.deque(requests)
         lanes: List[Optional[_Lane]] = [None] * self.n_lanes
         host_done = np.ones((self.n_lanes,), bool)
-        cache = model_lib.init_decode_state(self.cfg, self.n_lanes, self.s_max)
+        if self.paged:
+            pool = BlockPool(self.pool_blocks, self.block_size)
+            self.pool = pool
+            cache = model_lib.init_paged_decode_state(
+                self.cfg, self.n_lanes, self.s_max, self.block_size,
+                self.pool_blocks)
+            host_table = np.zeros((self.n_lanes, self.max_blocks), np.int32)
+            table_dirty = False
+        else:
+            pool = None
+            cache = model_lib.init_decode_state(self.cfg, self.n_lanes,
+                                                self.s_max)
         cur_logits = jnp.zeros((self.n_lanes, self.cfg.vocab_size),
                                jnp.float32)
         completions: Dict[int, Completion] = {}
         decided: set = set()
+        # tokenization memo: a pool-blocked head-of-queue request is
+        # re-examined every round; encode it once, not once per round
+        enc: Dict[int, List[int]] = {}
         global_step = 0
 
         def finalize(i: int, cancelled: bool):
+            nonlocal table_dirty
             lane = lanes[i]
             toks = (np.concatenate(lane.parts) if lane.parts
                     else np.zeros((0,), np.int32))
@@ -155,6 +264,16 @@ class Scheduler:
             comp = Completion(lane.req.uid, lane.req.group, toks, len(toks),
                               text, cancelled, lane.req.meta)
             completions[lane.req.uid] = comp
+            if self.paged:
+                # reclaim immediately: blocks (and the unused tail of the
+                # reservation) go back to the pool mid-flight, and the
+                # lane's table row points at the trash block so its
+                # remaining in-round steps write nowhere
+                pool.free(lane.blocks)
+                pool.unreserve(lane.reserved)
+                lane.blocks, lane.reserved = [], 0
+                host_table[i] = 0
+                table_dirty = True
             lanes[i] = None
             host_done[i] = True
             if cancelled:
@@ -166,17 +285,28 @@ class Scheduler:
             free = [i for i in range(self.n_lanes) if lanes[i] is None]
             wave: List[Request] = []
             while pending and len(wave) < len(free):
-                req = pending.popleft()
+                req = pending[0]
                 if req.group in decided:
+                    pending.popleft()
                     completions[req.uid] = Completion(
                         req.uid, req.group, np.zeros((0,), np.int32), 0, "",
                         True, req.meta)
                     stats.cancelled += 1
                     continue
+                if req.uid not in enc:
+                    enc[req.uid] = self._encode(req)
+                if self.paged:
+                    need = self._reservation(max(len(enc[req.uid]), 1),
+                                             self._budget(req))
+                    if not pool.reserve(need):
+                        # pool pressure: leave the queue intact (FIFO)
+                        # and retry after the next round frees blocks
+                        stats.admission_blocked += 1
+                        break
+                pending.popleft()
                 wave.append(req)
             if wave:
                 by_bucket: Dict[int, List[Request]] = collections.defaultdict(list)
-                enc = {r.uid: self._encode(r) for r in wave}
                 for r in wave:
                     by_bucket[pick_bucket(len(enc[r.uid]), self.buckets)
                               ].append(r)
@@ -187,17 +317,39 @@ class Scheduler:
                                                 self.gcfg.pad_id, bucket,
                                                 admit_n)
                     lane_ids = np.full((admit_n,), self.n_lanes, np.int32)
+                    block_rows = (np.zeros((admit_n, self.max_blocks),
+                                           np.int32) if self.paged else None)
                     for j, r in enumerate(grp):
                         i = free.pop(0)
                         lane_ids[j] = i
-                        lanes[i] = _Lane(r, self._budget(r))
+                        lane = _Lane(r, self._budget(r))
+                        if self.paged:
+                            lane.prompt_len = max(len(enc[r.uid]), 1)
+                            n_pb = -(-lane.prompt_len // self.block_size)
+                            lane.blocks = pool.alloc(n_pb)
+                            lane.reserved = self._reservation(
+                                lane.prompt_len, lane.budget) - n_pb
+                            block_rows[j, :n_pb] = lane.blocks
+                            host_table[i] = block_rows[j]
+                            table_dirty = True
+                        lanes[i] = lane
                         host_done[i] = False
-                    last, new_cache = prefill_jit(
-                        self.params, self.cfg, jnp.asarray(toks),
-                        jnp.asarray(lens), self.s_max)
-                    cache, cur_logits = insert_lanes(
-                        cache, cur_logits, new_cache, last,
-                        jnp.asarray(lane_ids))
+                    if self.paged:
+                        # prefill dense at the prompt bucket only, then
+                        # scatter the rows into their allocated pages
+                        last, new_cache = prefill_jit(
+                            self.params, self.cfg, jnp.asarray(toks),
+                            jnp.asarray(lens), bucket)
+                        cache, cur_logits = insert_lanes_paged(
+                            cache, cur_logits, new_cache, last,
+                            jnp.asarray(lane_ids), jnp.asarray(block_rows))
+                    else:
+                        last, new_cache = prefill_jit(
+                            self.params, self.cfg, jnp.asarray(toks),
+                            jnp.asarray(lens), self.s_max)
+                        cache, cur_logits = insert_lanes(
+                            cache, cur_logits, new_cache, last,
+                            jnp.asarray(lane_ids))
                     stats.prefills += 1
                     stats.prefill_prompts += len(grp)
 
@@ -207,6 +359,26 @@ class Scheduler:
 
             # ---- one decode round over the whole pool ----
             r = self.round_tokens
+            if self.paged:
+                # grow each live lane's block table one round ahead of
+                # its decode position (drawn from its reservation, so
+                # this can never fail); writes past the budget spill
+                # into the trash block by construction
+                for i in live:
+                    lane = lanes[i]
+                    upto = min(lane.prompt_len + lane.generated + r,
+                               lane.prompt_len + lane.budget)
+                    grow = -(-upto // self.block_size) - len(lane.blocks)
+                    if grow > 0:
+                        new_ids = pool.alloc(grow)
+                        host_table[i, len(lane.blocks):
+                                   len(lane.blocks) + grow] = new_ids
+                        lane.blocks.extend(new_ids)
+                        lane.reserved -= grow
+                        table_dirty = True
+                if table_dirty:
+                    cache["block_tables"] = jnp.asarray(host_table)
+                    table_dirty = False
             cache, cur_logits, _, toks = decode_round(
                 self.params, self.cfg, self.gcfg, cache, cur_logits,
                 jnp.asarray(host_done), key, jnp.int32(global_step), r)
@@ -243,4 +415,26 @@ class Scheduler:
                         finalize(i, cancelled=True)
 
         stats.wall_s = time.time() - t0
+        self._cache_stats(stats, cache, pool)
         return [completions[r.uid] for r in requests], stats
+
+    # ------------------------------------------------------------------
+    def _cache_stats(self, stats: SchedStats, cache, pool: Optional[BlockPool]):
+        """Fill the K/V-footprint fields (see SchedStats)."""
+        if not self.cfg.has_attention:
+            return
+        kv_bytes = cache["k"].nbytes + cache["v"].nbytes
+        for s in ("k_scale", "v_scale"):
+            if s in cache:
+                kv_bytes += cache[s].nbytes
+        if self.paged:
+            per_block = kv_bytes // (self.pool_blocks + 1)   # incl. trash
+            per_slot = per_block // self.block_size
+            sc = model_lib.cache_length(self.cfg, self.s_max)
+            stats.pool_blocks = self.pool_blocks
+            stats.peak_blocks_in_use = pool.peak_in_use
+            stats.peak_cache_bytes = per_block * pool.peak_in_use
+            stats.dense_cache_bytes = per_slot * sc * self.n_lanes
+        else:
+            stats.peak_cache_bytes = kv_bytes
+            stats.dense_cache_bytes = kv_bytes

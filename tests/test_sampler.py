@@ -1,0 +1,64 @@
+"""Sampler contracts: greedy fallback and the documented top-p
+tie-at-the-nucleus-edge boundary behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.sampler import sample_tokens, top_p_mask
+
+
+def test_greedy_when_temperature_zero():
+    logits = jnp.asarray([[0.1, 3.0, -1.0], [2.0, 0.0, 1.0]])
+    out = sample_tokens(jax.random.PRNGKey(0), logits, temperature=0.0,
+                        top_p=0.1)
+    assert out.tolist() == [1, 0]
+
+
+def test_top_p_keeps_nucleus_prefix():
+    # probs ~ [0.643, 0.236, 0.087, 0.032, 0.002]: top_p=0.7 keeps the
+    # first two (0.643 < 0.7 <= 0.879), masks the rest
+    logits = jnp.log(jnp.asarray([[0.643, 0.236, 0.087, 0.032, 0.002]]))
+    masked = np.asarray(top_p_mask(logits, 0.7))
+    assert np.all(np.isfinite(masked[0, :2]))
+    assert np.all(np.isinf(masked[0, 2:])) and np.all(masked[0, 2:] < 0)
+
+
+def test_top_p_boundary_ties_are_all_kept():
+    """Documented contract: logits exactly equal to the one at the
+    nucleus cutoff all survive, even those whose cumulative rank falls
+    outside top_p — the kept set must not depend on sort tie order."""
+    # three exactly-tied logits at the edge; p_tied ~ 0.245 each, head
+    # ~ 0.221: cumulative crosses top_p=0.5 inside the tied run
+    logits = jnp.asarray([[1.0, 1.1, 1.0, 1.0, -4.0]])
+    masked = np.asarray(top_p_mask(logits, 0.5))
+    assert np.all(np.isfinite(masked[0, [0, 1, 2, 3]]))   # head + all 3 ties
+    assert np.isinf(masked[0, 4]) and masked[0, 4] < 0
+    # permutation invariance of the kept set
+    perm = np.asarray([4, 2, 0, 3, 1])
+    masked_p = np.asarray(top_p_mask(jnp.asarray(np.asarray(logits)[:, perm]),
+                                     0.5))
+    np.testing.assert_array_equal(np.isfinite(masked_p[0]),
+                                  np.isfinite(masked[0])[perm])
+
+
+def test_top_p_one_keeps_everything():
+    logits = jnp.asarray([[0.3, -2.0, 1.4, 0.0]])
+    # top_p=1.0 short-circuits in sample_tokens; the mask itself must
+    # also be a no-op at the boundary value
+    masked = np.asarray(top_p_mask(logits, 1.0))
+    assert np.all(np.isfinite(masked))
+
+
+def test_sampled_tokens_respect_mask():
+    # with top_p=0.5 on the tied distribution above, token 4 is masked:
+    # no key may ever produce it, while every kept tie stays reachable
+    logits = jnp.broadcast_to(jnp.asarray([[1.0, 1.1, 1.0, 1.0, -4.0]]),
+                              (64, 5))
+    seen = set()
+    for s in range(20):
+        toks = sample_tokens(jax.random.PRNGKey(s), logits, temperature=1.0,
+                             top_p=0.5)
+        seen.update(np.asarray(toks).tolist())
+    assert 4 not in seen
+    assert {0, 1, 2, 3} <= seen

@@ -1,7 +1,7 @@
 """Continuous-batching scheduler: round-chunked decode equivalence with
-the single-scan engine, lane admission/eviction over a backlog, bucket
-selection, and vote-aware early stopping as real (not accounted)
-token savings."""
+the one-shot engine (dense and block-paged caches), lane
+admission/eviction over a backlog, bucket selection, and vote-aware
+early stopping as real (not accounted) token savings."""
 
 import jax
 import numpy as np
@@ -77,6 +77,79 @@ def test_round_decode_bitmatches_engine(setup):
         assert np.array_equal(c.tokens, eng_toks[i][: eng_lens[i]])
     assert stats.rounds == 4            # ceil(24 / 6)
     assert stats.cancelled == 0
+
+
+# ----------------------------------------------------------------------
+# Equivalence: block-paged cache == dense cache == one-shot engine
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("block_size", [8, 16])
+def test_paged_bitmatches_engine_greedy(setup, block_size):
+    """Greedy decoding through the block-paged cache must reproduce the
+    dense one-shot engine token-for-token (the paged cache is a layout
+    change, not a numerics change)."""
+    params, cfg, tok = setup
+    prompts = ["Q: Compute 1 + 1.\nA: ", "Q: hi\nA: ",
+               "Q: what is 9 * 9?\nA: ", "Q: x\nA: "]
+    gcfg = GenConfig(max_new_tokens=24, temperature=0.0)
+    toks, lens = encode_prompts(prompts, tok, MAXP)
+    key = jax.random.PRNGKey(7)
+    eng_toks, eng_lens = generate(params, cfg, toks, lens, key, gcfg)
+
+    sched = Scheduler(params, cfg, tok, gcfg, n_lanes=4, round_tokens=6,
+                      max_prompt_len=MAXP, buckets=(MAXP,), admit_buckets=(4,),
+                      paged=True, block_size=block_size)
+    comps, stats = sched.run([Request(uid=i, prompt=p)
+                              for i, p in enumerate(prompts)], key)
+    for i, c in enumerate(comps):
+        assert c.gen_len == eng_lens[i]
+        assert np.array_equal(c.tokens, eng_toks[i][: eng_lens[i]])
+    # the paged pool held strictly less than the dense cache would
+    assert 0 < stats.peak_cache_bytes < stats.dense_cache_bytes
+    assert sched.pool.in_use == 0 and sched.pool.reserved == 0
+
+
+def test_paged_bitmatches_dense_scheduler_sampled(setup):
+    """Sampled decoding: the paged scheduler draws exactly the tokens
+    the dense scheduler draws (same master key, lane pool, padding) —
+    the gathered page view is laid out slot-for-slot like the dense
+    cache, so even the softmax sums are bit-identical."""
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=20, temperature=0.7)
+    reqs = [Request(uid=i, prompt=f"Q: item {i} says hello\nA: ")
+            for i in range(10)]
+    key = jax.random.PRNGKey(3)
+    runs = {}
+    for paged in (False, True):
+        sched = Scheduler(params, cfg, tok, gcfg, n_lanes=4, round_tokens=5,
+                          max_prompt_len=MAXP, paged=paged, block_size=8)
+        runs[paged], _ = sched.run(reqs, key)
+    for cd, cp in zip(runs[False], runs[True]):
+        assert cd.gen_len == cp.gen_len
+        assert np.array_equal(cd.tokens, cp.tokens)
+
+
+def test_paged_budget_crossing_mid_round_matches_dense(setup):
+    """Budgets that end mid-round make lanes keep stepping past their
+    budget inside the jitted round: those writes must spill into the
+    trash block / the lane's own unread slots without corrupting other
+    lanes (paged tokens still match dense exactly)."""
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=32, temperature=0.7, eos_id=-1)
+    # budget 10 with round_tokens 4: third round crosses the budget
+    reqs = [Request(uid=i, prompt=f"Q: item {i}\nA: ", max_new_tokens=10)
+            for i in range(8)]
+    key = jax.random.PRNGKey(11)
+    runs = {}
+    for paged in (False, True):
+        sched = Scheduler(params, cfg, tok, gcfg, n_lanes=4, round_tokens=4,
+                          max_prompt_len=MAXP, paged=paged, block_size=8)
+        runs[paged], stats = sched.run(reqs, key)
+        if paged:
+            assert sched.pool.in_use == 0 and sched.pool.reserved == 0
+    for cd, cp in zip(runs[False], runs[True]):
+        assert cd.gen_len == cp.gen_len == 10
+        assert np.array_equal(cd.tokens, cp.tokens)
 
 
 # ----------------------------------------------------------------------
