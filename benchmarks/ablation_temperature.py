@@ -16,7 +16,6 @@ import numpy as np
 from benchmarks import common
 from repro.core import routing as routing_lib
 from repro.core.experiment import SCALES, eval_items, get_models, make_slm
-from repro.data.tasks import is_correct
 
 
 BENCHES = ("modchain", "parity")

@@ -9,13 +9,11 @@ import os
 import time
 
 import jax
-import numpy as np
 
 from repro.core import metrics as metrics_lib
 from repro.core import routing as routing_lib
 from repro.core.cost import DEFAULT
-from repro.core.experiment import (SCALES, eval_items, get_models, make_slm,
-                                   stage_questions)
+from repro.core.experiment import eval_items, get_models, make_slm
 from repro.data.pipeline import format_prompt
 from repro.data.tasks import IN_DOMAIN, OUT_OF_DOMAIN
 

@@ -5,7 +5,6 @@ the in-domain and OOD benchmarks."""
 from __future__ import annotations
 
 import jax
-import numpy as np
 
 from benchmarks import common
 from repro.core import baselines as bl

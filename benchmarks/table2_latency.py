@@ -65,10 +65,15 @@ def format_table(table, tau) -> str:
 # scheduler's vote-aware early stop
 # ----------------------------------------------------------------------
 
+def _param_count(params) -> int:
+    return int(sum(x.size for x in jax.tree_util.tree_leaves(params)))
+
+
 def _generated_row(slm, items, llm, tau: float, k: int, mode: str) -> dict:
     # no_early_stop first: it pays the jit compiles, so the early-stop
     # wall-clock (the headline) is measured warm
     row = {}
+    n_params = _param_count(slm.params)
     for name, early in (("no_early_stop", False), ("early_stop", True)):
         rows, stats = routing_lib.cascade_outcomes_streamed(
             slm, items, llm, jax.random.PRNGKey(23), mode=mode, k=k,
@@ -79,6 +84,18 @@ def _generated_row(slm, items, llm, tau: float, k: int, mode: str) -> dict:
             "generated_tokens": int(stats.generated_tokens),
             "wall_s": stats.wall_s, "rounds": stats.rounds,
             "cancelled_lanes": stats.cancelled,
+            # prefill cost: tokens the prefill path really processed (a
+            # shared vote group's prompt counts once, not K times) and
+            # the ~2*N*T dense-FLOPs proxy per question — the columns
+            # where --share-prefix's K-fold cut is visible
+            "prefill_tokens": int(stats.prefill_tokens),
+            "prefill_prompts": int(stats.prefill_prompts),
+            "prefill_flops_per_q": 2.0 * n_params * stats.prefill_tokens
+                                   / max(len(items), 1),
+            "shared_lanes": int(stats.shared_lanes),
+            "cow_copies": int(stats.cow_copies),
+            "prefix_hits": int(stats.prefix_hits),
+            "prefix_hit_blocks": int(stats.prefix_hit_blocks),
             # K/V footprint: peak bytes actually held vs the dense cache
             # at the same lane count (equal when running dense)
             "peak_cache_bytes": int(stats.peak_cache_bytes),
@@ -108,14 +125,18 @@ def run_generated(scale, tau: float = 0.6, k=None, mode: str = "FCV",
 
 def run_generated_smoke(n_items: int = 8, k: int = 8, tau: float = 1.0,
                         mode: str = "FCV", paged: bool = False,
-                        block_size: int = 32):
+                        block_size: int = 32, share_prefix: bool = False):
     """No-training smoke: an untrained tiny SLM still shows the
     mechanism.  At tau=1.0 (the paper's strict column) the first
     rejected vote already forces routing, so whole groups are killed
     after their first lane completes and the remaining lanes really
     decode fewer tokens.  With ``paged=True`` the same run uses the
     block-paged KV cache, and the cache columns show the peak block
-    footprint against the dense cache at the same lane count."""
+    footprint against the dense cache at the same lane count.  With
+    ``share_prefix=True`` on top, each question's K vote lanes are
+    prefilled once and share their prompt blocks — the prefill-token
+    and prefill-FLOPs columns drop ~K-fold and peak blocks drop further
+    at the same lane count."""
     from repro.core.experiment import TINY, model_config
     from repro.models import model as model_lib
 
@@ -124,6 +145,7 @@ def run_generated_smoke(n_items: int = 8, k: int = 8, tau: float = 1.0,
     slm.round_tokens = 8       # finer rounds -> earlier kills in the smoke
     slm.paged = paged
     slm.block_size = block_size
+    slm.share_prefix = share_prefix
     items = eval_items(TINY, "arith")[:n_items]
     llm = common.oracle_llm()
     return {"arith": _generated_row(slm, items, llm, tau, k, mode)}
@@ -131,12 +153,15 @@ def run_generated_smoke(n_items: int = 8, k: int = 8, tau: float = 1.0,
 
 def format_generated(table, tau: float) -> str:
     """One line per benchmark; ``cache(es)`` is the peak K/V footprint
-    of the early-stop run and ``dense-eq`` the dense cache at the same
-    lane count (identical unless the run was paged)."""
+    of the early-stop run, ``dense-eq`` the dense cache at the same
+    lane count (identical unless the run was paged), and ``prefill``
+    the prompt tokens the prefill path really processed (drops ~K-fold
+    with --share-prefix)."""
     lines = [f"compute early stop @ tau={tau}",
              f"{'benchmark':12s} {'gen(es)':>9s} {'gen(full)':>10s} "
              f"{'cut':>6s} {'wall(es)':>9s} {'wall(full)':>11s} {'killed':>7s}"
-             f" {'cache(es)':>10s} {'dense-eq':>10s} {'hbm-cut':>8s}"]
+             f" {'prefill':>8s} {'cache(es)':>10s} {'dense-eq':>10s} "
+             f"{'hbm-cut':>8s}"]
     for b, row in table.items():
         es, full = row["early_stop"], row["no_early_stop"]
         lines.append(
@@ -144,6 +169,7 @@ def format_generated(table, tau: float) -> str:
             f"{full['generated_tokens']:10d} {row['generated_cut']:6.0%} "
             f"{es['wall_s']:8.2f}s {full['wall_s']:10.2f}s "
             f"{es['cancelled_lanes']:7d} "
+            f"{es['prefill_tokens']:8d} "
             f"{es['peak_cache_bytes'] / 2**20:9.2f}M "
             f"{es['dense_cache_bytes'] / 2**20:9.2f}M "
             f"{row['cache_cut']:8.0%}")
@@ -166,13 +192,19 @@ if __name__ == "__main__":
                          "(smoke only; reports peak blocks vs dense)")
     ap.add_argument("--block-size", type=int, default=32,
                     help="cache slots per block with --paged")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="with --paged: prefill each K-vote group once "
+                         "and share its prompt blocks (refcount + CoW)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the result table as JSON (CI artifact)")
     args = ap.parse_args()
+    if args.share_prefix and not args.paged:
+        ap.error("--share-prefix requires --paged")
     if args.smoke:
         args.tau = 1.0 if args.tau is None else args.tau
         t = run_generated_smoke(tau=args.tau, k=args.k or 8,
-                                paged=args.paged, block_size=args.block_size)
+                                paged=args.paged, block_size=args.block_size,
+                                share_prefix=args.share_prefix)
     else:
         from repro.core.experiment import SCALES
         if args.paged:
@@ -182,5 +214,6 @@ if __name__ == "__main__":
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"tau": args.tau, "paged": args.paged,
+                       "share_prefix": args.share_prefix,
                        "smoke": args.smoke, "table": t}, f, indent=2)
     print(format_generated(t, args.tau))

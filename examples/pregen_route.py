@@ -7,7 +7,6 @@ classifier baselines (BERT-style, KNN, HybridLLM) on one benchmark.
 import argparse
 
 import jax
-import numpy as np
 
 from repro.core import baselines as bl
 from repro.core import metrics as metrics_lib
@@ -17,7 +16,6 @@ from repro.core.experiment import SCALES, eval_items, get_models, make_slm, \
     stage_questions
 from repro.core.metrics import QuestionRecord
 from repro.data.pipeline import format_prompt
-from repro.data.tasks import is_correct
 
 
 def main():

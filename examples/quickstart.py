@@ -12,11 +12,8 @@ import jax
 import numpy as np
 
 from repro.core import routing as routing_lib
-from repro.core.cost import DEFAULT
 from repro.core.experiment import SCALES, eval_items, get_models, make_slm
 from repro.core.metrics import outcome_latency
-from repro.data.pipeline import format_prompt
-from repro.data.tasks import is_correct
 
 
 def main():

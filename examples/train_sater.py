@@ -9,7 +9,6 @@ checkpoints after every stage and a token-compression report
 
 import argparse
 import os
-import shutil
 
 import jax
 import numpy as np

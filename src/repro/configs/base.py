@@ -10,8 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-import math
-from typing import Optional, Tuple
+from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)

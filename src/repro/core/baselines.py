@@ -20,7 +20,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import hashlib
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp

@@ -13,7 +13,12 @@ terminal tier always answers.
 
 Questions are streamed: each tier batches only its surviving questions
 through the serving scheduler, and with ``stream_early_stop`` a tier's
-vote lanes are killed in compute as soon as its tau is decided.
+vote lanes are killed in compute as soon as its tau is decided.  Each
+question's K vote lanes travel as one RequestGroup, so a tier whose
+``slm.share_prefix`` is set (paged serving) prefills every surviving
+question once and shares its prompt KV blocks across the K lanes — the
+"prompt once" cost model below is then real serving behaviour, not an
+accounting convention.
 
 Semantics kept from the paper's single-hop cascade:
   * per-tier K parallel samples + RCV/FCV weighted voting with early

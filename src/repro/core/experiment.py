@@ -17,11 +17,10 @@ benchmarks/artifacts), keyed by the experiment scale tag.
 from __future__ import annotations
 
 import dataclasses
-import json
 import os
 import random
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +29,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import routing as routing_lib
 from repro.core.dpo import DPOConfig, make_full_dpo_step
-from repro.core.preferences import SampledQuestion, build_preference_pairs
+from repro.core.preferences import build_preference_pairs
 from repro.core.refusal import build_refusal_dataset
 from repro.data import tasks as tasks_lib
 from repro.data.pipeline import format_prompt, preference_batches, sft_batches

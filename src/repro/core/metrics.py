@@ -15,7 +15,7 @@ Conventions (faithful to the paper):
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 

@@ -10,11 +10,10 @@ instead costs >2% accuracy — we keep their choice.)
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.confidence import Vote
 from repro.data.tasks import TaskItem, is_correct
 from repro.data.pipeline import format_prompt
 

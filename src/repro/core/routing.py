@@ -26,7 +26,7 @@ from repro.data.pipeline import format_prompt
 from repro.data.tasks import TaskItem, is_correct, stable_hash
 from repro.data.tokenizer import CharTokenizer
 from repro.serving.batch import GenConfig, make_buckets, pick_bucket
-from repro.serving.scheduler import (Completion, Request, SchedStats,
+from repro.serving.scheduler import (Completion, Request, RequestGroup,
                                      Scheduler, StopPolicy)
 
 
@@ -41,6 +41,8 @@ class SLM:
     round_tokens: int = 16       # decode round length (early-stop grain)
     paged: bool = False          # block-paged KV cache (serving/block_pool)
     block_size: int = 32         # cache slots per block when paged
+    share_prefix: bool = False   # prefill vote groups once + prefix cache
+    #                              (requires paged; see serving/scheduler)
 
 
 @dataclasses.dataclass
@@ -86,7 +88,8 @@ def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
     return Scheduler(slm.params, slm.cfg, slm.tokenizer, slm.gcfg,
                      n_lanes=n_lanes, round_tokens=slm.round_tokens,
                      max_prompt_len=slm.max_prompt_len, paged=slm.paged,
-                     block_size=slm.block_size)
+                     block_size=slm.block_size,
+                     share_prefix=slm.share_prefix)
 
 
 def batch_generate(slm: SLM, prompts: Sequence[str], key):
@@ -98,11 +101,18 @@ def batch_generate(slm: SLM, prompts: Sequence[str], key):
 
 
 def _vote_requests(items: Sequence[TaskItem],
-                   levels: Sequence[Optional[float]]) -> List[Request]:
+                   levels: Sequence[Optional[float]]) -> List[RequestGroup]:
+    """One RequestGroup of K vote lanes per question.  A sharing
+    scheduler admits each group atomically and prefills its prompt once
+    (FCV/SC levels are uniform, so the K prompts are token-identical);
+    a dense or non-sharing scheduler dissolves the groups into the same
+    K independent requests as before."""
     k = len(levels)
-    return [Request(uid=qi * k + j, prompt=format_prompt(item, conf_level=lvl),
-                    group=qi, meta={"level": lvl})
-            for qi, item in enumerate(items) for j, lvl in enumerate(levels)]
+    return [RequestGroup([
+        Request(uid=qi * k + j, prompt=format_prompt(item, conf_level=lvl),
+                group=qi, meta={"level": lvl})
+        for j, lvl in enumerate(levels)])
+        for qi, item in enumerate(items)]
 
 
 def _parse_completion(comp: Completion) -> Vote:
@@ -122,7 +132,7 @@ def sample_k(slm: SLM, items: Sequence[TaskItem], levels: Sequence[Optional[floa
     """
     reqs = _vote_requests(items, levels)
     key = jax.random.fold_in(key, seed_offset)
-    comps, _ = make_scheduler(slm, len(reqs)).run(reqs, key)
+    comps, _ = make_scheduler(slm, len(items) * len(levels)).run(reqs, key)
     k = len(levels)
     return [[_parse_completion(c) for c in comps[qi * k:(qi + 1) * k]]
             for qi in range(len(items))]
@@ -222,13 +232,19 @@ def sample_k_streamed(slm: SLM, items: Sequence[TaskItem],
     Unlike sample_k, stopped lanes really generate fewer tokens; the
     decisions come from the policy (or the full vote when it never
     fired).  Returns ([StreamResult per item], SchedStats).
+
+    Vote groups are submitted as RequestGroups: with
+    ``slm.share_prefix`` (paged), each question's K lanes are admitted
+    atomically and prefilled once, the prompt KV refcount-shared across
+    the group — a kill by VoteEarlyStop then releases shared blocks by
+    decrementing holds (the last holder frees), never double-freeing.
     """
     reqs = _vote_requests(items, levels)
     key = jax.random.fold_in(key, seed_offset)
     policy = (VoteEarlyStop(tau, {qi: levels for qi in range(len(items))})
               if early_stop else None)
-    comps, stats = make_scheduler(slm, len(reqs)).run(reqs, key,
-                                                      stop_policy=policy)
+    comps, stats = make_scheduler(slm, len(items) * len(levels)).run(
+        reqs, key, stop_policy=policy)
     k = len(levels)
     out: List[StreamResult] = []
     for qi in range(len(items)):

@@ -10,12 +10,12 @@ Batch kinds:
 from __future__ import annotations
 
 import random
-from typing import Iterator, List, Optional, Sequence, Tuple
+from typing import Iterator, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.data.tasks import CONF_PROMPT, TaskItem
-from repro.data.tokenizer import CharTokenizer, default_tokenizer
+from repro.data.tokenizer import CharTokenizer
 
 
 def format_prompt(item: TaskItem, conf_level: Optional[float] = None) -> str:

@@ -17,10 +17,8 @@ embedding shards d_model instead).
 
 from __future__ import annotations
 
-from typing import Optional
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig

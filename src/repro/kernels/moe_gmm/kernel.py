@@ -10,7 +10,6 @@ expert.  Block sizes are 128-multiples (MXU systolic dims).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

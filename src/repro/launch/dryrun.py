@@ -24,7 +24,6 @@ Usage:
 import argparse
 import dataclasses
 import json
-import re
 import time
 import traceback
 
@@ -36,7 +35,7 @@ from repro.configs import ARCH_IDS, INPUT_SHAPES, ModelConfig, get_config
 from repro.distributed import sharding as sh
 from repro.launch.analytics import (analytic_bytes, analytic_flops,
                                     collective_bytes_structural)
-from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import model as model_lib
 from repro.training import lora as lora_lib
 from repro.training.optimizer import adamw, cosine_warmup_schedule

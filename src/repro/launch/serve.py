@@ -9,6 +9,13 @@ mesh context, keeping the pjit path exercised.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
       --requests 8 --lanes 4 --new-tokens 16 --round-tokens 8
+
+With ``--paged --share-prefix``, each request becomes a K-lane vote
+group (K = --group-size): the group's prompt is prefilled once, its
+blocks are refcount-shared across all K block tables with
+copy-on-write on the last partial block, and the serve summary reports
+the pool/refcount counters (shared lanes, CoW clones, prefix-cache
+hits, end-of-run pool state).
 """
 
 from __future__ import annotations
@@ -23,7 +30,7 @@ from repro.configs import get_config, smoke_variant
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import model as model_lib
 from repro.serving.batch import GenConfig
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import Request, RequestGroup, Scheduler
 
 
 def main():
@@ -39,7 +46,15 @@ def main():
                     help="serve through the block-paged KV cache")
     ap.add_argument("--block-size", type=int, default=32,
                     help="cache slots per block with --paged")
+    ap.add_argument("--share-prefix", action="store_true",
+                    help="with --paged: group requests into K-lane vote "
+                         "groups, prefill each group once and share its "
+                         "prompt blocks (refcount + copy-on-write)")
+    ap.add_argument("--group-size", type=int, default=4,
+                    help="lanes per vote group with --share-prefix")
     args = ap.parse_args()
+    if args.share_prefix and not args.paged:
+        ap.error("--share-prefix requires --paged")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -58,12 +73,21 @@ def main():
                         rng.randint(args.prompt_len // 2,
                                     args.prompt_len + 1),)).tolist())
             for i in range(args.requests)]
+    if args.share_prefix:
+        # K-vote sampling shape: every group is one prompt fanned out to
+        # --group-size lanes — the scheduler prefills it once and maps
+        # its prompt blocks read-only into every lane
+        reqs = [RequestGroup([
+            Request(uid=g.uid * args.group_size + j, tokens=g.tokens,
+                    group=g.uid) for j in range(args.group_size)])
+            for g in reqs]
     gcfg = GenConfig(max_new_tokens=args.new_tokens, temperature=0.0,
                      eos_id=-1)     # greedy, run every request to budget
     sched = Scheduler(params, cfg, tokenizer=None, gcfg=gcfg,
                       n_lanes=args.lanes, round_tokens=args.round_tokens,
                       max_prompt_len=args.prompt_len, paged=args.paged,
-                      block_size=args.block_size)
+                      block_size=args.block_size,
+                      share_prefix=args.share_prefix)
 
     with mesh:
         t0 = time.time()
@@ -73,7 +97,8 @@ def main():
     tok_total = sum(c.gen_len for c in comps)
     print(f"served {len(comps)} requests over {args.lanes} lanes in {dt:.2f}s")
     print(f"  rounds={stats.rounds} prefills={stats.prefills} "
-          f"(prompts={stats.prefill_prompts}) "
+          f"(prompts={stats.prefill_prompts}, "
+          f"tokens={stats.prefill_tokens}) "
           f"generated={stats.generated_tokens} tokens")
     print(f"  {tok_total} tokens total, "
           f"{1000 * dt / max(tok_total, 1):.1f} ms/tok, "
@@ -82,7 +107,16 @@ def main():
         print(f"  paged cache: peak {stats.peak_blocks_in_use}/"
               f"{stats.pool_blocks} blocks "
               f"({stats.peak_cache_bytes / 2**20:.2f} MiB vs dense "
-              f"{stats.dense_cache_bytes / 2**20:.2f} MiB)")
+              f"{stats.dense_cache_bytes / 2**20:.2f} MiB), "
+              f"admission blocked {stats.admission_blocked}x")
+    if args.share_prefix:
+        pool = sched.pool
+        print(f"  prefix sharing: {stats.shared_lanes} lanes rode a "
+              f"shared prefill, {stats.cow_copies} CoW block clones, "
+              f"prefix cache {stats.prefix_hits} hits "
+              f"({stats.prefix_hit_blocks} blocks reused); "
+              f"pool holds registered {pool.shared_holds}, "
+              f"end state in_use={pool.in_use} reserved={pool.reserved}")
     if comps:
         print("sample request 0 tokens:", comps[0].tokens[:16].tolist())
 

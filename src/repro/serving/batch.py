@@ -29,6 +29,13 @@ understands (dense or block-paged), while lane insertion is
 layout-specific — ``insert_lanes`` scatters dense cache rows,
 ``insert_lanes_paged`` scatters prompt K/V into allocator-assigned
 pool pages (see serving/block_pool.py and serving/scheduler.py).
+
+Prefix sharing adds a third insert path: ``prefill_shared`` prefills
+one row per *vote group* (not per lane) and ``insert_lanes_shared``
+scatters that single row's prompt K/V into the pool once, then stitches
+the group's K lanes onto it — each lane's block table maps the same
+physical prompt blocks read-only, and only the last partial block is
+cloned per lane (``copy_blocks``) so decode appends never collide.
 """
 
 from __future__ import annotations
@@ -100,6 +107,19 @@ def pad_token_rows(rows: Sequence[Sequence[int]], pad_id: int,
 def prefill_jit(params, cfg: ModelConfig, prompts, lengths, max_len: int):
     """Bucket-shaped prefill: (last-token logits (B,V), cache sized for
     max_len total positions)."""
+    return model_lib.prefill(params, cfg, tokens=prompts, lengths=lengths,
+                             max_len=max_len, last_only=True)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_len"))
+def prefill_shared(params, cfg: ModelConfig, prompts, lengths, max_len: int):
+    """Prefill for shared-prefix group admission: one row per *group*
+    (the K vote lanes of a question share it), instead of one row per
+    lane as in :func:`prefill_jit`.  Numerically identical to
+    ``prefill_jit`` — it is a separate jitted entry point so the
+    scheduler's shared path is observable (tests count its invocations
+    to prove one-prefill-per-question) and so its compile cache keys
+    don't mix with the per-lane path's."""
     return model_lib.prefill(params, cfg, tokens=prompts, lengths=lengths,
                              max_len=max_len, last_only=True)
 
@@ -199,6 +219,73 @@ def insert_lanes_paged(cache, cur_logits, new_cache, new_logits, lanes,
     cur_logits = cur_logits.at[lanes].set(
         new_logits.astype(cur_logits.dtype), mode="drop")
     return out, cur_logits
+
+
+@jax.jit
+def insert_lanes_shared(cache, cur_logits, new_cache, new_logits, lane_rows,
+                        block_rows):
+    """Scatter one prefilled *group* row into the pool once, then fan its
+    state out to the group's K lanes.
+
+    ``new_cache`` rows are per group (``prefill_shared``), not per lane:
+    row j's prompt K/V is written into the pool exactly once through
+    ``block_rows[j]`` (same flat-slot mapping as ``insert_lanes_paged``;
+    trash-block (0) entries absorb bucket right-padding, dummy rows, and
+    positions whose blocks were satisfied by the scheduler's prefix
+    cache — those slots already hold the identical K/V and are left
+    untouched so earlier holders keep bit-identical reads).  The
+    per-lane state — last-token logits, ``pos``, and any conv/ssm state
+    — is *replicated* to every lane of the row:
+
+    lane_rows: (Nb, Kmax) int32 target lanes per row, ``>= n_lanes``
+    sentinel beyond a row's real lane count (dropped by the scatters);
+    block_rows: (Nb, max_blocks) int32 write-side page ids.
+
+    Host-owned block tables are not written here; each lane's *read*
+    table (shared prompt blocks + its private CoW tail) is pushed by the
+    scheduler before the next decode round.
+    """
+    L, _, bucket = new_cache["k"].shape[:3]
+    pb, bs = cache["k"].shape[1], cache["k"].shape[2]
+    p = jnp.arange(bucket, dtype=jnp.int32)
+    tgt = (block_rows[:, p // bs] * bs + p[None, :] % bs).reshape(-1)
+
+    out = dict(cache)
+    for name in ("k", "v"):
+        flat = cache[name].reshape(L, pb * bs, *cache[name].shape[3:])
+        new = new_cache[name].reshape(L, -1, *new_cache[name].shape[3:])
+        out[name] = flat.at[:, tgt].set(new.astype(flat.dtype)).reshape(
+            cache[name].shape)
+
+    nb, kmax = lane_rows.shape
+    lanes = lane_rows.reshape(-1)                          # (Nb*Kmax,)
+    rows = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), kmax)
+    for name in ("conv", "ssm"):
+        if name in cache:
+            out[name] = cache[name].at[:, lanes].set(
+                new_cache[name][:, rows].astype(cache[name].dtype),
+                mode="drop")
+    out["pos"] = cache["pos"].at[lanes].set(new_cache["pos"][rows],
+                                            mode="drop")
+    cur_logits = cur_logits.at[lanes].set(
+        new_logits[rows].astype(cur_logits.dtype), mode="drop")
+    return out, cur_logits
+
+
+@jax.jit
+def copy_blocks(cache, src, dst):
+    """Clone whole pool blocks: ``k/v[:, dst[i]] <- k/v[:, src[i]]``.
+
+    The device half of copy-on-write (block_pool.BlockPool.cow): when a
+    vote lane needs a private copy of the group's last partial prompt
+    block, the allocator picks the ids and this kernel moves the bytes.
+    Pairs are padded to a bucket with (0, 0) — trash overwriting trash —
+    so the compile count stays O(#pair buckets).
+    """
+    out = dict(cache)
+    for name in ("k", "v"):
+        out[name] = cache[name].at[:, dst].set(cache[name][:, src])
+    return out
 
 
 def first_eos_lengths(toks: np.ndarray, eos_id: int) -> np.ndarray:

@@ -31,6 +31,33 @@ lanes killed mid-flight by a ``StopPolicy`` such as ``VoteEarlyStop``,
 which is what turns SATER's confidence-based rejection into reclaimed
 HBM, not just skipped compute.
 
+Sharing: refcounts and copy-on-write
+------------------------------------
+Blocks are *reference counted* so one physical block can back the same
+logical prompt positions in many lanes at once — the substrate for
+SATER's K-vote groups (K lanes, one prompt) and for cross-request
+instruction-prefix sharing (serving/scheduler.py):
+
+  * ``alloc`` hands out blocks with refcount 1;
+  * ``share(ids)`` registers one more holder per block (a lane whose
+    block table maps the block read-only, or a prefix-cache entry
+    keeping it warm);
+  * ``free(ids)`` releases one hold per listed block — a block returns
+    to the free list only when its *last* holder releases it, so a
+    ``VoteEarlyStop`` kill that frees a vote lane's table decrements
+    the shared prompt blocks and physically frees only the lane's
+    private tail (no double-free by construction);
+  * ``cow(id)`` is the copy-on-write primitive: called by a lane about
+    to *append into* the last, partially-filled prompt block.  With
+    refcount 1 the caller already owns the block exclusively and keeps
+    it (no copy); otherwise the caller's hold is dropped and a private
+    block is drawn from its reservation — the caller must then copy
+    the block's device contents before writing (batch.copy_blocks).
+
+Shared holds cost reservation only once: the group that allocates the
+prompt blocks reserves them; extra holders reserve only their private
+tail (growth blocks + at most one CoW copy).
+
 Worked example (the block-size / n_lanes / HBM trade-off)
 ---------------------------------------------------------
 Take an 8B-class config: 32 layers, 8 KV heads, head_dim 128, bf16.
@@ -60,7 +87,7 @@ bf16 — see ``kernels/paged_attention``).
 
 from __future__ import annotations
 
-from typing import List
+from typing import Dict, List, Tuple
 
 
 class BlockPool:
@@ -84,8 +111,12 @@ class BlockPool:
         # physical block alloc'd to two live lanes) instead of erroring.
         self._free: List[int] = list(range(n_blocks, 0, -1))
         self._free_set = set(self._free)
+        # holder count per live block; absent / 0 <=> block is free
+        self._refs: Dict[int, int] = {}
         self.reserved = 0
         self.peak_in_use = 0
+        self.cow_copies = 0          # cow() calls that materialized a copy
+        self.shared_holds = 0        # holders registered via share()
 
     # -- queries -------------------------------------------------------
     @property
@@ -101,6 +132,10 @@ class BlockPool:
         """Blocks neither allocated nor promised to an admitted lane —
         what a *new* admission may reserve."""
         return len(self._free) - self.reserved
+
+    def refcount(self, bid: int) -> int:
+        """Current holder count of a block (0 <=> free)."""
+        return self._refs.get(bid, 0)
 
     # -- reservation (admission-time) ----------------------------------
     def reserve(self, n: int) -> bool:
@@ -135,24 +170,68 @@ class BlockPool:
                                "reservation invariant violated")
         ids = [self._free.pop() for _ in range(n)]
         self._free_set.difference_update(ids)
+        for i in ids:
+            self._refs[i] = 1
         self.reserved -= n
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return ids
 
+    # -- sharing -------------------------------------------------------
+    def share(self, ids: List[int], n: int = 1) -> None:
+        """Register ``n`` more holders for each listed block (a lane's
+        block table mapping it read-only, or a prefix-cache entry).
+        Every hold must eventually be released by one :meth:`free`."""
+        if n < 0:
+            raise ValueError(f"share: negative holder count {n}")
+        for i in ids:
+            if self._refs.get(i, 0) < 1:
+                raise ValueError(f"share: block {i} is not allocated")
+        for i in ids:
+            self._refs[i] += n
+        self.shared_holds += n * len(ids)
+
+    def cow(self, bid: int) -> Tuple[int, bool]:
+        """Copy-on-write: make ``bid`` privately writable for the caller.
+
+        Returns ``(block_id, copied)``.  With a single holder the caller
+        keeps ``bid`` (``copied`` False, nothing changes).  Otherwise the
+        caller's hold on ``bid`` is released and a fresh private block is
+        drawn from the caller's *reservation*; ``copied`` True tells the
+        caller to clone the device contents (batch.copy_blocks) before
+        its first write.
+        """
+        if self._refs.get(bid, 0) < 1:
+            raise ValueError(f"cow: block {bid} is not allocated")
+        if self._refs[bid] == 1:
+            return bid, False
+        self._refs[bid] -= 1
+        self.cow_copies += 1
+        return self.alloc(1)[0], True
+
     def free(self, ids: List[int]) -> None:
-        """Return physical blocks to the pool (eviction, EOS, or a
-        ``StopPolicy`` kill — the blocks are reusable immediately).
-        Double-frees raise: a block listed free twice would later be
-        allocated to two live lanes at once."""
+        """Release one hold per listed block (eviction, EOS, a
+        ``StopPolicy`` kill, or a prefix-cache eviction).  A block
+        returns to the free list — reusable immediately — only when its
+        last holder releases it.  Over-releasing raises: a block freed
+        more times than it is held would later back two live lanes."""
+        counts: Dict[int, int] = {}
         for i in ids:
             if not 1 <= i <= self.n_blocks:
                 raise ValueError(f"free: {i} is not an allocatable block id")
-        if len(set(ids)) != len(ids) or self._free_set & set(ids):
-            raise ValueError("free: double-free (block already in the pool)")
-        self._free_set.update(ids)
-        self._free.extend(ids)
+            counts[i] = counts.get(i, 0) + 1
+        for i, c in counts.items():
+            if c > self._refs.get(i, 0):
+                raise ValueError(
+                    f"free: block {i} released {c} time(s) but held "
+                    f"{self._refs.get(i, 0)} (double-free)")
+        for i, c in counts.items():
+            self._refs[i] -= c
+            if self._refs[i] == 0:
+                del self._refs[i]
+                self._free_set.add(i)
+                self._free.append(i)
 
     def __repr__(self):
         return (f"BlockPool(blocks={self.n_blocks}, bs={self.block_size}, "
                 f"in_use={self.in_use}, reserved={self.reserved}, "
-                f"peak={self.peak_in_use})")
+                f"peak={self.peak_in_use}, cow={self.cow_copies})")

@@ -40,6 +40,34 @@ the jitted round until their lane is re-admitted; their block-table
 rows are re-pointed at the allocator's trash block first, so those
 writes land nowhere.
 
+Shared-prefix vote groups (``share_prefix=True``, paged only)
+-------------------------------------------------------------
+SATER's K-vote sampling submits the *same* prompt K times per question;
+without sharing the scheduler prefills it K times and stores K copies
+of its KV.  With ``share_prefix=True``, :class:`RequestGroup` units are
+admitted *atomically* (all K lanes or none), prefilled **once** per
+group (``batch.prefill_shared``), and the prompt's pool blocks are
+mapped read-only into all K block tables — the allocator refcounts
+each block (block_pool.BlockPool.share), so a block is freed only when
+its last holder dies and a ``VoteEarlyStop`` kill can never double-free
+a shared block.  Decode appends collide only in the last, partially
+filled prompt block; each lane copy-on-writes it (``BlockPool.cow`` +
+``batch.copy_blocks``) before its first decode write, so K lanes cost
+one prompt prefill + one shared KV copy + K private tails.  Groups
+whose prompts are not token-identical (e.g. RCV's per-lane confidence
+headers, which differ from the first token) fall back to per-lane
+admission transparently.
+
+On top of group fan-out, a hash-keyed *prefix cache* shares full
+prompt blocks across requests: every admitted prompt registers its
+block-aligned prefixes, and later admissions whose prompts start with
+a registered prefix (same instruction/system header) map the cached
+blocks instead of allocating fresh ones — an HBM dedup (the prefill
+still computes the prefix, but its writes are routed to the trash
+block so earlier holders keep bit-identical reads).  Cache entries
+hold refcounts; under pool pressure admission evicts them LRU before
+backpressuring.
+
 Request lifecycle:  pending -> admitted (prefill + lane insert)
   -> decoding (one round at a time) -> finished (EOS | budget)
                                     -> cancelled (group decided)
@@ -69,9 +97,11 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
-from repro.serving.batch import (GenConfig, decode_round, insert_lanes,
-                                 insert_lanes_paged, make_buckets,
-                                 pad_token_rows, pick_bucket, prefill_jit)
+from repro.serving.batch import (GenConfig, copy_blocks, decode_round,
+                                 insert_lanes, insert_lanes_paged,
+                                 insert_lanes_shared, make_buckets,
+                                 pad_token_rows, pick_bucket, prefill_jit,
+                                 prefill_shared)
 from repro.serving.block_pool import BlockPool
 
 
@@ -86,6 +116,20 @@ class Request:
     group: Optional[int] = None
     max_new_tokens: Optional[int] = None     # default: gcfg.max_new_tokens
     meta: Optional[dict] = None
+
+
+@dataclasses.dataclass
+class RequestGroup:
+    """K requests forming one vote group, submitted as a unit.
+
+    With ``share_prefix=True`` the scheduler admits the group
+    atomically (all lanes or none) and, when the members' prompts are
+    token-identical, prefills the prompt once and maps its KV blocks
+    read-only into every member's block table.  Members with differing
+    prompts (or a dense / non-sharing scheduler) are admitted as
+    independent requests — same results, no sharing.
+    """
+    requests: List[Request]
 
 
 @dataclasses.dataclass
@@ -127,7 +171,9 @@ class SchedStats:
     lane_rounds: int = 0         # sum over rounds of live lanes
     generated_tokens: int = 0    # tokens actually produced by live lanes
     prefills: int = 0            # prefill executions (admission waves)
-    prefill_prompts: int = 0     # real prompts prefetched across waves
+    prefill_prompts: int = 0     # real prompt rows prefilled across waves
+    prefill_tokens: int = 0      # real prompt tokens prefilled (a shared
+    #                              group's prompt counts once, not K times)
     cancelled: int = 0           # requests killed by the StopPolicy
     wall_s: float = 0.0
     admission_blocked: int = 0   # admissions deferred on pool pressure
@@ -135,6 +181,86 @@ class SchedStats:
     peak_blocks_in_use: int = 0  # allocator high-water mark (paged only)
     peak_cache_bytes: int = 0    # peak K/V footprint actually held
     dense_cache_bytes: int = 0   # dense-equivalent K/V footprint
+    shared_lanes: int = 0        # lanes fed by another lane's prefill
+    cow_copies: int = 0          # partial prompt blocks cloned for CoW
+    prefix_hits: int = 0         # prompt rows that reused cached prefix blocks
+    prefix_hit_blocks: int = 0   # pool blocks not allocated thanks to the cache
+
+
+class _PrefixCache:
+    """Hash-keyed map from block-aligned prompt-token prefixes to the
+    live pool blocks already holding their K/V.
+
+    Every admitted prompt registers all its *full* (block-aligned)
+    prompt blocks under every aligned prefix length, so a later prompt
+    sharing only the instruction/system header still hits.  Entries
+    hold one allocator refcount per block (released on eviction), so a
+    cached block survives its last lane — that is the cache's warmth —
+    but admission evicts entries LRU whenever the pool cannot cover a
+    new reservation, so cached blocks never deadlock admission.  Keys
+    are the token tuples themselves: no hash-collision can alias two
+    different prefixes onto one block list.
+    """
+
+    def __init__(self, pool: BlockPool, block_size: int, max_entries: int):
+        self.pool, self.bs, self.cap = pool, block_size, max_entries
+        self._entries: "collections.OrderedDict[tuple, List[int]]" = \
+            collections.OrderedDict()
+
+    def __len__(self):
+        return len(self._entries)
+
+    def lookup(self, toks: Sequence[int]) -> List[int]:
+        """Blocks backing the longest registered aligned prefix of
+        ``toks`` ([] on miss).  The caller must ``share`` them before
+        anything may evict the entry."""
+        for m in range(len(toks) // self.bs, 0, -1):
+            key = tuple(toks[: m * self.bs])
+            blocks = self._entries.get(key)
+            if blocks is not None:
+                self._entries.move_to_end(key)
+                return list(blocks)
+        return []
+
+    def register(self, toks: Sequence[int], blocks: List[int]) -> None:
+        """Register every aligned prefix of ``toks`` covered by
+        ``blocks`` (the prompt's full blocks only — the caller must
+        exclude any partially filled tail block, which lanes write)."""
+        n_full = min(len(toks) // self.bs, len(blocks))
+        for m in range(1, n_full + 1):
+            key = tuple(toks[: m * self.bs])
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                continue
+            self.pool.share(blocks[:m])
+            self._entries[key] = list(blocks[:m])
+            while len(self._entries) > self.cap:
+                self.evict_lru()
+
+    def evict_lru(self) -> bool:
+        """Drop the least-recently-used entry, releasing its block
+        holds.  False when the cache is already empty."""
+        if not self._entries:
+            return False
+        _, blocks = self._entries.popitem(last=False)
+        self.pool.free(blocks)
+        return True
+
+    def clear(self) -> None:
+        while self.evict_lru():
+            pass
+
+
+@dataclasses.dataclass
+class _PlanRow:
+    """One prefill row planned during shared admission: the prompt, the
+    lanes it feeds, and its prompt-block geometry."""
+    toks: List[int]
+    members: List[Request]
+    hit: List[int]               # cached prefix blocks (not yet held)
+    n_pb: int                    # ceil(P / block_size) prompt blocks
+    n_full: int                  # P // block_size read-only full blocks
+    partial: bool                # last prompt block is partially filled
 
 
 @dataclasses.dataclass
@@ -172,6 +298,13 @@ class Scheduler:
         concurrency for HBM, the allocator backpressures admission
         instead of overflowing).  Must cover at least one worst-case
         lane (``ceil(s_max / block_size)`` blocks).
+    share_prefix, prefix_cache_entries:
+        ``share_prefix=True`` (paged only) enables shared-prefix
+        serving: RequestGroups are admitted atomically and prefilled
+        once, their prompt blocks refcount-shared across the K lanes
+        (copy-on-write on the last partial block), plus a
+        ``prefix_cache_entries``-entry LRU cache sharing full prompt
+        blocks across requests with a common token prefix.
     """
 
     def __init__(self, params, cfg: ModelConfig, tokenizer, gcfg: GenConfig,
@@ -180,7 +313,9 @@ class Scheduler:
                  buckets: Optional[Sequence[int]] = None,
                  admit_buckets: Optional[Sequence[int]] = None,
                  paged: bool = False, block_size: int = 32,
-                 pool_blocks: Optional[int] = None):
+                 pool_blocks: Optional[int] = None,
+                 share_prefix: bool = False,
+                 prefix_cache_entries: int = 256):
         self.params, self.cfg, self.tokenizer, self.gcfg = \
             params, cfg, tokenizer, gcfg
         self.n_lanes = n_lanes
@@ -193,6 +328,15 @@ class Scheduler:
         self.paged = paged
         self.block_size = block_size
         self.pool: Optional[BlockPool] = None    # most recent run's pool
+        self.share_prefix = share_prefix
+        self.prefix_cache_entries = prefix_cache_entries
+        self.prefix_cache: Optional[_PrefixCache] = None  # most recent run's
+        if share_prefix and not paged:
+            raise ValueError("share_prefix requires paged=True: sharing is "
+                             "block-table indirection over the block pool")
+        # ladders bounding compiled shapes of the shared fan-out paths
+        # (lanes per prefill row, CoW copy pairs per wave)
+        self._fan_buckets = make_buckets(n_lanes, 1)
         if paged:
             self.max_blocks = -(-self.s_max // block_size)
             self.pool_blocks = (n_lanes * self.max_blocks
@@ -221,22 +365,82 @@ class Scheduler:
         rounded up to whole blocks."""
         return -(-(prompt_len + budget) // self.block_size)
 
+    def _intake(self, requests) -> Tuple[List, List[int]]:
+        """Normalize the submitted mix of Requests and RequestGroups to
+        admission units plus the flat uid order of the reply.
+
+        Sharing off (or dense): groups dissolve into their members.
+        Sharing on: groups survive as atomic units, chunked to the lane
+        pool width so a K > n_lanes group can still admit."""
+        units: List = []
+        order: List[int] = []
+        for r in requests:
+            if isinstance(r, RequestGroup):
+                order.extend(m.uid for m in r.requests)
+                if self.share_prefix:
+                    for i in range(0, len(r.requests), self.n_lanes):
+                        units.append(RequestGroup(
+                            list(r.requests[i:i + self.n_lanes])))
+                else:
+                    units.extend(r.requests)
+            else:
+                order.append(r.uid)
+                units.append(r)
+        return units, order
+
+    def _plan_unit(self, members: List[Request],
+                   enc: Dict[int, List[int]]) -> Tuple[List[_PlanRow], int]:
+        """Lay out one admission unit as prefill rows and price its pool
+        reservation.  Token-identical members collapse onto one shared
+        row; otherwise every member rows alone (no sharing, still
+        atomic).  The reservation covers newly allocated prompt blocks
+        (cache hits excluded), every member's decode growth, and one
+        CoW clone per extra holder of a partial tail block."""
+        toks0 = enc[members[0].uid]
+        if len(members) > 1 and all(enc[m.uid] == toks0
+                                    for m in members[1:]):
+            row_members = [members]
+        else:
+            row_members = [[m] for m in members]
+        rows, need = [], 0
+        for ms in row_members:
+            toks = enc[ms[0].uid]
+            p_len = max(len(toks), 1)
+            n_pb = -(-p_len // self.block_size)
+            n_full = p_len // self.block_size
+            partial = n_full < n_pb
+            hit = (self.prefix_cache.lookup(toks)
+                   if self.prefix_cache is not None else [])
+            growth = sum(self._reservation(p_len, self._budget(m)) - n_pb
+                         for m in ms)
+            need += (n_pb - len(hit)) + growth
+            if partial:
+                need += len(ms) - 1
+            rows.append(_PlanRow(toks=toks, members=ms, hit=hit, n_pb=n_pb,
+                                 n_full=n_full, partial=partial))
+        return rows, need
+
     # ------------------------------------------------------------------
-    def run(self, requests: Sequence[Request], key,
+    def run(self, requests: Sequence, key,
             stop_policy: Optional[StopPolicy] = None
             ) -> Tuple[List[Completion], SchedStats]:
-        """Drive every request to completion; returns completions in
-        request order plus scheduling statistics."""
+        """Drive every request (or RequestGroup) to completion; returns
+        completions in request order (groups flattened in place) plus
+        scheduling statistics."""
         t0 = time.time()
         if isinstance(key, int):
             key = jax.random.PRNGKey(key)
         stats = SchedStats()
-        pending = collections.deque(requests)
+        units, order = self._intake(requests)
+        pending = collections.deque(units)
         lanes: List[Optional[_Lane]] = [None] * self.n_lanes
         host_done = np.ones((self.n_lanes,), bool)
         if self.paged:
             pool = BlockPool(self.pool_blocks, self.block_size)
             self.pool = pool
+            self.prefix_cache = (_PrefixCache(pool, self.block_size,
+                                              self.prefix_cache_entries)
+                                 if self.share_prefix else None)
             cache = model_lib.init_paged_decode_state(
                 self.cfg, self.n_lanes, self.s_max, self.block_size,
                 self.pool_blocks)
@@ -244,6 +448,7 @@ class Scheduler:
             table_dirty = False
         else:
             pool = None
+            self.prefix_cache = None
             cache = model_lib.init_decode_state(self.cfg, self.n_lanes,
                                                 self.s_max)
         cur_logits = jnp.zeros((self.n_lanes, self.cfg.vocab_size),
@@ -280,31 +485,176 @@ class Scheduler:
                 stats.cancelled += 1
             return comp
 
+        def drop_decided(members: List[Request]):
+            for m in members:
+                completions[m.uid] = Completion(
+                    m.uid, m.group, np.zeros((0,), np.int32), 0, "",
+                    True, m.meta)
+                stats.cancelled += 1
+
+        def admit_shared():
+            """Shared-prefix admission: atomic group units, one prefill
+            row per distinct prompt, prompt blocks refcount-shared into
+            every member lane, CoW on partial tails, prefix-cache
+            reuse/registration.  See the class docstring."""
+            nonlocal cache, cur_logits, table_dirty
+            free = [i for i in range(self.n_lanes) if lanes[i] is None]
+            planned: List[_PlanRow] = []
+            taken = 0
+            while pending:
+                unit = pending[0]
+                members = (unit.requests if isinstance(unit, RequestGroup)
+                           else [unit])
+                if all(m.group is not None and m.group in decided
+                       for m in members):
+                    pending.popleft()
+                    drop_decided(members)
+                    continue
+                if taken + len(members) > len(free):
+                    break              # atomic: the whole unit or nothing
+                for m in members:
+                    if m.uid not in enc:
+                        enc[m.uid] = self._encode(m)
+                rows = None
+                blocked = False
+                while True:
+                    rows, need = self._plan_unit(members, enc)
+                    if need > self.pool_blocks:
+                        # the unit can never fit atomically: degrade to
+                        # per-lane units (constructor guarantees any
+                        # single lane fits) and re-examine the head
+                        pending.popleft()
+                        for m in reversed(members):
+                            pending.appendleft(m)
+                        rows = None
+                        break
+                    if pool.reserve(need):
+                        break
+                    # pool pressure: shed warm prefix-cache blocks
+                    # before backpressuring admission
+                    if not self.prefix_cache.evict_lru():
+                        stats.admission_blocked += 1
+                        blocked = True
+                        break
+                if blocked:
+                    break
+                if rows is None:
+                    continue
+                # hold the cache-hit blocks for every lane of each row
+                # now, so later evictions can only drop the cache's own
+                # hold, never the blocks these lanes are about to map
+                for row in rows:
+                    if row.hit:
+                        pool.share(row.hit, len(row.members))
+                        stats.prefix_hits += 1
+                        stats.prefix_hit_blocks += len(row.hit)
+                pending.popleft()
+                planned.extend(rows)
+                taken += len(members)
+            if not planned:
+                return
+            by_bucket: Dict[int, List[_PlanRow]] = collections.defaultdict(list)
+            for row in planned:
+                by_bucket[pick_bucket(len(row.toks), self.buckets)
+                          ].append(row)
+            cow_src: List[int] = []
+            cow_dst: List[int] = []
+            for bucket in sorted(by_bucket):
+                rows = by_bucket[bucket]
+                admit_n = pick_bucket(len(rows), self.admit_buckets)
+                kmax = pick_bucket(max(len(r.members) for r in rows),
+                                   self._fan_buckets)
+                toks, lens = pad_token_rows([r.toks for r in rows],
+                                            self.gcfg.pad_id, bucket,
+                                            admit_n)
+                lane_rows = np.full((admit_n, kmax), self.n_lanes, np.int32)
+                write_rows = np.zeros((admit_n, self.max_blocks), np.int32)
+                for j, row in enumerate(rows):
+                    p_len = max(len(row.toks), 1)
+                    h = len(row.hit)
+                    own = pool.alloc(row.n_pb - h)
+                    prompt_blocks = row.hit + own
+                    # write side: cache-satisfied positions land in the
+                    # trash block (their KV already exists, and earlier
+                    # holders must keep bit-identical reads)
+                    write_rows[j, h:row.n_pb] = own
+                    k_members = len(row.members)
+                    if k_members > 1 and own:
+                        pool.share(own, k_members - 1)
+                    self.prefix_cache.register(row.toks,
+                                               prompt_blocks[:row.n_full])
+                    tail_of = {}
+                    if row.partial:
+                        tail = prompt_blocks[-1]
+                        for m in row.members:
+                            blk, copied = pool.cow(tail)
+                            if copied:
+                                cow_src.append(tail)
+                                cow_dst.append(blk)
+                            tail_of[m.uid] = blk
+                    for mj, m in enumerate(row.members):
+                        i = free.pop(0)
+                        lane = _Lane(m, self._budget(m))
+                        lane.prompt_len = p_len
+                        lane.blocks = list(prompt_blocks)
+                        if row.partial:
+                            lane.blocks[-1] = tail_of[m.uid]
+                        lane.reserved = self._reservation(
+                            p_len, lane.budget) - row.n_pb
+                        host_table[i] = 0
+                        host_table[i, :row.n_pb] = lane.blocks
+                        lane_rows[j, mj] = i
+                        lanes[i] = lane
+                        host_done[i] = False
+                    table_dirty = True
+                    stats.shared_lanes += k_members - 1
+                last, new_cache = prefill_shared(
+                    self.params, self.cfg, jnp.asarray(toks),
+                    jnp.asarray(lens), bucket)
+                cache, cur_logits = insert_lanes_shared(
+                    cache, cur_logits, new_cache, last,
+                    jnp.asarray(lane_rows), jnp.asarray(write_rows))
+                stats.prefills += 1
+                stats.prefill_prompts += len(rows)
+                stats.prefill_tokens += sum(len(r.toks) for r in rows)
+            if cow_src:
+                # device half of CoW, after the inserts wrote the
+                # originals; padded pairs clone trash onto trash
+                n = pick_bucket(len(cow_src), self._fan_buckets)
+                src = np.zeros((n,), np.int32)
+                dst = np.zeros((n,), np.int32)
+                src[: len(cow_src)] = cow_src
+                dst[: len(cow_dst)] = cow_dst
+                cache = copy_blocks(cache, jnp.asarray(src),
+                                    jnp.asarray(dst))
+
         while pending or any(l is not None for l in lanes):
             # ---- admission: fill free lanes from the pending queue ----
-            free = [i for i in range(self.n_lanes) if lanes[i] is None]
-            wave: List[Request] = []
-            while pending and len(wave) < len(free):
-                req = pending[0]
-                if req.group in decided:
+            if self.share_prefix:
+                admit_shared()
+                wave: List[Request] = []
+            else:
+                free = [i for i in range(self.n_lanes)
+                        if lanes[i] is None]
+                wave = []
+                while pending and len(wave) < len(free):
+                    req = pending[0]
+                    if req.group in decided:
+                        pending.popleft()
+                        drop_decided([req])
+                        continue
+                    if req.uid not in enc:
+                        enc[req.uid] = self._encode(req)
+                    if self.paged:
+                        need = self._reservation(max(len(enc[req.uid]), 1),
+                                                 self._budget(req))
+                        if not pool.reserve(need):
+                            # pool pressure: leave the queue intact (FIFO)
+                            # and retry after the next round frees blocks
+                            stats.admission_blocked += 1
+                            break
                     pending.popleft()
-                    completions[req.uid] = Completion(
-                        req.uid, req.group, np.zeros((0,), np.int32), 0, "",
-                        True, req.meta)
-                    stats.cancelled += 1
-                    continue
-                if req.uid not in enc:
-                    enc[req.uid] = self._encode(req)
-                if self.paged:
-                    need = self._reservation(max(len(enc[req.uid]), 1),
-                                             self._budget(req))
-                    if not pool.reserve(need):
-                        # pool pressure: leave the queue intact (FIFO)
-                        # and retry after the next round frees blocks
-                        stats.admission_blocked += 1
-                        break
-                pending.popleft()
-                wave.append(req)
+                    wave.append(req)
             if wave:
                 by_bucket: Dict[int, List[Request]] = collections.defaultdict(list)
                 for r in wave:
@@ -352,6 +702,7 @@ class Scheduler:
                             jnp.asarray(lane_ids))
                     stats.prefills += 1
                     stats.prefill_prompts += len(grp)
+                    stats.prefill_tokens += sum(len(enc[r.uid]) for r in grp)
 
             live = [i for i in range(self.n_lanes) if lanes[i] is not None]
             if not live:
@@ -414,9 +765,15 @@ class Scheduler:
                     if lanes[i] is not None and lanes[i].req.group in decided:
                         finalize(i, cancelled=True)
 
+        if self.prefix_cache is not None:
+            # the cache's lifetime is the run: release its block holds
+            # so the pool drains to empty (leak checks rely on this)
+            self.prefix_cache.clear()
         stats.wall_s = time.time() - t0
         self._cache_stats(stats, cache, pool)
-        return [completions[r.uid] for r in requests], stats
+        if pool is not None:
+            stats.cow_copies = pool.cow_copies
+        return [completions[uid] for uid in order], stats
 
     # ------------------------------------------------------------------
     def _cache_stats(self, stats: SchedStats, cache, pool: Optional[BlockPool]):

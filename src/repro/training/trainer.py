@@ -7,7 +7,6 @@ with sharding annotations (see launch/train.py).
 
 from __future__ import annotations
 
-import functools
 import time
 from typing import Callable, Iterable, Optional
 

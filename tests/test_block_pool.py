@@ -1,16 +1,20 @@
 """Block-pool allocator + paged scheduler integration: alloc/free
-round-trips, reservation-gated admission backpressure, and no block
-leaked when VoteEarlyStop kills vote groups mid-flight."""
+round-trips, refcounted sharing and copy-on-write, reservation-gated
+admission backpressure, and no block leaked (or double-freed) when
+VoteEarlyStop kills vote groups — shared-prefix or not — mid-flight."""
+
+import collections
+import random
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs.base import ModelConfig
 from repro.core import routing as routing_lib
 from repro.serving.batch import GenConfig
 from repro.serving.block_pool import BlockPool
-from repro.serving.scheduler import Request, Scheduler, StopPolicy
+from repro.serving.scheduler import (Request, RequestGroup, Scheduler,
+                                     StopPolicy)
 
 MAXP = 64
 
@@ -87,6 +91,180 @@ def test_alloc_and_free_misuse_raise():
 
 
 # ----------------------------------------------------------------------
+# Refcounted sharing + copy-on-write
+# ----------------------------------------------------------------------
+
+def test_share_and_refcounted_free():
+    """free() releases one hold; a block returns to the pool only when
+    its last holder lets go."""
+    pool = BlockPool(8, block_size=16)
+    assert pool.reserve(3)
+    ids = pool.alloc(3)
+    pool.share(ids, 2)                      # 3 holders each
+    assert all(pool.refcount(i) == 3 for i in ids)
+    pool.free(ids)
+    pool.free(ids)
+    assert pool.in_use == 3 and pool.n_free == 5   # still held once
+    pool.free(ids)
+    assert pool.in_use == 0 and pool.n_free == 8
+    with pytest.raises(ValueError):
+        pool.free(ids)                      # all holds already released
+
+
+def test_free_multiset_respects_holds():
+    """One free() call may release several holds of the same block, but
+    never more than exist."""
+    pool = BlockPool(4, block_size=8)
+    assert pool.reserve(1)
+    (a,) = pool.alloc(1)
+    pool.share([a], 2)
+    pool.free([a, a])                       # two of the three holds
+    assert pool.refcount(a) == 1 and pool.in_use == 1
+    with pytest.raises(ValueError):
+        pool.free([a, a])                   # only one hold left
+    assert pool.refcount(a) == 1            # failed free mutated nothing
+    pool.free([a])
+    assert pool.in_use == 0
+
+
+def test_share_requires_allocated():
+    pool = BlockPool(4, block_size=8)
+    with pytest.raises(ValueError):
+        pool.share([1])                     # never allocated
+    assert pool.reserve(1)
+    (a,) = pool.alloc(1)
+    pool.free([a])
+    with pytest.raises(ValueError):
+        pool.share([a])                     # already back in the pool
+
+
+def test_cow_exclusive_holder_keeps_block():
+    pool = BlockPool(4, block_size=8)
+    assert pool.reserve(1)
+    (a,) = pool.alloc(1)
+    assert pool.cow(a) == (a, False)        # sole holder: no copy
+    assert pool.in_use == 1 and pool.cow_copies == 0
+
+
+def test_cow_shared_materializes_private_copies():
+    """K holders of a partial tail block resolve to K distinct private
+    blocks: K-1 copies drawn from reservations, the last holder keeps
+    the original."""
+    pool = BlockPool(8, block_size=8)
+    assert pool.reserve(3)                  # tail + two CoW copies
+    (tail,) = pool.alloc(1)
+    pool.share([tail], 2)                   # 3 holders (K = 3 vote lanes)
+    got = [pool.cow(tail) for _ in range(3)]
+    copies = [b for b, copied in got if copied]
+    assert len(copies) == 2 and tail not in copies
+    assert got[-1] == (tail, False)         # last holder: original, free
+    assert pool.cow_copies == 2 and pool.reserved == 0
+    assert len({b for b, _ in got}) == 3    # three distinct private blocks
+    assert all(pool.refcount(b) == 1 for b, _ in got)
+    pool.free([tail] + copies)
+    assert pool.in_use == 0
+
+
+def test_cow_unallocated_raises():
+    with pytest.raises(ValueError):
+        BlockPool(2, block_size=8).cow(1)
+
+
+# ----------------------------------------------------------------------
+# Interleaved-op driver (shared with the hypothesis property test)
+# ----------------------------------------------------------------------
+
+def drive_block_pool(ops, n_blocks=12, block_size=8):
+    """Interpret (op, arg) pairs as reserve/unreserve/alloc/share/cow/
+    free against a model of holders, checking after every step:
+
+      invariant 1:  in_use + n_free == n_blocks (no leak),
+      invariant 2:  reserved <= n_free (promises are backed),
+      sharing:      refcount(b) == holds the model granted — so a block
+                    is never live in two *unrelated* lanes (alloc and
+                    cow assert their fresh block has no other holder),
+      free list:    refcount 0 <=> the block is in the free list.
+    """
+    pool = BlockPool(n_blocks, block_size)
+    lanes = []                    # each: list of held block ids
+    holds = collections.Counter()
+    reserved = 0
+    for op, arg in ops:
+        if op == 0:               # reserve
+            n = arg % (n_blocks + 2)
+            before = pool.available
+            ok = pool.reserve(n)
+            assert ok == (n <= before)
+            if ok:
+                reserved += n
+        elif op == 1:             # return part of a reservation
+            if reserved:
+                n = arg % reserved + 1
+                pool.unreserve(n)
+                reserved -= n
+        elif op == 2:             # draw a new private lane
+            if reserved:
+                n = arg % reserved + 1
+                ids = pool.alloc(n)
+                reserved -= n
+                assert len(set(ids)) == n
+                for i in ids:
+                    assert holds[i] == 0, \
+                        "freshly alloc'd block already live elsewhere"
+                    holds[i] += 1
+                lanes.append(list(ids))
+        elif op == 3:             # share a lane's blocks into a new lane
+            if lanes:
+                src = lanes[arg % len(lanes)]
+                pool.share(src)
+                for i in src:
+                    holds[i] += 1
+                lanes.append(list(src))
+        elif op == 4:             # copy-on-write a lane's tail block
+            if lanes:
+                lane = lanes[arg % len(lanes)]
+                tail = lane[-1]
+                if pool.refcount(tail) == 1 or reserved >= 1:
+                    refs = pool.refcount(tail)
+                    blk, copied = pool.cow(tail)
+                    assert copied == (refs > 1)
+                    if copied:
+                        reserved -= 1
+                        assert holds[blk] == 0, \
+                            "CoW copy given a block live elsewhere"
+                        holds[tail] -= 1
+                        holds[blk] += 1
+                        lane[-1] = blk
+                    else:
+                        assert blk == tail
+        elif op == 5:             # free a whole lane
+            if lanes:
+                lane = lanes.pop(arg % len(lanes))
+                pool.free(lane)
+                for i in lane:
+                    holds[i] -= 1
+        assert pool.in_use + pool.n_free == pool.n_blocks
+        assert pool.reserved == reserved
+        assert pool.reserved <= pool.n_free
+        for i in range(1, pool.n_blocks + 1):
+            assert pool.refcount(i) == holds[i]
+            assert (pool.refcount(i) == 0) == (i in pool._free_set)
+    for lane in lanes:
+        pool.free(lane)
+    assert pool.in_use == 0 and pool.n_free == pool.n_blocks
+
+
+def test_block_pool_interleaved_ops_seeded_fuzz():
+    """Deterministic companion of the hypothesis property test in
+    tests/test_property.py (same driver), runnable without hypothesis."""
+    rng = random.Random(0)
+    for _ in range(150):
+        ops = [(rng.randrange(6), rng.randrange(64))
+               for _ in range(rng.randrange(1, 40))]
+        drive_block_pool(ops)
+
+
+# ----------------------------------------------------------------------
 # Scheduler integration
 # ----------------------------------------------------------------------
 
@@ -147,24 +325,109 @@ def test_no_block_leaked_after_vote_early_stop(setup):
     assert es_stats.generated_tokens < full_stats.generated_tokens
 
 
+class _KillAndSnapshot(StopPolicy):
+    """Kills every group on its first completion, recording the pool
+    state the policy saw mid-flight."""
+
+    def __init__(self, sched):
+        self.sched = sched
+        self.snaps = []
+
+    def observe(self, comp):
+        pool = self.sched.pool
+        self.snaps.append((pool.in_use, pool.reserved))
+        return (comp.group,)
+
+
+def test_early_stop_shared_group_releases_refcounted_blocks(setup):
+    """Regression: VoteEarlyStop killing a decided K-group under
+    share_prefix frees exactly the group's private tail blocks and
+    *decrements* (not frees) the shared prompt blocks — any double-free
+    would raise inside free(), any leak shows as a non-empty pool after
+    run().  The pool must drain to empty including the prefix cache's
+    own holds."""
+    params, cfg, tok = setup
+    K = 4
+    sched = Scheduler(params, cfg, tok, _no_eos(32), n_lanes=4,
+                      round_tokens=4, max_prompt_len=MAXP, paged=True,
+                      block_size=8, share_prefix=True)
+    # lane 0 of each group finishes after round 1 (budget 4); the policy
+    # then kills its group's other K-1 lanes mid-flight while they all
+    # still hold the shared prompt blocks
+    groups = [RequestGroup([
+        Request(uid=qi * K + j, prompt=f"Q: same long shared prompt {qi}\nA: ",
+                group=qi, max_new_tokens=(4 if j == 0 else 32))
+        for j in range(K)]) for qi in range(3)]
+    policy = _KillAndSnapshot(sched)
+    es, es_stats = sched.run(groups, jax.random.PRNGKey(1),
+                             stop_policy=policy)
+    # each group shared one prefill; the kills released every hold
+    assert es_stats.shared_lanes == 3 * (K - 1)
+    assert es_stats.cancelled == 3 * (K - 1)
+    assert sched.pool.in_use == 0 and sched.pool.reserved == 0
+    # mid-flight the killed groups' shared blocks were still held
+    assert all(in_use > 0 for in_use, _ in policy.snaps)
+    # the same groups run to completion: more tokens, no lower peak
+    full, full_stats = sched.run(groups, jax.random.PRNGKey(1))
+    assert sched.pool.in_use == 0 and sched.pool.reserved == 0
+    assert es_stats.generated_tokens < full_stats.generated_tokens
+    assert es_stats.peak_blocks_in_use <= full_stats.peak_blocks_in_use
+    # killed lanes still returned whatever they had generated so far
+    for qi in range(3):
+        grp = es[qi * K:(qi + 1) * K]
+        assert not grp[0].cancelled and grp[0].gen_len == 4
+        assert all(c.cancelled for c in grp[1:])
+
+
+def test_shared_admission_backpressure_and_prefix_cache_eviction(setup):
+    """A pool sized for one K-group serializes group admissions: the
+    prefix cache gives up its warm blocks (LRU eviction) before
+    admission blocks, everything completes, and nothing leaks."""
+    params, cfg, tok = setup
+    bs = 8
+    K = 3
+    s_max_blocks = -(-(MAXP + 8) // bs)
+    sched = Scheduler(params, cfg, tok, _no_eos(8), n_lanes=K,
+                      round_tokens=4, max_prompt_len=MAXP, paged=True,
+                      block_size=bs, share_prefix=True,
+                      pool_blocks=K * s_max_blocks)
+    groups = [RequestGroup([
+        Request(uid=qi * K + j, prompt=f"Q: item {qi} with a long tail\nA: ",
+                group=qi) for j in range(K)]) for qi in range(4)]
+    comps, stats = sched.run(groups, jax.random.PRNGKey(1))
+    assert [c.uid for c in comps] == list(range(4 * K))
+    assert all(c.gen_len == 8 and not c.cancelled for c in comps)
+    assert stats.prefill_prompts == 4          # one prefill per group
+    assert stats.shared_lanes == 4 * (K - 1)
+    assert sched.pool.in_use == 0 and sched.pool.reserved == 0
+    assert stats.peak_blocks_in_use <= sched.pool_blocks
+
+
 def test_paged_streaming_matches_dense_decisions(setup):
     """The streamed cascade makes identical accept/route decisions on
-    the paged and dense caches (greedy: identical tokens, too)."""
+    the dense, paged, and shared-prefix paged caches (greedy: identical
+    tokens, too) — and the shared run prefills each question once."""
     params, cfg, tok = setup
     import repro.data.tasks as tasks_lib
     items = tasks_lib.make_benchmark("arith", 4, seed=1)
     key = jax.random.PRNGKey(9)
     results = {}
-    for paged in (False, True):
+    for mode in ("dense", "paged", "shared"):
         slm = routing_lib.SLM(params, cfg, tok,
                               GenConfig(max_new_tokens=24, temperature=0.0),
                               max_prompt_len=MAXP, lane_budget=16,
-                              round_tokens=4, paged=paged, block_size=8)
+                              round_tokens=4, paged=mode != "dense",
+                              block_size=8, share_prefix=mode == "shared")
         rows, stats = routing_lib.sample_k_streamed(
             slm, items, [1.0] * 4, key, tau=1.0, early_stop=True)
-        results[paged] = rows
+        results[mode] = rows
         assert stats.generated_tokens > 0
-    for rd, rp in zip(results[False], results[True]):
-        assert rd.decision.accepted == rp.decision.accepted
-        assert rd.decision.answer == rp.decision.answer
-        assert [v.text for v in rd.votes] == [v.text for v in rp.votes]
+        if mode == "shared":
+            # one prefill per question, not per vote lane
+            assert stats.prefill_prompts == len(items)
+            assert stats.shared_lanes > 0
+    for mode in ("paged", "shared"):
+        for rd, rp in zip(results["dense"], results[mode]):
+            assert rd.decision.accepted == rp.decision.accepted
+            assert rd.decision.answer == rp.decision.answer
+            assert [v.text for v in rd.votes] == [v.text for v in rp.votes]

@@ -1,13 +1,10 @@
 """Multi-tier cascade (beyond-paper extension) — semantic tests using a
 scripted fake SLM (no model inference)."""
 
-import dataclasses
 
 import jax
-import numpy as np
 
 from repro.core import cascade_multi as cm
-from repro.core import voting
 from repro.core.confidence import Vote
 from repro.core.routing import OracleLLM
 from repro.data import tasks as T

@@ -3,13 +3,11 @@
 import random
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs.base import ModelConfig
 from repro.data import tasks as tasks_lib
-from repro.data.pipeline import (encode_pair, encode_prompts, format_prompt,
+from repro.data.pipeline import (encode_pair, encode_prompts,
                                  preference_batches, sft_batches)
 from repro.data.tokenizer import default_tokenizer
 from repro.models import model as M

@@ -118,6 +118,22 @@ def test_toa_bounded(recs):
     assert -0.5 <= val <= 1.5
 
 
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 63)),
+                max_size=60))
+@settings(max_examples=300, deadline=None)
+def test_block_pool_invariants_under_interleaving(ops):
+    """BlockPool under arbitrary interleaved reserve / alloc / share /
+    cow / free sequences: no leak (in_use + free == blocks), every
+    promise backed (reserved <= free), no block live in two unrelated
+    lanes (refcount == model holds; alloc/cow never hand out a held
+    block), and refcount 0 <=> the block is on the free list.  The
+    op interpreter lives next to the allocator's unit tests
+    (tests/test_block_pool.py) and is also driven there with seeded
+    random sequences so the invariants hold even without hypothesis."""
+    from test_block_pool import drive_block_pool
+    drive_block_pool(ops)
+
+
 @given(st.sampled_from(["f32", "bf16", "s32", "pred"]),
        st.lists(st.integers(1, 64), min_size=0, max_size=3))
 @settings(max_examples=100, deadline=None)

@@ -15,7 +15,8 @@ from repro.data.pipeline import encode_prompts
 from repro.data.tokenizer import default_tokenizer
 from repro.serving.batch import GenConfig, make_buckets, pick_bucket
 from repro.serving.engine import generate
-from repro.serving.scheduler import Request, Scheduler, StopPolicy
+from repro.serving.scheduler import (Request, RequestGroup, Scheduler,
+                                     StopPolicy)
 
 MAXP = 64
 
@@ -149,6 +150,162 @@ def test_paged_budget_crossing_mid_round_matches_dense(setup):
             assert sched.pool.in_use == 0 and sched.pool.reserved == 0
     for cd, cp in zip(runs[False], runs[True]):
         assert cd.gen_len == cp.gen_len == 10
+        assert np.array_equal(cd.tokens, cp.tokens)
+
+
+# ----------------------------------------------------------------------
+# Equivalence: shared-prefix grouped == dense, with one prefill/question
+# ----------------------------------------------------------------------
+
+def _vote_groups(n_questions, k, max_new=None):
+    return [RequestGroup([
+        Request(uid=qi * k + j, prompt=f"Q: item {qi} says hello\nA: ",
+                group=qi, max_new_tokens=max_new) for j in range(k)])
+        for qi in range(n_questions)]
+
+
+def test_grouped_shared_bitmatches_engine_greedy(setup, monkeypatch):
+    """A K-vote group prefilled once and fanned out through shared
+    blocks must reproduce the dense one-shot engine token-for-token —
+    and must do so through prefill_shared alone (the per-lane prefill
+    path is poisoned)."""
+    params, cfg, tok = setup
+    from repro.serving import scheduler as sched_mod
+    k = 4
+    prompt = "Q: what is 9 * 9?\nA: "
+    gcfg = GenConfig(max_new_tokens=24, temperature=0.0)
+    toks, lens = encode_prompts([prompt] * k, tok, MAXP)
+    eng_toks, eng_lens = generate(params, cfg, toks, lens,
+                                  jax.random.PRNGKey(7), gcfg)
+
+    calls = {"shared": 0}
+    orig = sched_mod.prefill_shared
+
+    def counting(params_, cfg_, prompts_, lengths_, max_len_):
+        calls["shared"] += 1
+        return orig(params_, cfg_, prompts_, lengths_, max_len_)
+
+    def poisoned(*a, **kw):
+        raise AssertionError("per-lane prefill used under share_prefix")
+
+    monkeypatch.setattr(sched_mod, "prefill_shared", counting)
+    monkeypatch.setattr(sched_mod, "prefill_jit", poisoned)
+    sched = Scheduler(params, cfg, tok, gcfg, n_lanes=4, round_tokens=6,
+                      max_prompt_len=MAXP, buckets=(MAXP,),
+                      admit_buckets=(4,), paged=True, block_size=8,
+                      share_prefix=True)
+    grp = RequestGroup([Request(uid=j, prompt=prompt, group=0)
+                        for j in range(k)])
+    comps, stats = sched.run([grp], jax.random.PRNGKey(7))
+    assert calls["shared"] == 1                 # one jitted prefill call
+    assert stats.prefill_prompts == 1           # covering one prompt row
+    assert stats.prefill_tokens == len(tok.encode(prompt, bos=True))
+    assert stats.shared_lanes == k - 1
+    for i, c in enumerate(comps):
+        assert c.gen_len == eng_lens[i]
+        assert np.array_equal(c.tokens, eng_toks[i][: eng_lens[i]])
+    assert sched.pool.in_use == 0 and sched.pool.reserved == 0
+
+
+@pytest.mark.parametrize("block_size", [8, 16])
+def test_grouped_shared_bitmatches_dense_scheduler_sampled(setup,
+                                                           block_size):
+    """Sampled decoding: grouped shared-prefix serving draws exactly the
+    tokens the dense scheduler draws over a multi-wave backlog (same
+    master key, lane pool, padding), while prefilling each question
+    once instead of K times."""
+    params, cfg, tok = setup
+    # eos_id=-1 pins every lane's lifetime to its budget: group-atomic
+    # admission then composes the same waves as the dense scheduler's
+    # lane-at-a-time backfill, which bit-equality requires (admission
+    # step feeds the sampling fold_in — see the batch.py PRNG contract)
+    gcfg = GenConfig(max_new_tokens=20, temperature=0.7, eos_id=-1)
+    groups = _vote_groups(5, 4)
+    key = jax.random.PRNGKey(3)
+    runs, stats = {}, {}
+    for mode in ("dense", "shared"):
+        sched = Scheduler(params, cfg, tok, gcfg, n_lanes=4, round_tokens=5,
+                          max_prompt_len=MAXP, paged=mode == "shared",
+                          block_size=block_size,
+                          share_prefix=mode == "shared")
+        runs[mode], stats[mode] = sched.run(groups, key)
+    assert stats["shared"].prefill_prompts == 5         # 1 per question
+    assert stats["dense"].prefill_prompts == 20         # K per question
+    assert stats["shared"].prefill_tokens * 4 == stats["dense"].prefill_tokens
+    for cd, cp in zip(runs["dense"], runs["shared"]):
+        assert cd.gen_len == cp.gen_len
+        assert np.array_equal(cd.tokens, cp.tokens)
+
+
+def test_grouped_budget_crossing_mid_round_matches_dense(setup):
+    """Group lanes stepping past their budget inside a jitted round must
+    spill into the trash block / their own private tails without
+    corrupting the shared prompt blocks other lanes still read."""
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=32, temperature=0.7, eos_id=-1)
+    groups = _vote_groups(3, 4, max_new=10)   # budget ends mid-round
+    key = jax.random.PRNGKey(11)
+    runs = {}
+    for mode in ("dense", "shared"):
+        sched = Scheduler(params, cfg, tok, gcfg, n_lanes=4, round_tokens=4,
+                          max_prompt_len=MAXP, paged=mode == "shared",
+                          block_size=8, share_prefix=mode == "shared")
+        runs[mode], _ = sched.run(groups, key)
+        if mode == "shared":
+            assert sched.pool.in_use == 0 and sched.pool.reserved == 0
+    for cd, cp in zip(runs["dense"], runs["shared"]):
+        assert cd.gen_len == cp.gen_len == 10
+        assert np.array_equal(cd.tokens, cp.tokens)
+
+
+def test_grouped_nonidentical_prompts_fall_back(setup):
+    """RCV-style groups (per-lane confidence headers -> different
+    prompts) must not share — and must still match the dense scheduler
+    exactly."""
+    params, cfg, tok = setup
+    # eos_id=-1: uniform lane lifetimes keep the two schedulers' waves
+    # aligned (see test_grouped_shared_bitmatches_dense_scheduler_sampled)
+    gcfg = GenConfig(max_new_tokens=16, temperature=0.7, eos_id=-1)
+    k = 3
+    groups = [RequestGroup([
+        Request(uid=qi * k + j, prompt=f"[conf {j}] Q: item {qi}\nA: ",
+                group=qi) for j in range(k)]) for qi in range(3)]
+    key = jax.random.PRNGKey(5)
+    runs, stats = {}, {}
+    for mode in ("dense", "shared"):
+        sched = Scheduler(params, cfg, tok, gcfg, n_lanes=3, round_tokens=4,
+                          max_prompt_len=MAXP, paged=mode == "shared",
+                          block_size=8, share_prefix=mode == "shared")
+        runs[mode], stats[mode] = sched.run(groups, key)
+    assert stats["shared"].shared_lanes == 0      # nothing was shareable
+    assert stats["shared"].prefill_prompts == 9   # every lane prefilled
+    for cd, cp in zip(runs["dense"], runs["shared"]):
+        assert cd.gen_len == cp.gen_len
+        assert np.array_equal(cd.tokens, cp.tokens)
+
+
+def test_cross_request_prefix_cache_reuses_blocks(setup):
+    """Requests sharing a long instruction header reuse its full blocks
+    through the scheduler's prefix cache (HBM dedup) without changing a
+    single sampled token vs the dense scheduler."""
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=12, temperature=0.7)
+    header = "You must answer carefully and briefly. "   # > several blocks
+    reqs = [Request(uid=i, prompt=f"{header}Q: item {i}\nA: ")
+            for i in range(6)]
+    key = jax.random.PRNGKey(13)
+    runs, stats = {}, {}
+    for mode in ("dense", "shared"):
+        sched = Scheduler(params, cfg, tok, gcfg, n_lanes=2, round_tokens=4,
+                          max_prompt_len=MAXP, paged=mode == "shared",
+                          block_size=8, share_prefix=mode == "shared")
+        runs[mode], stats[mode] = sched.run(reqs, key)
+        if mode == "shared":
+            assert sched.pool.in_use == 0 and sched.pool.reserved == 0
+    assert stats["shared"].prefix_hits > 0
+    assert stats["shared"].prefix_hit_blocks > 0
+    for cd, cp in zip(runs["dense"], runs["shared"]):
+        assert cd.gen_len == cp.gen_len
         assert np.array_equal(cd.tokens, cp.tokens)
 
 

@@ -94,7 +94,7 @@ def test_zero_spec_picks_divisible_dim():
 
 def test_host_mesh_pjit_train_step_runs():
     """The distributed train step executes on a 1x1 mesh (CPU)."""
-    from repro.launch.dryrun import input_specs, make_train_step
+    from repro.launch.dryrun import make_train_step
     mesh = make_host_mesh()
     cfg = smoke_variant(get_config("llama3-8b"))
     from repro.models import model as M

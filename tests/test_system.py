@@ -3,7 +3,6 @@ metrics, on a tiny model (mechanism-level; the learning-quality runs live
 in examples/ and benchmarks/)."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
