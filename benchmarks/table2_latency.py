@@ -151,6 +151,128 @@ def run_generated_smoke(n_items: int = 8, k: int = 8, tau: float = 1.0,
     return {"arith": _generated_row(slm, items, llm, tau, k, mode)}
 
 
+# ----------------------------------------------------------------------
+# Pipelined multi-tier cascade: barrier tiers vs mid-flight escalation
+# ----------------------------------------------------------------------
+
+UNREACHABLE_TAU = 1.01   # vote share is <= 1.0: acceptance impossible
+
+
+def run_pipeline_smoke(n_items: int = 12, k: int = 4,
+                       tau: float = UNREACHABLE_TAU,
+                       lane_budget: int = 16, round_tokens: int = 8):
+    """No-training smoke for cascade pipelining: two SATER-shaped tiers
+    (one untrained tiny SLM shared by both — the repo's multi-tier
+    example reuses one model with different policies) in front of an
+    oracle terminal, once as sequential barriers
+    (``run_cascade(stream_early_stop=True)``) and once pipelined
+    (``run_cascade_pipelined``: a rejected question's next-tier vote
+    group is submitted the moment VoteEarlyStop decides, filling lanes
+    the barrier path would leave idle in its per-tier ramp/drain).
+
+    The default tau is ``UNREACHABLE_TAU`` (> 1): the confidence-vote
+    share can never exceed 1.0, so acceptance is impossible *by
+    construction* — not just improbable for an untrained model — and
+    every question routes to the terminal in both paths regardless of
+    which tokens get sampled.  That makes the CI gate's
+    ``equal_accuracy`` invariant deterministic while keeping sampled
+    decoding (temperature 0.7), whose ragged EOS times are exactly
+    what gives the pipelined path lanes to backfill (greedy decoding
+    on the untrained model never samples EOS, every lane runs to the
+    same budget, and both paths pack perfectly).  Each group still
+    exercises ``VoteEarlyStop`` fully: its first finished lane proves
+    the vote unreachable and kills the rest mid-flight.  The
+    comparison therefore isolates serving efficiency: the pipelined
+    path must win on decode
+    *rounds* (a deterministic packing win, not a timing artifact) and
+    therefore on wall-clock.  Each path runs twice and the best (min)
+    wall of its two passes is reported — the first pass also pays the
+    jit compiles, and min-of-2 keeps the CI gate's strict
+    wall(pipe) < wall(seq) check out of reach of runner noise.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core import cascade_multi as cm
+    from repro.core.experiment import TINY, model_config
+    from repro.models import model as model_lib
+
+    params = model_lib.init_params(model_config(TINY), jax.random.PRNGKey(0))
+    slm = make_slm(params, TINY)
+    slm.round_tokens = round_tokens
+    slm.lane_budget = lane_budget
+    items = eval_items(TINY, "arith")[:n_items]
+    tiers = [cm.Tier(slm=slm, tau=tau, mode="FCV", k=k),
+             cm.Tier(slm=slm, tau=tau, mode="FCV", k=k)]
+    terminal = cm.TerminalTier(llm=common.oracle_llm())
+    key = jax.random.PRNGKey(5)
+
+    walls_seq, walls_pipe = [], []
+    for _ in range(2):             # first pass pays compiles; min-of-2
+        t0 = time.time()
+        out_seq, tier_stats = cm.run_cascade(tiers, terminal, items, key,
+                                             stream_early_stop=True,
+                                             return_stats=True)
+        walls_seq.append(time.time() - t0)
+    for _ in range(2):
+        out_pipe, ps = cm.run_cascade_pipelined(tiers, terminal, items, key)
+        walls_pipe.append(ps.wall_s)
+    wall_seq, wall_pipe = min(walls_seq), min(walls_pipe)
+    s_seq = cm.summarize(out_seq, len(tiers))
+    s_pipe = cm.summarize(out_pipe, len(tiers))
+    seq_rounds = sum(s.rounds for s in tier_stats if s is not None)
+    seq_gen = sum(s.generated_tokens for s in tier_stats if s is not None)
+    return {"arith": {
+        "sequential": {
+            "wall_s": wall_seq,
+            "rounds": int(seq_rounds),
+            "generated_tokens": int(seq_gen),
+            "accuracy": s_seq["accuracy"],
+            "tier_histogram": s_seq["tier_histogram"],
+        },
+        "pipelined": {
+            "wall_s": wall_pipe,
+            "rounds": int(ps.rounds),
+            "generated_tokens": int(ps.generated_tokens),
+            "accuracy": s_pipe["accuracy"],
+            "tier_histogram": s_pipe["tier_histogram"],
+            "overlap_fraction": ps.overlap_fraction,
+            "host_iters": int(ps.host_iters),
+            "fused_loops": int(ps.fused_loops),
+            "escalated": ps.escalated,
+            "ttd_mean_s": float(np.mean(ps.ttd_s)) if ps.ttd_s else 0.0,
+            "ttd_p95_s": float(np.percentile(ps.ttd_s, 95))
+                         if ps.ttd_s else 0.0,
+        },
+        "speedup": wall_seq / max(wall_pipe, 1e-9),
+        "rounds_cut": 1.0 - ps.rounds / max(seq_rounds, 1),
+        "equal_accuracy": bool(
+            s_seq["accuracy"] == s_pipe["accuracy"]
+            and s_seq["tier_histogram"] == s_pipe["tier_histogram"]),
+    }}
+
+
+def format_pipeline(table, tau: float) -> str:
+    """One line per benchmark comparing the barrier and pipelined
+    cascade paths (both warm): wall-clock, decode rounds (the
+    deterministic packing win), tier-overlap fraction, and the
+    pipelined path's mean/p95 time-to-decision."""
+    lines = [f"pipelined cascade vs sequential barriers @ tau={tau}",
+             f"{'benchmark':12s} {'wall(seq)':>10s} {'wall(pipe)':>11s} "
+             f"{'speedup':>8s} {'rnd(seq)':>9s} {'rnd(pipe)':>10s} "
+             f"{'overlap':>8s} {'ttd-mean':>9s} {'ttd-p95':>8s} {'acc=':>5s}"]
+    for b, row in table.items():
+        seq, pipe = row["sequential"], row["pipelined"]
+        lines.append(
+            f"{b:12s} {seq['wall_s']:9.2f}s {pipe['wall_s']:10.2f}s "
+            f"{row['speedup']:7.2f}x {seq['rounds']:9d} "
+            f"{pipe['rounds']:10d} {pipe['overlap_fraction']:8.0%} "
+            f"{pipe['ttd_mean_s']:8.2f}s {pipe['ttd_p95_s']:7.2f}s "
+            f"{'yes' if row['equal_accuracy'] else 'NO':>5s}")
+    return "\n".join(lines)
+
+
 def format_generated(table, tau: float) -> str:
     """One line per benchmark; ``cache(es)`` is the peak K/V footprint
     of the early-stop run, ``dense-eq`` the dense cache at the same
@@ -183,7 +305,9 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="untrained tiny model, arith only")
-    ap.add_argument("--scale", default="tiny")
+    ap.add_argument("--scale", default=None,
+                    help="experiment scale for trained runs "
+                         "(default: tiny)")
     ap.add_argument("--tau", type=float, default=None)
     ap.add_argument("--k", type=int, default=None,
                     help="default: 8 (smoke) / scale.k_samples")
@@ -195,25 +319,44 @@ if __name__ == "__main__":
     ap.add_argument("--share-prefix", action="store_true",
                     help="with --paged: prefill each K-vote group once "
                          "and share its prompt blocks (refcount + CoW)")
+    ap.add_argument("--pipeline-cascade", action="store_true",
+                    help="smoke the pipelined multi-tier cascade against "
+                         "the sequential-barrier path (wall-clock, decode "
+                         "rounds, overlap, time-to-decision)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the result table as JSON (CI artifact)")
     args = ap.parse_args()
     if args.share_prefix and not args.paged:
         ap.error("--share-prefix requires --paged")
-    if args.smoke:
-        args.tau = 1.0 if args.tau is None else args.tau
-        t = run_generated_smoke(tau=args.tau, k=args.k or 8,
-                                paged=args.paged, block_size=args.block_size,
-                                share_prefix=args.share_prefix)
+    if args.pipeline_cascade:
+        if args.paged or args.share_prefix:
+            ap.error("--pipeline-cascade runs the dense smoke cascade")
+        if not args.smoke or args.scale is not None:
+            ap.error("--pipeline-cascade is only wired for --smoke runs")
+        args.tau = UNREACHABLE_TAU if args.tau is None else args.tau
+        t = run_pipeline_smoke(tau=args.tau, k=args.k or 4)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"tau": args.tau, "pipeline_cascade": True,
+                           "smoke": True, "table": t}, f, indent=2)
+        print(format_pipeline(t, args.tau))
     else:
-        from repro.core.experiment import SCALES
-        if args.paged:
-            ap.error("--paged is only wired for --smoke runs")
-        args.tau = 0.6 if args.tau is None else args.tau
-        t = run_generated(SCALES[args.scale], tau=args.tau, k=args.k)
-    if args.json:
-        with open(args.json, "w") as f:
-            json.dump({"tau": args.tau, "paged": args.paged,
-                       "share_prefix": args.share_prefix,
-                       "smoke": args.smoke, "table": t}, f, indent=2)
-    print(format_generated(t, args.tau))
+        if args.smoke:
+            args.tau = 1.0 if args.tau is None else args.tau
+            t = run_generated_smoke(tau=args.tau, k=args.k or 8,
+                                    paged=args.paged,
+                                    block_size=args.block_size,
+                                    share_prefix=args.share_prefix)
+        else:
+            from repro.core.experiment import SCALES
+            if args.paged:
+                ap.error("--paged is only wired for --smoke runs")
+            args.tau = 0.6 if args.tau is None else args.tau
+            t = run_generated(SCALES[args.scale or "tiny"], tau=args.tau,
+                              k=args.k)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"tau": args.tau, "paged": args.paged,
+                           "share_prefix": args.share_prefix,
+                           "smoke": args.smoke, "table": t}, f, indent=2)
+        print(format_generated(t, args.tau))

@@ -1,0 +1,160 @@
+"""Benchmark-regression gate for the CI smoke JSONs.
+
+Compares a freshly produced smoke-benchmark JSON
+(``benchmarks/table2_latency.py --json``) against the committed
+baseline under ``benchmarks/baselines/`` and fails (exit 1) when a
+cost metric regressed beyond its tolerance:
+
+  * *counters* (tokens decoded, prefill tokens, peak pool blocks,
+    decode rounds) are deterministic given the pinned seeds, but may
+    drift a few percent across jax/numpy versions (different matmul
+    reduction orders flip the occasional sampled token) — they get a
+    relative tolerance plus a small absolute slack;
+  * *wall-clock* varies with the runner, so it only gates at a generous
+    ``--wall-slack`` factor — it catches "the smoke got 3x slower",
+    not machine noise;
+  * *ratios that should stay high* (``generated_cut``, ``cache_cut``,
+    ``overlap_fraction``) gate downward with an absolute tolerance;
+  * the pipelined-cascade JSON additionally carries *invariants* that
+    hold regardless of baseline: the pipelined path must beat the
+    sequential barrier path on wall-clock AND decode rounds at equal
+    accuracy (``equal_accuracy``) — the acceptance bar for cascade
+    pipelining, checked on every CI run.
+
+Usage:
+    python scripts/check_bench_regression.py CURRENT.json BASELINE.json
+    python scripts/check_bench_regression.py CURRENT.json BASELINE.json --update
+
+``--update`` rewrites the baseline from the current run (after a
+deliberate improvement or an accepted drift; commit the result).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import shutil
+import sys
+
+# metric name -> (direction, relative tolerance, absolute slack)
+#   "low"  : lower is better; fail when current > base * (1+rel) + abs
+#   "high" : higher is better; fail when current < base * (1-rel) - abs
+COUNTERS = {
+    "generated_tokens": ("low", 0.20, 16),
+    "prefill_tokens": ("low", 0.15, 16),
+    "prefill_prompts": ("low", 0.15, 4),
+    "peak_blocks_in_use": ("low", 0.30, 4),
+    "rounds": ("low", 0.25, 4),
+    "cancelled_lanes": ("high", 0.30, 4),
+    "generated_cut": ("high", 0.0, 0.15),
+    "cache_cut": ("high", 0.0, 0.15),
+    # relative floor: catches tier overlap collapsing toward zero
+    # without pinning the exact (raggedness-dependent) fraction
+    "overlap_fraction": ("high", 0.5, 0.01),
+}
+WALL_METRICS = ("wall_s",)
+
+
+def walk(cur, base, path=""):
+    """Yield (path, key, current, baseline) for every gated numeric
+    metric present in both trees, recursing through dicts."""
+    if not isinstance(cur, dict) or not isinstance(base, dict):
+        return
+    for k, v in cur.items():
+        p = f"{path}.{k}" if path else k
+        if isinstance(v, dict):
+            yield from walk(v, base.get(k), p)
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            if k in COUNTERS or k in WALL_METRICS:
+                b = base.get(k) if isinstance(base, dict) else None
+                if isinstance(b, (int, float)) and not isinstance(b, bool):
+                    yield p, k, float(v), float(b)
+
+
+def check_metrics(cur, base, wall_slack):
+    failures, rows = [], []
+    for path, key, v, b in walk(cur, base):
+        if key in WALL_METRICS:
+            ok = v <= b * wall_slack
+            bound = f"<= {b * wall_slack:.2f} ({wall_slack:.1f}x slack)"
+        else:
+            direction, rel, slack = COUNTERS[key]
+            if direction == "low":
+                limit = b * (1 + rel) + slack
+                ok = v <= limit
+                bound = f"<= {limit:.2f}"
+            else:
+                limit = b * (1 - rel) - slack
+                ok = v >= limit
+                bound = f">= {limit:.2f}"
+        rows.append((path, v, b, bound, ok))
+        if not ok:
+            failures.append(f"{path}: {v:.2f} vs baseline {b:.2f} "
+                            f"(bound {bound})")
+    return failures, rows
+
+
+def check_pipeline_invariants(cur):
+    """Baseline-free acceptance checks for --pipeline-cascade JSONs."""
+    failures = []
+    for bench, row in cur.get("table", {}).items():
+        seq, pipe = row.get("sequential"), row.get("pipelined")
+        if not (isinstance(seq, dict) and isinstance(pipe, dict)):
+            continue
+        if not row.get("equal_accuracy", False):
+            failures.append(f"{bench}: pipelined accuracy/tier histogram "
+                            "diverged from the sequential path")
+        if not pipe["wall_s"] < seq["wall_s"]:
+            failures.append(
+                f"{bench}: pipelined wall {pipe['wall_s']:.2f}s not "
+                f"strictly below sequential {seq['wall_s']:.2f}s")
+        if not pipe["rounds"] < seq["rounds"]:
+            failures.append(
+                f"{bench}: pipelined rounds {pipe['rounds']} not strictly "
+                f"below sequential {seq['rounds']}")
+    return failures
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current", help="fresh smoke JSON from this CI run")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--wall-slack", type=float, default=3.0,
+                    help="allowed wall-clock factor over baseline "
+                         "(runners differ; default 3.0)")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baseline from the current run")
+    args = ap.parse_args()
+
+    if args.update:
+        shutil.copyfile(args.current, args.baseline)
+        print(f"baseline updated: {args.baseline} <- {args.current}")
+        return 0
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+
+    failures, rows = check_metrics(cur, base, args.wall_slack)
+    if cur.get("pipeline_cascade"):
+        failures += check_pipeline_invariants(cur)
+
+    width = max((len(r[0]) for r in rows), default=20)
+    print(f"{args.current} vs {args.baseline}:")
+    for path, v, b, bound, ok in rows:
+        print(f"  {'ok ' if ok else 'FAIL'} {path:{width}s} "
+              f"{v:12.2f}  base {b:12.2f}  bound {bound}")
+    if failures:
+        print(f"\n{len(failures)} benchmark regression(s):")
+        for msg in failures:
+            print(f"  - {msg}")
+        print("(after a deliberate change, refresh with: "
+              f"python {sys.argv[0]} {args.current} {args.baseline} --update)")
+        return 1
+    print(f"no regressions ({len(rows)} metrics gated)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

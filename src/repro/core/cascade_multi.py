@@ -34,16 +34,19 @@ The two-tier special case reproduces routing.cascade_outcomes.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+import time
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
 from repro.core import voting
 from repro.core.confidence import fcv_schedule, rcv_schedule
-from repro.core.routing import SLM, sample_k, sample_k_streamed
+from repro.core.routing import (SLM, VoteEarlyStop, make_scheduler, sample_k,
+                                sample_k_streamed)
 from repro.data.pipeline import format_prompt
 from repro.data.tasks import TaskItem
+from repro.serving.scheduler import Request, RequestGroup, SchedStats
 
 
 @dataclasses.dataclass
@@ -80,8 +83,12 @@ class MultiOutcome:
 
 def run_cascade(tiers: Sequence[Tier], terminal: TerminalTier,
                 items: Sequence[TaskItem], key,
-                stream_early_stop: bool = False) -> List[MultiOutcome]:
-    """Drive every question through the tier chain.
+                stream_early_stop: bool = False,
+                return_stats: bool = False):
+    """Drive every question through the tier chain, one tier at a time
+    (each tier is a *barrier*: tier i+1 starts only after tier i has
+    drained — see :func:`run_cascade_pipelined` for the overlapped
+    form).
 
     Each tier streams only the questions that fell through every tier
     above it through the scheduler (continuous batching over the
@@ -91,6 +98,10 @@ def run_cascade(tiers: Sequence[Tier], terminal: TerminalTier,
     policy the moment that tier's tau is decided (true compute early
     stop); otherwise lanes run to completion and early stopping is the
     paper's token-accounting simulation (voting.decide_with_early_stop).
+
+    With ``return_stats=True`` returns ``(outcomes, tier_stats)`` where
+    ``tier_stats[i]`` is tier i's serving :class:`SchedStats` (None for
+    a tier that ran in simulation mode or had no survivors).
     """
     n = len(items)
     prompt_toks = [len(format_prompt(it)) for it in items]
@@ -98,21 +109,26 @@ def run_cascade(tiers: Sequence[Tier], terminal: TerminalTier,
     overhead = [0] * n        # decision latency accumulated on the way down
     out: List[Optional[MultiOutcome]] = [None] * n
     alive = list(range(n))
+    tier_stats: List[Optional[SchedStats]] = []
 
     for t_i, tier in enumerate(tiers):
         key, sub = jax.random.split(key)
         if not alive:
+            tier_stats.append(None)
             continue
         sub_items = [items[i] for i in alive]
         if stream_early_stop:
-            results, _ = sample_k_streamed(tier.slm, sub_items, tier.levels(),
-                                           sub, tier.tau, seed_offset=t_i)
+            results, st = sample_k_streamed(tier.slm, sub_items,
+                                            tier.levels(), sub, tier.tau,
+                                            seed_offset=t_i)
             decisions = [r.decision for r in results]
+            tier_stats.append(st)
         else:
             votes = sample_k(tier.slm, sub_items, tier.levels(), sub,
                              seed_offset=t_i)
             decisions = [voting.decide_with_early_stop(vs, tier.tau)
                          for vs in votes]
+            tier_stats.append(None)
         next_alive: List[int] = []
         for dec, qi in zip(decisions, alive):
             # tier cost: prompt once (KV cache shared across samples) +
@@ -137,7 +153,205 @@ def run_cascade(tiers: Sequence[Tier], terminal: TerminalTier,
                      + terminal.out_price * lt) / 1e6
         out[qi] = MultiOutcome(accepted_tier=len(tiers), correct=lc,
                                cost=cost[qi], agl=0, arol=overhead[qi])
+    if return_stats:
+        return out, tier_stats
     return out
+
+
+# ----------------------------------------------------------------------
+# Pipelined cascading: escalate mid-flight instead of per-tier barriers
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PipelineStats:
+    """What the pipelined host loop did, versus the barrier path.
+
+    ``overlap_fraction`` is the share of host-loop iterations during
+    which at least two tiers had decode compute in flight at once —
+    exactly the overlap the barrier path forbids (its tiers run
+    back-to-back, so its overlap is 0 by construction).  ``rounds`` and
+    ``generated_tokens`` aggregate over every tier's serving loop;
+    fused loops (tiers sharing one SLM, and therefore one lane pool)
+    additionally pack escalated groups into lanes the moment earlier
+    tiers free them, which shows up as strictly fewer total rounds than
+    the barrier path's ramp/drain per tier.  ``ttd_s[qi]`` is
+    question qi's time from tier-0 submission to its *final* routing
+    decision (terminal-bound questions: the rejection that sent them
+    there — the terminal call itself is outside the serving loop).
+    """
+    wall_s: float = 0.0
+    host_iters: int = 0
+    overlap_iters: int = 0
+    overlap_fraction: float = 0.0
+    rounds: int = 0
+    generated_tokens: int = 0
+    fused_loops: int = 0         # loops serving >1 tier (same-SLM fusion)
+    n_loops: int = 0
+    escalated: List[int] = dataclasses.field(default_factory=list)
+    ttd_s: List[float] = dataclasses.field(default_factory=list)
+    loop_stats: List[SchedStats] = dataclasses.field(default_factory=list)
+
+
+def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
+                          items: Sequence[TaskItem], key
+                          ) -> "tuple[List[MultiOutcome], PipelineStats]":
+    """The cascade with *pipelined* tiers: each question's tier-(i+1)
+    vote group is submitted the moment tier i's ``VoteEarlyStop``
+    rejects it, so successive tiers' compute overlaps instead of
+    running as sequential barriers (``run_cascade``).
+
+    One :class:`~repro.serving.scheduler.ServingLoop` is opened per
+    *distinct* tier SLM and all loops are interleaved in one host loop,
+    split-phase: every active loop's decode round is dispatched before
+    any is harvested, so one tier's host-side harvest/vote work overlaps
+    the other tiers' device compute (JAX async dispatch).  Tiers that
+    share an SLM object (the repo's multi-tier example reuses one SATER
+    model with different tau/K policies) fuse onto a single loop and
+    lane pool: an escalated group refills a lane the moment an earlier
+    tier's completion frees it — one ramp and one drain for the whole
+    cascade instead of one per tier.
+
+    Decisions come from the same per-group ``VoteEarlyStop`` bound the
+    barrier path uses (per-group tau, since one fused policy may serve
+    several tiers), so with greedy decoding the accept/route decisions
+    — and therefore accuracy and the tier histogram — match
+    ``run_cascade(..., stream_early_stop=True)`` exactly; sampled
+    decoding follows the scheduler's usual batch-composition contract.
+
+    Returns ``(outcomes, PipelineStats)``.
+    """
+    n = len(items)
+    kmax = max((t.k for t in tiers), default=1)
+    prompt_toks = [len(format_prompt(it)) for it in items]
+    cost = [0.0] * n
+    overhead = [0] * n
+    out: List[Optional[MultiOutcome]] = [None] * n
+    t0 = time.time()
+    stats = PipelineStats(ttd_s=[0.0] * n, escalated=[0] * len(tiers))
+
+    # gid namespacing: tier t_i's group for question qi is t_i * n + qi,
+    # its lanes' uids gid * kmax + j — unique within and across loops.
+    def tier_group(t_i: int, qi: int) -> RequestGroup:
+        tier = tiers[t_i]
+        gid = t_i * n + qi
+        return RequestGroup([
+            Request(uid=gid * kmax + j,
+                    prompt=format_prompt(items[qi], conf_level=lvl),
+                    group=gid, meta={"level": lvl})
+            for j, lvl in enumerate(tier.levels())])
+
+    # one loop per distinct SLM; same-SLM tiers fuse onto one lane pool
+    loops: List = []
+    policies: List[VoteEarlyStop] = []
+    loop_of: Dict[int, int] = {}     # tier index -> loop index
+    if n and tiers:
+        slm_loop: Dict[int, int] = {}
+        for t_i, tier in enumerate(tiers):
+            li = slm_loop.get(id(tier.slm))
+            if li is None:
+                li = len(loops)
+                slm_loop[id(tier.slm)] = li
+                key, sub = jax.random.split(key)
+                policy = VoteEarlyStop(tier.tau, {})
+                loops.append(make_scheduler(tier.slm, n * kmax).loop(
+                    sub, stop_policy=policy))
+                policies.append(policy)
+            loop_of[t_i] = li
+        stats.n_loops = len(loops)
+        tiers_per_loop = [sum(1 for t in loop_of.values() if t == li)
+                          for li in range(len(loops))]
+        stats.fused_loops = sum(1 for c in tiers_per_loop if c > 1)
+
+    def submit_tier(t_i: int, qi: int) -> None:
+        gid = t_i * n + qi
+        policies[loop_of[t_i]].add_group(gid, tiers[t_i].levels(),
+                                         tau=tiers[t_i].tau)
+        loops[loop_of[t_i]].submit([tier_group(t_i, qi)])
+
+    for qi in range(n):
+        if tiers:
+            submit_tier(0, qi)
+
+    # per-gid completion accounting (a group's decision is final only
+    # when all K of its lanes have completed — kills included)
+    gid_done: Dict[int, int] = {}
+    gid_gen: Dict[int, int] = {}
+    processed: set = set()
+
+    def process_decisions(touched) -> None:
+        """Settle every group decision that became processable this
+        iteration.  A decision is created inside VoteEarlyStop.observe
+        — i.e. while one of the group's completions is harvested — and
+        becomes final only once all K completions (kills and drops
+        included) have arrived, so only the gids touched by this
+        iteration's completions need checking: O(new completions), not
+        O(all decisions ever) per host iteration."""
+        for gid in touched:
+            t_i = gid // n
+            dec = policies[loop_of[t_i]].decisions.get(gid)
+            if dec is None or gid in processed or \
+                    gid_done.get(gid, 0) < tiers[t_i].k:
+                continue
+            processed.add(gid)
+            qi = gid % n
+            tier = tiers[t_i]
+            dec = dataclasses.replace(dec, used_tokens=gid_gen[gid])
+            cost[qi] += (tier.in_price * prompt_toks[qi]
+                         + tier.out_price * dec.used_tokens) / 1e6
+            if dec.accepted:
+                out[qi] = MultiOutcome(
+                    accepted_tier=t_i,
+                    correct=dec.answer == items[qi].answer,
+                    cost=cost[qi],
+                    agl=overhead[qi] + dec.decision_tokens,
+                    arol=0)
+                stats.ttd_s[qi] = time.time() - t0
+            else:
+                overhead[qi] += dec.decision_tokens
+                stats.escalated[t_i] += 1
+                if t_i + 1 < len(tiers):
+                    submit_tier(t_i + 1, qi)
+                else:
+                    stats.ttd_s[qi] = time.time() - t0
+
+    while any(lp.has_work for lp in loops):
+        # split-phase: launch every active loop's round before blocking
+        # on any — one loop's harvest overlaps the others' device work
+        dispatched = [lp for lp in loops if lp.has_work and lp.dispatch()]
+        stats.host_iters += 1
+        live_tiers = {gid // n for lp in dispatched
+                      for gid in lp.live_groups()}
+        if len(live_tiers) >= 2:
+            stats.overlap_iters += 1
+        touched: set = set()
+        for lp in loops:
+            for comp in (lp.harvest() if lp in dispatched
+                         else lp.take_completed()):
+                gid_done[comp.group] = gid_done.get(comp.group, 0) + 1
+                gid_gen[comp.group] = (gid_gen.get(comp.group, 0)
+                                       + int(comp.gen_len))
+                touched.add(comp.group)
+        process_decisions(touched)
+
+    for lp in loops:
+        stats.loop_stats.append(lp.close())
+    stats.rounds = sum(s.rounds for s in stats.loop_stats)
+    stats.generated_tokens = sum(s.generated_tokens
+                                 for s in stats.loop_stats)
+    if stats.host_iters:
+        stats.overlap_fraction = stats.overlap_iters / stats.host_iters
+
+    for qi in range(n):
+        if out[qi] is None:
+            lc, lt = terminal.llm.answer(items[qi])
+            cost[qi] += (terminal.in_price * prompt_toks[qi]
+                         + terminal.out_price * lt) / 1e6
+            out[qi] = MultiOutcome(accepted_tier=len(tiers), correct=lc,
+                                   cost=cost[qi], agl=0, arol=overhead[qi])
+            if not tiers:
+                stats.ttd_s[qi] = time.time() - t0
+    stats.wall_s = time.time() - t0
+    return out, stats
 
 
 def summarize(outcomes: Sequence[MultiOutcome], n_tiers: int) -> dict:

@@ -173,15 +173,26 @@ class VoteEarlyStop(StopPolicy):
         self._pending_n: Dict[int, int] = {}
         self._seen: Dict[int, Dict[str, float]] = {}
         self._votes: Dict[int, List[Vote]] = {}
+        self._tau: Dict[int, float] = {}
         for g, levels in group_levels.items():
-            ws = [voting.weight(l if l is not None else voting.MEAN_CONF,
-                                alpha) for l in levels]
-            self._total_w[g] = sum(ws)
-            self._pending_w[g] = sum(ws)
-            self._pending_n[g] = len(ws)
-            self._seen[g] = collections.defaultdict(float)
-            self._votes[g] = []
+            self.add_group(g, levels)
         self.decisions: Dict[int, voting.CascadeDecision] = {}
+
+    def add_group(self, g: int, levels: Sequence[Optional[float]],
+                  tau: Optional[float] = None) -> None:
+        """Register a vote group after construction — the streaming
+        form used by the pipelined cascade, which submits a question's
+        tier-(i+1) group only once tier i rejects it.  ``tau``
+        overrides the policy default per group, so one policy (and one
+        fused ServingLoop) can serve tiers with different thresholds."""
+        ws = [voting.weight(l if l is not None else voting.MEAN_CONF,
+                            self.alpha) for l in levels]
+        self._total_w[g] = sum(ws)
+        self._pending_w[g] = sum(ws)
+        self._pending_n[g] = len(ws)
+        self._seen[g] = collections.defaultdict(float)
+        self._votes[g] = []
+        self._tau[g] = self.tau if tau is None else tau
 
     def observe(self, comp: Completion):
         g = comp.group
@@ -194,24 +205,25 @@ class VoteEarlyStop(StopPolicy):
         if not v.rejected and v.answer is not None:
             self._seen[g][v.answer] += voting.weight(v.confidence, self.alpha)
         total_w, seen = self._total_w[g], self._seen[g]
+        tau = self._tau[g]
         n_seen = len(self._votes[g])
-        if self.tau > 0 and total_w > 0:
+        if tau > 0 and total_w > 0:
             best = max(seen.values()) if seen else 0.0
             pend = max(self._pending_w[g], 0.0)
             lo = best / total_w
             hi = (best + pend) / total_w if seen else pend / total_w
-            if seen and lo >= self.tau:
+            if seen and lo >= tau:
                 ans = max(seen, key=seen.get)
                 self.decisions[g] = voting.CascadeDecision(
                     ans, lo, True, v.gen_tokens, 0, n_seen)
                 return (g,)
-            if hi < self.tau:
+            if hi < tau:
                 self.decisions[g] = voting.CascadeDecision(
                     None, hi, False, v.gen_tokens, 0, n_seen)
                 return (g,)
         if self._pending_n[g] == 0:    # group complete: full-vote decision
             self.decisions[g] = voting.decide_no_early_stop(
-                self._votes[g], self.tau, self.alpha)
+                self._votes[g], tau, self.alpha)
         return ()
 
 
@@ -243,8 +255,14 @@ def sample_k_streamed(slm: SLM, items: Sequence[TaskItem],
     key = jax.random.fold_in(key, seed_offset)
     policy = (VoteEarlyStop(tau, {qi: levels for qi in range(len(items))})
               if early_stop else None)
-    comps, stats = make_scheduler(slm, len(items) * len(levels)).run(
-        reqs, key, stop_policy=policy)
+    # explicitly over the streaming loop (submit -> drain ==
+    # Scheduler.run bit-for-bit): the pipelined cascade drives the very
+    # same loop one step at a time, escalating rejections mid-flight
+    loop = make_scheduler(slm, len(items) * len(levels)).loop(
+        key, stop_policy=policy)
+    loop.submit(reqs)
+    comps = loop.drain()
+    stats = loop.close()
     k = len(levels)
     out: List[StreamResult] = []
     for qi in range(len(items)):

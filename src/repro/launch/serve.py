@@ -1,14 +1,24 @@
-"""Distributed serving launcher: the continuous-batching scheduler on
-the production mesh (or host mesh with --smoke).
+"""Distributed serving launcher: the streaming serving loop on the
+production mesh (or host mesh with --smoke).
 
-Requests stream through a fixed lane pool in rounds of --round-tokens;
-lanes freed by finished requests are refilled mid-flight, so a request
-backlog larger than the pool is served without idle lanes.  All jitted
-steps (bucketed prefill, round decode, lane insert) lower under the
-mesh context, keeping the pjit path exercised.
+Requests *arrive over time* (Poisson arrivals at --arrival-rate req/s;
+0 = the whole backlog at t=0) and are submitted to a
+:class:`~repro.serving.scheduler.ServingLoop` mid-flight: the loop
+admits them into free/evicted lanes between decode rounds, so a
+request that lands while earlier ones are decoding starts on the next
+round instead of waiting for a batch boundary.  All jitted steps
+(bucketed prefill, round decode, lane insert) lower under the mesh
+context, keeping the pjit path exercised.
 
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-1b --smoke \
-      --requests 8 --lanes 4 --new-tokens 16 --round-tokens 8
+      --requests 8 --lanes 4 --new-tokens 16 --round-tokens 8 \
+      --arrival-rate 4
+
+The summary reports per-request latency — time-to-first-token and
+time-to-decision (submit -> finalize) mean/p50/p95 — alongside the
+aggregate throughput numbers, because under streaming arrivals the
+aggregate wall-clock alone says nothing about what any one request
+experienced.
 
 With ``--paged --share-prefix``, each request becomes a K-lane vote
 group (K = --group-size): the group's prompt is prefilled once, its
@@ -33,6 +43,10 @@ from repro.serving.batch import GenConfig
 from repro.serving.scheduler import Request, RequestGroup, Scheduler
 
 
+def _pct(xs, q):
+    return float(np.percentile(xs, q)) if len(xs) else 0.0
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -42,6 +56,9 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--round-tokens", type=int, default=8)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson request arrivals per second; 0 submits "
+                         "the whole backlog at t=0 (replay mode)")
     ap.add_argument("--paged", action="store_true",
                     help="serve through the block-paged KV cache")
     ap.add_argument("--block-size", type=int, default=32,
@@ -81,6 +98,12 @@ def main():
             Request(uid=g.uid * args.group_size + j, tokens=g.tokens,
                     group=g.uid) for j in range(args.group_size)])
             for g in reqs]
+    # Poisson process: exponential inter-arrival gaps at the given rate
+    if args.arrival_rate > 0:
+        arrivals = np.cumsum(rng.exponential(1.0 / args.arrival_rate,
+                                             len(reqs)))
+    else:
+        arrivals = np.zeros(len(reqs))
     gcfg = GenConfig(max_new_tokens=args.new_tokens, temperature=0.0,
                      eos_id=-1)     # greedy, run every request to budget
     sched = Scheduler(params, cfg, tokenizer=None, gcfg=gcfg,
@@ -89,13 +112,36 @@ def main():
                       block_size=args.block_size,
                       share_prefix=args.share_prefix)
 
+    comps = []
     with mesh:
+        loop = sched.loop(key)
         t0 = time.time()
-        comps, stats = sched.run(reqs, key)
+        nxt = 0
+        while nxt < len(reqs) or loop.has_work:
+            now = time.time() - t0
+            while nxt < len(reqs) and arrivals[nxt] <= now:
+                loop.submit([reqs[nxt]])     # mid-flight admission
+                nxt += 1
+            if loop.has_work:
+                done = loop.step()
+                comps.extend(done)
+                # bounded streaming: the loop drops delivered records,
+                # so session memory tracks the lane pool, not the total
+                # requests served
+                loop.release(c.uid for c in done)
+            elif nxt < len(reqs):
+                # idle until the next arrival is due
+                time.sleep(min(arrivals[nxt] - now, 0.05))
         dt = time.time() - t0
+        stats = loop.close()
 
     tok_total = sum(c.gen_len for c in comps)
-    print(f"served {len(comps)} requests over {args.lanes} lanes in {dt:.2f}s")
+    ttft = [c.ttft_s for c in comps if c.ttft_s is not None]
+    ttd = [c.ttd_s for c in comps if c.ttd_s is not None]
+    print(f"served {len(comps)} requests over {args.lanes} lanes in {dt:.2f}s"
+          + (f" (Poisson {args.arrival_rate:.1f} req/s, last arrival "
+             f"{arrivals[-1]:.2f}s)" if args.arrival_rate > 0 and len(reqs)
+             else ""))
     print(f"  rounds={stats.rounds} prefills={stats.prefills} "
           f"(prompts={stats.prefill_prompts}, "
           f"tokens={stats.prefill_tokens}) "
@@ -103,12 +149,18 @@ def main():
     print(f"  {tok_total} tokens total, "
           f"{1000 * dt / max(tok_total, 1):.1f} ms/tok, "
           f"lane occupancy {stats.lane_rounds / max(stats.rounds * args.lanes, 1):.0%}")
+    print(f"  per-request latency: "
+          f"ttft mean {np.mean(ttft) * 1e3 if ttft else 0:.0f}ms "
+          f"p50 {_pct(ttft, 50) * 1e3:.0f}ms p95 {_pct(ttft, 95) * 1e3:.0f}ms"
+          f" | time-to-decision mean {np.mean(ttd) * 1e3 if ttd else 0:.0f}ms"
+          f" p50 {_pct(ttd, 50) * 1e3:.0f}ms p95 {_pct(ttd, 95) * 1e3:.0f}ms")
     if args.paged:
         print(f"  paged cache: peak {stats.peak_blocks_in_use}/"
               f"{stats.pool_blocks} blocks "
               f"({stats.peak_cache_bytes / 2**20:.2f} MiB vs dense "
               f"{stats.dense_cache_bytes / 2**20:.2f} MiB), "
-              f"admission blocked {stats.admission_blocked}x")
+              f"admission blocked {stats.admission_blocked}x, "
+              f"peak reserved {sched.pool.peak_reserved}")
     if args.share_prefix:
         pool = sched.pool
         print(f"  prefix sharing: {stats.shared_lanes} lanes rode a "
@@ -118,7 +170,9 @@ def main():
               f"pool holds registered {pool.shared_holds}, "
               f"end state in_use={pool.in_use} reserved={pool.reserved}")
     if comps:
-        print("sample request 0 tokens:", comps[0].tokens[:16].tolist())
+        first = min(comps, key=lambda c: c.uid)
+        print(f"sample request {first.uid} tokens:",
+              first.tokens[:16].tolist())
 
 
 if __name__ == "__main__":

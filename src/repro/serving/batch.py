@@ -288,9 +288,26 @@ def copy_blocks(cache, src, dst):
     return out
 
 
+def harvest_lengths(toks: np.ndarray, limits: np.ndarray,
+                    eos_id: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-row harvest length for one decode round: tokens up to and
+    including the first EOS that falls inside the row's ``limits[i]``
+    budget window, or ``limits[i]`` when none does.
+
+    Returns ``(lengths, eos_found)`` — the vectorized form of the
+    scheduler's per-lane truncate-at-EOS-or-budget harvest (one numpy
+    pass over the whole round batch instead of a Python loop per lane).
+    """
+    _, r = toks.shape
+    pos = np.arange(r, dtype=np.int32)
+    eos = (toks == eos_id) & (pos[None, :] < limits[:, None])
+    found = eos.any(axis=1)
+    lengths = np.where(found, eos.argmax(axis=1) + 1, limits)
+    return lengths.astype(np.int32), found
+
+
 def first_eos_lengths(toks: np.ndarray, eos_id: int) -> np.ndarray:
     """Per-row token count up to and including the first EOS (row width
-    if none) — vectorized, this runs on every harvested batch."""
-    eos = toks == eos_id
-    return np.where(eos.any(axis=1), eos.argmax(axis=1) + 1,
-                    toks.shape[1]).astype(np.int32)
+    if none) — :func:`harvest_lengths` with the limit at full width."""
+    limits = np.full((toks.shape[0],), toks.shape[1], np.int32)
+    return harvest_lengths(toks, limits, eos_id)[0]

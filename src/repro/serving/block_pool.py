@@ -115,6 +115,7 @@ class BlockPool:
         self._refs: Dict[int, int] = {}
         self.reserved = 0
         self.peak_in_use = 0
+        self.peak_reserved = 0       # reservation high-water (admission churn)
         self.cow_copies = 0          # cow() calls that materialized a copy
         self.shared_holds = 0        # holders registered via share()
 
@@ -145,6 +146,7 @@ class BlockPool:
         if n > self.available:
             return False
         self.reserved += n
+        self.peak_reserved = max(self.peak_reserved, self.reserved)
         return True
 
     def unreserve(self, n: int) -> None:
@@ -230,6 +232,18 @@ class BlockPool:
                 del self._refs[i]
                 self._free_set.add(i)
                 self._free.append(i)
+
+    def leak_report(self) -> "str | None":
+        """None when the pool has fully drained (every block free, no
+        outstanding reservation) — the invariant a streaming serving
+        loop must restore after arbitrary mid-flight admission/eviction
+        churn.  Otherwise a human-readable description of what is still
+        held, for test assertions and shutdown diagnostics."""
+        if self.in_use == 0 and self.reserved == 0:
+            return None
+        held = {i: c for i, c in self._refs.items()}
+        return (f"pool not drained: in_use={self.in_use} "
+                f"reserved={self.reserved} held_refs={held}")
 
     def __repr__(self):
         return (f"BlockPool(blocks={self.n_blocks}, bs={self.block_size}, "

@@ -1,5 +1,16 @@
 """Round-based continuous-batching scheduler, with an optional
-block-paged KV cache.
+block-paged KV cache and a streaming serving loop.
+
+Two entry points share all machinery:
+
+  * :meth:`Scheduler.run` — batch-at-once: drive a fixed request list
+    to completion (what benchmarks replaying a dataset use);
+  * :meth:`Scheduler.loop` -> :class:`ServingLoop` — streaming:
+    ``submit()`` admits new requests *between decode rounds* (including
+    while earlier requests are mid-flight), ``step()`` advances one
+    round and returns that round's completions, ``drain()`` runs the
+    backlog dry.  ``run()`` is a thin submit-everything-then-drain
+    wrapper over the loop, bit-identical to the batch path.
 
 A fixed pool of ``n_lanes`` decode lanes shares one device cache pytree
 (leading lane axis) and advances in lockstep rounds of ``round_tokens``
@@ -98,10 +109,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving.batch import (GenConfig, copy_blocks, decode_round,
-                                 insert_lanes, insert_lanes_paged,
-                                 insert_lanes_shared, make_buckets,
-                                 pad_token_rows, pick_bucket, prefill_jit,
-                                 prefill_shared)
+                                 harvest_lengths, insert_lanes,
+                                 insert_lanes_paged, insert_lanes_shared,
+                                 make_buckets, pad_token_rows, pick_bucket,
+                                 prefill_jit, prefill_shared)
 from repro.serving.block_pool import BlockPool
 
 
@@ -135,7 +146,7 @@ class RequestGroup:
 @dataclasses.dataclass
 class Completion:
     """A finished (or cancelled) request as returned by
-    :meth:`Scheduler.run`."""
+    :meth:`Scheduler.run` / :meth:`ServingLoop.step`."""
     uid: int
     group: Optional[int]
     tokens: np.ndarray           # generated ids up to & incl. EOS
@@ -143,6 +154,8 @@ class Completion:
     text: str
     cancelled: bool              # killed by StopPolicy before finishing
     meta: Optional[dict] = None
+    ttft_s: Optional[float] = None   # submit -> first harvested token
+    ttd_s: Optional[float] = None    # submit -> finalize (time-to-decision)
 
 
 class StopPolicy:
@@ -269,6 +282,7 @@ class _Lane:
     budget: int
     parts: List[np.ndarray] = dataclasses.field(default_factory=list)
     generated: int = 0
+    first_tok_s: Optional[float] = None   # host time of first harvested token
     # paged bookkeeping
     prompt_len: int = 0
     blocks: List[int] = dataclasses.field(default_factory=list)
@@ -388,14 +402,20 @@ class Scheduler:
                 units.append(r)
         return units, order
 
-    def _plan_unit(self, members: List[Request],
-                   enc: Dict[int, List[int]]) -> Tuple[List[_PlanRow], int]:
+    def _plan_unit(self, members: List[Request], enc: Dict[int, List[int]],
+                   prefix_cache: Optional[_PrefixCache]
+                   ) -> Tuple[List[_PlanRow], int]:
         """Lay out one admission unit as prefill rows and price its pool
         reservation.  Token-identical members collapse onto one shared
         row; otherwise every member rows alone (no sharing, still
         atomic).  The reservation covers newly allocated prompt blocks
         (cache hits excluded), every member's decode growth, and one
-        CoW clone per extra holder of a partial tail block."""
+        CoW clone per extra holder of a partial tail block.
+
+        ``prefix_cache`` is the calling ServingLoop's own cache (not
+        the scheduler-level pointer, which only tracks the most recent
+        loop): two concurrent loops on one scheduler must never plan
+        against each other's pools."""
         toks0 = enc[members[0].uid]
         if len(members) > 1 and all(enc[m.uid] == toks0
                                     for m in members[1:]):
@@ -409,8 +429,8 @@ class Scheduler:
             n_pb = -(-p_len // self.block_size)
             n_full = p_len // self.block_size
             partial = n_full < n_pb
-            hit = (self.prefix_cache.lookup(toks)
-                   if self.prefix_cache is not None else [])
+            hit = (prefix_cache.lookup(toks)
+                   if prefix_cache is not None else [])
             growth = sum(self._reservation(p_len, self._budget(m)) - n_pb
                          for m in ms)
             need += (n_pb - len(hit)) + growth
@@ -421,359 +441,30 @@ class Scheduler:
         return rows, need
 
     # ------------------------------------------------------------------
+    def loop(self, key, stop_policy: Optional[StopPolicy] = None
+             ) -> "ServingLoop":
+        """Open a streaming serving session over this scheduler's lane
+        pool: ``submit()`` requests (including mid-flight, between
+        rounds), ``step()`` one decode round at a time, ``drain()`` to
+        completion, ``close()`` for the stats.  :meth:`run` is the
+        batch-at-once wrapper over the same loop."""
+        return ServingLoop(self, key, stop_policy)
+
     def run(self, requests: Sequence, key,
             stop_policy: Optional[StopPolicy] = None
             ) -> Tuple[List[Completion], SchedStats]:
         """Drive every request (or RequestGroup) to completion; returns
         completions in request order (groups flattened in place) plus
-        scheduling statistics."""
-        t0 = time.time()
-        if isinstance(key, int):
-            key = jax.random.PRNGKey(key)
-        stats = SchedStats()
-        units, order = self._intake(requests)
-        pending = collections.deque(units)
-        lanes: List[Optional[_Lane]] = [None] * self.n_lanes
-        host_done = np.ones((self.n_lanes,), bool)
-        if self.paged:
-            pool = BlockPool(self.pool_blocks, self.block_size)
-            self.pool = pool
-            self.prefix_cache = (_PrefixCache(pool, self.block_size,
-                                              self.prefix_cache_entries)
-                                 if self.share_prefix else None)
-            cache = model_lib.init_paged_decode_state(
-                self.cfg, self.n_lanes, self.s_max, self.block_size,
-                self.pool_blocks)
-            host_table = np.zeros((self.n_lanes, self.max_blocks), np.int32)
-            table_dirty = False
-        else:
-            pool = None
-            self.prefix_cache = None
-            cache = model_lib.init_decode_state(self.cfg, self.n_lanes,
-                                                self.s_max)
-        cur_logits = jnp.zeros((self.n_lanes, self.cfg.vocab_size),
-                               jnp.float32)
-        completions: Dict[int, Completion] = {}
-        decided: set = set()
-        # tokenization memo: a pool-blocked head-of-queue request is
-        # re-examined every round; encode it once, not once per round
-        enc: Dict[int, List[int]] = {}
-        global_step = 0
+        scheduling statistics.
 
-        def finalize(i: int, cancelled: bool):
-            nonlocal table_dirty
-            lane = lanes[i]
-            toks = (np.concatenate(lane.parts) if lane.parts
-                    else np.zeros((0,), np.int32))
-            text = self.tokenizer.decode(toks) if self.tokenizer else ""
-            comp = Completion(lane.req.uid, lane.req.group, toks, len(toks),
-                              text, cancelled, lane.req.meta)
-            completions[lane.req.uid] = comp
-            if self.paged:
-                # reclaim immediately: blocks (and the unused tail of the
-                # reservation) go back to the pool mid-flight, and the
-                # lane's table row points at the trash block so its
-                # remaining in-round steps write nowhere
-                pool.free(lane.blocks)
-                pool.unreserve(lane.reserved)
-                lane.blocks, lane.reserved = [], 0
-                host_table[i] = 0
-                table_dirty = True
-            lanes[i] = None
-            host_done[i] = True
-            if cancelled:
-                stats.cancelled += 1
-            return comp
-
-        def drop_decided(members: List[Request]):
-            for m in members:
-                completions[m.uid] = Completion(
-                    m.uid, m.group, np.zeros((0,), np.int32), 0, "",
-                    True, m.meta)
-                stats.cancelled += 1
-
-        def admit_shared():
-            """Shared-prefix admission: atomic group units, one prefill
-            row per distinct prompt, prompt blocks refcount-shared into
-            every member lane, CoW on partial tails, prefix-cache
-            reuse/registration.  See the class docstring."""
-            nonlocal cache, cur_logits, table_dirty
-            free = [i for i in range(self.n_lanes) if lanes[i] is None]
-            planned: List[_PlanRow] = []
-            taken = 0
-            while pending:
-                unit = pending[0]
-                members = (unit.requests if isinstance(unit, RequestGroup)
-                           else [unit])
-                if all(m.group is not None and m.group in decided
-                       for m in members):
-                    pending.popleft()
-                    drop_decided(members)
-                    continue
-                if taken + len(members) > len(free):
-                    break              # atomic: the whole unit or nothing
-                for m in members:
-                    if m.uid not in enc:
-                        enc[m.uid] = self._encode(m)
-                rows = None
-                blocked = False
-                while True:
-                    rows, need = self._plan_unit(members, enc)
-                    if need > self.pool_blocks:
-                        # the unit can never fit atomically: degrade to
-                        # per-lane units (constructor guarantees any
-                        # single lane fits) and re-examine the head
-                        pending.popleft()
-                        for m in reversed(members):
-                            pending.appendleft(m)
-                        rows = None
-                        break
-                    if pool.reserve(need):
-                        break
-                    # pool pressure: shed warm prefix-cache blocks
-                    # before backpressuring admission
-                    if not self.prefix_cache.evict_lru():
-                        stats.admission_blocked += 1
-                        blocked = True
-                        break
-                if blocked:
-                    break
-                if rows is None:
-                    continue
-                # hold the cache-hit blocks for every lane of each row
-                # now, so later evictions can only drop the cache's own
-                # hold, never the blocks these lanes are about to map
-                for row in rows:
-                    if row.hit:
-                        pool.share(row.hit, len(row.members))
-                        stats.prefix_hits += 1
-                        stats.prefix_hit_blocks += len(row.hit)
-                pending.popleft()
-                planned.extend(rows)
-                taken += len(members)
-            if not planned:
-                return
-            by_bucket: Dict[int, List[_PlanRow]] = collections.defaultdict(list)
-            for row in planned:
-                by_bucket[pick_bucket(len(row.toks), self.buckets)
-                          ].append(row)
-            cow_src: List[int] = []
-            cow_dst: List[int] = []
-            for bucket in sorted(by_bucket):
-                rows = by_bucket[bucket]
-                admit_n = pick_bucket(len(rows), self.admit_buckets)
-                kmax = pick_bucket(max(len(r.members) for r in rows),
-                                   self._fan_buckets)
-                toks, lens = pad_token_rows([r.toks for r in rows],
-                                            self.gcfg.pad_id, bucket,
-                                            admit_n)
-                lane_rows = np.full((admit_n, kmax), self.n_lanes, np.int32)
-                write_rows = np.zeros((admit_n, self.max_blocks), np.int32)
-                for j, row in enumerate(rows):
-                    p_len = max(len(row.toks), 1)
-                    h = len(row.hit)
-                    own = pool.alloc(row.n_pb - h)
-                    prompt_blocks = row.hit + own
-                    # write side: cache-satisfied positions land in the
-                    # trash block (their KV already exists, and earlier
-                    # holders must keep bit-identical reads)
-                    write_rows[j, h:row.n_pb] = own
-                    k_members = len(row.members)
-                    if k_members > 1 and own:
-                        pool.share(own, k_members - 1)
-                    self.prefix_cache.register(row.toks,
-                                               prompt_blocks[:row.n_full])
-                    tail_of = {}
-                    if row.partial:
-                        tail = prompt_blocks[-1]
-                        for m in row.members:
-                            blk, copied = pool.cow(tail)
-                            if copied:
-                                cow_src.append(tail)
-                                cow_dst.append(blk)
-                            tail_of[m.uid] = blk
-                    for mj, m in enumerate(row.members):
-                        i = free.pop(0)
-                        lane = _Lane(m, self._budget(m))
-                        lane.prompt_len = p_len
-                        lane.blocks = list(prompt_blocks)
-                        if row.partial:
-                            lane.blocks[-1] = tail_of[m.uid]
-                        lane.reserved = self._reservation(
-                            p_len, lane.budget) - row.n_pb
-                        host_table[i] = 0
-                        host_table[i, :row.n_pb] = lane.blocks
-                        lane_rows[j, mj] = i
-                        lanes[i] = lane
-                        host_done[i] = False
-                    table_dirty = True
-                    stats.shared_lanes += k_members - 1
-                last, new_cache = prefill_shared(
-                    self.params, self.cfg, jnp.asarray(toks),
-                    jnp.asarray(lens), bucket)
-                cache, cur_logits = insert_lanes_shared(
-                    cache, cur_logits, new_cache, last,
-                    jnp.asarray(lane_rows), jnp.asarray(write_rows))
-                stats.prefills += 1
-                stats.prefill_prompts += len(rows)
-                stats.prefill_tokens += sum(len(r.toks) for r in rows)
-            if cow_src:
-                # device half of CoW, after the inserts wrote the
-                # originals; padded pairs clone trash onto trash
-                n = pick_bucket(len(cow_src), self._fan_buckets)
-                src = np.zeros((n,), np.int32)
-                dst = np.zeros((n,), np.int32)
-                src[: len(cow_src)] = cow_src
-                dst[: len(cow_dst)] = cow_dst
-                cache = copy_blocks(cache, jnp.asarray(src),
-                                    jnp.asarray(dst))
-
-        while pending or any(l is not None for l in lanes):
-            # ---- admission: fill free lanes from the pending queue ----
-            if self.share_prefix:
-                admit_shared()
-                wave: List[Request] = []
-            else:
-                free = [i for i in range(self.n_lanes)
-                        if lanes[i] is None]
-                wave = []
-                while pending and len(wave) < len(free):
-                    req = pending[0]
-                    if req.group in decided:
-                        pending.popleft()
-                        drop_decided([req])
-                        continue
-                    if req.uid not in enc:
-                        enc[req.uid] = self._encode(req)
-                    if self.paged:
-                        need = self._reservation(max(len(enc[req.uid]), 1),
-                                                 self._budget(req))
-                        if not pool.reserve(need):
-                            # pool pressure: leave the queue intact (FIFO)
-                            # and retry after the next round frees blocks
-                            stats.admission_blocked += 1
-                            break
-                    pending.popleft()
-                    wave.append(req)
-            if wave:
-                by_bucket: Dict[int, List[Request]] = collections.defaultdict(list)
-                for r in wave:
-                    by_bucket[pick_bucket(len(enc[r.uid]), self.buckets)
-                              ].append(r)
-                for bucket in sorted(by_bucket):
-                    grp = by_bucket[bucket]
-                    admit_n = pick_bucket(len(grp), self.admit_buckets)
-                    toks, lens = pad_token_rows([enc[r.uid] for r in grp],
-                                                self.gcfg.pad_id, bucket,
-                                                admit_n)
-                    lane_ids = np.full((admit_n,), self.n_lanes, np.int32)
-                    block_rows = (np.zeros((admit_n, self.max_blocks),
-                                           np.int32) if self.paged else None)
-                    for j, r in enumerate(grp):
-                        i = free.pop(0)
-                        lane_ids[j] = i
-                        lane = _Lane(r, self._budget(r))
-                        if self.paged:
-                            lane.prompt_len = max(len(enc[r.uid]), 1)
-                            n_pb = -(-lane.prompt_len // self.block_size)
-                            lane.blocks = pool.alloc(n_pb)
-                            lane.reserved = self._reservation(
-                                lane.prompt_len, lane.budget) - n_pb
-                            block_rows[j, :n_pb] = lane.blocks
-                            host_table[i] = block_rows[j]
-                            table_dirty = True
-                        lanes[i] = lane
-                        host_done[i] = False
-                    if self.paged:
-                        # prefill dense at the prompt bucket only, then
-                        # scatter the rows into their allocated pages
-                        last, new_cache = prefill_jit(
-                            self.params, self.cfg, jnp.asarray(toks),
-                            jnp.asarray(lens), bucket)
-                        cache, cur_logits = insert_lanes_paged(
-                            cache, cur_logits, new_cache, last,
-                            jnp.asarray(lane_ids), jnp.asarray(block_rows))
-                    else:
-                        last, new_cache = prefill_jit(
-                            self.params, self.cfg, jnp.asarray(toks),
-                            jnp.asarray(lens), self.s_max)
-                        cache, cur_logits = insert_lanes(
-                            cache, cur_logits, new_cache, last,
-                            jnp.asarray(lane_ids))
-                    stats.prefills += 1
-                    stats.prefill_prompts += len(grp)
-                    stats.prefill_tokens += sum(len(enc[r.uid]) for r in grp)
-
-            live = [i for i in range(self.n_lanes) if lanes[i] is not None]
-            if not live:
-                continue           # only decided-group requests were queued
-
-            # ---- one decode round over the whole pool ----
-            r = self.round_tokens
-            if self.paged:
-                # grow each live lane's block table one round ahead of
-                # its decode position (drawn from its reservation, so
-                # this can never fail); writes past the budget spill
-                # into the trash block by construction
-                for i in live:
-                    lane = lanes[i]
-                    upto = min(lane.prompt_len + lane.generated + r,
-                               lane.prompt_len + lane.budget)
-                    grow = -(-upto // self.block_size) - len(lane.blocks)
-                    if grow > 0:
-                        new_ids = pool.alloc(grow)
-                        host_table[i, len(lane.blocks):
-                                   len(lane.blocks) + grow] = new_ids
-                        lane.blocks.extend(new_ids)
-                        lane.reserved -= grow
-                        table_dirty = True
-                if table_dirty:
-                    cache["block_tables"] = jnp.asarray(host_table)
-                    table_dirty = False
-            cache, cur_logits, _, toks = decode_round(
-                self.params, self.cfg, self.gcfg, cache, cur_logits,
-                jnp.asarray(host_done), key, jnp.int32(global_step), r)
-            global_step += r
-            stats.rounds += 1
-            stats.lane_rounds += len(live)
-            toks_np = np.asarray(toks)
-
-            # ---- harvest: EOS / budget per live lane ----
-            newly: List[int] = []
-            for i in live:
-                lane = lanes[i]
-                take = toks_np[i, : min(r, lane.budget - lane.generated)]
-                eos = np.nonzero(take == self.gcfg.eos_id)[0]
-                finished = False
-                if len(eos):
-                    take = take[: int(eos[0]) + 1]
-                    finished = True
-                lane.parts.append(take)
-                lane.generated += len(take)
-                stats.generated_tokens += len(take)
-                if finished or lane.generated >= lane.budget:
-                    newly.append(i)
-
-            # ---- finalize + vote-aware early stop ----
-            newly.sort(key=lambda i: (lanes[i].generated, lanes[i].req.uid))
-            for i in newly:
-                comp = finalize(i, cancelled=False)
-                if stop_policy is not None:
-                    decided.update(stop_policy.observe(comp))
-            if decided:
-                for i in range(self.n_lanes):
-                    if lanes[i] is not None and lanes[i].req.group in decided:
-                        finalize(i, cancelled=True)
-
-        if self.prefix_cache is not None:
-            # the cache's lifetime is the run: release its block holds
-            # so the pool drains to empty (leak checks rely on this)
-            self.prefix_cache.clear()
-        stats.wall_s = time.time() - t0
-        self._cache_stats(stats, cache, pool)
-        if pool is not None:
-            stats.cow_copies = pool.cow_copies
-        return [completions[uid] for uid in order], stats
+        Thin wrapper over :class:`ServingLoop` — submit everything up
+        front, drain to completion (tests prove this is bit-identical
+        to the pre-loop batch scheduler for dense, paged, and
+        shared-prefix serving, greedy and sampled)."""
+        loop = self.loop(key, stop_policy)
+        loop.submit(requests)
+        comps = loop.drain()
+        return comps, loop.close()
 
     # ------------------------------------------------------------------
     def _cache_stats(self, stats: SchedStats, cache, pool: Optional[BlockPool]):
@@ -795,3 +486,539 @@ class Scheduler:
         else:
             stats.peak_cache_bytes = kv_bytes
             stats.dense_cache_bytes = kv_bytes
+
+
+class ServingLoop:
+    """Incremental serving session over one :class:`Scheduler`'s lane
+    pool — the streaming core that :meth:`Scheduler.run` wraps.
+
+    Lifecycle::
+
+        loop = sched.loop(key, stop_policy)
+        loop.submit(requests)            # any mix of Request/RequestGroup
+        while loop.has_work:
+            done = loop.step()           # admit -> one decode round -> harvest
+            loop.submit(more)            # mid-flight admission: new work
+                                         # fills lanes freed this round
+        stats = loop.close()
+
+    ``submit`` may be called at any time between steps: new requests and
+    RequestGroups enter the pending queue and are admitted into
+    free/evicted lanes at the next step's admission phase, exactly as a
+    between-rounds arrival would be in a live serving deployment.  This
+    is what converts the scheduler from "replay a fixed batch" into
+    "serve a stream" — the pipelined multi-tier cascade
+    (``core/cascade_multi.run_cascade_pipelined``) and the Poisson
+    arrival loop (``launch/serve.py``) are both built on it.
+
+    ``step`` splits into ``dispatch()`` (admission + launching one
+    jitted decode round, non-blocking thanks to JAX async dispatch) and
+    ``harvest()`` (block on the round's tokens, truncate at EOS/budget,
+    finalize, consult the StopPolicy).  A multi-loop driver can dispatch
+    several independent loops' rounds before harvesting any of them, so
+    one loop's host-side harvest work overlaps another's device compute.
+
+    Determinism: the master key is fixed for the session and the global
+    step counter advances by ``round_tokens`` per round, so submitting
+    everything up front and draining reproduces ``Scheduler.run``
+    bit-for-bit (dense, paged, and shared-prefix; greedy and sampled —
+    proven in tests/test_serving_loop.py).
+
+    Per-request latency: every submitted uid is timestamped;
+    completions carry ``ttft_s`` (submit -> first harvested token) and
+    ``ttd_s`` (submit -> finalize), the per-request numbers a serving
+    frontend reports.
+    """
+
+    def __init__(self, sched: Scheduler, key,
+                 stop_policy: Optional[StopPolicy] = None):
+        if isinstance(key, int):
+            key = jax.random.PRNGKey(key)
+        self.sched = sched
+        self.key = key
+        self.stop_policy = stop_policy
+        self.stats = SchedStats()
+        self._t0 = time.time()
+        self.pending: "collections.deque" = collections.deque()
+        self._order: List[int] = []
+        self.lanes: List[Optional[_Lane]] = [None] * sched.n_lanes
+        self._host_done = np.ones((sched.n_lanes,), bool)
+        if sched.paged:
+            self.pool: Optional[BlockPool] = BlockPool(sched.pool_blocks,
+                                                       sched.block_size)
+            sched.pool = self.pool
+            self.prefix_cache = (_PrefixCache(self.pool, sched.block_size,
+                                              sched.prefix_cache_entries)
+                                 if sched.share_prefix else None)
+            self.cache = model_lib.init_paged_decode_state(
+                sched.cfg, sched.n_lanes, sched.s_max, sched.block_size,
+                sched.pool_blocks)
+            self._host_table = np.zeros((sched.n_lanes, sched.max_blocks),
+                                        np.int32)
+            self._table_dirty = False
+        else:
+            self.pool = None
+            self.prefix_cache = None
+            self.cache = model_lib.init_decode_state(sched.cfg, sched.n_lanes,
+                                                     sched.s_max)
+        sched.prefix_cache = self.prefix_cache
+        self.cur_logits = jnp.zeros((sched.n_lanes, sched.cfg.vocab_size),
+                                    jnp.float32)
+        self.completions: Dict[int, Completion] = {}
+        self.decided: set = set()
+        # tokenization memo: a pool-blocked head-of-queue request is
+        # re-examined every round; encode it once, not once per round
+        self._enc: Dict[int, List[int]] = {}
+        self.global_step = 0
+        self._emitted: List[Completion] = []
+        self._submit_s: Dict[int, float] = {}
+        self._released: set = set()
+        self._inflight: Optional[Tuple[List[int], object]] = None
+        self._closed = False
+
+    # -- submission ----------------------------------------------------
+    def submit(self, requests: Sequence) -> None:
+        """Queue Requests / RequestGroups for admission at the next
+        step.  Callable any time before :meth:`close` — including while
+        earlier requests are still decoding (mid-flight admission)."""
+        units, order = self.sched._intake(requests)
+        now = time.time()
+        for uid in order:
+            self._order.append(uid)
+            self._submit_s[uid] = now
+        self.pending.extend(units)
+
+    @property
+    def has_work(self) -> bool:
+        """True while any request is pending, admitted, or in flight."""
+        return (bool(self.pending) or self._inflight is not None
+                or any(l is not None for l in self.lanes))
+
+    def live_groups(self) -> set:
+        """Group ids with at least one lane currently decoding."""
+        return {l.req.group for l in self.lanes
+                if l is not None and l.req.group is not None}
+
+    # -- the streaming core --------------------------------------------
+    def step(self, key=None) -> List[Completion]:
+        """Admission + one decode round + harvest.  Returns every
+        request finalized by this step (finished, killed by the
+        StopPolicy, or dropped before admission because its group was
+        already decided).  ``key``, if given, replaces the session
+        master key before the round (pass the same key every step to
+        reproduce a one-shot :meth:`Scheduler.run`)."""
+        if key is not None:
+            self.key = (jax.random.PRNGKey(key) if isinstance(key, int)
+                        else key)
+        if self.dispatch():
+            return self.harvest()
+        return self._take_emitted()
+
+    def drain(self) -> List[Completion]:
+        """Step until every submitted request has completed; returns
+        all completions in submission order (skipping any a streaming
+        consumer already released)."""
+        while self.has_work:
+            self.step()
+        return [self.completions[uid] for uid in self._order
+                if uid in self.completions]
+
+    def take_completed(self) -> List[Completion]:
+        """Completions finalized since the last step() /
+        take_completed() call — notably those an in-flight round
+        produced under close()."""
+        return self._take_emitted()
+
+    def release(self, uids: Iterable[int]) -> None:
+        """Drop the retained Completion records (token arrays included)
+        for delivered requests.  A long-lived streaming consumer that
+        takes its results from step()'s return values should release
+        them afterwards so session memory stays bounded by the lane
+        pool (plus one int per decided vote group, which must be
+        remembered to drop late submissions), not by total requests
+        served.  drain() returns only unreleased completions, so batch
+        (:meth:`Scheduler.run`) callers never release."""
+        for uid in uids:
+            self.completions.pop(uid, None)
+            self._submit_s.pop(uid, None)
+            self._enc.pop(uid, None)
+            self._released.add(uid)
+        # amortized O(1) compaction of the submission-order log
+        if len(self._released) > max(64, len(self._order) // 2):
+            self._order = [u for u in self._order
+                           if u not in self._released]
+            self._released.clear()
+
+    def close(self) -> SchedStats:
+        """Finalize the session: release prefix-cache block holds (the
+        pool drains to empty once every lane is done — leak checks rely
+        on this) and fill the wall-clock / cache-footprint stats.
+        Idempotent; does not force-drain outstanding work."""
+        if self._closed:
+            return self.stats
+        self._closed = True
+        if self._inflight is not None:
+            # finalize the in-flight round without dropping its results:
+            # they stay claimable via take_completed() / completions
+            self._emitted = self.harvest()
+        if self.prefix_cache is not None:
+            self.prefix_cache.clear()
+        self.stats.wall_s = time.time() - self._t0
+        self.sched._cache_stats(self.stats, self.cache, self.pool)
+        if self.pool is not None:
+            self.stats.cow_copies = self.pool.cow_copies
+        return self.stats
+
+    # -- split-phase step: dispatch / harvest --------------------------
+    def dispatch(self) -> bool:
+        """Admission phase + launch one decode round without blocking
+        on its result (JAX async dispatch).  Returns False when no lane
+        is live after admission (nothing to decode — any decided-group
+        drops are waiting in the emitted buffer)."""
+        if self._inflight is not None:
+            raise RuntimeError("dispatch() with a round already in flight")
+        if self.sched.share_prefix:
+            self._admit_shared()
+        else:
+            self._admit()
+        live = [i for i in range(self.sched.n_lanes)
+                if self.lanes[i] is not None]
+        if not live:
+            return False
+        r = self.sched.round_tokens
+        if self.sched.paged:
+            # grow each live lane's block table one round ahead of its
+            # decode position (drawn from its reservation, so this can
+            # never fail); writes past the budget spill into the trash
+            # block by construction
+            for i in live:
+                lane = self.lanes[i]
+                upto = min(lane.prompt_len + lane.generated + r,
+                           lane.prompt_len + lane.budget)
+                grow = -(-upto // self.sched.block_size) - len(lane.blocks)
+                if grow > 0:
+                    new_ids = self.pool.alloc(grow)
+                    self._host_table[i, len(lane.blocks):
+                                     len(lane.blocks) + grow] = new_ids
+                    lane.blocks.extend(new_ids)
+                    lane.reserved -= grow
+                    self._table_dirty = True
+            if self._table_dirty:
+                self.cache["block_tables"] = jnp.asarray(self._host_table)
+                self._table_dirty = False
+        self.cache, self.cur_logits, _, toks = decode_round(
+            self.sched.params, self.sched.cfg, self.sched.gcfg, self.cache,
+            self.cur_logits, jnp.asarray(self._host_done), self.key,
+            jnp.int32(self.global_step), r)
+        self.global_step += r
+        self.stats.rounds += 1
+        self.stats.lane_rounds += len(live)
+        self._inflight = (live, toks)
+        return True
+
+    def harvest(self) -> List[Completion]:
+        """Block on the dispatched round, truncate each live lane's
+        tokens at EOS / budget, finalize finished lanes, consult the
+        StopPolicy, and return this step's completions."""
+        if self._inflight is None:
+            return self._take_emitted()
+        live, toks = self._inflight
+        self._inflight = None
+        toks_np = np.asarray(toks)             # blocks on the device round
+        now = time.time()
+        r = self.sched.round_tokens
+        lanes = self.lanes
+        limits = np.array([min(r, lanes[i].budget - lanes[i].generated)
+                           for i in live], np.int32)
+        lengths, eos_found = harvest_lengths(toks_np[live], limits,
+                                             self.sched.gcfg.eos_id)
+        newly: List[int] = []
+        for j, i in enumerate(live):
+            lane = lanes[i]
+            n = int(lengths[j])
+            if lane.generated == 0 and n > 0 and lane.first_tok_s is None:
+                lane.first_tok_s = now
+            lane.parts.append(toks_np[i, :n])
+            lane.generated += n
+            self.stats.generated_tokens += n
+            if eos_found[j] or lane.generated >= lane.budget:
+                newly.append(i)
+
+        # finalize + vote-aware early stop, in (gen_len, uid) order
+        newly.sort(key=lambda i: (lanes[i].generated, lanes[i].req.uid))
+        for i in newly:
+            comp = self._finalize(i, cancelled=False)
+            if self.stop_policy is not None:
+                self.decided.update(self.stop_policy.observe(comp))
+        if self.decided:
+            for i in range(self.sched.n_lanes):
+                if lanes[i] is not None and lanes[i].req.group in self.decided:
+                    self._finalize(i, cancelled=True)
+        return self._take_emitted()
+
+    # -- internals -----------------------------------------------------
+    def _take_emitted(self) -> List[Completion]:
+        out, self._emitted = self._emitted, []
+        return out
+
+    def _latency(self, uid: int, first_tok_s: Optional[float], now: float):
+        sub = self._submit_s.get(uid)
+        if sub is None:
+            return None, None
+        return ((first_tok_s - sub if first_tok_s is not None else None),
+                now - sub)
+
+    def _finalize(self, i: int, cancelled: bool) -> Completion:
+        lane = self.lanes[i]
+        toks = (np.concatenate(lane.parts) if lane.parts
+                else np.zeros((0,), np.int32))
+        text = self.sched.tokenizer.decode(toks) if self.sched.tokenizer else ""
+        ttft, ttd = self._latency(lane.req.uid, lane.first_tok_s, time.time())
+        comp = Completion(lane.req.uid, lane.req.group, toks, len(toks),
+                          text, cancelled, lane.req.meta,
+                          ttft_s=ttft, ttd_s=ttd)
+        self.completions[lane.req.uid] = comp
+        if self.sched.paged:
+            # reclaim immediately: blocks (and the unused tail of the
+            # reservation) go back to the pool mid-flight, and the
+            # lane's table row points at the trash block so its
+            # remaining in-round steps write nowhere
+            self.pool.free(lane.blocks)
+            self.pool.unreserve(lane.reserved)
+            lane.blocks, lane.reserved = [], 0
+            self._host_table[i] = 0
+            self._table_dirty = True
+        self.lanes[i] = None
+        self._host_done[i] = True
+        self._submit_s.pop(lane.req.uid, None)
+        if cancelled:
+            self.stats.cancelled += 1
+        self._emitted.append(comp)
+        return comp
+
+    def _drop_decided(self, members: List[Request]) -> None:
+        now = time.time()
+        for m in members:
+            _, ttd = self._latency(m.uid, None, now)
+            comp = Completion(m.uid, m.group, np.zeros((0,), np.int32), 0,
+                              "", True, m.meta, ttft_s=None, ttd_s=ttd)
+            self.completions[m.uid] = comp
+            self._submit_s.pop(m.uid, None)
+            self._enc.pop(m.uid, None)
+            self.stats.cancelled += 1
+            self._emitted.append(comp)
+
+    def _admit(self) -> None:
+        """Dense / paged (non-shared) admission: fill free lanes from
+        the pending queue, bucket the wave, prefill, insert."""
+        sched, lanes, pending = self.sched, self.lanes, self.pending
+        free = [i for i in range(sched.n_lanes) if lanes[i] is None]
+        wave: List[Request] = []
+        while pending and len(wave) < len(free):
+            req = pending[0]
+            if req.group in self.decided:
+                pending.popleft()
+                self._drop_decided([req])
+                continue
+            if req.uid not in self._enc:
+                self._enc[req.uid] = sched._encode(req)
+            if sched.paged:
+                need = sched._reservation(max(len(self._enc[req.uid]), 1),
+                                          sched._budget(req))
+                if not self.pool.reserve(need):
+                    # pool pressure: leave the queue intact (FIFO) and
+                    # retry after the next round frees blocks
+                    self.stats.admission_blocked += 1
+                    break
+            pending.popleft()
+            wave.append(req)
+        if not wave:
+            return
+        by_bucket: Dict[int, List[Request]] = collections.defaultdict(list)
+        for r in wave:
+            by_bucket[pick_bucket(len(self._enc[r.uid]), sched.buckets)
+                      ].append(r)
+        for bucket in sorted(by_bucket):
+            grp = by_bucket[bucket]
+            admit_n = pick_bucket(len(grp), sched.admit_buckets)
+            toks, lens = pad_token_rows([self._enc[r.uid] for r in grp],
+                                        sched.gcfg.pad_id, bucket, admit_n)
+            lane_ids = np.full((admit_n,), sched.n_lanes, np.int32)
+            block_rows = (np.zeros((admit_n, sched.max_blocks), np.int32)
+                          if sched.paged else None)
+            for j, r in enumerate(grp):
+                i = free.pop(0)
+                lane_ids[j] = i
+                lane = _Lane(r, sched._budget(r))
+                if sched.paged:
+                    lane.prompt_len = max(len(self._enc[r.uid]), 1)
+                    n_pb = -(-lane.prompt_len // sched.block_size)
+                    lane.blocks = self.pool.alloc(n_pb)
+                    lane.reserved = sched._reservation(
+                        lane.prompt_len, lane.budget) - n_pb
+                    block_rows[j, :n_pb] = lane.blocks
+                    self._host_table[i] = block_rows[j]
+                    self._table_dirty = True
+                lanes[i] = lane
+                self._host_done[i] = False
+            if sched.paged:
+                # prefill dense at the prompt bucket only, then scatter
+                # the rows into their allocated pages
+                last, new_cache = prefill_jit(
+                    sched.params, sched.cfg, jnp.asarray(toks),
+                    jnp.asarray(lens), bucket)
+                self.cache, self.cur_logits = insert_lanes_paged(
+                    self.cache, self.cur_logits, new_cache, last,
+                    jnp.asarray(lane_ids), jnp.asarray(block_rows))
+            else:
+                last, new_cache = prefill_jit(
+                    sched.params, sched.cfg, jnp.asarray(toks),
+                    jnp.asarray(lens), sched.s_max)
+                self.cache, self.cur_logits = insert_lanes(
+                    self.cache, self.cur_logits, new_cache, last,
+                    jnp.asarray(lane_ids))
+            self.stats.prefills += 1
+            self.stats.prefill_prompts += len(grp)
+            self.stats.prefill_tokens += sum(len(self._enc[r.uid])
+                                             for r in grp)
+        for r in wave:
+            self._enc.pop(r.uid, None)   # memo only matters pre-admission
+
+    def _admit_shared(self) -> None:
+        """Shared-prefix admission: atomic group units, one prefill row
+        per distinct prompt, prompt blocks refcount-shared into every
+        member lane, CoW on partial tails, prefix-cache
+        reuse/registration.  See the Scheduler docstring."""
+        sched, lanes, pending = self.sched, self.lanes, self.pending
+        pool, stats = self.pool, self.stats
+        free = [i for i in range(sched.n_lanes) if lanes[i] is None]
+        planned: List[_PlanRow] = []
+        taken = 0
+        while pending:
+            unit = pending[0]
+            members = (unit.requests if isinstance(unit, RequestGroup)
+                       else [unit])
+            if all(m.group is not None and m.group in self.decided
+                   for m in members):
+                pending.popleft()
+                self._drop_decided(members)
+                continue
+            if taken + len(members) > len(free):
+                break              # atomic: the whole unit or nothing
+            for m in members:
+                if m.uid not in self._enc:
+                    self._enc[m.uid] = sched._encode(m)
+            rows = None
+            blocked = False
+            while True:
+                rows, need = sched._plan_unit(members, self._enc,
+                                              self.prefix_cache)
+                if need > sched.pool_blocks:
+                    # the unit can never fit atomically: degrade to
+                    # per-lane units (constructor guarantees any single
+                    # lane fits) and re-examine the head
+                    pending.popleft()
+                    for m in reversed(members):
+                        pending.appendleft(m)
+                    rows = None
+                    break
+                if pool.reserve(need):
+                    break
+                # pool pressure: shed warm prefix-cache blocks before
+                # backpressuring admission
+                if not self.prefix_cache.evict_lru():
+                    stats.admission_blocked += 1
+                    blocked = True
+                    break
+            if blocked:
+                break
+            if rows is None:
+                continue
+            # hold the cache-hit blocks for every lane of each row now,
+            # so later evictions can only drop the cache's own hold,
+            # never the blocks these lanes are about to map
+            for row in rows:
+                if row.hit:
+                    pool.share(row.hit, len(row.members))
+                    stats.prefix_hits += 1
+                    stats.prefix_hit_blocks += len(row.hit)
+            pending.popleft()
+            planned.extend(rows)
+            taken += len(members)
+        if not planned:
+            return
+        by_bucket: Dict[int, List[_PlanRow]] = collections.defaultdict(list)
+        for row in planned:
+            by_bucket[pick_bucket(len(row.toks), sched.buckets)].append(row)
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
+        for bucket in sorted(by_bucket):
+            rows = by_bucket[bucket]
+            admit_n = pick_bucket(len(rows), sched.admit_buckets)
+            kmax = pick_bucket(max(len(r.members) for r in rows),
+                               sched._fan_buckets)
+            toks, lens = pad_token_rows([r.toks for r in rows],
+                                        sched.gcfg.pad_id, bucket, admit_n)
+            lane_rows = np.full((admit_n, kmax), sched.n_lanes, np.int32)
+            write_rows = np.zeros((admit_n, sched.max_blocks), np.int32)
+            for j, row in enumerate(rows):
+                p_len = max(len(row.toks), 1)
+                h = len(row.hit)
+                own = pool.alloc(row.n_pb - h)
+                prompt_blocks = row.hit + own
+                # write side: cache-satisfied positions land in the
+                # trash block (their KV already exists, and earlier
+                # holders must keep bit-identical reads)
+                write_rows[j, h:row.n_pb] = own
+                k_members = len(row.members)
+                if k_members > 1 and own:
+                    pool.share(own, k_members - 1)
+                self.prefix_cache.register(row.toks,
+                                           prompt_blocks[:row.n_full])
+                tail_of = {}
+                if row.partial:
+                    tail = prompt_blocks[-1]
+                    for m in row.members:
+                        blk, copied = pool.cow(tail)
+                        if copied:
+                            cow_src.append(tail)
+                            cow_dst.append(blk)
+                        tail_of[m.uid] = blk
+                for mj, m in enumerate(row.members):
+                    i = free.pop(0)
+                    lane = _Lane(m, sched._budget(m))
+                    lane.prompt_len = p_len
+                    lane.blocks = list(prompt_blocks)
+                    if row.partial:
+                        lane.blocks[-1] = tail_of[m.uid]
+                    lane.reserved = sched._reservation(
+                        p_len, lane.budget) - row.n_pb
+                    self._host_table[i] = 0
+                    self._host_table[i, :row.n_pb] = lane.blocks
+                    lane_rows[j, mj] = i
+                    lanes[i] = lane
+                    self._host_done[i] = False
+                self._table_dirty = True
+                stats.shared_lanes += k_members - 1
+            last, new_cache = prefill_shared(
+                sched.params, sched.cfg, jnp.asarray(toks),
+                jnp.asarray(lens), bucket)
+            self.cache, self.cur_logits = insert_lanes_shared(
+                self.cache, self.cur_logits, new_cache, last,
+                jnp.asarray(lane_rows), jnp.asarray(write_rows))
+            stats.prefills += 1
+            stats.prefill_prompts += len(rows)
+            stats.prefill_tokens += sum(len(r.toks) for r in rows)
+        if cow_src:
+            # device half of CoW, after the inserts wrote the originals;
+            # padded pairs clone trash onto trash
+            n = pick_bucket(len(cow_src), sched._fan_buckets)
+            src = np.zeros((n,), np.int32)
+            dst = np.zeros((n,), np.int32)
+            src[: len(cow_src)] = cow_src
+            dst[: len(cow_dst)] = cow_dst
+            self.cache = copy_blocks(self.cache, jnp.asarray(src),
+                                     jnp.asarray(dst))
+        for row in planned:
+            for m in row.members:
+                self._enc.pop(m.uid, None)   # memo only matters pre-admission

@@ -1,0 +1,281 @@
+"""Streaming serving loop (ServingLoop): submit/step/drain must
+bit-match the one-shot Scheduler.run across every cache layout (dense,
+paged, shared-prefix) and both decode modes (greedy, sampled);
+mid-flight admission under eviction churn must leak no pool blocks;
+the pipelined multi-tier cascade must reproduce the sequential-barrier
+path's decisions under greedy decoding."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import cascade_multi as cm
+from repro.core import routing as routing_lib
+from repro.core import voting
+from repro.core.confidence import Vote
+from repro.data import tasks as tasks_lib
+from repro.serving.batch import GenConfig
+from repro.serving.scheduler import (Request, RequestGroup, Scheduler,
+                                     StopPolicy)
+
+MAXP = 64
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.data.tokenizer import default_tokenizer
+    from repro.models import model as M
+    tok = default_tokenizer()
+    cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                      d_ff=128, vocab_size=tok.vocab_size, remat=False,
+                      source="test")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return params, cfg, tok
+
+
+def _scheduler(params, cfg, tok, gcfg, mode):
+    return Scheduler(params, cfg, tok, gcfg, n_lanes=4, round_tokens=5,
+                     max_prompt_len=MAXP,
+                     paged=mode in ("paged", "shared"), block_size=8,
+                     share_prefix=mode == "shared")
+
+
+def _vote_groups(n_questions, k, max_new=None):
+    return [RequestGroup([
+        Request(uid=qi * k + j, prompt=f"Q: item {qi} says hello\nA: ",
+                group=qi, max_new_tokens=max_new) for j in range(k)])
+        for qi in range(n_questions)]
+
+
+# ----------------------------------------------------------------------
+# Bit-match: submit/step/drain == one-shot run()
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["dense", "paged", "shared"])
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_loop_bitmatches_run(setup, mode, temperature):
+    """Submitting everything up front and stepping the loop dry must
+    reproduce Scheduler.run token-for-token — run() is a thin wrapper
+    over the same loop, and this pins that contract for every cache
+    layout and both greedy and sampled decoding."""
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=14, temperature=temperature)
+    sched = _scheduler(params, cfg, tok, gcfg, mode)
+    reqs = _vote_groups(4, 3)
+    key = jax.random.PRNGKey(3)
+
+    run_comps, run_stats = sched.run(reqs, key)
+
+    loop = sched.loop(key)
+    loop.submit(reqs)
+    stepped = []
+    while loop.has_work:
+        stepped.extend(loop.step())
+    stats = loop.close()
+
+    # each uid completes exactly once, through step()'s return values
+    assert sorted(c.uid for c in stepped) == list(range(12))
+    by_uid = {c.uid: c for c in stepped}
+    for cr in run_comps:
+        cl = by_uid[cr.uid]
+        assert cr.gen_len == cl.gen_len
+        assert np.array_equal(cr.tokens, cl.tokens)
+    assert stats.generated_tokens == run_stats.generated_tokens
+    assert stats.rounds == run_stats.rounds
+    assert stats.prefill_tokens == run_stats.prefill_tokens
+    if mode in ("paged", "shared"):
+        assert sched.pool.leak_report() is None
+
+
+def test_drain_returns_submission_order(setup):
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=8, temperature=0.7, eos_id=-1)
+    sched = _scheduler(params, cfg, tok, gcfg, "dense")
+    loop = sched.loop(jax.random.PRNGKey(1))
+    loop.submit([Request(uid=i, prompt=f"Q: item {i}\nA: ")
+                 for i in range(6)])
+    comps = loop.drain()
+    assert [c.uid for c in comps] == list(range(6))
+    for c in comps:
+        assert c.ttft_s is not None and c.ttd_s is not None
+        assert 0 <= c.ttft_s <= c.ttd_s
+
+
+# ----------------------------------------------------------------------
+# Mid-flight admission under churn: no leak, no double-free
+# ----------------------------------------------------------------------
+
+class _KillOddGroups(StopPolicy):
+    """Kills any odd group as soon as one of its lanes finishes —
+    eviction churn for the admission path to ride over."""
+
+    def observe(self, comp):
+        if comp.group is not None and comp.group % 2 == 1:
+            return (comp.group,)
+        return ()
+
+
+def test_midflight_admission_churn_no_leak(setup):
+    """Requests and vote groups submitted *while* earlier ones decode
+    (and while a StopPolicy evicts lanes mid-flight) must all complete,
+    with the block pool draining to empty — no leak, no double-free —
+    and the reservation high-water must reflect the churn."""
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=12, temperature=0.7, eos_id=-1)
+    sched = _scheduler(params, cfg, tok, gcfg, "shared")
+    loop = sched.loop(jax.random.PRNGKey(7), stop_policy=_KillOddGroups())
+
+    # lane 0 of each group finishes first (short budget), so the policy
+    # kills odd groups while their other lanes are still decoding
+    first_wave = [RequestGroup([
+        Request(uid=qi * 3 + j, prompt=f"Q: item {qi} says hello\nA: ",
+                group=qi, max_new_tokens=(4 if j == 0 else None))
+        for j in range(3)]) for qi in range(3)]
+    loop.submit(first_wave)                               # uids 0..8
+    got = []
+    for _ in range(2):
+        got.extend(loop.step())
+    # mid-flight: more groups plus plain requests into evicted lanes
+    late = [RequestGroup([
+        Request(uid=100 + qi * 3 + j, prompt=f"Q: late {qi}\nA: ",
+                group=10 + qi) for j in range(3)]) for qi in range(2)]
+    loop.submit(late)
+    got.extend(loop.step())
+    loop.submit([Request(uid=200, prompt="Q: solo\nA: ")])
+    while loop.has_work:
+        got.extend(loop.step())
+    stats = loop.close()
+
+    expected = set(range(9)) | {100 + i for i in range(6)} | {200}
+    assert {c.uid for c in got} == expected
+    assert len(got) == len(expected)                      # exactly once
+    assert stats.cancelled > 0                            # churn happened
+    assert sched.pool.leak_report() is None
+    assert sched.pool.peak_reserved > 0
+    # killed groups really stopped early; survivors ran to budget
+    by_uid = {c.uid: c for c in got}
+    assert by_uid[200].gen_len == 12 and not by_uid[200].cancelled
+
+
+def test_submit_after_group_decided_is_dropped(setup):
+    """A group decided before some of its requests were ever admitted
+    drops the stragglers with zero generated tokens — including ones
+    submitted after the decision."""
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=8, temperature=0.7, eos_id=-1)
+    sched = _scheduler(params, cfg, tok, gcfg, "dense")
+    loop = sched.loop(jax.random.PRNGKey(2), stop_policy=_KillOddGroups())
+    loop.submit([Request(uid=0, prompt="Q: a\nA: ", group=1)])
+    while loop.has_work:
+        loop.step()
+    assert 1 in loop.decided
+    loop.submit([Request(uid=1, prompt="Q: b\nA: ", group=1)])
+    comps = loop.drain()
+    late = loop.completions[1]
+    assert late.cancelled and late.gen_len == 0
+    assert len(comps) == 2
+
+
+# ----------------------------------------------------------------------
+# Per-group tau: one policy serving several tiers (fused loops)
+# ----------------------------------------------------------------------
+
+def _fake_completion(group, vote: Vote, uid=0):
+    from repro.serving.scheduler import Completion
+    return Completion(uid=uid, group=group, tokens=np.zeros((0,), np.int32),
+                      gen_len=vote.gen_tokens, text="", cancelled=False,
+                      meta={"vote": vote})
+
+
+def test_vote_early_stop_per_group_tau():
+    policy = routing_lib.VoteEarlyStop(
+        0.5, {}, parse=lambda c: c.meta["vote"])
+    policy.add_group(0, [1.0, 1.0], tau=1.0)    # strict tier
+    policy.add_group(1, [1.0, 1.0], tau=0.1)    # loose tier
+    v = Vote(answer="a", confidence=1.0, gen_tokens=5)
+    # same first vote: the loose group accepts, the strict one cannot
+    assert policy.observe(_fake_completion(1, v, uid=10)) == (1,)
+    assert policy.decisions[1].accepted
+    assert policy.observe(_fake_completion(0, v, uid=11)) == ()
+    assert 0 not in policy.decisions
+
+
+# ----------------------------------------------------------------------
+# Pipelined cascade == sequential barriers (greedy decisions)
+# ----------------------------------------------------------------------
+
+def test_pipelined_cascade_matches_sequential_greedy(setup):
+    """With greedy decoding the vote texts depend only on the prompts,
+    so the pipelined cascade (mid-flight escalation, fused same-SLM
+    lane pool) must reproduce the barrier path's accept/route decisions
+    question for question."""
+    params, cfg, tok = setup
+    slm = routing_lib.SLM(params, cfg, tok,
+                          GenConfig(max_new_tokens=16, temperature=0.0),
+                          max_prompt_len=MAXP, lane_budget=8,
+                          round_tokens=4)
+    items = tasks_lib.make_benchmark("arith", 4, seed=1)
+    tiers = [cm.Tier(slm=slm, tau=1.0, mode="FCV", k=3),
+             cm.Tier(slm=slm, tau=1.0, mode="FCV", k=3)]
+    terminal = cm.TerminalTier(llm=routing_lib.OracleLLM(accuracy=1.0))
+    key = jax.random.PRNGKey(9)
+
+    out_seq = cm.run_cascade(tiers, terminal, items, key,
+                             stream_early_stop=True)
+    out_pipe, ps = cm.run_cascade_pipelined(tiers, terminal, items, key)
+
+    assert [o.accepted_tier for o in out_pipe] == \
+        [o.accepted_tier for o in out_seq]
+    assert [o.correct for o in out_pipe] == [o.correct for o in out_seq]
+    assert ps.rounds > 0 and ps.generated_tokens > 0
+    assert 0.0 <= ps.overlap_fraction <= 1.0
+    assert ps.fused_loops == 1 and ps.n_loops == 1    # tiers share the SLM
+    assert len(ps.ttd_s) == len(items)
+    assert all(t > 0 for t in ps.ttd_s)
+
+
+def test_pipelined_cascade_distinct_slms_two_loops(setup):
+    """Tiers with distinct SLM objects get one serving loop each,
+    interleaved split-phase in the host loop — outcomes must still
+    match the barrier path under greedy decoding."""
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=12, temperature=0.0)
+
+    def mk():
+        return routing_lib.SLM(params, cfg, tok, gcfg, max_prompt_len=MAXP,
+                               lane_budget=4, round_tokens=4)
+
+    items = tasks_lib.make_benchmark("arith", 3, seed=2)
+    tiers = [cm.Tier(slm=mk(), tau=1.0, mode="FCV", k=2),
+             cm.Tier(slm=mk(), tau=1.0, mode="FCV", k=2)]
+    terminal = cm.TerminalTier(llm=routing_lib.OracleLLM(accuracy=1.0))
+    key = jax.random.PRNGKey(4)
+    out_seq = cm.run_cascade(tiers, terminal, items, key,
+                             stream_early_stop=True)
+    out_pipe, ps = cm.run_cascade_pipelined(tiers, terminal, items, key)
+    assert ps.n_loops == 2 and ps.fused_loops == 0
+    assert [o.accepted_tier for o in out_pipe] == \
+        [o.accepted_tier for o in out_seq]
+    assert [o.correct for o in out_pipe] == [o.correct for o in out_seq]
+
+
+def test_cascade_decisions_equal(setup):
+    """decide-level parity: voting.decide_no_early_stop over the same
+    greedy votes must agree with what both cascade paths recorded (the
+    two paths share VoteEarlyStop; this ties them back to the paper's
+    voting rule)."""
+    params, cfg, tok = setup
+    slm = routing_lib.SLM(params, cfg, tok,
+                          GenConfig(max_new_tokens=16, temperature=0.0),
+                          max_prompt_len=MAXP, lane_budget=8,
+                          round_tokens=4)
+    items = tasks_lib.make_benchmark("arith", 3, seed=5)
+    levels = [1.0] * 3
+    votes = routing_lib.sample_k(slm, items, levels, jax.random.PRNGKey(0),
+                                 seed_offset=0)
+    for vs in votes:
+        ref = voting.decide_no_early_stop(vs, 1.0)
+        es = voting.decide_with_early_stop(vs, 1.0)
+        assert ref.accepted == es.accepted
