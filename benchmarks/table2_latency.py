@@ -152,6 +152,166 @@ def run_generated_smoke(n_items: int = 8, k: int = 8, tau: float = 1.0,
 
 
 # ----------------------------------------------------------------------
+# Chunked prefill under streaming arrivals: ttft tail vs whole-prompt
+# ----------------------------------------------------------------------
+
+def run_chunked_smoke(n_requests: int = 40, n_long: int = 1,
+                      lanes: int = 4, round_tokens: int = 4,
+                      chunk_size: int = 256, prefill_budget: int = 320,
+                      long_repeat: int = 17, new_tokens: int = 8,
+                      arrivals_per_round: float = 2.0, seed: int = 0):
+    """No-training smoke for chunked prefill: the same arrival stream
+    served twice — whole-prompt prefill vs chunked prefill at a
+    per-round token budget — reporting the per-request wall-clock ttft
+    distribution.
+
+    The workload is mostly short arith prompts with ``n_long`` requests
+    carrying a fat instruction header (~1,900 tokens).  With
+    whole-prompt prefill, an admission wave runs its prompts' entire
+    prefill between two decode rounds — the long prompt head-of-line
+    blocks every request in flight or admitted alongside, and the
+    multi-second stall lands directly in those requests' ttft.
+    Chunked, the same prompt streams through ``chunk_size``-token
+    chunks under the per-round ``prefill_budget`` with round-robin
+    fairness: the budget is priced in *real* prompt tokens, so every
+    short prompt's single chunk rides along in the same pass and only
+    the long request pays for its own length.
+
+    Arrivals are Poisson in *round index* (exponential gaps at
+    ``arrivals_per_round``, submitted just before the round they land
+    on): wave composition is then identical run to run and path to
+    path, so the comparison is structural — the whole-prefill stall vs
+    the chunked budget — rather than a wall-clock feedback loop, while
+    ttft is still measured in wall seconds and captures the stall.
+
+    Completions are bit-identical between the two paths (the
+    per-request PRNG contract makes generation independent of admission
+    timing — tests/test_serving_trace.py), so generated tokens and
+    accuracy are equal BY CONSTRUCTION and the comparison isolates pure
+    serving latency.  Each path runs twice (first pass pays the jit
+    compiles) and reports the min of its two ttft percentiles; the CI
+    gate (scripts/check_bench_regression.py) requires equal
+    tokens/accuracy and the chunked ttft p95 strictly below the
+    whole-prefill one.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core.experiment import LLM_SCALE, model_config
+    from repro.data.tasks import is_correct, make_benchmark
+    from repro.data.tokenizer import default_tokenizer
+    from repro.models import model as model_lib
+    from repro.serving.batch import GenConfig
+    from repro.serving.scheduler import Request, Scheduler
+
+    tok = default_tokenizer()
+    # the larger local scale (d256 x 6L): a ~1,900-token whole prefill
+    # is a real multi-second stall on the CPU host while decode rounds
+    # stay cheap — the regime chunked prefill exists for (the tiny SLM's
+    # prefill is so fast the stall drowns in dispatch overhead)
+    cfg = model_config(LLM_SCALE)
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    items = make_benchmark("arith", n_requests, seed=seed)
+    header = ("You are a careful assistant. Think step by step, check "
+              "every intermediate result twice, and answer concisely. ")
+    rng = np.random.RandomState(seed)
+    long_ids = set(rng.choice(n_requests, n_long, replace=False).tolist())
+    reqs, max_len = [], 0
+    for i, item in enumerate(items):
+        prompt = f"Q: {item.question}\nA: "
+        if i in long_ids:
+            prompt = header * long_repeat + prompt
+        toks = tok.encode(prompt, bos=True)
+        max_len = max(max_len, len(toks))
+        reqs.append(Request(uid=i, tokens=toks))
+    arrival_round = np.floor(np.cumsum(
+        rng.exponential(1.0 / arrivals_per_round, n_requests))).astype(int)
+    gcfg = GenConfig(max_new_tokens=new_tokens, temperature=0.0)
+
+    def serve(chunked: bool):
+        # dense lane cache: on the CPU host the paged decode gather
+        # materializes a per-layer (lanes, s_max) K/V view each step,
+        # which dominates round time at this prompt length and buries
+        # the prefill stall the smoke exists to measure
+        sched = Scheduler(
+            params, cfg, tok, gcfg, n_lanes=lanes,
+            round_tokens=round_tokens, max_prompt_len=max_len,
+            chunk_size=chunk_size if chunked else None,
+            prefill_budget=prefill_budget if chunked else None)
+        best = None
+        for _ in range(2):           # first pass pays compiles; min-of-2
+            loop = sched.loop(jax.random.PRNGKey(5))
+            comps = []
+            t0 = time.time()
+            nxt = 0
+            r = 0
+            while nxt < n_requests or loop.has_work:
+                while nxt < n_requests and arrival_round[nxt] <= r:
+                    loop.submit([reqs[nxt]])
+                    nxt += 1
+                comps.extend(loop.step())
+                r += 1
+            wall = time.time() - t0
+            stats = loop.close()
+            ttft = [c.ttft_s for c in comps if c.ttft_s is not None]
+            acc = float(np.mean([is_correct(items[c.uid],
+                                            tok.decode(c.tokens))
+                                 for c in comps]))
+            row = {
+                "wall_s": wall,
+                "rounds": int(stats.rounds),
+                "generated_tokens": int(stats.generated_tokens),
+                "prefill_tokens": int(stats.prefill_tokens),
+                "prefill_chunks": int(stats.prefill_chunks),
+                "accuracy": acc,
+                "gen_lens": sorted(int(c.gen_len) for c in comps),
+                "ttft_mean_s": float(np.mean(ttft)),
+                "ttft_p50_s": float(np.percentile(ttft, 50)),
+                "ttft_p95_s": float(np.percentile(ttft, 95)),
+            }
+            if best is None or row["ttft_p95_s"] < best["ttft_p95_s"]:
+                best = row
+        return best
+
+    whole = serve(chunked=False)
+    chunked = serve(chunked=True)
+    gen_equal = whole.pop("gen_lens") == chunked.pop("gen_lens")
+    return {"serve": {
+        "whole": whole,
+        "chunked": chunked,
+        "n_requests": n_requests,
+        "n_long": n_long,
+        "arrivals_per_round": arrivals_per_round,
+        "ttft_p95_cut": 1.0 - chunked["ttft_p95_s"]
+                        / max(whole["ttft_p95_s"], 1e-9),
+        "equal_tokens": bool(
+            gen_equal
+            and whole["generated_tokens"] == chunked["generated_tokens"]),
+        "equal_accuracy": bool(whole["accuracy"] == chunked["accuracy"]),
+        "ttft_win": bool(chunked["ttft_p95_s"] < whole["ttft_p95_s"]),
+    }}
+
+
+def format_chunked(table) -> str:
+    lines = ["chunked prefill vs whole-prompt prefill (Poisson arrivals)",
+             f"{'':12s} {'ttft-mean':>10s} {'ttft-p50':>9s} {'ttft-p95':>9s} "
+             f"{'wall':>7s} {'rounds':>7s} {'prefill':>8s} {'acc':>5s}"]
+    row = table["serve"]
+    for name in ("whole", "chunked"):
+        r = row[name]
+        lines.append(
+            f"{name:12s} {r['ttft_mean_s'] * 1e3:8.0f}ms "
+            f"{r['ttft_p50_s'] * 1e3:7.0f}ms {r['ttft_p95_s'] * 1e3:7.0f}ms "
+            f"{r['wall_s']:6.2f}s {r['rounds']:7d} "
+            f"{r['prefill_tokens']:8d} {r['accuracy']:5.2f}")
+    lines.append(f"ttft p95 cut: {row['ttft_p95_cut']:.0%}  "
+                 f"equal tokens: {row['equal_tokens']}  "
+                 f"equal accuracy: {row['equal_accuracy']}")
+    return "\n".join(lines)
+
+
+# ----------------------------------------------------------------------
 # Pipelined multi-tier cascade: barrier tiers vs mid-flight escalation
 # ----------------------------------------------------------------------
 
@@ -323,12 +483,25 @@ if __name__ == "__main__":
                     help="smoke the pipelined multi-tier cascade against "
                          "the sequential-barrier path (wall-clock, decode "
                          "rounds, overlap, time-to-decision)")
+    ap.add_argument("--chunked-serve", action="store_true",
+                    help="smoke chunked prefill against whole-prompt "
+                         "prefill under a Poisson arrival stream "
+                         "(per-request ttft distribution)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the result table as JSON (CI artifact)")
     args = ap.parse_args()
     if args.share_prefix and not args.paged:
         ap.error("--share-prefix requires --paged")
-    if args.pipeline_cascade:
+    if args.chunked_serve:
+        if not args.smoke or args.paged or args.pipeline_cascade:
+            ap.error("--chunked-serve is a standalone --smoke benchmark")
+        t = run_chunked_smoke()
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"chunked_serve": True, "smoke": True,
+                           "table": t}, f, indent=2)
+        print(format_chunked(t))
+    elif args.pipeline_cascade:
         if args.paged or args.share_prefix:
             ap.error("--pipeline-cascade runs the dense smoke cascade")
         if not args.smoke or args.scale is not None:

@@ -19,7 +19,13 @@ cost metric regressed beyond its tolerance:
     hold regardless of baseline: the pipelined path must beat the
     sequential barrier path on wall-clock AND decode rounds at equal
     accuracy (``equal_accuracy``) — the acceptance bar for cascade
-    pipelining, checked on every CI run.
+    pipelining, checked on every CI run;
+  * the chunked-serve JSON (``--chunked-serve``) carries its own
+    baseline-free invariants: chunked prefill must generate exactly the
+    tokens (and accuracy) whole-prompt prefill generates — bit-identity
+    is the contract, not a tolerance — and its ttft p95 under the
+    Poisson arrival stream must sit strictly below the whole-prefill
+    path's.
 
 Usage:
     python scripts/check_bench_regression.py CURRENT.json BASELINE.json
@@ -52,7 +58,7 @@ COUNTERS = {
     # without pinning the exact (raggedness-dependent) fraction
     "overlap_fraction": ("high", 0.5, 0.01),
 }
-WALL_METRICS = ("wall_s",)
+WALL_METRICS = ("wall_s", "ttft_mean_s", "ttft_p50_s", "ttft_p95_s")
 
 
 def walk(cur, base, path=""):
@@ -115,6 +121,27 @@ def check_pipeline_invariants(cur):
     return failures
 
 
+def check_chunked_invariants(cur):
+    """Baseline-free acceptance checks for --chunked-serve JSONs."""
+    failures = []
+    for bench, row in cur.get("table", {}).items():
+        whole, chunked = row.get("whole"), row.get("chunked")
+        if not (isinstance(whole, dict) and isinstance(chunked, dict)):
+            continue
+        if not row.get("equal_tokens", False):
+            failures.append(f"{bench}: chunked prefill generated different "
+                            "tokens than whole-prompt prefill (bit-identity "
+                            "violated)")
+        if not row.get("equal_accuracy", False):
+            failures.append(f"{bench}: chunked accuracy diverged from the "
+                            "whole-prompt path")
+        if not chunked["ttft_p95_s"] < whole["ttft_p95_s"]:
+            failures.append(
+                f"{bench}: chunked ttft p95 {chunked['ttft_p95_s']:.3f}s not "
+                f"strictly below whole-prefill {whole['ttft_p95_s']:.3f}s")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh smoke JSON from this CI run")
@@ -139,6 +166,8 @@ def main():
     failures, rows = check_metrics(cur, base, args.wall_slack)
     if cur.get("pipeline_cascade"):
         failures += check_pipeline_invariants(cur)
+    if cur.get("chunked_serve"):
+        failures += check_chunked_invariants(cur)
 
     width = max((len(r[0]) for r in rows), default=20)
     print(f"{args.current} vs {args.baseline}:")

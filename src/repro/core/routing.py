@@ -43,6 +43,8 @@ class SLM:
     block_size: int = 32         # cache slots per block when paged
     share_prefix: bool = False   # prefill vote groups once + prefix cache
     #                              (requires paged; see serving/scheduler)
+    chunk_size: "int | None" = None      # chunked prefill chunk width
+    prefill_budget: "int | None" = None  # per-round prefill token budget
 
 
 @dataclasses.dataclass
@@ -89,7 +91,9 @@ def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
                      n_lanes=n_lanes, round_tokens=slm.round_tokens,
                      max_prompt_len=slm.max_prompt_len, paged=slm.paged,
                      block_size=slm.block_size,
-                     share_prefix=slm.share_prefix)
+                     share_prefix=slm.share_prefix,
+                     chunk_size=slm.chunk_size,
+                     prefill_budget=slm.prefill_budget)
 
 
 def batch_generate(slm: SLM, prompts: Sequence[str], key):

@@ -26,6 +26,12 @@ blocks are refcount-shared across all K block tables with
 copy-on-write on the last partial block, and the serve summary reports
 the pool/refcount counters (shared lanes, CoW clones, prefix-cache
 hits, end-of-run pool state).
+
+With ``--chunk-size`` (optionally ``--prefill-budget``), prompts are
+chunk-prefilled interleaved with decode rounds instead of whole per
+admission — a long prompt landing mid-stream no longer stalls every
+live lane for its full prefill, which is exactly the ttft-tail effect
+the ``--arrival-rate`` summary makes visible.
 """
 
 from __future__ import annotations
@@ -69,9 +75,19 @@ def main():
                          "prompt blocks (refcount + copy-on-write)")
     ap.add_argument("--group-size", type=int, default=4,
                     help="lanes per vote group with --share-prefix")
+    ap.add_argument("--chunk-size", type=int, default=None,
+                    help="chunked prefill: append prompts onto the cache "
+                         "this many tokens at a time, interleaved with "
+                         "decode rounds (admission never stalls the loop)")
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="with --chunk-size: chunk-capacity tokens each "
+                         "round may spend on prompt processing "
+                         "(default: finish every queued prompt per round)")
     args = ap.parse_args()
     if args.share_prefix and not args.paged:
         ap.error("--share-prefix requires --paged")
+    if args.prefill_budget is not None and args.chunk_size is None:
+        ap.error("--prefill-budget requires --chunk-size")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -110,7 +126,9 @@ def main():
                       n_lanes=args.lanes, round_tokens=args.round_tokens,
                       max_prompt_len=args.prompt_len, paged=args.paged,
                       block_size=args.block_size,
-                      share_prefix=args.share_prefix)
+                      share_prefix=args.share_prefix,
+                      chunk_size=args.chunk_size,
+                      prefill_budget=args.prefill_budget)
 
     comps = []
     with mesh:
@@ -145,7 +163,9 @@ def main():
     print(f"  rounds={stats.rounds} prefills={stats.prefills} "
           f"(prompts={stats.prefill_prompts}, "
           f"tokens={stats.prefill_tokens}) "
-          f"generated={stats.generated_tokens} tokens")
+          f"generated={stats.generated_tokens} tokens"
+          + (f", prefill chunks={stats.prefill_chunks}"
+             if args.chunk_size else ""))
     print(f"  {tok_total} tokens total, "
           f"{1000 * dt / max(tok_total, 1):.1f} ms/tok, "
           f"lane occupancy {stats.lane_rounds / max(stats.rounds * args.lanes, 1):.0%}")

@@ -207,6 +207,46 @@ def attention_forward(cfg: ModelConfig, p, x, positions, window):
     return out, (k, v)
 
 
+def chunk_qkv(cfg: ModelConfig, p, x, q_pos):
+    """Q/K/V projections + RoPE for one prefill chunk.
+
+    x: (B, C, D) chunk hidden states; q_pos: (B, C) absolute positions.
+    Returns (q, k, v) each (B, C, heads, Dh), k post-RoPE — exactly the
+    projections :func:`attention_forward` computes for those positions
+    (row subsets of a matmul are bitwise stable, so chunking the prompt
+    does not change a single K/V bit; see model.prefill_chunk).
+    """
+    cdt = jnp.dtype(cfg.compute_dtype)
+    b, c, _ = x.shape
+    dh = cfg.resolved_head_dim
+    x = x.astype(cdt)
+    q = (x @ p["wq"].astype(cdt)).reshape(b, c, cfg.n_heads, dh)
+    k = (x @ p["wk"].astype(cdt)).reshape(b, c, cfg.n_kv_heads, dh)
+    v = (x @ p["wv"].astype(cdt)).reshape(b, c, cfg.n_kv_heads, dh)
+    q = apply_rope(q, q_pos, cfg.rope_theta)
+    k = apply_rope(k, q_pos, cfg.rope_theta)
+    return q, k, v
+
+
+def chunk_attend(cfg: ModelConfig, p, q, k_att, v_att, q_pos, k_pos, window):
+    """Attention of a prefill chunk's queries over the lane's cache view.
+
+    q: (B, C, H, Dh); k_att/v_att: (B, Sb, KV, Dh) — the cache view over
+    the prompt bucket, already containing this chunk's K/V; k_pos:
+    (B, Sb) the view's absolute positions.  The causal mask ``k <= q``
+    covers everything: positions after the chunk are unwritten garbage
+    but always masked, exactly as right-padding is in whole-prompt
+    prefill.  CRITICALLY the softmax reduces over the same ``Sb`` width
+    whole-prompt prefill uses — reductions over different lengths are
+    not bitwise comparable, which is the one geometric constraint the
+    chunked == unchunked bit-match rests on.  Returns (B, C, D).
+    """
+    b, c, _, dh = q.shape
+    out = direct_attention(cfg, q, k_att, v_att, q_pos, k_pos, window)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return out.reshape(b, c, cfg.n_heads * dh) @ p["wo"].astype(cdt)
+
+
 def quantize_kv(x):
     """x (..., dh) -> (int8 q, f32 absmax scale (...,))."""
     s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0

@@ -401,6 +401,114 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
     return logits, cache
 
 
+def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
+                  lanes=None, read_rows=None, write_rows=None, sb=None):
+    """Process one C-token chunk of each row's prompt against an
+    existing decode cache, appending the chunk's K/V — the incremental
+    sibling of :func:`prefill` that lets the serving loop interleave
+    prompt processing with decode rounds (serving/scheduler.py).
+
+    tokens: (Nb, C) the chunk's token ids (right-padded past the
+    prompt); start: (Nb,) each row's chunk offset into its prompt;
+    lengths: (Nb,) full prompt lengths; sb: static prompt-bucket width
+    — every attention reduction runs at exactly this width, which is
+    what makes a chunked prompt bit-identical to whole-prompt prefill
+    at the same bucket (reductions over different lengths are not
+    bitwise comparable; tests/test_serving_trace.py holds the line).
+
+    Dense cache (:func:`init_decode_state` layout): ``lanes`` (Nb,)
+    maps chunk rows to lane rows (>= n_lanes = dummy row, dropped).
+    Paged cache (:func:`init_paged_decode_state`): ``read_rows`` /
+    ``write_rows`` (Nb, max_blocks) carry each row's gather/scatter
+    block ids — they differ when a shared-prefix row reads
+    prefix-cache blocks whose writes are routed to the trash block.
+
+    Returns ``(last_logits (Nb, V), cache)`` — the logits at each row's
+    last position covered so far (``min(start + C, lengths) - 1``; on a
+    row's final chunk, exactly the prompt-last-token logits whole
+    prefill would return).  Host-side per-lane state (``pos``,
+    ``cache_pos`` validity, the scheduler's logits buffer) is the
+    caller's job — see serving/batch.py ``prefill_chunk_jit``.
+
+    Attention-only: SSM conv/ssm states are sequential across the whole
+    prompt and are not carried between chunks.
+    """
+    if cfg.has_ssm:
+        raise ValueError("prefill_chunk requires an attention-only model: "
+                         "SSM prompt state is sequential and is not carried "
+                         "across chunks")
+    x = embed_tokens(cfg, params["embed"], tokens)
+    b, c, _ = x.shape
+    q_pos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # (Nb,C)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    paged = "block_tables" in cache
+    dh = cfg.resolved_head_dim
+
+    if paged:
+        pb, bs = cache["k"].shape[1], cache["k"].shape[2]
+        kpos_sb = jnp.arange(sb, dtype=jnp.int32)
+        # per-row flat pool slots: reads follow read_rows (shared prompt
+        # blocks included), writes follow write_rows (trash for
+        # cache-satisfied positions and rows padded past their blocks)
+        gather_idx = read_rows[:, kpos_sb // bs] * bs + (kpos_sb % bs)[None, :]
+        write_blk = jnp.take_along_axis(
+            write_rows, jnp.minimum(q_pos // bs, write_rows.shape[1] - 1),
+            axis=1)
+        write_tgt = write_blk * bs + q_pos % bs                       # (Nb,C)
+        k_pos_view = jnp.broadcast_to(kpos_sb[None, :], (b, sb))
+    else:
+        k_pos_view = jnp.broadcast_to(jnp.arange(sb, dtype=jnp.int32)[None, :],
+                                      (b, sb))
+
+    def block(carry, layer):
+        x, k_stack, v_stack = carry
+        lp = layer["lp"]
+        window = layer["window"]
+        idx = layer["idx"]
+        h = apply_norm(cfg, lp["norm1"], x)
+        q, k, v = attn_mod.chunk_qkv(cfg, lp["attn"], h, q_pos)
+        k_l = jax.lax.dynamic_index_in_dim(k_stack, idx, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(v_stack, idx, 0, keepdims=False)
+        if paged:
+            k_flat = k_l.reshape(pb * bs, cfg.n_kv_heads, dh)
+            v_flat = v_l.reshape(pb * bs, cfg.n_kv_heads, dh)
+            k_flat = k_flat.at[write_tgt].set(k.astype(k_flat.dtype))
+            v_flat = v_flat.at[write_tgt].set(v.astype(v_flat.dtype))
+            k_att, v_att = k_flat[gather_idx], v_flat[gather_idx]
+            k_l = k_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
+            v_l = v_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
+        else:
+            k_l = k_l.at[lanes[:, None], q_pos].set(k.astype(k_l.dtype),
+                                                    mode="drop")
+            v_l = v_l.at[lanes[:, None], q_pos].set(v.astype(v_l.dtype),
+                                                    mode="drop")
+            k_att, v_att = k_l[lanes, :sb], v_l[lanes, :sb]
+        a_out = attn_mod.chunk_attend(cfg, lp["attn"], q, k_att, v_att,
+                                      q_pos, k_pos_view, window)
+        x = x + a_out
+        ch, _ = _channel_forward(cfg, lp, x)
+        if ch is not None:
+            x = x + ch
+        k_stack = jax.lax.dynamic_update_index_in_dim(k_stack, k_l, idx, 0)
+        v_stack = jax.lax.dynamic_update_index_in_dim(v_stack, v_l, idx, 0)
+        return (x, k_stack, v_stack), None
+
+    L = cfg.n_layers
+    xs = {"lp": params["layers"], "window": windows,
+          "idx": jnp.arange(L, dtype=jnp.int32)}
+    (x, k_stack, v_stack), _ = jax.lax.scan(
+        block, (x, cache["k"], cache["v"]), xs)
+    x = apply_norm(cfg, params["final_norm"], x)
+    last = jnp.clip(jnp.minimum(start + c, lengths) - 1 - start, 0, c - 1)
+    idx = last[:, None, None].astype(jnp.int32)
+    x_last = jnp.take_along_axis(x, jnp.broadcast_to(
+        idx, (b, 1, x.shape[-1])), axis=1)[:, 0]
+    logits = logits_from_hidden(cfg, params["embed"], x_last)          # (Nb,V)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k_stack, v_stack
+    return logits, new_cache
+
+
 # ----------------------------------------------------------------------
 # Decode
 # ----------------------------------------------------------------------

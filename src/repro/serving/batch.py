@@ -15,13 +15,16 @@ Two ideas bound recompilation while keeping every compiled shape static:
     which is what turns SATER's early stopping from token *accounting*
     into actually-skipped compute.
 
-PRNG contract: the token sampled at global decode step t uses
-``fold_in(key, t)``, so a lane's sample stream depends only on the
-master key and the global step at which it was admitted — not on how
-many rounds the scan was chunked into.  (It does depend on the lane
-pool width, because ``sample_tokens`` draws one noise tensor for the
-whole (B, V) batch; run with ``n_lanes == B`` for bit-equality with the
-one-shot engine, whose single round spans the whole budget.)
+PRNG contract: the token a request samples at its own step t uses
+``fold_in(fold_in(key, salt), t)`` with ``salt`` the request's id and
+``t`` the request's generated-token count (``sampler.
+sample_tokens_salted``).  A request's sample stream therefore depends
+only on the master key, its id, and its token index — NOT on the lane
+it was placed in, the lane-pool width, the round it was admitted, or
+how its prompt was prefilled (whole or chunked).  That trace
+independence is what the randomized differential harness
+(tests/test_serving_trace.py) checks against a one-shot per-request
+oracle, bit for bit.
 
 The primitives are cache-layout agnostic where they can be:
 ``decode_round`` steps whatever cache pytree ``model.decode_step``
@@ -36,6 +39,15 @@ scatters that single row's prompt K/V into the pool once, then stitches
 the group's K lanes onto it — each lane's block table maps the same
 physical prompt blocks read-only, and only the last partial block is
 cloned per lane (``copy_blocks``) so decode appends never collide.
+
+Chunked prefill replaces the insert paths entirely when the scheduler
+runs with ``chunk_size``: ``prefill_chunk_jit`` appends one C-token
+chunk of each row's prompt directly onto the live cache
+(``model.prefill_chunk`` — dense rows or pool pages), interleaved with
+decode rounds, and ``fanout_lanes`` replicates a completed shared
+row's decode-entry state to its K vote lanes.  Chunk attention runs at
+the prompt-bucket width, so a chunked prompt is bit-identical to a
+whole-prefilled one (tests/test_serving_trace.py).
 """
 
 from __future__ import annotations
@@ -50,7 +62,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
-from repro.serving.sampler import sample_tokens
+from repro.serving.sampler import sample_tokens_salted
 
 
 @dataclasses.dataclass(frozen=True)
@@ -124,21 +136,99 @@ def prefill_shared(params, cfg: ModelConfig, prompts, lengths, max_len: int):
                              max_len=max_len, last_only=True)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "sb"))
+def prefill_chunk_jit(params, cfg: ModelConfig, cache, cur_logits, tokens,
+                      start, lengths, lanes, read_rows, write_rows, sb: int):
+    """One chunked-prefill step for a batch of rows (model.prefill_chunk
+    plus the per-lane serving state it leaves behind).
+
+    tokens (Nb, C) is each row's next prompt chunk, ``start`` its
+    offset, ``lanes`` the target lane per row — real lanes for
+    dense/paged single-lane rows, the ``>= n_lanes`` sentinel for
+    shared-prefix group rows, whose per-lane state is fanned out by
+    :func:`fanout_lanes` only once their final chunk lands.  For lanes
+    addressed here:
+
+      * ``pos`` advances to ``min(start + C, length)`` — after the final
+        chunk, exactly the prompt length whole-prefill admission sets;
+      * dense caches get the row's ``cache_pos`` validity rewritten
+        wholesale to ``[0, pos)`` — later chunks thereby also erase the
+        scribbles an idle (done-masked) lane's decode writes left while
+        it waited for prefill (see the scheduler's mixed-mode round);
+      * ``cur_logits`` takes the chunk's last-token logits — garbage
+        until the final chunk, at which point it is bit-identical to
+        whole prefill's ``last_only`` output and feeds decode step 0.
+
+    Returns (cache, cur_logits, chunk_logits (Nb, V)).
+    """
+    logits, cache = model_lib.prefill_chunk(
+        params, cfg, tokens, cache, start=start, lengths=lengths,
+        lanes=lanes, read_rows=read_rows, write_rows=write_rows, sb=sb)
+    pos_after = jnp.minimum(start + tokens.shape[1], lengths)
+    cache = dict(cache)
+    cache["pos"] = cache["pos"].at[lanes].set(pos_after, mode="drop")
+    if "cache_pos" in cache:
+        sc = cache["cache_pos"].shape[1]
+        p = jnp.arange(sc, dtype=jnp.int32)
+        rows = jnp.where(p[None, :] < pos_after[:, None], p[None, :], -1)
+        cache["cache_pos"] = cache["cache_pos"].at[lanes].set(rows,
+                                                              mode="drop")
+    cur_logits = cur_logits.at[lanes].set(logits.astype(cur_logits.dtype),
+                                          mode="drop")
+    return cache, cur_logits, logits
+
+
+@jax.jit
+def fanout_lanes(cache, cur_logits, new_logits, lane_rows, lengths):
+    """Fan a completed shared-prefix chunk row's decode-entry state out
+    to its K vote lanes: replicate the prompt-last-token logits into
+    ``cur_logits`` and set each lane's ``pos`` to the prompt length.
+
+    The prompt K/V itself is NOT copied — the lanes' block tables
+    already map the shared prompt blocks (plus their CoW tails, cloned
+    separately via :func:`copy_blocks`).  ``lane_rows`` (Nb, Kmax)
+    carries the target lanes, ``>= n_lanes`` sentinel beyond a row's
+    real lane count or for rows whose prefill is still in flight.
+    """
+    nb, kmax = lane_rows.shape
+    lanes = lane_rows.reshape(-1)
+    rows = jnp.repeat(jnp.arange(nb, dtype=jnp.int32), kmax)
+    cache = dict(cache)
+    cache["pos"] = cache["pos"].at[lanes].set(lengths[rows], mode="drop")
+    cur_logits = cur_logits.at[lanes].set(
+        new_logits[rows].astype(cur_logits.dtype), mode="drop")
+    return cache, cur_logits
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "gcfg", "rounds"))
 def decode_round(params, cfg: ModelConfig, gcfg: GenConfig, cache,
-                 cur_logits, done, key, step0, rounds: int):
+                 cur_logits, done, key, salts, steps, rounds: int):
     """Decode `rounds` tokens for every lane; done lanes emit pad.
 
-    step0 is the global decode step of the first token in this round
-    (traced, so consecutive rounds share one executable); the step-t
-    sampling key is fold_in(key, step0 + t).
+    salts: (B,) per-lane request salt; steps: (B,) per-lane count of
+    tokens the lane's request has already generated (both traced, so
+    consecutive rounds share one executable).  The token lane i samples
+    at scan step t uses ``fold_in(fold_in(key, salts[i]), steps[i]+t)``
+    — see the module docstring's PRNG contract.
+
+    Lanes that enter the round done (dead, or parked while their prompt
+    is still being chunk-prefilled) keep stepping inside the scan but
+    get their ``pos`` (and dense ``cache_pos`` validity) restored
+    afterwards: their writes stay confined to the same few
+    never-validated slots round after round instead of marching through
+    the cache, which is what lets a chunk-prefilling lane ride the
+    round harmlessly until its prompt is complete.
 
     Returns (cache, next_logits, done, tokens (B, rounds)).
     """
+    done_in = done
+    pos_in = cache["pos"]
+    cpos_in = cache.get("cache_pos")
+
     def step(carry, t):
         cache, logits, done = carry
-        k_t = jax.random.fold_in(key, step0 + t)
-        tok = sample_tokens(k_t, logits, gcfg.temperature, gcfg.top_p)
+        tok = sample_tokens_salted(key, salts, steps + t, logits,
+                                   gcfg.temperature, gcfg.top_p)
         tok = jnp.where(done, gcfg.pad_id, tok)
         new_done = done | (tok == gcfg.eos_id)
         next_logits, cache = model_lib.decode_step(params, cfg, tok, cache)
@@ -149,6 +239,11 @@ def decode_round(params, cfg: ModelConfig, gcfg: GenConfig, cache,
 
     (cache, logits, done), toks = jax.lax.scan(
         step, (cache, cur_logits, done), jnp.arange(rounds, dtype=jnp.int32))
+    cache = dict(cache)
+    cache["pos"] = jnp.where(done_in, pos_in, cache["pos"])
+    if cpos_in is not None:
+        cache["cache_pos"] = jnp.where(done_in[:, None], cpos_in,
+                                       cache["cache_pos"])
     return cache, logits, done, jnp.swapaxes(toks, 0, 1)
 
 
@@ -297,8 +392,20 @@ def harvest_lengths(toks: np.ndarray, limits: np.ndarray,
     Returns ``(lengths, eos_found)`` — the vectorized form of the
     scheduler's per-lane truncate-at-EOS-or-budget harvest (one numpy
     pass over the whole round batch instead of a Python loop per lane).
+
+    Edge contract (regression-tested in tests/test_scheduler.py): an
+    EOS at position 0 harvests exactly 1 token (the EOS itself); a row
+    with zero remaining budget harvests 0 tokens and reports no EOS
+    even when its round emitted one (tokens past the budget were never
+    owed); limits are clamped to ``[0, round_width]`` so a stale
+    negative budget can never produce a negative slice; an empty batch
+    (no live rows, or a zero-width round) returns empty/zero arrays
+    instead of tripping ``argmax`` on an empty axis.
     """
-    _, r = toks.shape
+    b, r = toks.shape
+    limits = np.clip(limits, 0, r)
+    if r == 0:
+        return np.zeros((b,), np.int32), np.zeros((b,), bool)
     pos = np.arange(r, dtype=np.int32)
     eos = (toks == eos_id) & (pos[None, :] < limits[:, None])
     found = eos.any(axis=1)

@@ -28,22 +28,37 @@ __all__ = ["GenConfig", "generate", "decode_texts"]
 
 
 def generate(params, cfg: ModelConfig, prompts: np.ndarray,
-             lengths: np.ndarray, key, gcfg: GenConfig) -> Tuple[np.ndarray, np.ndarray]:
+             lengths: np.ndarray, key, gcfg: GenConfig,
+             salts=None, s_max=None) -> Tuple[np.ndarray, np.ndarray]:
     """prompts: (B, S) right-padded int32; lengths: (B,).
 
     Every lane decodes the full ``gcfg.max_new_tokens`` budget in one
     jitted round (lanes past their EOS keep stepping and emit pad);
     truncation at EOS happens on the host afterwards.  Returns
     (generated (B, max_new_tokens) int32 incl. EOS, gen_len (B,)).
+
+    ``salts`` (B,) seeds each row's per-request sample stream (default
+    ``arange(B)`` — row i behaves like request uid i); ``s_max``
+    overrides the decode-cache width (default ``S + max_new_tokens``).
+    A scheduler lane serving request ``uid`` with the same master key,
+    prompt bucket, and cache width reproduces row ``salts == uid`` of
+    this engine bit-for-bit, whatever the serving trace around it was —
+    which is how tests/test_serving_trace.py uses this function as the
+    per-request oracle.
     """
     prompts = jnp.asarray(prompts)
     lengths = jnp.asarray(lengths)
     b, s = prompts.shape
-    last, cache = prefill_jit(params, cfg, prompts, lengths,
-                              int(s) + gcfg.max_new_tokens)
+    if salts is None:
+        salts = np.arange(b, dtype=np.int32)
+    if s_max is None:
+        s_max = int(s) + gcfg.max_new_tokens
+    last, cache = prefill_jit(params, cfg, prompts, lengths, int(s_max))
     done0 = jnp.zeros((b,), bool)
+    steps0 = jnp.zeros((b,), jnp.int32)
     _, _, _, toks = decode_round(params, cfg, gcfg, cache, last, done0,
-                                 key, jnp.int32(0), gcfg.max_new_tokens)
+                                 key, jnp.asarray(salts, dtype=jnp.int32),
+                                 steps0, gcfg.max_new_tokens)
     toks = np.asarray(toks)
     # token count up to and including EOS (the paper's latency proxy)
     return toks, first_eos_lengths(toks, gcfg.eos_id)

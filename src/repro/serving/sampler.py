@@ -34,14 +34,47 @@ def top_p_mask(logits, top_p: float):
 
 
 def sample_tokens(key, logits, temperature: float = 0.7, top_p: float = 1.0):
-    """logits: (B, V) -> (B,) int32 samples.
+    """logits: (B, V) -> (B,) int32 samples, one shared noise tensor.
 
     temperature <= 0 is greedy argmax (top_p ignored); otherwise
     temperature-scaled nucleus sampling via :func:`top_p_mask` (see its
-    docstring for the tie-at-the-boundary contract)."""
+    docstring for the tie-at-the-boundary contract).
+
+    The whole batch draws from a single categorical over (B, V), so a
+    row's sample depends on its row index and the batch width.  Serving
+    paths that need trace-independent streams use
+    :func:`sample_tokens_salted` instead."""
     if temperature <= 0.0:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits.astype(jnp.float32) / temperature
     if top_p < 1.0:
         logits = top_p_mask(logits, top_p)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens_salted(key, salts, steps, logits,
+                         temperature: float = 0.7, top_p: float = 1.0):
+    """Per-row sampling streams: row i draws from
+    ``fold_in(fold_in(key, salts[i]), steps[i])``.
+
+    salts/steps: (B,) int32.  With ``salts`` a per-request id and
+    ``steps`` the request's own generated-token count, a request's
+    sample stream depends ONLY on (master key, request id, token
+    index) — not on the lane it landed in, the lane-pool width, when it
+    was admitted, or how its prompt was prefilled.  This is what lets a
+    one-shot per-request oracle reproduce any serving trace bit-for-bit
+    (tests/test_serving_trace.py).
+
+    temperature <= 0 is greedy argmax (keys unused), identical to
+    :func:`sample_tokens`."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_p < 1.0:
+        logits = top_p_mask(logits, top_p)
+
+    def draw(salt, step, row):
+        k = jax.random.fold_in(jax.random.fold_in(key, salt), step)
+        return jax.random.categorical(k, row)
+
+    return jax.vmap(draw)(salts, steps, logits).astype(jnp.int32)

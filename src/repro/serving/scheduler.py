@@ -79,18 +79,42 @@ block so earlier holders keep bit-identical reads).  Cache entries
 hold refcounts; under pool pressure admission evicts them LRU before
 backpressuring.
 
-Request lifecycle:  pending -> admitted (prefill + lane insert)
+Chunked prefill (``chunk_size``)
+--------------------------------
+By default an admission wave prefills each prompt whole, as one jitted
+call — a long prompt admitted mid-flight therefore stalls every live
+decode lane for its full prefill, exactly where streaming ttft is won
+or lost.  With ``chunk_size=C`` set, admission only *assigns* the lane
+(and, paged, allocates its prompt blocks); the prompt then streams
+through a queue of chunk jobs, ``C`` tokens per step
+(``model.prefill_chunk`` appends each chunk's K/V onto the live
+cache), interleaved with decode rounds under a per-round
+``prefill_budget``.  Jobs advance round-robin (short prompts never
+wait for a long one to drain), a parked lane rides the decode round
+done-masked until its final chunk lands, and a ``StopPolicy`` kill
+mid-prefill frees the lane's blocks like any other eviction.  Shared
+groups chunk once per row and fan out (CoW + prefix-cache
+registration) only when the row completes.  Chunk attention runs at
+the prompt-bucket width, so chunked serving is bit-identical to
+whole-prompt serving — for dense, paged, and shared caches, greedy
+and sampled (tests/test_serving_trace.py).
+
+Request lifecycle:  pending -> admitted (prefill + lane insert;
+  chunked: lane parked, prompt streams through chunk jobs)
   -> decoding (one round at a time) -> finished (EOS | budget)
                                     -> cancelled (group decided)
 
-Determinism: step-t sampling uses fold_in(master_key, t) with t the
-*global* round-step counter, shared by all lanes.  A request's tokens
-therefore depend on its admission step and the lane-pool width, exactly
-like batch composition affects real serving engines.  The paged cache
-reproduces the dense cache's logical slot layout exactly (positions are
-contiguous within a lane's block table), so for greedy decoding the
-paged scheduler bit-matches the dense one and the one-shot engine
-(tests/test_scheduler.py proves both) — on the jnp attention path used
+Determinism: request ``uid``'s step-t sample uses
+``fold_in(fold_in(master_key, uid), t)`` (the batch.py PRNG contract),
+so a request's tokens depend only on the master key, its uid, its
+prompt, and its budget — not on when it was admitted, which lane it
+landed in, how wide the pool is, or whether its prompt was prefilled
+whole or in chunks.  The paged cache reproduces the dense cache's
+logical slot layout exactly (positions are contiguous within a lane's
+block table), so the paged scheduler bit-matches the dense one and the
+one-shot engine for greedy AND sampled decoding under arbitrary
+admission traces (tests/test_scheduler.py and
+tests/test_serving_trace.py prove it) — on the jnp attention path used
 off-TPU; the TPU Pallas paged-attention kernel is allclose to it, not
 bit-equal.
 """
@@ -109,10 +133,11 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving.batch import (GenConfig, copy_blocks, decode_round,
-                                 harvest_lengths, insert_lanes,
+                                 fanout_lanes, harvest_lengths, insert_lanes,
                                  insert_lanes_paged, insert_lanes_shared,
                                  make_buckets, pad_token_rows, pick_bucket,
-                                 prefill_jit, prefill_shared)
+                                 prefill_chunk_jit, prefill_jit,
+                                 prefill_shared)
 from repro.serving.block_pool import BlockPool
 
 
@@ -198,6 +223,7 @@ class SchedStats:
     cow_copies: int = 0          # partial prompt blocks cloned for CoW
     prefix_hits: int = 0         # prompt rows that reused cached prefix blocks
     prefix_hit_blocks: int = 0   # pool blocks not allocated thanks to the cache
+    prefill_chunks: int = 0      # row-chunks processed (chunked prefill only)
 
 
 class _PrefixCache:
@@ -287,6 +313,36 @@ class _Lane:
     prompt_len: int = 0
     blocks: List[int] = dataclasses.field(default_factory=list)
     reserved: int = 0            # promised-but-undrawn pool blocks
+    # chunked prefill: False while the lane's prompt is still being
+    # chunk-prefilled — the lane rides decode rounds done-masked and
+    # joins the decode batch the round its final chunk lands
+    ready: bool = True
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """One queued chunk-prefill stream: a prompt being appended onto
+    the cache ``chunk_size`` tokens per step (serving loop
+    ``_run_prefill_chunks``).  Non-shared jobs feed one lane; a
+    shared-prefix group's token-identical members share one job whose
+    completed state is fanned out to all K lanes at once."""
+    toks: List[int]
+    bucket: int                  # prompt bucket == the chunk's attention width
+    lanes: List[int]
+    lane_objs: List["_Lane"]
+    members: List[Request]
+    off: int = 0                 # prompt positions already processed
+    done: bool = False
+    # paged geometry: gather/scatter block rows for the chunk op
+    read_row: Optional[np.ndarray] = None
+    write_row: Optional[np.ndarray] = None
+    # shared-group fan-out state
+    shared: bool = False
+    prompt_blocks: List[int] = dataclasses.field(default_factory=list)
+    n_pb: int = 0
+    n_full: int = 0
+    partial: bool = False
+    cow_reserved: int = 0        # reservation earmarked for CoW tail clones
 
 
 class Scheduler:
@@ -319,6 +375,21 @@ class Scheduler:
         (copy-on-write on the last partial block), plus a
         ``prefix_cache_entries``-entry LRU cache sharing full prompt
         blocks across requests with a common token prefix.
+    chunk_size, prefill_budget:
+        ``chunk_size`` (attention-only models; a multiple of
+        ``block_size`` when paged) switches admission to *chunked
+        prefill*: prompts are appended onto the cache ``chunk_size``
+        tokens at a time (``model.prefill_chunk``), interleaved with
+        decode rounds, so admitting a long prompt never stalls live
+        decode lanes for its whole prefill.  ``prefill_budget`` caps
+        the *real prompt tokens* each round spends on chunk work (a
+        wave of short prompts is priced by its tokens, not by padded
+        chunk capacity); ``None`` completes every queued prompt within
+        its admission round (whole-prefill latency shape, chunked
+        math).
+        Chunked and whole-prompt prefill produce bit-identical
+        completions (tests/test_serving_trace.py) — chunking changes
+        *when* prefill work happens, never what gets generated.
     """
 
     def __init__(self, params, cfg: ModelConfig, tokenizer, gcfg: GenConfig,
@@ -329,14 +400,21 @@ class Scheduler:
                  paged: bool = False, block_size: int = 32,
                  pool_blocks: Optional[int] = None,
                  share_prefix: bool = False,
-                 prefix_cache_entries: int = 256):
+                 prefix_cache_entries: int = 256,
+                 chunk_size: Optional[int] = None,
+                 prefill_budget: Optional[int] = None):
         self.params, self.cfg, self.tokenizer, self.gcfg = \
             params, cfg, tokenizer, gcfg
         self.n_lanes = n_lanes
         self.round_tokens = round_tokens
         self.buckets = tuple(sorted(buckets or make_buckets(max_prompt_len)))
+        # admission waves pad to at least 2 rows: size-1 batch dims can
+        # lower to differently-ordered reductions (ulp-level drift), and
+        # wave-size independence is what lets any serving trace bit-match
+        # the per-request oracle (tests/test_serving_trace.py)
         self.admit_buckets = tuple(sorted(admit_buckets or
-                                          make_buckets(n_lanes, 1)))
+                                          make_buckets(n_lanes,
+                                                       min(2, n_lanes))))
         # cache sized so any prompt bucket + any budget fits one lane
         self.s_max = max(self.buckets) + gcfg.max_new_tokens
         self.paged = paged
@@ -348,6 +426,44 @@ class Scheduler:
         if share_prefix and not paged:
             raise ValueError("share_prefix requires paged=True: sharing is "
                              "block-table indirection over the block pool")
+        self.chunk_size = chunk_size
+        self.prefill_budget = prefill_budget
+        if chunk_size is not None:
+            if not cfg.has_attention or cfg.has_ssm:
+                raise ValueError(
+                    "chunked prefill requires an attention-only model: SSM "
+                    "prompt state is sequential and is not carried across "
+                    "chunks")
+            if cfg.is_moe:
+                raise ValueError(
+                    "chunked prefill does not support MoE models: expert "
+                    "capacity depends on the tokens per forward pass, so a "
+                    "chunked prompt would not reproduce whole-prompt prefill")
+            if cfg.kv_quant:
+                raise ValueError("chunked prefill does not support kv_quant")
+            if chunk_size < 8:
+                raise ValueError(
+                    f"chunk_size={chunk_size} too small: sub-8 batch dims "
+                    "can lower to differently-ordered reductions, breaking "
+                    "the chunked == whole-prefill bit-match")
+            from repro.models import attention as attn_mod
+            if max(self.buckets) > attn_mod.CHUNKED_THRESHOLD:
+                raise ValueError(
+                    f"chunked prefill requires every prompt bucket within "
+                    f"the direct-attention threshold "
+                    f"({attn_mod.CHUNKED_THRESHOLD}): above it whole-prompt "
+                    "prefill switches to online-softmax attention, whose "
+                    "reductions are not bitwise comparable to the chunk "
+                    "path's")
+            if paged and chunk_size % block_size:
+                raise ValueError(
+                    f"chunk_size={chunk_size} must be a multiple of "
+                    f"block_size={block_size} so chunks land block-aligned "
+                    "in the pool")
+            if prefill_budget is not None and prefill_budget < chunk_size:
+                raise ValueError(
+                    f"prefill_budget={prefill_budget} below "
+                    f"chunk_size={chunk_size} could never process a chunk")
         # ladders bounding compiled shapes of the shared fan-out paths
         # (lanes per prefill row, CoW copy pairs per wave)
         self._fan_buckets = make_buckets(n_lanes, 1)
@@ -371,8 +487,11 @@ class Scheduler:
         return self.tokenizer.encode(req.prompt, bos=True)[: max(self.buckets)]
 
     def _budget(self, req: Request) -> int:
-        b = req.max_new_tokens or self.gcfg.max_new_tokens
-        return min(b, self.gcfg.max_new_tokens)
+        # `is None`, not `or`: an explicit max_new_tokens=0 is a real
+        # (zero-token) budget, not a request for the default
+        b = (self.gcfg.max_new_tokens if req.max_new_tokens is None
+             else req.max_new_tokens)
+        return max(0, min(b, self.gcfg.max_new_tokens))
 
     def _reservation(self, prompt_len: int, budget: int) -> int:
         """Blocks a lane may touch over its lifetime: prompt + budget,
@@ -518,11 +637,13 @@ class ServingLoop:
     several independent loops' rounds before harvesting any of them, so
     one loop's host-side harvest work overlaps another's device compute.
 
-    Determinism: the master key is fixed for the session and the global
-    step counter advances by ``round_tokens`` per round, so submitting
-    everything up front and draining reproduces ``Scheduler.run``
-    bit-for-bit (dense, paged, and shared-prefix; greedy and sampled —
-    proven in tests/test_serving_loop.py).
+    Determinism: the master key is fixed for the session and every
+    request's sample stream is keyed by its own uid and token index
+    (the batch.py PRNG contract), so submitting everything up front and
+    draining reproduces ``Scheduler.run`` bit-for-bit — and any other
+    admission timing of the same requests produces the same completions
+    (dense, paged, and shared-prefix; greedy and sampled — proven in
+    tests/test_serving_loop.py and tests/test_serving_trace.py).
 
     Per-request latency: every submitted uid is timestamped;
     completions carry ``ttft_s`` (submit -> first harvested token) and
@@ -569,12 +690,16 @@ class ServingLoop:
         # tokenization memo: a pool-blocked head-of-queue request is
         # re-examined every round; encode it once, not once per round
         self._enc: Dict[int, List[int]] = {}
-        self.global_step = 0
+        # per-lane sample-stream salts (the occupying request's uid);
+        # see the batch.py PRNG contract
+        self._salts = np.zeros((sched.n_lanes,), np.int32)
         self._emitted: List[Completion] = []
         self._submit_s: Dict[int, float] = {}
         self._released: set = set()
         self._inflight: Optional[Tuple[List[int], object]] = None
         self._closed = False
+        # chunked prefill: queued prompt-chunk streams (see _PrefillJob)
+        self._prefill_q: "collections.deque[_PrefillJob]" = collections.deque()
 
     # -- submission ----------------------------------------------------
     def submit(self, requests: Sequence) -> None:
@@ -681,8 +806,12 @@ class ServingLoop:
             self._admit_shared()
         else:
             self._admit()
+        if self.sched.chunk_size is not None:
+            # spend the round's prefill budget before launching decode:
+            # lanes whose final chunk lands this pass decode this round
+            self._run_prefill_chunks()
         live = [i for i in range(self.sched.n_lanes)
-                if self.lanes[i] is not None]
+                if self.lanes[i] is not None and self.lanes[i].ready]
         if not live:
             return False
         r = self.sched.round_tokens
@@ -706,11 +835,12 @@ class ServingLoop:
             if self._table_dirty:
                 self.cache["block_tables"] = jnp.asarray(self._host_table)
                 self._table_dirty = False
+        steps = np.array([0 if l is None else l.generated
+                          for l in self.lanes], np.int32)
         self.cache, self.cur_logits, _, toks = decode_round(
             self.sched.params, self.sched.cfg, self.sched.gcfg, self.cache,
             self.cur_logits, jnp.asarray(self._host_done), self.key,
-            jnp.int32(self.global_step), r)
-        self.global_step += r
+            jnp.asarray(self._salts), jnp.asarray(steps), r)
         self.stats.rounds += 1
         self.stats.lane_rounds += len(live)
         self._inflight = (live, toks)
@@ -808,6 +938,191 @@ class ServingLoop:
             self.stats.cancelled += 1
             self._emitted.append(comp)
 
+    # -- chunked prefill -----------------------------------------------
+    def _job_alive(self, job: _PrefillJob) -> bool:
+        """True while any of the job's lanes is still the lane object
+        admission parked there (a StopPolicy kill mid-prefill finalizes
+        the lane and may hand the slot to a new request)."""
+        return any(self.lanes[i] is lane
+                   for i, lane in zip(job.lanes, job.lane_objs))
+
+    def _reap_prefill_jobs(self) -> None:
+        """Drop completed and dead jobs from the queue.  A shared job
+        whose lanes were all killed mid-prefill still holds the
+        reservation earmarked for its CoW tail clones — return it."""
+        live: List[_PrefillJob] = []
+        for job in self._prefill_q:
+            if not job.done and self._job_alive(job):
+                live.append(job)
+                continue
+            if job.cow_reserved > 0:
+                self.pool.unreserve(job.cow_reserved)
+                job.cow_reserved = 0
+        self._prefill_q = collections.deque(live)
+
+    def _run_prefill_chunks(self) -> None:
+        """Spend this round's prefill token budget advancing queued
+        chunk jobs.
+
+        Round-robin passes: every live job advances ONE chunk per pass
+        (batched by equal prompt bucket in queue order), so a short
+        prompt behind a long one finishes its prefill in its first pass
+        instead of waiting for the long prompt to drain — the
+        processor-sharing discipline that keeps admission from ever
+        barriering the loop.  Budget ``None`` keeps passing until every
+        queued prompt is fully prefilled (whole-prefill latency shape,
+        chunked math); a finite budget stops starting new batches once
+        ``prefill_budget`` tokens of chunk capacity were spent, but
+        always processes at least one batch so prefill can never
+        starve."""
+        sched = self.sched
+        c = sched.chunk_size
+        budget = sched.prefill_budget
+        spent = 0
+        while True:
+            self._reap_prefill_jobs()
+            if not self._prefill_q:
+                return
+            if budget is not None and spent >= budget:
+                return
+            snapshot = list(self._prefill_q)
+            j = 0
+            while j < len(snapshot):
+                if budget is not None and spent >= budget:
+                    return
+                bucket = snapshot[j].bucket
+                batch: List[_PrefillJob] = []
+                cost = 0
+                while (j < len(snapshot) and snapshot[j].bucket == bucket
+                       and len(batch) < sched.n_lanes):
+                    # budget counts REAL prompt tokens, so a wave of
+                    # short prompts doesn't get priced like long-prompt
+                    # chunks; the first batch always goes through
+                    real = max(1, min(c, len(snapshot[j].toks)
+                                      - snapshot[j].off))
+                    if (budget is not None and batch
+                            and spent + cost + real > budget):
+                        break
+                    batch.append(snapshot[j])
+                    cost += real
+                    j += 1
+                self._chunk_batch(batch, bucket)
+                spent += cost
+
+    def _chunk_batch(self, batch: List[_PrefillJob], bucket: int) -> None:
+        """Advance each job in ``batch`` by one chunk with a single
+        jitted ``prefill_chunk_jit`` call at (admit-bucket, chunk_size,
+        bucket) shapes, then activate rows whose prompt completed."""
+        sched, stats = self.sched, self.stats
+        c = sched.chunk_size
+        admit_n = pick_bucket(len(batch), sched.admit_buckets)
+        toks = np.full((admit_n, c), sched.gcfg.pad_id, np.int32)
+        start = np.zeros((admit_n,), np.int32)
+        lengths = np.ones((admit_n,), np.int32)
+        lane_ids = np.full((admit_n,), sched.n_lanes, np.int32)
+        n_rows = sched.max_blocks if sched.paged else 1
+        read_rows = np.zeros((admit_n, n_rows), np.int32)
+        write_rows = np.zeros((admit_n, n_rows), np.int32)
+        for j, job in enumerate(batch):
+            seg = job.toks[job.off: job.off + c]
+            toks[j, : len(seg)] = seg
+            start[j] = job.off
+            lengths[j] = max(len(job.toks), 1)
+            if not job.shared:
+                lane_ids[j] = job.lanes[0]
+            if sched.paged:
+                read_rows[j] = job.read_row
+                write_rows[j] = job.write_row
+            stats.prefill_tokens += max(0, min(c, len(job.toks) - job.off))
+            job.off += c
+            if job.off >= max(len(job.toks), 1):
+                job.done = True
+                stats.prefill_prompts += 1
+        stats.prefills += 1
+        stats.prefill_chunks += len(batch)
+        self.cache, self.cur_logits, chunk_logits = prefill_chunk_jit(
+            sched.params, sched.cfg, self.cache, self.cur_logits,
+            jnp.asarray(toks), jnp.asarray(start), jnp.asarray(lengths),
+            jnp.asarray(lane_ids), jnp.asarray(read_rows),
+            jnp.asarray(write_rows), bucket)
+        done_rows = [(j, job) for j, job in enumerate(batch) if job.done]
+        for j, job in done_rows:
+            if job.shared:
+                continue
+            lane = job.lane_objs[0]
+            i = job.lanes[0]
+            if self.lanes[i] is not lane:
+                continue             # killed mid-prefill; reap drops the job
+            if sched.paged:
+                self._host_table[i] = job.read_row
+                self._table_dirty = True
+            lane.ready = True
+            self._host_done[i] = False
+        shared_done = [(j, job) for j, job in done_rows if job.shared]
+        if shared_done:
+            self._fanout_shared(shared_done, chunk_logits)
+
+    def _fanout_shared(self, shared_done: List[Tuple[int, _PrefillJob]],
+                       chunk_logits) -> None:
+        """Activate completed shared-prefix rows: clone CoW tails for
+        the surviving lanes, stitch their block tables onto the shared
+        prompt blocks, register the prompt with the prefix cache (only
+        now — its blocks are finally fully written), and replicate the
+        prompt-last-token logits / position into every lane."""
+        sched, pool = self.sched, self.pool
+        cow_src: List[int] = []
+        cow_dst: List[int] = []
+        nrows = pick_bucket(len(shared_done), sched.admit_buckets)
+        kmax = pick_bucket(max(len(job.members) for _, job in shared_done),
+                           sched._fan_buckets)
+        lane_rows = np.full((nrows, kmax), sched.n_lanes, np.int32)
+        lens_arr = np.ones((nrows,), np.int32)
+        row_ids = np.zeros((nrows,), np.int32)
+        for r_i, (j, job) in enumerate(shared_done):
+            row_ids[r_i] = j
+            lens_arr[r_i] = max(len(job.toks), 1)
+            alive = [(i, lane) for i, lane in zip(job.lanes, job.lane_objs)
+                     if self.lanes[i] is lane]
+            tail_of: Dict[int, int] = {}
+            if job.partial and alive:
+                tail = job.prompt_blocks[-1]
+                for i, lane in alive:
+                    blk, copied = pool.cow(tail)
+                    if copied:
+                        cow_src.append(tail)
+                        cow_dst.append(blk)
+                        job.cow_reserved -= 1
+                    tail_of[i] = blk
+            for slot_k, (i, lane) in enumerate(alive):
+                lane.blocks = list(job.prompt_blocks)
+                if job.partial:
+                    lane.blocks[-1] = tail_of[i]
+                self._host_table[i] = 0
+                self._host_table[i, : job.n_pb] = lane.blocks
+                lane_rows[r_i, slot_k] = i
+                lane.ready = True
+                self._host_done[i] = False
+            self._table_dirty = True
+            if job.cow_reserved > 0:
+                # dead members never drew their CoW allowance
+                pool.unreserve(job.cow_reserved)
+                job.cow_reserved = 0
+            if alive and self.prefix_cache is not None:
+                self.prefix_cache.register(job.toks,
+                                           job.prompt_blocks[: job.n_full])
+        sel = chunk_logits[jnp.asarray(row_ids)]
+        self.cache, self.cur_logits = fanout_lanes(
+            self.cache, self.cur_logits, sel, jnp.asarray(lane_rows),
+            jnp.asarray(lens_arr))
+        if cow_src:
+            n = pick_bucket(len(cow_src), sched._fan_buckets)
+            src = np.zeros((n,), np.int32)
+            dst = np.zeros((n,), np.int32)
+            src[: len(cow_src)] = cow_src
+            dst[: len(cow_dst)] = cow_dst
+            self.cache = copy_blocks(self.cache, jnp.asarray(src),
+                                     jnp.asarray(dst))
+
     def _admit(self) -> None:
         """Dense / paged (non-shared) admission: fill free lanes from
         the pending queue, bucket the wave, prefill, insert."""
@@ -833,6 +1148,39 @@ class ServingLoop:
             pending.popleft()
             wave.append(req)
         if not wave:
+            return
+        if sched.chunk_size is not None:
+            # chunked admission: assign the lane (and, paged, its prompt
+            # blocks) now, but queue the prompt as a chunk job instead of
+            # prefilling it — the lane rides decode rounds done-masked
+            # until its final chunk lands.  Its block-table row stays all
+            # trash meanwhile, so the masked decode writes land nowhere.
+            for r in wave:
+                i = free.pop(0)
+                toks = self._enc[r.uid]
+                lane = _Lane(r, sched._budget(r), ready=False)
+                read_row = write_row = None
+                if sched.paged:
+                    lane.prompt_len = max(len(toks), 1)
+                    n_pb = -(-lane.prompt_len // sched.block_size)
+                    lane.blocks = self.pool.alloc(n_pb)
+                    lane.reserved = sched._reservation(
+                        lane.prompt_len, lane.budget) - n_pb
+                    row = np.zeros((sched.max_blocks,), np.int32)
+                    row[:n_pb] = lane.blocks
+                    read_row = write_row = row
+                    self._host_table[i] = 0
+                    self._table_dirty = True
+                lanes[i] = lane
+                self._salts[i] = r.uid & 0x7FFFFFFF
+                self._host_done[i] = True
+                self._prefill_q.append(_PrefillJob(
+                    toks=list(toks),
+                    bucket=pick_bucket(max(len(toks), 1), sched.buckets),
+                    lanes=[i], lane_objs=[lane], members=[r],
+                    read_row=read_row, write_row=write_row))
+            for r in wave:
+                self._enc.pop(r.uid, None)
             return
         by_bucket: Dict[int, List[Request]] = collections.defaultdict(list)
         for r in wave:
@@ -860,6 +1208,7 @@ class ServingLoop:
                     self._host_table[i] = block_rows[j]
                     self._table_dirty = True
                 lanes[i] = lane
+                self._salts[i] = r.uid & 0x7FFFFFFF
                 self._host_done[i] = False
             if sched.paged:
                 # prefill dense at the prompt bucket only, then scatter
@@ -947,6 +1296,55 @@ class ServingLoop:
             taken += len(members)
         if not planned:
             return
+        if sched.chunk_size is not None:
+            # chunked shared admission: allocate and refcount-share each
+            # row's prompt blocks now (write side routes cache-hit
+            # positions to trash, read side maps hit + own), park the K
+            # lanes done-masked with all-trash tables, and queue one
+            # chunk job per row — CoW tail clones and prefix-cache
+            # registration wait until the row's final chunk has landed,
+            # so no other admission can ever read half-written blocks.
+            for row in planned:
+                p_len = max(len(row.toks), 1)
+                h = len(row.hit)
+                own = pool.alloc(row.n_pb - h)
+                prompt_blocks = row.hit + own
+                write_row = np.zeros((sched.max_blocks,), np.int32)
+                write_row[h:row.n_pb] = own
+                read_row = np.zeros((sched.max_blocks,), np.int32)
+                read_row[:row.n_pb] = prompt_blocks
+                k_members = len(row.members)
+                if k_members > 1 and own:
+                    pool.share(own, k_members - 1)
+                lane_ids, lane_objs = [], []
+                for m in row.members:
+                    i = free.pop(0)
+                    lane = _Lane(m, sched._budget(m), ready=False)
+                    lane.prompt_len = p_len
+                    lane.blocks = list(prompt_blocks)
+                    lane.reserved = sched._reservation(
+                        p_len, lane.budget) - row.n_pb
+                    self._host_table[i] = 0
+                    lanes[i] = lane
+                    self._salts[i] = m.uid & 0x7FFFFFFF
+                    self._host_done[i] = True
+                    lane_ids.append(i)
+                    lane_objs.append(lane)
+                self._table_dirty = True
+                stats.shared_lanes += k_members - 1
+                self._prefill_q.append(_PrefillJob(
+                    toks=list(row.toks),
+                    bucket=pick_bucket(p_len, sched.buckets),
+                    lanes=lane_ids, lane_objs=lane_objs,
+                    members=list(row.members),
+                    read_row=read_row, write_row=write_row, shared=True,
+                    prompt_blocks=list(prompt_blocks), n_pb=row.n_pb,
+                    n_full=row.n_full, partial=row.partial,
+                    cow_reserved=(k_members - 1) if row.partial else 0))
+            for row in planned:
+                for m in row.members:
+                    self._enc.pop(m.uid, None)
+            return
         by_bucket: Dict[int, List[_PlanRow]] = collections.defaultdict(list)
         for row in planned:
             by_bucket[pick_bucket(len(row.toks), sched.buckets)].append(row)
@@ -997,6 +1395,7 @@ class ServingLoop:
                     self._host_table[i, :row.n_pb] = lane.blocks
                     lane_rows[j, mj] = i
                     lanes[i] = lane
+                    self._salts[i] = m.uid & 0x7FFFFFFF
                     self._host_done[i] = False
                 self._table_dirty = True
                 stats.shared_lanes += k_members - 1

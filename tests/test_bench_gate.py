@@ -1,0 +1,179 @@
+"""Unit tests for scripts/check_bench_regression.py — the CI
+benchmark-regression gate.  It decides whether smoke benchmarks block a
+merge, so its tolerance arithmetic, direction handling, missing-key
+behaviour, baseline-free invariants, and exit codes are pinned here."""
+
+import importlib.util
+import json
+import pathlib
+import sys
+
+import pytest
+
+SCRIPT = pathlib.Path(__file__).resolve().parent.parent / "scripts" / \
+    "check_bench_regression.py"
+spec = importlib.util.spec_from_file_location("check_bench_regression",
+                                              SCRIPT)
+gate = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(gate)
+
+
+# ----------------------------------------------------------------------
+# walk: which metrics get gated at all
+# ----------------------------------------------------------------------
+
+def test_walk_recurses_and_skips_missing_and_bools():
+    cur = {"table": {"arith": {"generated_tokens": 10, "wall_s": 1.0,
+                               "equal_accuracy": True,     # bool: ignored
+                               "note": "hi",               # str: ignored
+                               "new_metric_no_base": 5,    # gated name absent
+                               "rounds": 3}}}
+    base = {"table": {"arith": {"generated_tokens": 12, "wall_s": 2.0}}}
+    got = {path: (v, b) for path, _, v, b in gate.walk(cur, base)}
+    # present in both -> gated; rounds missing from baseline -> skipped;
+    # bools/strings/never-gated names -> skipped
+    assert got == {"table.arith.generated_tokens": (10.0, 12.0),
+                   "table.arith.wall_s": (1.0, 2.0)}
+
+
+def test_walk_ignores_ungated_numeric_keys():
+    cur = {"speedup": 2.0, "generated_tokens": 5}
+    base = {"speedup": 1.0, "generated_tokens": 5}
+    assert [p for p, *_ in gate.walk(cur, base)] == ["generated_tokens"]
+
+
+# ----------------------------------------------------------------------
+# check_metrics: tolerance edges, both directions, wall slack
+# ----------------------------------------------------------------------
+
+def _fails(cur, base, wall_slack=3.0):
+    failures, _ = gate.check_metrics(cur, base, wall_slack)
+    return failures
+
+
+def test_low_direction_tolerance_edge():
+    # generated_tokens: low is better, rel 0.20, slack 16
+    base = {"generated_tokens": 100}
+    limit = 100 * 1.20 + 16
+    assert _fails({"generated_tokens": limit}, base) == []        # at bound
+    assert len(_fails({"generated_tokens": limit + 1}, base)) == 1
+    # improvements never fail
+    assert _fails({"generated_tokens": 0}, base) == []
+
+
+def test_high_direction_tolerance_edge():
+    # cancelled_lanes: high is better, rel 0.30, slack 4
+    base = {"cancelled_lanes": 100}
+    limit = 100 * 0.70 - 4
+    assert _fails({"cancelled_lanes": limit}, base) == []
+    assert len(_fails({"cancelled_lanes": limit - 1}, base)) == 1
+
+
+def test_ratio_floor_absolute_tolerance():
+    # generated_cut: rel 0.0, abs 0.15
+    base = {"generated_cut": 0.5}
+    assert _fails({"generated_cut": 0.35}, base) == []
+    assert len(_fails({"generated_cut": 0.34}, base)) == 1
+
+
+def test_wall_metrics_gate_at_slack_only():
+    base = {"wall_s": 10.0, "ttft_p95_s": 0.5}
+    assert _fails({"wall_s": 29.9, "ttft_p95_s": 1.49}, base) == []
+    bad = _fails({"wall_s": 30.1, "ttft_p95_s": 1.51}, base)
+    assert len(bad) == 2
+    assert _fails({"wall_s": 30.1}, base, wall_slack=4.0) == []
+
+
+# ----------------------------------------------------------------------
+# Baseline-free invariants
+# ----------------------------------------------------------------------
+
+def _pipe_row(seq_wall=10.0, pipe_wall=5.0, seq_rounds=40, pipe_rounds=30,
+              equal=True):
+    return {"sequential": {"wall_s": seq_wall, "rounds": seq_rounds},
+            "pipelined": {"wall_s": pipe_wall, "rounds": pipe_rounds},
+            "equal_accuracy": equal}
+
+
+def test_pipeline_invariants_pass_and_fail():
+    ok = {"table": {"arith": _pipe_row()}}
+    assert gate.check_pipeline_invariants(ok) == []
+    bad = {"table": {"arith": _pipe_row(pipe_wall=11.0, pipe_rounds=40,
+                                        equal=False)}}
+    msgs = gate.check_pipeline_invariants(bad)
+    assert len(msgs) == 3          # accuracy, wall, rounds all violated
+
+
+def _chunk_row(whole_p95=1.0, chunk_p95=0.5, tokens=True, acc=True):
+    return {"whole": {"ttft_p95_s": whole_p95},
+            "chunked": {"ttft_p95_s": chunk_p95},
+            "equal_tokens": tokens, "equal_accuracy": acc}
+
+
+def test_chunked_invariants_pass_and_fail():
+    assert gate.check_chunked_invariants(
+        {"table": {"serve": _chunk_row()}}) == []
+    msgs = gate.check_chunked_invariants(
+        {"table": {"serve": _chunk_row(chunk_p95=1.0, tokens=False,
+                                       acc=False)}})
+    assert len(msgs) == 3          # bit-identity, accuracy, strict ttft win
+    # rows without both paths are ignored, not crashed on
+    assert gate.check_chunked_invariants(
+        {"table": {"serve": {"whole": {"ttft_p95_s": 1.0}}}}) == []
+
+
+# ----------------------------------------------------------------------
+# main(): exit codes and --update
+# ----------------------------------------------------------------------
+
+def _run_main(tmp_path, monkeypatch, cur, base, extra=()):
+    c = tmp_path / "cur.json"
+    b = tmp_path / "base.json"
+    c.write_text(json.dumps(cur))
+    b.write_text(json.dumps(base))
+    monkeypatch.setattr(sys, "argv",
+                        ["check_bench_regression.py", str(c), str(b),
+                         *extra])
+    return gate.main(), c, b
+
+
+def test_main_exit_zero_on_clean_run(tmp_path, monkeypatch, capsys):
+    rc, _, _ = _run_main(tmp_path, monkeypatch,
+                         {"generated_tokens": 90}, {"generated_tokens": 100})
+    assert rc == 0
+    assert "no regressions" in capsys.readouterr().out
+
+
+def test_main_exit_nonzero_on_regression(tmp_path, monkeypatch, capsys):
+    rc, _, _ = _run_main(tmp_path, monkeypatch,
+                         {"generated_tokens": 200}, {"generated_tokens": 100})
+    assert rc == 1
+    assert "regression" in capsys.readouterr().out
+
+
+def test_main_exit_nonzero_on_invariant_failure(tmp_path, monkeypatch):
+    cur = {"pipeline_cascade": True,
+           "table": {"arith": _pipe_row(pipe_wall=20.0)}}
+    rc, _, _ = _run_main(tmp_path, monkeypatch, cur, {})
+    assert rc == 1
+    cur = {"chunked_serve": True,
+           "table": {"serve": _chunk_row(chunk_p95=2.0)}}
+    rc, _, _ = _run_main(tmp_path, monkeypatch, cur, {})
+    assert rc == 1
+
+
+def test_main_update_rewrites_baseline(tmp_path, monkeypatch):
+    cur = {"generated_tokens": 500}
+    rc, c, b = _run_main(tmp_path, monkeypatch, cur,
+                         {"generated_tokens": 1}, extra=("--update",))
+    assert rc == 0
+    assert json.loads(b.read_text()) == cur
+
+
+def test_main_missing_file_raises(tmp_path, monkeypatch):
+    monkeypatch.setattr(sys, "argv",
+                        ["check_bench_regression.py",
+                         str(tmp_path / "nope.json"),
+                         str(tmp_path / "also-nope.json")])
+    with pytest.raises(FileNotFoundError):
+        gate.main()

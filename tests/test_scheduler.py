@@ -13,7 +13,8 @@ from repro.core import voting
 from repro.core.confidence import Vote
 from repro.data.pipeline import encode_prompts
 from repro.data.tokenizer import default_tokenizer
-from repro.serving.batch import GenConfig, make_buckets, pick_bucket
+from repro.serving.batch import (GenConfig, first_eos_lengths,
+                                 harvest_lengths, make_buckets, pick_bucket)
 from repro.serving.engine import generate
 from repro.serving.scheduler import (Request, RequestGroup, Scheduler,
                                      StopPolicy)
@@ -52,6 +53,59 @@ def test_pick_bucket_expected():
     assert pick_bucket(150, buckets) == 160
     # longer than every bucket: callers truncate to the largest
     assert pick_bucket(999, buckets) == 160
+
+
+# ----------------------------------------------------------------------
+# Round harvest edge cases
+# ----------------------------------------------------------------------
+
+EOS = 99
+
+
+def test_harvest_eos_at_position_zero():
+    """A lane whose very first round token is EOS harvests exactly that
+    one token."""
+    toks = np.array([[EOS, 5, 5, 5], [5, EOS, 5, 5]], np.int32)
+    lengths, found = harvest_lengths(toks, np.array([4, 4], np.int32), EOS)
+    assert lengths.tolist() == [1, 2]
+    assert found.tolist() == [True, True]
+
+
+def test_harvest_zero_remaining_budget():
+    """A zero (or stale negative) remaining budget harvests nothing —
+    even when the round emitted an EOS past the budget window — and
+    never produces a negative slice length."""
+    toks = np.array([[EOS, 5, 5, 5], [5, 5, 5, 5]], np.int32)
+    lengths, found = harvest_lengths(toks, np.array([0, -3], np.int32), EOS)
+    assert lengths.tolist() == [0, 0]
+    assert found.tolist() == [False, False]
+
+
+def test_harvest_eos_beyond_limit_ignored():
+    toks = np.array([[5, 5, EOS, 5]], np.int32)
+    lengths, found = harvest_lengths(toks, np.array([2], np.int32), EOS)
+    assert lengths.tolist() == [2] and found.tolist() == [False]
+    # limits above the round width clamp to the width
+    lengths, found = harvest_lengths(toks, np.array([99], np.int32), EOS)
+    assert lengths.tolist() == [3] and found.tolist() == [True]
+
+
+def test_harvest_all_dead_wave():
+    """No live rows (and even a zero-width round) must not trip the
+    vectorized harvest."""
+    lengths, found = harvest_lengths(np.zeros((0, 4), np.int32),
+                                     np.zeros((0,), np.int32), EOS)
+    assert lengths.shape == (0,) and found.shape == (0,)
+    lengths, found = harvest_lengths(np.zeros((3, 0), np.int32),
+                                     np.zeros((3,), np.int32), EOS)
+    assert lengths.tolist() == [0, 0, 0]
+    assert found.tolist() == [False, False, False]
+
+
+def test_first_eos_lengths_edges():
+    toks = np.array([[EOS, 1, 2], [1, 2, 3], [1, EOS, EOS]], np.int32)
+    assert first_eos_lengths(toks, EOS).tolist() == [1, 3, 2]
+    assert first_eos_lengths(np.zeros((2, 0), np.int32), EOS).tolist() == [0, 0]
 
 
 # ----------------------------------------------------------------------

@@ -1,0 +1,474 @@
+"""Randomized differential serving-trace harness.
+
+The serving engine's central promise after the per-request PRNG
+contract (serving/batch.py) is *trace independence*: what a request
+generates depends only on (master key, uid, prompt, budget, decode
+settings) — never on when it arrived, which lane it landed in, which
+cache layout served it, or whether its prompt was prefilled whole or
+in chunks.  This module generates random serving traces — arrivals
+between rounds, vote-group sizes, per-request budgets, ``release()``
+calls, mid-flight StopPolicy kills — and drives them through every
+serving configuration:
+
+    {dense, paged, shared-prefix} x {chunked, unchunked} x {greedy, sampled}
+
+asserting each completion is bit-identical to a one-shot
+``engine.generate`` oracle run for that request alone (cancelled
+requests must be an exact prefix of their oracle tokens), and that the
+block pool's ``leak_report()`` is clean after ``close()``.
+
+Two drivers share the machinery:
+
+  * a seeded-fuzz driver that always runs (no extra deps), covering the
+    full 12-configuration matrix over a few generated traces;
+  * a hypothesis *stateful* machine (skipped when hypothesis is not
+    installed) that interleaves submit/step/kill/release arbitrarily
+    against the most intricate configuration (shared-prefix + chunked)
+    and checks the same oracle equivalence at teardown.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.serving.batch import GenConfig, pick_bucket
+from repro.serving.engine import generate
+from repro.serving.scheduler import (Request, RequestGroup, Scheduler,
+                                     StopPolicy)
+
+MAXP = 48          # prompt-length cap == largest prompt bucket
+MAXNEW = 10        # decode budget cap (oracle decodes this, then truncates)
+N_LANES = 4
+ROUND = 5
+BLOCK = 8
+MASTER_KEY = 7
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _setup()
+
+
+_CACHED = {}
+
+
+def _setup():
+    """Tiny attention-only model, shared by both drivers (module-level
+    cache so the hypothesis machine, which cannot take fixtures, reuses
+    the same jit cache)."""
+    if not _CACHED:
+        from repro.data.tokenizer import default_tokenizer
+        from repro.models import model as M
+        tok = default_tokenizer()
+        cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                          d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                          d_ff=128, vocab_size=tok.vocab_size, remat=False,
+                          source="test")
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        _CACHED["v"] = (params, cfg, tok)
+    return _CACHED["v"]
+
+
+def _gcfg(temperature):
+    return GenConfig(max_new_tokens=MAXNEW, temperature=temperature,
+                     top_p=1.0, eos_id=2)
+
+
+def _scheduler(params, cfg, temperature, mode, chunked,
+               prefill_budget=None):
+    return Scheduler(params, cfg, tokenizer=None, gcfg=_gcfg(temperature),
+                     n_lanes=N_LANES, round_tokens=ROUND,
+                     max_prompt_len=MAXP,
+                     paged=mode in ("paged", "shared"), block_size=BLOCK,
+                     share_prefix=mode == "shared",
+                     chunk_size=BLOCK if chunked else None,
+                     prefill_budget=prefill_budget if chunked else None)
+
+
+# ----------------------------------------------------------------------
+# The per-request oracle
+# ----------------------------------------------------------------------
+
+class Oracle:
+    """One-shot ``engine.generate`` per request, at the scheduler's
+    exact geometry: the prompt padded to its scheduler bucket, the
+    decode cache at the scheduler's ``s_max`` width, the request's uid
+    as its sample-stream salt.  The row is duplicated to a 2-row batch
+    because size-1 batch dims can lower to differently-ordered
+    reductions (see the scheduler's admit-bucket note)."""
+
+    def __init__(self, params, cfg, sched: Scheduler, temperature):
+        self.params, self.cfg = params, cfg
+        self.buckets = sched.buckets
+        self.s_max = sched.s_max
+        self.gcfg = _gcfg(temperature)
+        self.key = jax.random.PRNGKey(MASTER_KEY)
+        self._memo = {}
+
+    def tokens(self, uid, prompt_toks, budget):
+        """The exact token array a serving completion for this request
+        must carry (truncated at EOS or ``budget``)."""
+        memo_key = (uid, tuple(prompt_toks), budget)
+        if memo_key in self._memo:
+            return self._memo[memo_key]
+        toks = list(prompt_toks)[:max(self.buckets)]
+        bucket = pick_bucket(max(len(toks), 1), self.buckets)
+        rows = np.zeros((2, bucket), np.int32)
+        rows[0, :len(toks)] = toks
+        rows[1, :len(toks)] = toks
+        lens = np.full((2,), max(len(toks), 1), np.int32)
+        gen, _ = generate(self.params, self.cfg, rows, lens, self.key,
+                          self.gcfg, salts=np.array([uid, uid], np.int32),
+                          s_max=self.s_max)
+        seg = gen[0, :budget]
+        eos = np.nonzero(seg == self.gcfg.eos_id)[0]
+        n = int(eos[0]) + 1 if eos.size else budget
+        out = seg[:n].copy()
+        self._memo[memo_key] = out
+        return out
+
+
+# ----------------------------------------------------------------------
+# Trace generation + replay
+# ----------------------------------------------------------------------
+
+class ScriptedKills(StopPolicy):
+    """Kills a group the moment any of its members finalizes, for the
+    trace's predetermined kill set — eviction churn (including kills
+    landing mid-prefill) for the differential run to ride over."""
+
+    def __init__(self, kill_groups):
+        self.kill_groups = set(kill_groups)
+
+    def observe(self, completion):
+        if completion.group in self.kill_groups:
+            return (completion.group,)
+        return ()
+
+
+def make_trace(seed, n_rounds=10, vocab=96):
+    """A trace is pure data: per-round submission lists (mixing plain
+    Requests and RequestGroups, token-identical and not), release
+    rounds, and the group kill set — everything a replay needs."""
+    rng = np.random.RandomState(seed)
+    uid = [0]
+    group = [0]
+
+    def request(g=None, toks=None):
+        u = uid[0]
+        uid[0] += 1
+        if toks is None:
+            plen = int(rng.choice([0, 1, 3, 9, 17, 33, 40],
+                                  p=[.05, .15, .2, .2, .2, .15, .05]))
+            toks = rng.randint(3, vocab, (plen,)).tolist()
+        budget = int(rng.choice([0, 1, 4, 7, MAXNEW],
+                                p=[.05, .15, .3, .3, .2]))
+        return Request(uid=u, tokens=toks, group=g, max_new_tokens=budget)
+
+    rounds = []
+    for _ in range(n_rounds):
+        subs = []
+        for _ in range(int(rng.randint(0, 3))):
+            kind = rng.rand()
+            if kind < 0.45:
+                subs.append(request())
+            else:
+                g = group[0]
+                group[0] += 1
+                k = int(rng.randint(2, 4))
+                if kind < 0.8:          # token-identical vote group
+                    proto = request(g)
+                    members = [proto] + [
+                        request(g, toks=list(proto.tokens))
+                        for _ in range(k - 1)]
+                    for m in members[1:]:
+                        m.max_new_tokens = proto.max_new_tokens
+                else:                   # RCV-style ragged group
+                    members = [request(g) for _ in range(k)]
+                subs.append(RequestGroup(members))
+        rounds.append(subs)
+    kill = {g for g in range(group[0]) if rng.rand() < 0.3}
+    release_rounds = {r for r in range(n_rounds) if rng.rand() < 0.4}
+    return rounds, kill, release_rounds
+
+
+def _flatten(rounds):
+    out = []
+    for subs in rounds:
+        for s in subs:
+            out.extend(s.requests if isinstance(s, RequestGroup) else [s])
+    return out
+
+
+def replay(sched: Scheduler, rounds, kill, release_rounds):
+    """Drive one scheduler through the trace: submit between rounds,
+    step, release delivered uids on release rounds, then drain."""
+    loop = sched.loop(jax.random.PRNGKey(MASTER_KEY),
+                      stop_policy=ScriptedKills(kill))
+    got = {}
+    for r, subs in enumerate(rounds):
+        if subs:
+            loop.submit(subs)
+        done = loop.step()
+        for c in done:
+            assert c.uid not in got, "uid completed twice"
+            got[c.uid] = c
+        if r in release_rounds:
+            loop.release(c.uid for c in done)
+    while loop.has_work:
+        for c in loop.step():
+            assert c.uid not in got, "uid completed twice"
+            got[c.uid] = c
+    loop.close()
+    return got
+
+
+def check_trace(params, cfg, temperature, mode, chunked, trace,
+                prefill_budget=None):
+    rounds, kill, release_rounds = trace
+    sched = _scheduler(params, cfg, temperature, mode, chunked,
+                       prefill_budget)
+    oracle = Oracle(params, cfg, sched, temperature)
+    got = replay(sched, rounds, kill, release_rounds)
+    reqs = _flatten(rounds)
+    assert set(got) == {r.uid for r in reqs}
+    for r in reqs:
+        c = got[r.uid]
+        want = oracle.tokens(r.uid, r.tokens, r.max_new_tokens)
+        if c.cancelled:
+            # killed mid-flight: whatever it generated must be an exact
+            # prefix of what it would have generated
+            assert c.gen_len <= len(want)
+            assert np.array_equal(c.tokens, want[:c.gen_len]), \
+                f"uid {r.uid} ({mode}, chunked={chunked}): prefix diverged"
+        else:
+            assert np.array_equal(c.tokens, want), \
+                f"uid {r.uid} ({mode}, chunked={chunked}): tokens diverged"
+    if sched.pool is not None:
+        assert sched.pool.leak_report() is None
+    return got
+
+
+# ----------------------------------------------------------------------
+# Seeded-fuzz driver: the full configuration matrix
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+@pytest.mark.parametrize("seed", [11, 29])
+def test_trace_matrix_bitmatches_oracle(setup, seed, temperature):
+    """Every serving configuration must reproduce the per-request
+    oracle bit-for-bit on the same randomized trace — cache layout,
+    prefix sharing, and chunked prefill change how/when work happens,
+    never what gets generated."""
+    params, cfg, _ = _setup()
+    trace = make_trace(seed)
+    for mode in ("dense", "paged", "shared"):
+        for chunked, budget in ((False, None), (True, None), (True, 16)):
+            check_trace(params, cfg, temperature, mode, chunked, trace,
+                        prefill_budget=budget)
+
+
+def test_trace_uncancelled_equal_across_modes(setup):
+    """Cross-mode coherence on one trace without kills: every mode's
+    completions are literally identical (not just oracle-equal), so the
+    matrix collapses to one canonical output."""
+    params, cfg, _ = _setup()
+    trace = make_trace(53)
+    trace = (trace[0], set(), trace[2])          # no kills
+    sigs = []
+    for mode in ("dense", "paged", "shared"):
+        for chunked in (False, True):
+            got = check_trace(params, cfg, 0.7, mode, chunked, trace)
+            sigs.append(sorted((u, c.tokens.tolist())
+                               for u, c in got.items()))
+    assert all(s == sigs[0] for s in sigs[1:])
+
+
+# ----------------------------------------------------------------------
+# Directed chunked-prefill regressions
+# ----------------------------------------------------------------------
+
+def test_kill_mid_prefill_frees_partial_blocks(setup):
+    """A group killed while its prompt is still chunk-prefilling must
+    drop its lanes with zero tokens and return every allocated block —
+    the 'killing a lane mid-prefill frees its partial blocks'
+    guarantee."""
+    params, cfg, _ = _setup()
+    sched = _scheduler(params, cfg, 0.7, "shared", chunked=True,
+                       prefill_budget=BLOCK)   # one chunk per round
+    rng = np.random.RandomState(0)
+    # group 0: trivial prompts, budget 2 -> finishes fast; group 1: long
+    # prompts that need ~5 chunk rounds -> still prefilling at the kill
+
+    class CrossKill(StopPolicy):
+        def observe(self, comp):
+            # group 0's first finisher decides group 1 (cross-group
+            # trigger, so the kill lands while group 1 still prefills)
+            return (1,) if comp.group == 0 else ()
+
+    fast = RequestGroup([Request(uid=j, tokens=[5, 6, 7], group=0,
+                                 max_new_tokens=2) for j in range(2)])
+    long_toks = rng.randint(3, 90, (40,)).tolist()
+    slow = RequestGroup([Request(uid=10 + j, tokens=list(long_toks), group=1,
+                                 max_new_tokens=8) for j in range(2)])
+    loop = sched.loop(jax.random.PRNGKey(MASTER_KEY),
+                      stop_policy=CrossKill())
+    loop.submit([fast, slow])
+    comps = loop.drain()
+    loop.close()
+    by_uid = {c.uid: c for c in comps}
+    assert not by_uid[0].cancelled
+    killed = [by_uid[10], by_uid[11]]
+    assert all(c.cancelled and c.gen_len == 0 for c in killed), \
+        "group 1 should die before its prefill completes"
+    assert sched.pool.leak_report() is None
+
+
+def test_zero_budget_request_completes_empty(setup):
+    """max_new_tokens=0 is a real budget (regression: it used to fall
+    back to the default), finalizing with zero tokens in both prefill
+    modes."""
+    params, cfg, _ = _setup()
+    for chunked in (False, True):
+        sched = _scheduler(params, cfg, 0.7, "paged", chunked=chunked)
+        comps, _ = sched.run(
+            [Request(uid=0, tokens=[4, 5, 6], max_new_tokens=0),
+             Request(uid=1, tokens=[7, 8], max_new_tokens=3)],
+            jax.random.PRNGKey(MASTER_KEY))
+        assert comps[0].gen_len == 0 and not comps[0].cancelled
+        assert comps[1].gen_len <= 3
+        assert sched.pool.leak_report() is None
+
+
+def test_chunked_requires_supported_config(setup):
+    params, cfg, _ = _setup()
+    with pytest.raises(ValueError, match="multiple of"):
+        Scheduler(None, cfg, None, _gcfg(0.0), paged=True, block_size=8,
+                  chunk_size=12)
+    with pytest.raises(ValueError, match="too small"):
+        Scheduler(None, cfg, None, _gcfg(0.0), chunk_size=4)
+    with pytest.raises(ValueError, match="prefill_budget"):
+        Scheduler(None, cfg, None, _gcfg(0.0), chunk_size=16,
+                  prefill_budget=8)
+
+
+# ----------------------------------------------------------------------
+# Hypothesis stateful machine (optional dep): shared + chunked loop
+# ----------------------------------------------------------------------
+
+try:
+    from hypothesis import settings
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:      # pragma: no cover - exercised on bare installs
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    class ServingTraceMachine(RuleBasedStateMachine):
+        """Arbitrary interleavings of submit / step / kill / release
+        against the most intricate configuration (shared-prefix paged +
+        chunked prefill, sampled decoding), checked against the same
+        per-request oracle at teardown."""
+
+        def __init__(self):
+            super().__init__()
+            params, cfg, _ = _setup()
+            self.params, self.cfg = params, cfg
+            self.sched = _scheduler(params, cfg, 0.7, "shared",
+                                    chunked=True, prefill_budget=BLOCK)
+            self.policy = ScriptedKills(set())
+            self.loop = self.sched.loop(jax.random.PRNGKey(MASTER_KEY),
+                                        stop_policy=self.policy)
+            self.oracle = Oracle(params, cfg, self.sched, 0.7)
+            self.requests = {}
+            self.got = {}
+            self.next_uid = 0
+            self.next_group = 0
+            self.last_delivered = []
+
+        def _mk_request(self, rng, group, toks=None):
+            u = self.next_uid
+            self.next_uid += 1
+            if toks is None:
+                plen = int(rng.randint(0, 34))
+                toks = rng.randint(3, 90, (plen,)).tolist()
+            req = Request(uid=u, tokens=toks, group=group,
+                          max_new_tokens=int(rng.randint(0, MAXNEW + 1)))
+            self.requests[u] = req
+            return req
+
+        @initialize()
+        def start(self):
+            pass
+
+        @rule(seed=st.integers(0, 10 ** 6))
+        def submit_plain(self, seed):
+            rng = np.random.RandomState(seed)
+            self.loop.submit([self._mk_request(rng, None)])
+
+        @rule(seed=st.integers(0, 10 ** 6), k=st.integers(2, 3),
+              identical=st.booleans())
+        def submit_group(self, seed, k, identical):
+            rng = np.random.RandomState(seed)
+            g = self.next_group
+            self.next_group += 1
+            if identical:
+                proto = self._mk_request(rng, g)
+                members = [proto]
+                for _ in range(k - 1):
+                    m = self._mk_request(rng, g, toks=list(proto.tokens))
+                    m.max_new_tokens = proto.max_new_tokens
+                    members.append(m)
+            else:
+                members = [self._mk_request(rng, g) for _ in range(k)]
+            self.loop.submit([RequestGroup(members)])
+
+        @rule()
+        def step(self):
+            done = self.loop.step()
+            for c in done:
+                assert c.uid not in self.got
+                self.got[c.uid] = c
+            self.last_delivered = [c.uid for c in done]
+
+        @rule(seed=st.integers(0, 10 ** 6))
+        def kill_some_group(self, seed):
+            if self.next_group:
+                rng = np.random.RandomState(seed)
+                self.policy.kill_groups.add(int(rng.randint(
+                    0, self.next_group)))
+
+        @rule()
+        def release_delivered(self):
+            self.loop.release(self.last_delivered)
+            self.last_delivered = []
+
+        @invariant()
+        def pool_accounting_sane(self):
+            pool = self.sched.pool
+            assert pool.in_use + pool.n_free == pool.n_blocks
+            assert pool.reserved <= pool.n_free
+
+        def teardown(self):
+            while self.loop.has_work:
+                for c in self.loop.step():
+                    assert c.uid not in self.got
+                    self.got[c.uid] = c
+            self.loop.close()
+            assert set(self.got) == set(self.requests)
+            for u, req in self.requests.items():
+                c = self.got[u]
+                want = self.oracle.tokens(u, req.tokens, req.max_new_tokens)
+                if c.cancelled:
+                    assert np.array_equal(c.tokens, want[:c.gen_len])
+                else:
+                    assert np.array_equal(c.tokens, want)
+            assert self.sched.pool.leak_report() is None
+
+    ServingTraceMachine.TestCase.settings = settings(
+        max_examples=8, stateful_step_count=14, deadline=None)
+    TestServingTraceMachine = ServingTraceMachine.TestCase
