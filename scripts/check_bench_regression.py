@@ -25,7 +25,12 @@ cost metric regressed beyond its tolerance:
     tokens (and accuracy) whole-prompt prefill generates — bit-identity
     is the contract, not a tolerance — and its ttft p95 under the
     Poisson arrival stream must sit strictly below the whole-prefill
-    path's.
+    path's;
+  * the speculative-cascade JSON (``--spec-cascade``) likewise:
+    draft acceptance must be nonzero, drafted completions must be
+    bit-equal to the undrafted path at equal accuracy, and the drafted
+    run must sit strictly below the undrafted one on wall-clock and
+    total rounds, with the escalated tier's rounds cut >= 30%.
 
 Usage:
     python scripts/check_bench_regression.py CURRENT.json BASELINE.json
@@ -57,6 +62,11 @@ COUNTERS = {
     # relative floor: catches tier overlap collapsing toward zero
     # without pinning the exact (raggedness-dependent) fraction
     "overlap_fraction": ("high", 0.5, 0.01),
+    # speculative cascade: escalated-tier rounds must stay cut and
+    # drafts must keep verifying (greedy same-weights tiers: ~1.0)
+    "escalated_rounds": ("low", 0.25, 2),
+    "escalated_rounds_cut": ("high", 0.0, 0.15),
+    "accept_rate": ("high", 0.0, 0.15),
 }
 WALL_METRICS = ("wall_s", "ttft_mean_s", "ttft_p50_s", "ttft_p95_s")
 
@@ -142,6 +152,42 @@ def check_chunked_invariants(cur):
     return failures
 
 
+def check_spec_invariants(cur):
+    """Baseline-free acceptance checks for --spec-cascade JSONs: the
+    drafted cascade must keep accepting drafts, keep completions
+    bit-equal to the undrafted path, and beat it strictly on the
+    escalated tier's rounds (>= 30% cut) and on wall-clock."""
+    failures = []
+    for bench, row in cur.get("table", {}).items():
+        plain, spec = row.get("no_draft"), row.get("draft_rejected")
+        if not (isinstance(plain, dict) and isinstance(spec, dict)):
+            continue
+        if not row.get("accept_rate", 0) > 0:
+            failures.append(f"{bench}: draft accept rate is zero — "
+                            "verification committed nothing")
+        if not row.get("completions_bitequal", False):
+            failures.append(f"{bench}: drafted completions diverged from "
+                            "the undrafted path (bit-identity violated)")
+        if not row.get("equal_accuracy", False):
+            failures.append(f"{bench}: drafted accuracy/tier histogram "
+                            "diverged from the undrafted path")
+        if not spec["wall_s"] < plain["wall_s"]:
+            failures.append(
+                f"{bench}: drafted wall {spec['wall_s']:.2f}s not strictly "
+                f"below undrafted {plain['wall_s']:.2f}s")
+        if not spec["rounds"] < plain["rounds"]:
+            failures.append(
+                f"{bench}: drafted rounds {spec['rounds']} not strictly "
+                f"below undrafted {plain['rounds']}")
+        limit = 0.7 * plain["escalated_rounds"]
+        if not spec["escalated_rounds"] <= limit:
+            failures.append(
+                f"{bench}: escalated-tier rounds {spec['escalated_rounds']} "
+                f"above the 30%-cut bar (<= {limit:.1f}, undrafted "
+                f"{plain['escalated_rounds']})")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh smoke JSON from this CI run")
@@ -168,6 +214,8 @@ def main():
         failures += check_pipeline_invariants(cur)
     if cur.get("chunked_serve"):
         failures += check_chunked_invariants(cur)
+    if cur.get("spec_cascade"):
+        failures += check_spec_invariants(cur)
 
     width = max((len(r[0]) for r in rows), default=20)
     print(f"{args.current} vs {args.baseline}:")

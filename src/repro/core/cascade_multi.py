@@ -190,10 +190,15 @@ class PipelineStats:
     escalated: List[int] = dataclasses.field(default_factory=list)
     ttd_s: List[float] = dataclasses.field(default_factory=list)
     loop_stats: List[SchedStats] = dataclasses.field(default_factory=list)
+    # speculative draft feeding (draft_rejected + spec_k tiers)
+    spec_rounds: int = 0         # rounds that ran the verify path
+    drafted_tokens: int = 0      # draft tokens fed to verify rounds
+    accepted_draft_tokens: int = 0   # drafts committed by verification
 
 
 def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
-                          items: Sequence[TaskItem], key
+                          items: Sequence[TaskItem], key,
+                          draft_rejected: bool = False
                           ) -> "tuple[List[MultiOutcome], PipelineStats]":
     """The cascade with *pipelined* tiers: each question's tier-(i+1)
     vote group is submitted the moment tier i's ``VoteEarlyStop``
@@ -217,6 +222,18 @@ def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
     — and therefore accuracy and the tier histogram — match
     ``run_cascade(..., stream_early_stop=True)`` exactly; sampled
     decoding follows the scheduler's usual batch-composition contract.
+
+    ``draft_rejected=True`` turns each rejection into a speedup for the
+    tier it escalates to: the rejected group's representative
+    completion (its lowest-uid surviving lane — a deterministic pick)
+    is attached as a *draft* to every lane of the next tier's group,
+    verified ``spec_k`` tokens per round instead of decoded one by one
+    (``serving/batch.decode_round_spec``).  Tiers whose SLM has no
+    ``spec_k`` simply ignore the drafts.  Verification commits exactly
+    the tokens the next tier would have sampled anyway, so completions,
+    decisions, accuracy, and the tier histogram are unchanged — only
+    round counts and wall-clock drop, in proportion to inter-tier
+    agreement on the escalated questions.
 
     Returns ``(outcomes, PipelineStats)``.
     """
@@ -262,11 +279,16 @@ def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
                           for li in range(len(loops))]
         stats.fused_loops = sum(1 for c in tiers_per_loop if c > 1)
 
-    def submit_tier(t_i: int, qi: int) -> None:
+    def submit_tier(t_i: int, qi: int,
+                    draft: Optional[List[int]] = None) -> None:
         gid = t_i * n + qi
-        policies[loop_of[t_i]].add_group(gid, tiers[t_i].levels(),
-                                         tau=tiers[t_i].tau)
-        loops[loop_of[t_i]].submit([tier_group(t_i, qi)])
+        tier = tiers[t_i]
+        policies[loop_of[t_i]].add_group(gid, tier.levels(), tau=tier.tau)
+        group = tier_group(t_i, qi)
+        drafts = None
+        if draft and tier.slm.spec_k is not None:
+            drafts = {m.uid: draft for m in group.requests}
+        loops[loop_of[t_i]].submit([group], draft_tokens=drafts)
 
     for qi in range(n):
         if tiers:
@@ -277,6 +299,10 @@ def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
     gid_done: Dict[int, int] = {}
     gid_gen: Dict[int, int] = {}
     processed: set = set()
+    # draft capture: the rejected group's representative completion,
+    # fed to the next tier on escalation (lowest surviving uid — a
+    # deterministic pick, so drafting never perturbs the trace)
+    gid_draft: Dict[int, "tuple[int, List[int]]"] = {}
 
     def process_decisions(touched) -> None:
         """Settle every group decision that became processable this
@@ -295,6 +321,7 @@ def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
             processed.add(gid)
             qi = gid % n
             tier = tiers[t_i]
+            draft = gid_draft.pop(gid, (None, None))[1]
             dec = dataclasses.replace(dec, used_tokens=gid_gen[gid])
             cost[qi] += (tier.in_price * prompt_toks[qi]
                          + tier.out_price * dec.used_tokens) / 1e6
@@ -310,7 +337,8 @@ def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
                 overhead[qi] += dec.decision_tokens
                 stats.escalated[t_i] += 1
                 if t_i + 1 < len(tiers):
-                    submit_tier(t_i + 1, qi)
+                    submit_tier(t_i + 1, qi,
+                                draft=draft if draft_rejected else None)
                 else:
                     stats.ttd_s[qi] = time.time() - t0
 
@@ -331,6 +359,11 @@ def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
                 gid_gen[comp.group] = (gid_gen.get(comp.group, 0)
                                        + int(comp.gen_len))
                 touched.add(comp.group)
+                if draft_rejected and not comp.cancelled and comp.gen_len:
+                    best = gid_draft.get(comp.group)
+                    if best is None or comp.uid < best[0]:
+                        gid_draft[comp.group] = (comp.uid,
+                                                 [int(t) for t in comp.tokens])
         process_decisions(touched)
 
     for lp in loops:
@@ -338,6 +371,10 @@ def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
     stats.rounds = sum(s.rounds for s in stats.loop_stats)
     stats.generated_tokens = sum(s.generated_tokens
                                  for s in stats.loop_stats)
+    stats.spec_rounds = sum(s.spec_rounds for s in stats.loop_stats)
+    stats.drafted_tokens = sum(s.drafted_tokens for s in stats.loop_stats)
+    stats.accepted_draft_tokens = sum(s.accepted_draft_tokens
+                                      for s in stats.loop_stats)
     if stats.host_iters:
         stats.overlap_fraction = stats.overlap_iters / stats.host_iters
 

@@ -45,6 +45,10 @@ class SLM:
     #                              (requires paged; see serving/scheduler)
     chunk_size: "int | None" = None      # chunked prefill chunk width
     prefill_budget: "int | None" = None  # per-round prefill token budget
+    spec_k: "int | None" = None          # speculative verify width: accept
+    #                                      queued draft tokens (e.g. a
+    #                                      rejected tier's completion) up to
+    #                                      k per round (serving/scheduler)
 
 
 @dataclasses.dataclass
@@ -93,7 +97,8 @@ def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
                      block_size=slm.block_size,
                      share_prefix=slm.share_prefix,
                      chunk_size=slm.chunk_size,
-                     prefill_budget=slm.prefill_budget)
+                     prefill_budget=slm.prefill_budget,
+                     spec_k=slm.spec_k)
 
 
 def batch_generate(slm: SLM, prompts: Sequence[str], key):

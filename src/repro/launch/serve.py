@@ -181,6 +181,11 @@ def main():
               f"{stats.dense_cache_bytes / 2**20:.2f} MiB), "
               f"admission blocked {stats.admission_blocked}x, "
               f"peak reserved {sched.pool.peak_reserved}")
+        # loop.close() runs BlockPool.leak_report(): any block still
+        # held or reserved after the last lane drained is a serving bug
+        print("  pool leak check: "
+              + (stats.leak_report if stats.leak_report
+                 else "clean (every block returned)"))
     if args.share_prefix:
         pool = sched.pool
         print(f"  prefix sharing: {stats.shared_lanes} lanes rode a "

@@ -247,6 +247,59 @@ def chunk_attend(cfg: ModelConfig, p, q, k_att, v_att, q_pos, k_pos, window):
     return out.reshape(b, c, cfg.n_heads * dh) @ p["wo"].astype(cdt)
 
 
+def verify_attend(cfg: ModelConfig, p, q, k_att, v_att, q_pos, k_pos, window,
+                  valid_k=None):
+    """Attention of a lane's Kd position-shifted verify queries over its
+    full cache view — speculative decoding's multi-token scoring pass.
+
+    q: (B, Kd, H, Dh) the draft tokens' queries; k_att/v_att:
+    (B, Sc, KV, Dh) — the decode-width cache view, already containing
+    ALL Kd drafts' own K/V; k_pos: (B, Sc) the view's absolute
+    positions; valid_k: (B, Sc) slot validity (dense caches pass
+    ``cache_pos >= 0`` exactly as :func:`attention_decode` does; paged
+    views rely on the causal mask over true positions, as decode's
+    ``kpos <= pos`` is causal for its single query).
+
+    The bit-exactness contract (tests/test_spec_decode.py): the output
+    row for draft i is bitwise the row ``attention_decode`` /
+    ``attention_decode_paged`` would produce fed the drafts one token
+    at a time.  Two facts carry it, both load-bearing:
+
+      * the score and weighted-sum einsums are evaluated per query at
+        decode's exact ``Sq = 1`` geometry (the loop below) — the
+        backend's batched-contraction lowering is NOT row-stable
+        across ``Sq`` (measured ~2e-7 relative drift at Sq=4 vs Sq=1
+        on the CPU backend), so a single (B, Kd, Sc) score
+        materialization can never bit-match sequential decode; the
+        projections/norms/FFN rows feeding this function ARE bitwise
+        row-stable (the ``chunk_qkv`` argument) and stay fused over Kd;
+      * draft j > i's K/V are already written where sequential decode
+        would NOT yet have written them — but those slots are causally
+        masked (``k_pos > q_pos``) to an additive ``NEG_INF`` bias, so
+        their probs underflow to exact +0.0 and contribute exact zeros
+        to the weighted sum regardless of slot contents, precisely the
+        trash-slot argument the paged decode path already rests on.
+
+    Returns (B, Kd, D).
+    """
+    b, kd, _, dh = q.shape
+    chunked = k_att.shape[1] > 64 * 1024  # same switch as the decode paths
+    outs = []
+    for i in range(kd):
+        if chunked:
+            o = chunked_attention(cfg, q[:, i:i + 1], k_att, v_att,
+                                  q_pos[:, i:i + 1], k_pos, window,
+                                  valid_k=valid_k, block=8192)
+        else:
+            o = direct_attention(cfg, q[:, i:i + 1], k_att, v_att,
+                                 q_pos[:, i:i + 1], k_pos, window,
+                                 valid_k=valid_k)
+        outs.append(o)
+    out = jnp.concatenate(outs, axis=1)                            # (B,Kd,H,Dh)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return out.reshape(b, kd, cfg.n_heads * dh) @ p["wo"].astype(cdt)
+
+
 def quantize_kv(x):
     """x (..., dh) -> (int8 q, f32 absmax scale (...,))."""
     s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0

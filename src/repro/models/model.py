@@ -513,6 +513,126 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
 # Decode
 # ----------------------------------------------------------------------
 
+def verify_step(params, cfg: ModelConfig, tokens, cache, draft_len=None):
+    """Score Kd draft tokens per lane in ONE forward pass — speculative
+    decoding's verify round (serving/batch.py ``decode_round_spec``).
+
+    tokens: (B, Kd); draft i is scored at absolute position ``pos + i``.
+    The drafts' K/V are written into the cache exactly where sequential
+    ``decode_step`` calls would write them; the caller owns acceptance
+    and rollback (rejected dense slots are re-marked empty through
+    ``cache_pos``; rejected paged slots become unreachable once the
+    block table stops growing over them).  ``pos`` is NOT advanced —
+    the caller sets it to ``pos + accepted``.
+
+    ``draft_len`` (B,) optionally bounds the real drafts per lane: K/V
+    writes for positions ``i >= draft_len[b]`` are routed to the trash
+    block (paged) or dropped (dense) instead of landing at
+    ``pos + i``.  Acceptance never consults those positions, and
+    without the masking an undrafted lane riding a wide verify round
+    near the cache ceiling could clamp a write onto one of its own
+    *valid* slots (the paged beyond-table clamp) — corrupting history a
+    live lane still reads.
+
+    Returns (logits (B, Kd, V), new cache).  ``logits[:, i]`` are the
+    next-token logits after draft i — bitwise the logits ``decode_step``
+    would return fed the same tokens one at a time: every attention
+    softmax reduces over the same cache width decode uses, and each
+    position's projections/FFN rows are row subsets of the same matmuls
+    (the ``chunk_qkv`` argument; tests/test_spec_decode.py asserts the
+    bit-match).
+
+    Attention-only and unquantized caches (same limits as
+    :func:`prefill_chunk`; the scheduler gates spec mode on the same
+    predicates).
+    """
+    if cfg.has_ssm:
+        raise ValueError("verify_step requires an attention-only model: "
+                         "SSM state is sequential per token and cannot "
+                         "score k draft positions in one pass")
+    if "k_scale" in cache:
+        raise ValueError("verify_step does not support kv_quant caches")
+    x = embed_tokens(cfg, params["embed"], tokens)
+    b, kd, _ = x.shape
+    pos = cache["pos"]                                                 # (B,)
+    q_pos = pos[:, None] + jnp.arange(kd, dtype=jnp.int32)[None, :]    # (B,Kd)
+    windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
+    dh = cfg.resolved_head_dim
+    paged = "block_tables" in cache
+    live_w = None
+    if draft_len is not None:
+        live_w = jnp.arange(kd, dtype=jnp.int32)[None, :] < draft_len[:, None]
+
+    cache_pos = bidx = slots = None
+    if paged:
+        bt = cache["block_tables"]                                     # (B,M)
+        kpos = cache["kpos"]                                           # (S,)
+        pb, bs = cache["k"].shape[1], cache["k"].shape[2]
+        # flat pool slots for the drafts; same clamp story as
+        # decode_step — positions past the table scribble slots whose
+        # contents are never read
+        blk = jnp.minimum(q_pos // bs, bt.shape[1] - 1)
+        bid = jnp.take_along_axis(bt, blk, axis=1)                     # (B,Kd)
+        write_tgt = bid * bs + q_pos % bs
+        if live_w is not None:
+            write_tgt = jnp.where(live_w, write_tgt, q_pos % bs)  # trash blk 0
+        gather_idx = bt[:, kpos // bs] * bs + (kpos % bs)[None, :]     # (B,S)
+        k_pos_view = jnp.broadcast_to(kpos[None, :], gather_idx.shape)
+    else:
+        sc = cache["k"].shape[2]
+        slots = (q_pos % sc).astype(jnp.int32)
+        if live_w is not None:
+            slots = jnp.where(live_w, slots, sc)       # out of range: dropped
+        bidx = jnp.arange(b)[:, None]
+        cache_pos = cache["cache_pos"].at[bidx, slots].set(q_pos, mode="drop")
+
+    def block(carry, layer):
+        x, k_stack, v_stack = carry
+        lp = layer["lp"]
+        window = layer["window"]
+        idx = layer["idx"]
+        h = apply_norm(cfg, lp["norm1"], x)
+        q, k, v = attn_mod.chunk_qkv(cfg, lp["attn"], h, q_pos)
+        k_l = jax.lax.dynamic_index_in_dim(k_stack, idx, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(v_stack, idx, 0, keepdims=False)
+        if paged:
+            k_flat = k_l.reshape(pb * bs, cfg.n_kv_heads, dh)
+            v_flat = v_l.reshape(pb * bs, cfg.n_kv_heads, dh)
+            k_flat = k_flat.at[write_tgt].set(k.astype(k_flat.dtype))
+            v_flat = v_flat.at[write_tgt].set(v.astype(v_flat.dtype))
+            k_att, v_att = k_flat[gather_idx], v_flat[gather_idx]
+            a_out = attn_mod.verify_attend(cfg, lp["attn"], q, k_att, v_att,
+                                           q_pos, k_pos_view, window)
+            k_l = k_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
+            v_l = v_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
+        else:
+            k_l = k_l.at[bidx, slots].set(k.astype(k_l.dtype), mode="drop")
+            v_l = v_l.at[bidx, slots].set(v.astype(v_l.dtype), mode="drop")
+            a_out = attn_mod.verify_attend(cfg, lp["attn"], q, k_l, v_l,
+                                           q_pos, cache_pos, window,
+                                           valid_k=cache_pos >= 0)
+        x = x + a_out
+        ch, _ = _channel_forward(cfg, lp, x)
+        if ch is not None:
+            x = x + ch
+        k_stack = jax.lax.dynamic_update_index_in_dim(k_stack, k_l, idx, 0)
+        v_stack = jax.lax.dynamic_update_index_in_dim(v_stack, v_l, idx, 0)
+        return (x, k_stack, v_stack), None
+
+    L = cfg.n_layers
+    xs = {"lp": params["layers"], "window": windows,
+          "idx": jnp.arange(L, dtype=jnp.int32)}
+    (x, k_stack, v_stack), _ = jax.lax.scan(
+        block, (x, cache["k"], cache["v"]), xs)
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = logits_from_hidden(cfg, params["embed"], x)               # (B,Kd,V)
+    new_cache = dict(cache)
+    new_cache["k"], new_cache["v"] = k_stack, v_stack
+    if not paged:
+        new_cache["cache_pos"] = cache_pos
+    return logits, new_cache
+
+
 def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
     """One decode step.  tokens: (B,) int32 (or embeds (B,1,D)).
 

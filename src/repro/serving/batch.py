@@ -247,6 +247,118 @@ def decode_round(params, cfg: ModelConfig, gcfg: GenConfig, cache,
     return cache, logits, done, jnp.swapaxes(toks, 0, 1)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "gcfg", "rounds"))
+def decode_round_spec(params, cfg: ModelConfig, gcfg: GenConfig, cache,
+                      cur_logits, done, key, salts, steps, draft_toks,
+                      draft_len, rounds: int):
+    """Speculative decode round: verify up to Kd draft tokens per lane
+    in one fused pass (``model.verify_step``), commit the longest
+    sequentially-agreeing prefix, then run a normal ``rounds``-token
+    decode scan from the post-accept state.
+
+    draft_toks: (B, Kd) draft token ids (pad past ``draft_len``);
+    draft_len: (B,) real drafts per lane (0 = the lane rides the round
+    undrafted).  Acceptance is exact-match against the *target* stream:
+    target i is sampled from the logits after draft i-1 at the lane's
+    PRNG index ``steps + i`` — bitwise the token sequential decode
+    would emit there, because ``verify_step``'s logits are bitwise
+    sequential decode's (its contract) and each target is drawn at
+    ``decode_round``'s exact (B, V) sampling geometry.  Greedy
+    (temperature <= 0) degenerates to argmax agreement; sampled mode
+    stays trace-independent because the per-request salted streams are.
+    A committed token therefore IS the token a normal round would have
+    emitted — speculation can change wall-clock and round counts but
+    never the stream (tests/test_serving_trace.py extends its oracle
+    bit-match over drafted traces on exactly this argument).
+
+    Commit/rollback: ``pos`` advances by ``accept``; rejected dense
+    draft slots are re-marked empty (``cache_pos`` rewind) while
+    rejected paged slots are already unreachable (causally masked until
+    the block table grows over them, and the next writes at those
+    positions overwrite them first — the standard trash-slot argument).
+    The *bonus* token after the accepted prefix is deliberately NOT
+    committed: the trailing scan's first sample re-draws it from the
+    post-accept logits at the same PRNG index, bit-identically, which
+    keeps the accounting one-token-per-scan-step everywhere.
+
+    Lanes done at entry (dead or parked mid-chunk-prefill) ride the
+    round exactly as in :func:`decode_round`: draft_len 0, accept 0,
+    pos/cache_pos restored at the end.
+
+    Returns (cache, next_logits, done, spec_toks (B, Kd), accept (B,),
+    toks (B, rounds)) — committed draft-phase tokens are pad-masked
+    past ``accept``; the host harvests ``spec_toks[:accept]`` then
+    ``toks`` per lane.
+    """
+    done_in = done
+    pos_in = cache["pos"]
+    cpos_in = cache.get("cache_pos")
+    kd = draft_toks.shape[1]
+
+    ver_logits, cache = model_lib.verify_step(params, cfg, draft_toks, cache,
+                                              draft_len=draft_len)
+    # Target stream: what sequential decode would emit at each draft
+    # slot.  Sampled one slot at a time at decode_round's exact (B, V)
+    # geometry — the backend's sampling lowering is only trusted to be
+    # bitwise stable at the shape the normal path uses.  Target i is
+    # conditioned on logits after draft i-1, valid wherever drafts
+    # 0..i-1 matched — the only region acceptance consults.
+    tgts = []
+    logits_i = cur_logits
+    for i in range(kd):
+        tgts.append(sample_tokens_salted(key, salts, steps + i, logits_i,
+                                         gcfg.temperature, gcfg.top_p))
+        if i + 1 < kd:
+            logits_i = ver_logits[:, i].astype(cur_logits.dtype)
+    tgt = jnp.stack(tgts, axis=1)                                   # (B,Kd)
+
+    idx = jnp.arange(kd, dtype=jnp.int32)[None, :]
+    match = ((draft_toks == tgt) & (idx < draft_len[:, None])
+             & (~done_in[:, None]))
+    accept = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    committed = idx < accept[:, None]
+    spec_toks = jnp.where(committed, tgt, gcfg.pad_id)
+    # an EOS inside the accepted prefix finishes the lane; tokens the
+    # draft happened to agree on past it are truncated by the host
+    # harvest exactly like a normal round's post-EOS pad tail
+    done = done_in | jnp.any(committed & (tgt == gcfg.eos_id), axis=1)
+
+    pos_v = pos_in + accept
+    cache = dict(cache)
+    cache["pos"] = pos_v
+    if cpos_in is not None:
+        cp = cache["cache_pos"]
+        cache["cache_pos"] = jnp.where(cp >= pos_v[:, None], -1, cp)
+
+    # logits after the last accepted draft seed the trailing scan; with
+    # accept == 0 that is cur_logits untouched, so an all-rejected (or
+    # undrafted) lane's round is bitwise a normal decode_round
+    gather = jnp.clip(accept - 1, 0, kd - 1)
+    after = jnp.take_along_axis(ver_logits, gather[:, None, None],
+                                axis=1)[:, 0]
+    logits_v = jnp.where((accept > 0)[:, None],
+                         after.astype(cur_logits.dtype), cur_logits)
+
+    def step(carry, t):
+        cache, logits, done = carry
+        tok = sample_tokens_salted(key, salts, steps + accept + t, logits,
+                                   gcfg.temperature, gcfg.top_p)
+        tok = jnp.where(done, gcfg.pad_id, tok)
+        new_done = done | (tok == gcfg.eos_id)
+        next_logits, cache = model_lib.decode_step(params, cfg, tok, cache)
+        return (cache, next_logits.astype(logits.dtype), new_done), tok
+
+    (cache, logits, done), toks = jax.lax.scan(
+        step, (cache, logits_v, done), jnp.arange(rounds, dtype=jnp.int32))
+    cache = dict(cache)
+    cache["pos"] = jnp.where(done_in, pos_in, cache["pos"])
+    if cpos_in is not None:
+        cache["cache_pos"] = jnp.where(done_in[:, None], cpos_in,
+                                       cache["cache_pos"])
+    return (cache, logits, done, spec_toks, accept.astype(jnp.int32),
+            jnp.swapaxes(toks, 0, 1))
+
+
 # cache entries stacked per layer carry the lane axis at position 1
 _LAYER_STACKED = ("k", "v", "k_scale", "v_scale", "conv", "ssm")
 

@@ -133,7 +133,8 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving.batch import (GenConfig, copy_blocks, decode_round,
-                                 fanout_lanes, harvest_lengths, insert_lanes,
+                                 decode_round_spec, fanout_lanes,
+                                 harvest_lengths, insert_lanes,
                                  insert_lanes_paged, insert_lanes_shared,
                                  make_buckets, pad_token_rows, pick_bucket,
                                  prefill_chunk_jit, prefill_jit,
@@ -224,6 +225,17 @@ class SchedStats:
     prefix_hits: int = 0         # prompt rows that reused cached prefix blocks
     prefix_hit_blocks: int = 0   # pool blocks not allocated thanks to the cache
     prefill_chunks: int = 0      # row-chunks processed (chunked prefill only)
+    # speculative decoding (spec_k set)
+    spec_rounds: int = 0         # rounds that ran the verify path
+    drafted_tokens: int = 0      # draft tokens fed to verify rounds
+    accepted_draft_tokens: int = 0   # drafts committed by verification
+    # per-round host/device time breakdown (all entry points)
+    sched_s: float = 0.0         # host scheduling: admission, chunk queue,
+    #                              table growth, draft staging
+    dispatch_s: float = 0.0      # launching jitted rounds (async dispatch)
+    harvest_s: float = 0.0       # blocking on round results + finalization
+    leak_report: Optional[str] = None   # BlockPool.leak_report() at close()
+    #                                     (None: pool drained / dense)
 
 
 class _PrefixCache:
@@ -390,6 +402,17 @@ class Scheduler:
         Chunked and whole-prompt prefill produce bit-identical
         completions (tests/test_serving_trace.py) — chunking changes
         *when* prefill work happens, never what gets generated.
+    spec_k:
+        Enables speculative verify rounds: requests submitted with
+        draft token queues (``ServingLoop.submit(draft_tokens=...)`` /
+        ``add_drafts``) verify up to ``spec_k`` queued tokens per round
+        in one fused pass (``batch.decode_round_spec``), committing the
+        longest prefix agreeing with the request's own sample stream
+        and rolling back the rest.  Speculation changes round counts
+        and wall-clock, never completions — drafted serving stays
+        bit-identical to undrafted serving and to the one-shot oracle
+        (tests/test_serving_trace.py).  Attention-only, non-MoE,
+        unquantized models; dense caches must be non-ring.
     """
 
     def __init__(self, params, cfg: ModelConfig, tokenizer, gcfg: GenConfig,
@@ -402,7 +425,8 @@ class Scheduler:
                  share_prefix: bool = False,
                  prefix_cache_entries: int = 256,
                  chunk_size: Optional[int] = None,
-                 prefill_budget: Optional[int] = None):
+                 prefill_budget: Optional[int] = None,
+                 spec_k: Optional[int] = None):
         self.params, self.cfg, self.tokenizer, self.gcfg = \
             params, cfg, tokenizer, gcfg
         self.n_lanes = n_lanes
@@ -464,6 +488,30 @@ class Scheduler:
                 raise ValueError(
                     f"prefill_budget={prefill_budget} below "
                     f"chunk_size={chunk_size} could never process a chunk")
+        self.spec_k = spec_k
+        if spec_k is not None:
+            if spec_k < 1:
+                raise ValueError(f"spec_k={spec_k} must be >= 1")
+            if not cfg.has_attention or cfg.has_ssm:
+                raise ValueError(
+                    "speculative decoding requires an attention-only model: "
+                    "SSM state has no multi-token verify/rollback")
+            if cfg.is_moe:
+                raise ValueError(
+                    "speculative decoding does not support MoE models: "
+                    "expert capacity depends on tokens per forward pass, so "
+                    "a verify round would not reproduce sequential decode")
+            if cfg.kv_quant:
+                raise ValueError(
+                    "speculative decoding does not support kv_quant: "
+                    "requantizing a rolled-back block is not bit-stable")
+            if not paged and \
+                    model_lib.cache_length(cfg, self.s_max) != self.s_max:
+                raise ValueError(
+                    "speculative decoding requires a non-ring dense cache: "
+                    "draft writes into a ring slot would overwrite window "
+                    "history sequential decode still reads, and a rejected "
+                    "draft could not roll that back")
         # ladders bounding compiled shapes of the shared fan-out paths
         # (lanes per prefill row, CoW copy pairs per wave)
         self._fan_buckets = make_buckets(n_lanes, 1)
@@ -696,22 +744,65 @@ class ServingLoop:
         self._emitted: List[Completion] = []
         self._submit_s: Dict[int, float] = {}
         self._released: set = set()
-        self._inflight: Optional[Tuple[List[int], object]] = None
+        self._inflight: Optional[Tuple[List[int], object, object]] = None
         self._closed = False
         # chunked prefill: queued prompt-chunk streams (see _PrefillJob)
         self._prefill_q: "collections.deque[_PrefillJob]" = collections.deque()
+        # speculative drafts: uid -> (start, tokens) — a proposed
+        # continuation of the request's output beginning at generated
+        # offset `start` (see add_drafts)
+        self._drafts: Dict[int, Tuple[int, List[int]]] = {}
 
     # -- submission ----------------------------------------------------
-    def submit(self, requests: Sequence) -> None:
+    def submit(self, requests: Sequence,
+               draft_tokens: Optional[Dict[int, Sequence[int]]] = None
+               ) -> None:
         """Queue Requests / RequestGroups for admission at the next
         step.  Callable any time before :meth:`close` — including while
-        earlier requests are still decoding (mid-flight admission)."""
+        earlier requests are still decoding (mid-flight admission).
+
+        ``draft_tokens`` maps uids to speculative draft continuations
+        (requires ``Scheduler(spec_k=...)``): e.g. a rejected cascade
+        tier's completion submitted as the next tier's draft, verified
+        ``spec_k`` tokens per round instead of decoded one by one."""
         units, order = self.sched._intake(requests)
         now = time.time()
         for uid in order:
             self._order.append(uid)
             self._submit_s[uid] = now
         self.pending.extend(units)
+        if draft_tokens:
+            for uid, toks in draft_tokens.items():
+                self.add_drafts(uid, toks)
+
+    def add_drafts(self, uid: int, tokens: Sequence[int],
+                   start: int = 0) -> None:
+        """Queue a draft continuation for request ``uid``: ``tokens``
+        proposes its output from generated-token offset ``start``
+        onward (0 = from the first generated token).  Replaces any
+        queue the uid already had — a draft-SLM driver re-drafts from
+        the request's current :meth:`progress` each burst.  Each round
+        feeds up to ``spec_k`` tokens starting at the lane's current
+        position; a queue the real stream has diverged from is dropped
+        automatically (every token after a rejected draft was
+        conditioned on it, so none of them can be worth verifying)."""
+        if self.sched.spec_k is None:
+            raise ValueError("draft tokens require Scheduler(spec_k=...)")
+        toks = [int(t) for t in tokens]
+        if toks:
+            self._drafts[uid] = (start, toks)
+
+    def progress(self, uid: int) -> Optional[np.ndarray]:
+        """Tokens request ``uid`` has generated so far: a live lane's
+        committed output, a finished request's full completion, or
+        None when the uid is still pending (or unknown).  The hook a
+        draft-SLM driver uses to build its next draft prompt."""
+        for lane in self.lanes:
+            if lane is not None and lane.req.uid == uid:
+                return (np.concatenate(lane.parts) if lane.parts
+                        else np.zeros((0,), np.int32))
+        comp = self.completions.get(uid)
+        return comp.tokens if comp is not None else None
 
     @property
     def has_work(self) -> bool:
@@ -792,6 +883,11 @@ class ServingLoop:
         self.sched._cache_stats(self.stats, self.cache, self.pool)
         if self.pool is not None:
             self.stats.cow_copies = self.pool.cow_copies
+            # leak audit at shutdown: None means the pool drained; a
+            # report string means blocks/reservations are still held
+            # (a real leak, or close() before the backlog drained) —
+            # launch/serve.py surfaces it in the end-of-run summary
+            self.stats.leak_report = self.pool.leak_report()
         return self.stats
 
     # -- split-phase step: dispatch / harvest --------------------------
@@ -799,9 +895,15 @@ class ServingLoop:
         """Admission phase + launch one decode round without blocking
         on its result (JAX async dispatch).  Returns False when no lane
         is live after admission (nothing to decode — any decided-group
-        drops are waiting in the emitted buffer)."""
+        drops are waiting in the emitted buffer).
+
+        When any live lane has queued drafts the round runs the
+        speculative verify path (``decode_round_spec``); undrafted
+        lanes ride it bit-identically to a plain round (draft_len 0),
+        so only two round executables ever compile."""
         if self._inflight is not None:
             raise RuntimeError("dispatch() with a round already in flight")
+        t0 = time.time()
         if self.sched.share_prefix:
             self._admit_shared()
         else:
@@ -813,16 +915,21 @@ class ServingLoop:
         live = [i for i in range(self.sched.n_lanes)
                 if self.lanes[i] is not None and self.lanes[i].ready]
         if not live:
+            self.stats.sched_s += time.time() - t0
             return False
         r = self.sched.round_tokens
+        fed = self._stage_drafts(live) if self.sched.spec_k else {}
         if self.sched.paged:
             # grow each live lane's block table one round ahead of its
-            # decode position (drawn from its reservation, so this can
-            # never fail); writes past the budget spill into the trash
-            # block by construction
+            # decode position — plus its draft window, whose verify
+            # writes land at positions pos..pos+draft_len-1 — (drawn
+            # from its reservation, so this can never fail); writes
+            # past the budget spill into the trash block by
+            # construction
             for i in live:
                 lane = self.lanes[i]
-                upto = min(lane.prompt_len + lane.generated + r,
+                dlen = fed[i][1] if i in fed else 0
+                upto = min(lane.prompt_len + lane.generated + dlen + r,
                            lane.prompt_len + lane.budget)
                 grow = -(-upto // self.sched.block_size) - len(lane.blocks)
                 if grow > 0:
@@ -837,38 +944,115 @@ class ServingLoop:
                 self._table_dirty = False
         steps = np.array([0 if l is None else l.generated
                           for l in self.lanes], np.int32)
-        self.cache, self.cur_logits, _, toks = decode_round(
-            self.sched.params, self.sched.cfg, self.sched.gcfg, self.cache,
-            self.cur_logits, jnp.asarray(self._host_done), self.key,
-            jnp.asarray(self._salts), jnp.asarray(steps), r)
+        if fed:
+            kd = self.sched.spec_k
+            draft_mat = np.full((self.sched.n_lanes, kd),
+                                self.sched.gcfg.pad_id, np.int32)
+            dlen_arr = np.zeros((self.sched.n_lanes,), np.int32)
+            for i, (off, n) in fed.items():
+                _, dtoks = self._drafts[self.lanes[i].req.uid]
+                draft_mat[i, :n] = dtoks[off: off + n]
+                dlen_arr[i] = n
+                self.stats.drafted_tokens += n
+            t1 = time.time()
+            self.stats.sched_s += t1 - t0
+            self.cache, self.cur_logits, _, spec_toks, accept, toks = \
+                decode_round_spec(
+                    self.sched.params, self.sched.cfg, self.sched.gcfg,
+                    self.cache, self.cur_logits,
+                    jnp.asarray(self._host_done), self.key,
+                    jnp.asarray(self._salts), jnp.asarray(steps),
+                    jnp.asarray(draft_mat), jnp.asarray(dlen_arr), r)
+            self.stats.spec_rounds += 1
+            spec = (spec_toks, accept, fed)
+        else:
+            t1 = time.time()
+            self.stats.sched_s += t1 - t0
+            self.cache, self.cur_logits, _, toks = decode_round(
+                self.sched.params, self.sched.cfg, self.sched.gcfg,
+                self.cache, self.cur_logits, jnp.asarray(self._host_done),
+                self.key, jnp.asarray(self._salts), jnp.asarray(steps), r)
+            spec = None
         self.stats.rounds += 1
         self.stats.lane_rounds += len(live)
-        self._inflight = (live, toks)
+        self._inflight = (live, toks, spec)
+        self.stats.dispatch_s += time.time() - t1
         return True
+
+    def _stage_drafts(self, live: List[int]) -> Dict[int, Tuple[int, int]]:
+        """Pick the draft window each live lane verifies this round:
+        lane i gets ``(offset, count)`` into its uid's queued
+        continuation — the tokens at its current generated position,
+        capped by ``spec_k`` and its remaining budget.  Queues the
+        stream has already moved past are dropped here."""
+        fed: Dict[int, Tuple[int, int]] = {}
+        kd = self.sched.spec_k
+        for i in live:
+            lane = self.lanes[i]
+            entry = self._drafts.get(lane.req.uid)
+            if entry is None:
+                continue
+            start, dtoks = entry
+            off = lane.generated - start
+            if off < 0 or off >= len(dtoks):
+                self._drafts.pop(lane.req.uid, None)
+                continue
+            n = min(len(dtoks) - off, kd, lane.budget - lane.generated)
+            if n > 0:
+                fed[i] = (off, n)
+        return fed
 
     def harvest(self) -> List[Completion]:
         """Block on the dispatched round, truncate each live lane's
         tokens at EOS / budget, finalize finished lanes, consult the
-        StopPolicy, and return this step's completions."""
+        StopPolicy, and return this step's completions.
+
+        A speculative round's lane emits its committed draft prefix
+        (``accept`` tokens) followed by the round's scan tokens — up to
+        ``spec_k + round_tokens`` per harvest — truncated at EOS /
+        budget exactly like a plain round's."""
         if self._inflight is None:
             return self._take_emitted()
-        live, toks = self._inflight
+        t0 = time.time()
+        live, toks, spec = self._inflight
         self._inflight = None
         toks_np = np.asarray(toks)             # blocks on the device round
         now = time.time()
         r = self.sched.round_tokens
         lanes = self.lanes
-        limits = np.array([min(r, lanes[i].budget - lanes[i].generated)
-                           for i in live], np.int32)
-        lengths, eos_found = harvest_lengths(toks_np[live], limits,
+        accept_of: Dict[int, int] = {}
+        if spec is None:
+            rows = toks_np[live]
+            limits = np.array([min(r, lanes[i].budget - lanes[i].generated)
+                               for i in live], np.int32)
+        else:
+            spec_dev, accept_dev, fed = spec
+            spec_np = np.asarray(spec_dev)
+            accept_np = np.asarray(accept_dev)
+            kd = self.sched.spec_k
+            rows = np.full((len(live), kd + r), self.sched.gcfg.pad_id,
+                           np.int32)
+            limits = np.empty((len(live),), np.int32)
+            for j, i in enumerate(live):
+                acc = int(accept_np[i]) if i in fed else 0
+                accept_of[i] = acc
+                rows[j, :acc] = spec_np[i, :acc]
+                rows[j, acc: acc + r] = toks_np[i]
+                limits[j] = min(acc + r,
+                                lanes[i].budget - lanes[i].generated)
+        lengths, eos_found = harvest_lengths(rows, limits,
                                              self.sched.gcfg.eos_id)
         newly: List[int] = []
         for j, i in enumerate(live):
             lane = lanes[i]
             n = int(lengths[j])
+            if spec is not None:
+                self._advance_drafts(lane, rows[j, :n])
+                self.stats.accepted_draft_tokens += \
+                    min(accept_of.get(i, 0), n)
             if lane.generated == 0 and n > 0 and lane.first_tok_s is None:
                 lane.first_tok_s = now
-            lane.parts.append(toks_np[i, :n])
+            lane.parts.append(rows[j, :n])
             lane.generated += n
             self.stats.generated_tokens += n
             if eos_found[j] or lane.generated >= lane.budget:
@@ -884,7 +1068,27 @@ class ServingLoop:
             for i in range(self.sched.n_lanes):
                 if lanes[i] is not None and lanes[i].req.group in self.decided:
                     self._finalize(i, cancelled=True)
-        return self._take_emitted()
+        out = self._take_emitted()
+        self.stats.harvest_s += time.time() - t0
+        return out
+
+    def _advance_drafts(self, lane: _Lane, emitted: np.ndarray) -> None:
+        """Advance / invalidate the lane's draft queue against the
+        tokens its round actually emitted (called before ``generated``
+        moves): a queue the real stream diverged from is stale —
+        everything after the divergence was conditioned on a rejected
+        token — and an exhausted queue is dropped."""
+        entry = self._drafts.get(lane.req.uid)
+        if entry is None:
+            return
+        start, dtoks = entry
+        off = lane.generated - start
+        if off < 0:
+            return
+        m = min(len(emitted), len(dtoks) - off)
+        if (list(emitted[:m]) != dtoks[off: off + m]
+                or off + m >= len(dtoks)):
+            self._drafts.pop(lane.req.uid, None)
 
     # -- internals -----------------------------------------------------
     def _take_emitted(self) -> List[Completion]:
@@ -921,6 +1125,7 @@ class ServingLoop:
         self.lanes[i] = None
         self._host_done[i] = True
         self._submit_s.pop(lane.req.uid, None)
+        self._drafts.pop(lane.req.uid, None)
         if cancelled:
             self.stats.cancelled += 1
         self._emitted.append(comp)
@@ -935,6 +1140,7 @@ class ServingLoop:
             self.completions[m.uid] = comp
             self._submit_s.pop(m.uid, None)
             self._enc.pop(m.uid, None)
+            self._drafts.pop(m.uid, None)
             self.stats.cancelled += 1
             self._emitted.append(comp)
 

@@ -1,0 +1,129 @@
+"""Draft-SLM speculative serving: one lane pool drafts, another
+verifies, interleaved split-phase.
+
+Classic speculative decoding pairs a small *draft* model with the
+*target* model: the draft proposes a burst of tokens cheaply, the
+target verifies the whole burst in one forward pass and keeps the
+longest prefix matching its own (greedy or salted-sampled) stream.
+This module runs that loop on the serving stack's own primitives — no
+new device code:
+
+  * the **target** scheduler runs with ``spec_k`` set, so its rounds
+    verify queued drafts via ``batch.decode_round_spec``;
+  * the **draft** scheduler is a plain serving loop over the small
+    model; each of its requests is a short *burst*: the target
+    request's prompt plus everything the target has committed so far
+    (``ServingLoop.progress``), continued ``draft_burst`` tokens;
+  * one host loop drives both, split-phase: both loops' rounds are
+    dispatched before either is harvested, so the draft model's decode
+    overlaps the target's verify round on-device (JAX async dispatch)
+    — the same overlap discipline the pipelined cascade uses.
+
+Harvested bursts are fed to the target with
+``add_drafts(uid, tokens, start=<progress at burst submission>)``; the
+start offset lets the target skip any tokens it already generated
+while the burst was in flight, and its divergence pruning drops stale
+bursts automatically.  Because verification only ever commits tokens
+the target would have sampled anyway (the ``decode_round_spec``
+contract), completions are bit-identical to undrafted serving — the
+draft model can only change wall-clock and round counts, never output.
+
+Sizing note: the draft scheduler's ``max_prompt_len`` must cover the
+target's prompt *plus* its generation budget (burst prompts grow with
+target progress); a burst whose prompt gets bucket-truncated just
+produces low-acceptance drafts, costing speed, never correctness.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.serving.scheduler import (Completion, Request, SchedStats,
+                                     Scheduler, StopPolicy)
+
+# draft-burst uids live in their own namespace so a burst can never
+# collide with a target request uid in the draft loop's bookkeeping
+_DRAFT_UID_BASE = 1 << 48
+
+
+def speculative_generate(target: Scheduler, draft: Scheduler,
+                         requests: Sequence[Request], key,
+                         draft_burst: Optional[int] = None,
+                         stop_policy: Optional[StopPolicy] = None
+                         ) -> Tuple[List[Completion], SchedStats, SchedStats]:
+    """Serve ``requests`` on ``target`` (which must have ``spec_k``
+    set) with ``draft`` generating speculative bursts for every live
+    request.  Returns ``(completions, target_stats, draft_stats)``,
+    completions in submission order — bit-identical to serving the
+    same requests on ``target`` without a draft model.
+
+    ``draft_burst`` is the tokens per draft burst (default
+    ``2 * spec_k``: one burst covers two verify rounds, so the pipeline
+    rarely runs dry while the next burst is in flight).
+    """
+    if target.spec_k is None:
+        raise ValueError("speculative_generate requires the target "
+                         "Scheduler to be built with spec_k=...")
+    burst = draft_burst if draft_burst is not None else 2 * target.spec_k
+    if burst < 1:
+        raise ValueError(f"draft_burst={burst} must be >= 1")
+
+    loop_t = target.loop(key, stop_policy)
+    loop_d = draft.loop(key)
+    loop_t.submit(requests)
+    # the burst prompt needs the request's token form; encode once with
+    # the *target*'s rules (the models must share a tokenizer for the
+    # draft's proposals to mean anything)
+    prompt_of: Dict[int, List[int]] = {
+        r.uid: target._encode(r) for r in requests}
+    bursts: Dict[int, Tuple[int, int]] = {}     # duid -> (uid, start)
+    inflight: Dict[int, int] = {}               # uid -> its current duid
+    next_duid = _DRAFT_UID_BASE
+    done: set = set()
+    completions: List[Completion] = []
+
+    while loop_t.has_work:
+        # split-phase: launch both rounds before blocking on either
+        dt = loop_t.dispatch()
+        dd = loop_d.has_work and loop_d.dispatch()
+        comps_t = loop_t.harvest() if dt else loop_t.take_completed()
+        comps_d = loop_d.harvest() if dd else loop_d.take_completed()
+        for c in comps_t:
+            done.add(c.uid)
+            inflight.pop(c.uid, None)
+            completions.append(c)
+        for c in comps_d:
+            uid, start = bursts.pop(c.uid)
+            if inflight.get(uid) != c.uid or uid in done:
+                continue                        # stale burst; drop it
+            inflight.pop(uid)
+            if c.gen_len:
+                loop_t.add_drafts(uid, c.tokens, start=start)
+        loop_d.release([c.uid for c in comps_d])
+        # re-draft every live, undrafted, burst-less target request
+        # from its current progress
+        for lane in loop_t.lanes:
+            if lane is None or not lane.ready:
+                continue
+            uid = lane.req.uid
+            if (uid in inflight or uid in done
+                    or uid in loop_t._drafts or uid not in prompt_of):
+                continue
+            progress = loop_t.progress(uid)
+            start = 0 if progress is None else len(progress)
+            toks = prompt_of[uid] + ([] if progress is None
+                                     else [int(t) for t in progress])
+            duid = next_duid
+            next_duid += 1
+            bursts[duid] = (uid, start)
+            inflight[uid] = duid
+            loop_d.submit([Request(uid=duid, tokens=toks,
+                                   max_new_tokens=burst)])
+
+    # run the draft loop's outstanding bursts dry (they are short, and
+    # a drained loop returns its pool blocks — leak_report stays clean)
+    while loop_d.has_work:
+        loop_d.step()
+    order = {uid: j for j, uid in enumerate(r.uid for r in requests)}
+    completions.sort(key=lambda c: order.get(c.uid, len(order)))
+    return completions, loop_t.close(), loop_d.close()

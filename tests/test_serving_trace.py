@@ -12,10 +12,15 @@ serving configuration:
 
     {dense, paged, shared-prefix} x {chunked, unchunked} x {greedy, sampled}
 
-asserting each completion is bit-identical to a one-shot
-``engine.generate`` oracle run for that request alone (cancelled
-requests must be an exact prefix of their oracle tokens), and that the
-block pool's ``leak_report()`` is clean after ``close()``.
+plus, per cache mode, a *drafted* variant (``spec_k`` set, every
+submission carrying speculative draft queues mixing oracle prefixes
+with junk tails), asserting each completion is bit-identical to a
+one-shot ``engine.generate`` oracle run for that request alone
+(cancelled requests must be an exact prefix of their oracle tokens),
+and that the block pool's ``leak_report()`` is clean after
+``close()``.  Speculation riding the same oracle check is the
+strongest form of its contract: verify rounds may change how many
+rounds a trace takes, never one bit of what any request generates.
 
 Two drivers share the machinery:
 
@@ -76,14 +81,15 @@ def _gcfg(temperature):
 
 
 def _scheduler(params, cfg, temperature, mode, chunked,
-               prefill_budget=None):
+               prefill_budget=None, spec=False):
     return Scheduler(params, cfg, tokenizer=None, gcfg=_gcfg(temperature),
                      n_lanes=N_LANES, round_tokens=ROUND,
                      max_prompt_len=MAXP,
                      paged=mode in ("paged", "shared"), block_size=BLOCK,
                      share_prefix=mode == "shared",
                      chunk_size=BLOCK if chunked else None,
-                     prefill_budget=prefill_budget if chunked else None)
+                     prefill_budget=prefill_budget if chunked else None,
+                     spec_k=4 if spec else None)
 
 
 # ----------------------------------------------------------------------
@@ -201,15 +207,27 @@ def _flatten(rounds):
     return out
 
 
-def replay(sched: Scheduler, rounds, kill, release_rounds):
+def replay(sched: Scheduler, rounds, kill, release_rounds, draft_fn=None):
     """Drive one scheduler through the trace: submit between rounds,
-    step, release delivered uids on release rounds, then drain."""
+    step, release delivered uids on release rounds, then drain.
+    ``draft_fn(req)``, if given, supplies each submission's speculative
+    draft queue (None to leave a request undrafted)."""
     loop = sched.loop(jax.random.PRNGKey(MASTER_KEY),
                       stop_policy=ScriptedKills(kill))
     got = {}
     for r, subs in enumerate(rounds):
         if subs:
-            loop.submit(subs)
+            drafts = None
+            if draft_fn is not None:
+                drafts = {}
+                for s in subs:
+                    for m in (s.requests if isinstance(s, RequestGroup)
+                              else [s]):
+                        d = draft_fn(m)
+                        if d:
+                            drafts[m.uid] = d
+                drafts = drafts or None
+            loop.submit(subs, draft_tokens=drafts)
         done = loop.step()
         for c in done:
             assert c.uid not in got, "uid completed twice"
@@ -221,16 +239,33 @@ def replay(sched: Scheduler, rounds, kill, release_rounds):
             assert c.uid not in got, "uid completed twice"
             got[c.uid] = c
     loop.close()
-    return got
+    return got, loop.stats
 
 
 def check_trace(params, cfg, temperature, mode, chunked, trace,
-                prefill_budget=None):
+                prefill_budget=None, drafted=False):
     rounds, kill, release_rounds = trace
     sched = _scheduler(params, cfg, temperature, mode, chunked,
-                       prefill_budget)
+                       prefill_budget, spec=drafted)
     oracle = Oracle(params, cfg, sched, temperature)
-    got = replay(sched, rounds, kill, release_rounds)
+    draft_fn = None
+    if drafted:
+        # drafts mix exact oracle prefixes (real acceptance, any
+        # temperature) with junk tails (exercising reject + rollback)
+        drng = np.random.RandomState(97)
+
+        def draft_fn(req):
+            if drng.rand() < 0.25:
+                return None
+            want = oracle.tokens(req.uid, req.tokens, req.max_new_tokens)
+            m = int(drng.randint(0, len(want) + 1))
+            junk = drng.randint(3, 90,
+                                (int(drng.randint(0, 4)),)).tolist()
+            return [int(t) for t in want[:m]] + junk
+    got, stats = replay(sched, rounds, kill, release_rounds, draft_fn)
+    if drafted:
+        assert stats.accepted_draft_tokens > 0, \
+            "drafted trace never accepted a draft — speculation untested"
     reqs = _flatten(rounds)
     assert set(got) == {r.uid for r in reqs}
     for r in reqs:
@@ -259,14 +294,16 @@ def check_trace(params, cfg, temperature, mode, chunked, trace,
 def test_trace_matrix_bitmatches_oracle(setup, seed, temperature):
     """Every serving configuration must reproduce the per-request
     oracle bit-for-bit on the same randomized trace — cache layout,
-    prefix sharing, and chunked prefill change how/when work happens,
-    never what gets generated."""
+    prefix sharing, chunked prefill, and speculative verify rounds
+    change how/when work happens, never what gets generated."""
     params, cfg, _ = _setup()
     trace = make_trace(seed)
     for mode in ("dense", "paged", "shared"):
         for chunked, budget in ((False, None), (True, None), (True, 16)):
             check_trace(params, cfg, temperature, mode, chunked, trace,
                         prefill_budget=budget)
+        check_trace(params, cfg, temperature, mode, False, trace,
+                    drafted=True)
 
 
 def test_trace_uncancelled_equal_across_modes(setup):

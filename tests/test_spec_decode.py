@@ -1,0 +1,221 @@
+"""Speculative-decoding edge cases.
+
+The broad contract — drafted serving bit-matches the per-request
+oracle across cache layouts — lives in tests/test_serving_trace.py.
+This module pins down the corners ISSUE 6 names explicitly:
+
+  * an all-empty draft round falls back to the normal round bit-exactly
+    (``decode_round_spec`` with draft_len 0 everywhere IS
+    ``decode_round``, logits and cache included), and a spec_k
+    scheduler that never sees a draft never runs the verify executable;
+  * an EOS inside the accepted prefix finishes the request exactly
+    where sequential decode would;
+  * a draft longer than the lane's remaining ``max_new_tokens`` budget
+    is clipped at staging, never committed past the budget;
+  * a lane killed mid-verify (StopPolicy, drafts still queued) returns
+    every pool block and drops its draft queue;
+  * the unsupported-config guards raise at construction.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.serving import batch as batch_lib
+from repro.serving.batch import GenConfig
+from repro.serving.scheduler import (Request, RequestGroup, Scheduler,
+                                     StopPolicy)
+
+KEY = 11
+EOS_OFF = 99          # == vocab_size: unreachable, disables EOS
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = ModelConfig(name="t", arch_type="dense", n_layers=2, d_model=64,
+                      n_heads=4, n_kv_heads=4, head_dim=16, d_ff=128,
+                      vocab_size=99, source="test")
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    return params, cfg
+
+
+def _gcfg(**kw):
+    base = dict(max_new_tokens=12, temperature=0.7, top_p=1.0,
+                eos_id=EOS_OFF, pad_id=0)
+    base.update(kw)
+    return GenConfig(**base)
+
+
+def _sched(params, cfg, gcfg, **kw):
+    base = dict(n_lanes=3, round_tokens=4, max_prompt_len=16)
+    base.update(kw)
+    return Scheduler(params, cfg, None, gcfg, **base)
+
+
+def _reqs(n=4, seed=1):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=u,
+                    tokens=list(rng.integers(3, 97, size=rng.integers(2, 9))))
+            for u in range(n)]
+
+
+def _tokens(comps):
+    return {c.uid: list(c.tokens) for c in comps}
+
+
+# ----------------------------------------------------------------------
+# k=0: the fallback must be bitwise, not just token-equal
+# ----------------------------------------------------------------------
+
+def test_all_empty_draft_round_is_bitwise_decode_round(setup):
+    params, cfg = setup
+    gcfg = _gcfg()
+    prompt = jnp.asarray(np.random.default_rng(2).integers(3, 97, (3, 6)))
+    lengths = jnp.array([6, 4, 5], jnp.int32)
+    logits, cache = model_lib.prefill(params, cfg, tokens=prompt,
+                                      lengths=lengths, max_len=32,
+                                      last_only=True)
+    done = jnp.zeros((3,), bool)
+    key = jax.random.PRNGKey(KEY)
+    salts = jnp.array([7, 8, 9], jnp.int32)
+    steps = jnp.zeros((3,), jnp.int32)
+    c1, l1, d1, t1 = batch_lib.decode_round(
+        params, cfg, gcfg, dict(cache), logits, done, key, salts, steps, 4)
+    c2, l2, d2, spec_toks, accept, t2 = batch_lib.decode_round_spec(
+        params, cfg, gcfg, dict(cache), logits, done, key, salts, steps,
+        jnp.zeros((3, 4), jnp.int32), jnp.zeros((3,), jnp.int32), 4)
+    assert np.array_equal(np.asarray(t1), np.asarray(t2))
+    assert np.asarray(jnp.all(l1 == l2))
+    assert np.array_equal(np.asarray(d1), np.asarray(d2))
+    assert np.asarray(accept).sum() == 0
+    assert np.array_equal(np.asarray(c1["pos"]), np.asarray(c2["pos"]))
+    # the rejected-draft K/V slots are rolled back: validity bitmaps match
+    assert np.array_equal(np.asarray(c1["cache_pos"] >= 0),
+                          np.asarray(c2["cache_pos"] >= 0))
+
+
+def test_spec_scheduler_without_drafts_never_runs_verify(setup):
+    params, cfg = setup
+    gcfg = _gcfg()
+    reqs = _reqs()
+    base, _ = _sched(params, cfg, gcfg).run(
+        [Request(**vars(r)) for r in reqs], KEY)
+    sched = _sched(params, cfg, gcfg, spec_k=4)
+    comps, stats = sched.run([Request(**vars(r)) for r in reqs], KEY)
+    assert _tokens(comps) == _tokens(base)
+    assert stats.spec_rounds == 0 and stats.drafted_tokens == 0
+
+
+# ----------------------------------------------------------------------
+# EOS inside the accepted prefix
+# ----------------------------------------------------------------------
+
+def test_eos_inside_accepted_prefix_finishes_exactly(setup):
+    params, cfg = setup
+    req = Request(uid=5, tokens=[4, 9, 11, 13])
+    # the salted sample stream does not depend on eos_id, so the
+    # EOS-disabled run IS the stream; re-serving with eos = stream[2]
+    # must stop at its first occurrence
+    stream, _ = _sched(params, cfg, _gcfg()).run(
+        [Request(**vars(req)), Request(uid=6, tokens=[3, 3])], KEY)
+    stream = list(stream[0].tokens)
+    eos = int(stream[2])
+    stop = stream.index(eos) + 1
+    gcfg = _gcfg(eos_id=eos)
+    want = stream[:stop]
+    undrafted, _ = _sched(params, cfg, gcfg).run(
+        [Request(**vars(req))], KEY)
+    assert list(undrafted[0].tokens) == want
+    sched = _sched(params, cfg, gcfg, spec_k=8, paged=True, block_size=8)
+    loop = sched.loop(KEY)
+    # draft the whole EOS-disabled stream: the EOS lands inside the
+    # first verify round's accepted prefix
+    loop.submit([Request(**vars(req))], draft_tokens={5: stream})
+    comps = loop.drain()
+    stats = loop.close()
+    assert list(comps[0].tokens) == want
+    assert stats.spec_rounds == 1 and stats.rounds == 1
+    assert stats.accepted_draft_tokens >= stop
+    assert stats.leak_report is None
+
+
+# ----------------------------------------------------------------------
+# draft longer than the remaining budget
+# ----------------------------------------------------------------------
+
+def test_draft_longer_than_budget_is_clipped(setup):
+    params, cfg = setup
+    gcfg = _gcfg()
+    req = Request(uid=3, tokens=[8, 7, 6], max_new_tokens=3)
+    base, _ = _sched(params, cfg, gcfg).run(
+        [Request(**vars(req))], KEY)
+    want = list(base[0].tokens)
+    assert len(want) == 3
+    sched = _sched(params, cfg, gcfg, spec_k=4, paged=True, block_size=8)
+    loop = sched.loop(KEY)
+    loop.submit([Request(**vars(req))],
+                draft_tokens={3: want + [1, 1, 1, 1, 1]})
+    comps = loop.drain()
+    stats = loop.close()
+    assert list(comps[0].tokens) == want
+    # staging must clip the window to the remaining budget: 3 fed, not
+    # spec_k, and nothing committed past the budget
+    assert stats.drafted_tokens == 3
+    assert stats.accepted_draft_tokens == 3
+    assert stats.leak_report is None
+
+
+# ----------------------------------------------------------------------
+# kill mid-verify
+# ----------------------------------------------------------------------
+
+def test_kill_mid_verify_frees_blocks_and_queue(setup):
+    params, cfg = setup
+    gcfg = _gcfg(max_new_tokens=24)
+
+    class CrossKill(StopPolicy):
+        def observe(self, comp):
+            return (1,) if comp.group == 0 else ()
+
+    sched = _sched(params, cfg, gcfg, spec_k=4, paged=True, block_size=8,
+                   n_lanes=4, round_tokens=2)
+    loop = sched.loop(KEY, stop_policy=CrossKill())
+    fast = RequestGroup([Request(uid=j, tokens=[5, 6, 7], group=0,
+                                 max_new_tokens=2) for j in range(2)])
+    slow = RequestGroup([Request(uid=10 + j, tokens=[9, 9, 8], group=1,
+                                 max_new_tokens=24) for j in range(2)])
+    # long junk drafts keep the victims' queues non-empty (junk rarely
+    # matches, so one token is re-verified round after round) until the
+    # cross-kill lands mid-verify
+    loop.submit([fast, slow], draft_tokens={10: [1] * 24, 11: [2] * 24})
+    comps = loop.drain()
+    stats = loop.close()
+    by_uid = {c.uid: c for c in comps}
+    assert not by_uid[0].cancelled
+    assert by_uid[10].cancelled and by_uid[11].cancelled
+    assert stats.spec_rounds > 0
+    assert loop._drafts == {}, "killed lanes must drop their draft queues"
+    assert sched.pool.leak_report() is None
+    assert stats.leak_report is None
+
+
+# ----------------------------------------------------------------------
+# construction guards
+# ----------------------------------------------------------------------
+
+def test_spec_rejects_unsupported_configs(setup):
+    import dataclasses
+
+    params, cfg = setup
+    gcfg = _gcfg()
+    with pytest.raises(ValueError, match="spec_k"):
+        _sched(params, cfg, gcfg, spec_k=0)
+    with pytest.raises(ValueError, match="kv_quant"):
+        _sched(params, dataclasses.replace(cfg, kv_quant=True), gcfg,
+               spec_k=4)
+    with pytest.raises(ValueError, match="non-ring"):
+        ring = dataclasses.replace(cfg, sliding_window=8, global_every=0)
+        _sched(params, ring, gcfg, spec_k=4)
