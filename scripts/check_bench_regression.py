@@ -30,7 +30,12 @@ cost metric regressed beyond its tolerance:
     draft acceptance must be nonzero, drafted completions must be
     bit-equal to the undrafted path at equal accuracy, and the drafted
     run must sit strictly below the undrafted one on wall-clock and
-    total rounds, with the escalated tier's rounds cut >= 30%.
+    total rounds, with the escalated tier's rounds cut >= 30%;
+  * the preemption JSON (``--preempt``) carries its own baseline-free
+    invariants: the tiny pool must force at least one offload/resume
+    cycle, preempted completions must be bit-equal to the ample-pool
+    reference, and the preempting path must block admission strictly
+    less often than the same pool without offload.
 
 Usage:
     python scripts/check_bench_regression.py CURRENT.json BASELINE.json
@@ -67,6 +72,13 @@ COUNTERS = {
     "escalated_rounds": ("low", 0.25, 2),
     "escalated_rounds_cut": ("high", 0.0, 0.15),
     "accept_rate": ("high", 0.0, 0.15),
+    # preemption smoke: offload/resume churn must neither vanish (the
+    # tiny pool stopped pressuring) nor blow up (thrash), and blocked
+    # admissions must stay low on the preempting path
+    "preempts": ("low", 0.5, 4),
+    "resumes": ("low", 0.5, 4),
+    "admission_blocked": ("low", 0.5, 4),
+    "host_blocks_peak": ("low", 0.5, 4),
 }
 WALL_METRICS = ("wall_s", "ttft_mean_s", "ttft_p50_s", "ttft_p95_s")
 
@@ -188,6 +200,32 @@ def check_spec_invariants(cur):
     return failures
 
 
+def check_preempt_invariants(cur):
+    """Baseline-free acceptance checks for --preempt JSONs: the tiny
+    pool must force at least one full offload/resume cycle, preempted
+    completions must be bit-equal to the ample-pool reference, and the
+    preempting path must block admission strictly less often than the
+    same pool without offload."""
+    failures = []
+    for bench, row in cur.get("table", {}).items():
+        no_off, pre = row.get("no_offload"), row.get("preempt")
+        if not (isinstance(no_off, dict) and isinstance(pre, dict)):
+            continue
+        if not pre.get("resumes", 0) > 0:
+            failures.append(f"{bench}: zero resumes — the tiny pool never "
+                            "forced an offload/resume cycle")
+        if not row.get("completions_bitequal", False):
+            failures.append(f"{bench}: preempted completions diverged from "
+                            "the ample-pool reference (bit-identity "
+                            "violated)")
+        if not pre["admission_blocked"] < no_off["admission_blocked"]:
+            failures.append(
+                f"{bench}: preempting path blocked admission "
+                f"{pre['admission_blocked']} time(s), not strictly below "
+                f"the no-offload path's {no_off['admission_blocked']}")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh smoke JSON from this CI run")
@@ -216,6 +254,8 @@ def main():
         failures += check_chunked_invariants(cur)
     if cur.get("spec_cascade"):
         failures += check_spec_invariants(cur)
+    if cur.get("preempt_smoke"):
+        failures += check_preempt_invariants(cur)
 
     width = max((len(r[0]) for r in rows), default=20)
     print(f"{args.current} vs {args.baseline}:")

@@ -1,0 +1,242 @@
+"""Asyncio streaming front-end over the split-phase serving loop.
+
+:class:`AsyncServer` wraps a :class:`~repro.serving.scheduler.ServingLoop`
+and exposes the interface a token-streaming API server needs:
+
+  * ``submit(uid, tokens, tenant=...)`` registers a request and returns
+    an async iterator that yields generated token ids as the loop
+    harvests them (via the loop's ``on_tokens`` callback), finishing
+    when the request finalizes.  The full
+    :class:`~repro.serving.scheduler.Completion` lands in
+    ``server.results[uid]``.
+  * ``cancel(uid)`` maps a departed client onto ``ServingLoop.release``:
+    the lane is freed within one decode round, nothing is delivered,
+    and the stream ends immediately.
+  * a single driver coroutine owns the loop, alternating decode rounds
+    with ``await asyncio.sleep(0)`` so streams and new submissions are
+    serviced between rounds — the loop itself is not thread-safe and
+    never needs to be, because everything happens on the event loop.
+
+Fair queueing.  Submissions do not go straight to ``ServingLoop.submit``
+(whose pending queue is strict FIFO); they wait in a two-class
+:class:`FairQueue` and are fed to the loop only as lanes free up, so
+admission *order* stays under front-end control.  Requests are classed
+as ``ttft`` (interactive: first token latency is the SLO) or
+``throughput`` (batch: only aggregate tokens/s matters).  Each admission
+cycle grants up to ``ttft_burst`` ttft-class requests, then one
+throughput request — a throughput flood cannot starve an interactive
+arrival behind its whole backlog, and a ttft flood still leaks
+throughput work through.  ``fair=False`` degrades to a single FIFO
+queue (the baseline the starvation test measures against).
+
+Preemption composes for free: run the loop with ``auto_preempt=True``
+and a cold interactive session's KV pages migrate to host RAM under
+pressure instead of pinning the pool (see serving/scheduler.py) —
+because resume is bit-exact, the stream's tokens are unaffected.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import collections
+from typing import AsyncIterator, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.serving.scheduler import Completion, Request, Scheduler
+
+TTFT = "ttft"
+THROUGHPUT = "throughput"
+
+_DONE = object()        # queue sentinel: stream finished (or cancelled)
+
+
+class FairQueue:
+    """Two-class weighted round-robin admission queue.
+
+    ``take(n)`` pops up to ``n`` requests: each cycle grants up to
+    ``ttft_burst`` ttft-class requests then one throughput request.
+    With ``fair=False`` it is a plain FIFO over arrival order.
+    """
+
+    def __init__(self, ttft_burst: int = 2, fair: bool = True):
+        if ttft_burst < 1:
+            raise ValueError("ttft_burst must be >= 1")
+        self.ttft_burst = ttft_burst
+        self.fair = fair
+        self._seq = 0
+        self._q: Dict[str, "collections.deque"] = {
+            TTFT: collections.deque(), THROUGHPUT: collections.deque()}
+
+    def __len__(self):
+        return len(self._q[TTFT]) + len(self._q[THROUGHPUT])
+
+    def push(self, tenant: str, req: Request) -> None:
+        if tenant not in self._q:
+            raise ValueError(f"unknown tenant class {tenant!r}")
+        self._q[tenant].append((self._seq, req))
+        self._seq += 1
+
+    def _pop_fifo(self) -> Request:
+        t, th = self._q[TTFT], self._q[THROUGHPUT]
+        if t and (not th or t[0][0] < th[0][0]):
+            return t.popleft()[1]
+        return th.popleft()[1]
+
+    def take(self, n: int) -> List[Request]:
+        out: List[Request] = []
+        while len(out) < n and len(self):
+            if not self.fair:
+                out.append(self._pop_fifo())
+                continue
+            for _ in range(self.ttft_burst):
+                if len(out) >= n or not self._q[TTFT]:
+                    break
+                out.append(self._q[TTFT].popleft()[1])
+            if len(out) < n and self._q[THROUGHPUT]:
+                out.append(self._q[THROUGHPUT].popleft()[1])
+        return out
+
+
+class _Client:
+    __slots__ = ("req", "tenant", "queue", "submit_round", "first_round")
+
+    def __init__(self, req: Request, tenant: str, submit_round: int):
+        self.req = req
+        self.tenant = tenant
+        self.queue: "asyncio.Queue" = asyncio.Queue()
+        self.submit_round = submit_round
+        self.first_round: Optional[int] = None
+
+
+class AsyncServer:
+    """One event-loop-owned ServingLoop with per-request token streams.
+
+    Usage::
+
+        server = AsyncServer(sched, key)
+        await server.start()
+        stream = server.submit(uid=0, tokens=prompt_ids, tenant=TTFT)
+        async for tok in stream: ...
+        comp = server.results[0]
+        await server.close()
+    """
+
+    def __init__(self, sched: Scheduler, key, stop_policy=None,
+                 ttft_burst: int = 2, fair: bool = True):
+        self.loop = sched.loop(key, stop_policy=stop_policy)
+        self.loop.on_tokens = self._on_tokens
+        self.n_lanes = sched.n_lanes
+        self.queue = FairQueue(ttft_burst, fair=fair)
+        self.results: Dict[int, Completion] = {}
+        self.ttft_rounds: Dict[int, int] = {}   # uid -> submit->first-token
+        self.rounds = 0
+        self._clients: Dict[int, _Client] = {}
+        self._cancelled: set = set()
+        self._wake = asyncio.Event()
+        self._driver: Optional["asyncio.Task"] = None
+        self._closing = False
+
+    # -- client API ----------------------------------------------------
+    def submit(self, uid: int, tokens: Sequence[int],
+               tenant: str = THROUGHPUT, group: Optional[int] = None,
+               max_new_tokens: Optional[int] = None,
+               ) -> AsyncIterator[int]:
+        """Register a request; returns its token stream."""
+        if uid in self._clients or uid in self.results:
+            raise ValueError(f"uid {uid} already submitted")
+        req = Request(uid=uid, tokens=list(tokens), group=group,
+                      max_new_tokens=max_new_tokens,
+                      meta={"tenant": tenant})
+        client = _Client(req, tenant, self.rounds)
+        self._clients[uid] = client
+        self.queue.push(tenant, req)
+        self._wake.set()
+        # lazy-start the driver: a stream handed out before start()
+        # would otherwise wait forever on a loop nothing drives
+        if self._driver is None:
+            self._driver = asyncio.ensure_future(self._drive())
+        return self._stream(client)
+
+    def cancel(self, uid: int) -> None:
+        """Client went away: end its stream now, release its lane at the
+        next round boundary.  No completion is recorded."""
+        client = self._clients.pop(uid, None)
+        if client is None:
+            return
+        self._cancelled.add(uid)
+        client.queue.put_nowait(_DONE)
+        self._wake.set()
+
+    async def close(self) -> None:
+        """Stop the driver after the current round and close the loop
+        (callers should drain their streams first)."""
+        self._closing = True
+        self._wake.set()
+        if self._driver is not None:
+            await self._driver
+            self._driver = None
+        self.loop.close()
+
+    # -- the driver coroutine ------------------------------------------
+    async def start(self) -> None:
+        """Start the driver eagerly (optional — the first ``submit``
+        lazy-starts it; this just fronts the jit warm-up)."""
+        if self._driver is None:
+            self._driver = asyncio.ensure_future(self._drive())
+
+    async def _drive(self) -> None:
+        loop = self.loop
+        while not self._closing:
+            if not (loop.has_work or len(self.queue) or self._cancelled):
+                self._wake.clear()
+                if self._closing:
+                    break
+                await self._wake.wait()
+                continue
+            if self._cancelled:
+                gone, self._cancelled = self._cancelled, set()
+                loop.release(gone)
+            # feed the loop only what it can admit this round, so
+            # admission order stays with the FairQueue rather than the
+            # loop's FIFO pending queue
+            free = sum(1 for lane in loop.lanes if lane is None)
+            want = max(0, free - len(loop.pending))
+            if want:
+                batch = [r for r in self.queue.take(want)
+                         if r.uid in self._clients]
+                if batch:
+                    loop.submit(batch)
+            if loop.has_work:
+                done = loop.step()
+                self.rounds += 1
+                for comp in done:
+                    self._finish(comp)
+                loop.release([c.uid for c in done])  # results dict owns them
+            # yield so streams drain and new submissions land
+            await asyncio.sleep(0)
+
+    # -- loop callbacks ------------------------------------------------
+    def _on_tokens(self, uid: int, toks: np.ndarray) -> None:
+        client = self._clients.get(uid)
+        if client is None:
+            return
+        if client.first_round is None:
+            client.first_round = self.rounds
+            self.ttft_rounds[uid] = self.rounds - client.submit_round
+        client.queue.put_nowait(np.array(toks, np.int32))
+
+    def _finish(self, comp: Completion) -> None:
+        client = self._clients.pop(comp.uid, None)
+        if client is None:
+            return                       # cancelled while in flight
+        self.results[comp.uid] = comp
+        client.queue.put_nowait(_DONE)
+
+    async def _stream(self, client: _Client) -> AsyncIterator[int]:
+        while True:
+            item = await client.queue.get()
+            if item is _DONE:
+                return
+            for tok in item:
+                yield int(tok)

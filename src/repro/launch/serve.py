@@ -32,6 +32,15 @@ chunk-prefilled interleaved with decode rounds instead of whole per
 admission — a long prompt landing mid-stream no longer stalls every
 live lane for its full prefill, which is exactly the ttft-tail effect
 the ``--arrival-rate`` summary makes visible.
+
+With ``--paged --preempt`` (optionally ``--pool-blocks`` to force
+pressure), the loop preempts the coldest lane to host RAM instead of
+blocking admission when the device pool runs dry: the lane's KV blocks
+are offloaded block-granular, the lane is handed to the waiting
+request, and the parked request resumes bit-identically once blocks
+free up.  The summary reports the offload churn (lanes parked/resumed,
+host-pool peak, bytes copied) so pool-pressure behaviour is visible
+from the launcher.
 """
 
 from __future__ import annotations
@@ -83,11 +92,22 @@ def main():
                     help="with --chunk-size: chunk-capacity tokens each "
                          "round may spend on prompt processing "
                          "(default: finish every queued prompt per round)")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="with --paged: cap the device block pool (default "
+                         "sizes it so every lane can run to budget; a "
+                         "smaller cap forces admission pressure)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="with --paged: under pool pressure, offload the "
+                         "coldest lane's KV blocks to host RAM and hand "
+                         "its lane to the waiting request; the parked "
+                         "request resumes bit-identically when blocks free")
     args = ap.parse_args()
     if args.share_prefix and not args.paged:
         ap.error("--share-prefix requires --paged")
     if args.prefill_budget is not None and args.chunk_size is None:
         ap.error("--prefill-budget requires --chunk-size")
+    if (args.preempt or args.pool_blocks is not None) and not args.paged:
+        ap.error("--preempt/--pool-blocks require --paged")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -128,7 +148,9 @@ def main():
                       block_size=args.block_size,
                       share_prefix=args.share_prefix,
                       chunk_size=args.chunk_size,
-                      prefill_budget=args.prefill_budget)
+                      prefill_budget=args.prefill_budget,
+                      pool_blocks=args.pool_blocks,
+                      auto_preempt=args.preempt)
 
     comps = []
     with mesh:
@@ -186,6 +208,11 @@ def main():
         print("  pool leak check: "
               + (stats.leak_report if stats.leak_report
                  else "clean (every block returned)"))
+    if args.preempt:
+        print(f"  preemption: {stats.preempts} lanes parked, "
+              f"{stats.resumes} resumed, host pool peak "
+              f"{stats.host_blocks_peak} blocks, "
+              f"{stats.offload_bytes / 2**20:.2f} MiB KV offloaded")
     if args.share_prefix:
         pool = sched.pool
         print(f"  prefix sharing: {stats.shared_lanes} lanes rode a "

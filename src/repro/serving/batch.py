@@ -495,6 +495,33 @@ def copy_blocks(cache, src, dst):
     return out
 
 
+@jax.jit
+def gather_blocks(cache, ids):
+    """Read whole pool blocks out of the paged cache: returns
+    ``(k[:, ids], v[:, ids])`` of shape ``(L, n, bs, KV, dh)``.
+
+    The device half of ``BlockPool.offload``: the allocator decides
+    which blocks need a host copy, this op pulls their bytes in one
+    gather (the caller then ``np.asarray``s the result into host RAM).
+    ``ids`` is padded to a bucket with 0 — gathering the trash block —
+    so the compile count stays O(#id buckets); the caller slices the
+    real prefix off host-side.
+    """
+    return cache["k"][:, ids], cache["v"][:, ids]
+
+
+@jax.jit
+def scatter_blocks(cache, ids, k, v):
+    """Write whole pool blocks back into the paged cache:
+    ``k/v[:, ids[i]] <- k/v[i]`` — the device half of
+    ``BlockPool.restore`` for blocks without a live device twin.
+    Padded with id 0 + junk rows (writes land in the trash block)."""
+    out = dict(cache)
+    out["k"] = cache["k"].at[:, ids].set(k.astype(cache["k"].dtype))
+    out["v"] = cache["v"].at[:, ids].set(v.astype(cache["v"].dtype))
+    return out
+
+
 def harvest_lengths(toks: np.ndarray, limits: np.ndarray,
                     eos_id: int) -> Tuple[np.ndarray, np.ndarray]:
     """Per-row harvest length for one decode round: tokens up to and

@@ -58,6 +58,20 @@ Shared holds cost reservation only once: the group that allocates the
 prompt blocks reserves them; extra holders reserve only their private
 tail (growth blocks + at most one CoW copy).
 
+Host offload: preemption's memory side
+--------------------------------------
+``offload(ids)`` moves a lane's holds to *host* blocks (ids from a
+disjoint, never-recycled namespace) and ``restore(handle)`` moves them
+back, drawing fresh device blocks from the caller's reservation.  Host
+blocks are refcounted exactly like device blocks, and a dual-residence
+map tracks content that is live on both sides at once (a shared prompt
+block with one lane preempted and one still decoding): the first
+offloader copies bytes, later co-holders attach for free, and a
+restore that finds a live device twin re-shares it with zero bytes
+moved.  The pool only does the book-keeping — the scheduler owns the
+actual byte movement, directed by the ``copies`` / ``scatters`` lists
+the two calls return.
+
 Worked example (the block-size / n_lanes / HBM trade-off)
 ---------------------------------------------------------
 Take an 8B-class config: 32 layers, 8 KV heads, head_dim 128, bf16.
@@ -87,7 +101,22 @@ bf16 — see ``kernels/paged_attention``).
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Tuple
+
+
+@dataclasses.dataclass
+class HostBlocks:
+    """Handle to a lane's KV pages parked in host RAM.
+
+    ``ids`` are *host* block ids in block-table order — a namespace
+    disjoint from device ids, never recycled, so a stale handle can
+    never alias a later offload.  The handle owns one host hold per
+    entry; redeem it with :meth:`BlockPool.restore` or drop it with
+    :meth:`BlockPool.discard`.
+    """
+
+    ids: List[int]
 
 
 class BlockPool:
@@ -118,6 +147,22 @@ class BlockPool:
         self.peak_reserved = 0       # reservation high-water (admission churn)
         self.cow_copies = 0          # cow() calls that materialized a copy
         self.shared_holds = 0        # holders registered via share()
+        # --- host offload side (preemption) ---------------------------
+        # Host block ids are monotonic and never reused; each carries a
+        # refcount so a prompt block shared by K lanes that all get
+        # preempted is copied to host ONCE and restored shared.
+        self._host_refs: Dict[int, int] = {}
+        self._host_next = 1
+        # Dual-residence maps while a block's bytes live on BOTH sides
+        # (some holders still on device, some parked): device id <->
+        # host id.  Offloaded content is immutable by construction
+        # (shared prompt blocks are read-only; partial tails are always
+        # private post-CoW), so the twin never goes stale.
+        self._host_of: Dict[int, int] = {}   # device bid -> host id
+        self._dev_of: Dict[int, int] = {}    # host id -> device bid
+        self.host_blocks_peak = 0    # host-pool high-water (distinct blocks)
+        self.offloaded_blocks = 0    # device->host block copies performed
+        self.restored_blocks = 0     # host->device block materializations
 
     # -- queries -------------------------------------------------------
     @property
@@ -137,6 +182,15 @@ class BlockPool:
     def refcount(self, bid: int) -> int:
         """Current holder count of a block (0 <=> free)."""
         return self._refs.get(bid, 0)
+
+    @property
+    def host_in_use(self) -> int:
+        """Distinct blocks currently parked in host RAM."""
+        return len(self._host_refs)
+
+    def host_refcount(self, hid: int) -> int:
+        """Holder count of a host block (0 <=> not parked)."""
+        return self._host_refs.get(hid, 0)
 
     # -- reservation (admission-time) ----------------------------------
     def reserve(self, n: int) -> bool:
@@ -230,8 +284,147 @@ class BlockPool:
             self._refs[i] -= c
             if self._refs[i] == 0:
                 del self._refs[i]
+                # a fully-freed device block may be recycled at any time:
+                # sever its host twin so restore() re-materializes from
+                # the host copy instead of aliasing the recycled block
+                h = self._host_of.pop(i, None)
+                if h is not None:
+                    del self._dev_of[h]
                 self._free_set.add(i)
                 self._free.append(i)
+
+    # -- host offload (preemption) -------------------------------------
+    def offload(self, ids: List[int]) -> Tuple[HostBlocks,
+                                               List[Tuple[int, int]]]:
+        """Move the caller's holds on ``ids`` to host blocks.
+
+        Returns ``(handle, copies)``.  ``copies`` lists
+        ``(device_bid, host_bid)`` pairs whose device bytes the caller
+        must snapshot into host storage — only the FIRST offloader of a
+        given block copies; later co-holders (other preempted lanes of a
+        vote group, or re-offload while a prefix-cache entry keeps the
+        device twin warm) attach to the existing host block for free.
+        The caller must capture the device array value before issuing
+        any later cache write (functional updates make the captured
+        value immutable, so this is a consistency — not a race — rule).
+
+        The device holds are released exactly as by :meth:`free`, so a
+        block whose last holder offloads it returns to the free list
+        immediately; over-offload raises before mutating.
+        """
+        counts: Dict[int, int] = {}
+        for i in ids:
+            counts[i] = counts.get(i, 0) + 1
+        for i, c in counts.items():
+            if c > self._refs.get(i, 0):
+                raise ValueError(
+                    f"offload: block {i} listed {c} time(s) but held "
+                    f"{self._refs.get(i, 0)}")
+        out: List[int] = []
+        copies: List[Tuple[int, int]] = []
+        for b in ids:
+            h = self._host_of.get(b)
+            if h is None:
+                h = self._host_next
+                self._host_next += 1
+                self._host_refs[h] = 1
+                copies.append((b, h))
+                self.offloaded_blocks += 1
+                self.free([b])
+                if self._refs.get(b, 0) > 0:
+                    # co-holders keep the device twin alive: record the
+                    # dual residence so their later offloads are free
+                    self._host_of[b] = h
+                    self._dev_of[h] = b
+            else:
+                self._host_refs[h] += 1
+                self.free([b])
+            out.append(h)
+        self.host_blocks_peak = max(self.host_blocks_peak, self.host_in_use)
+        return HostBlocks(out), copies
+
+    def restore_cost(self, hb: HostBlocks) -> int:
+        """Device blocks a :meth:`restore` of ``hb`` would draw from the
+        caller's reservation right now (host blocks without a live
+        device twin; twinned blocks re-share in place for free)."""
+        return len({h for h in hb.ids if h not in self._dev_of})
+
+    def restore(self, hb: HostBlocks) -> Tuple[
+            List[int], List[Tuple[int, int]], List[int]]:
+        """Redeem a host handle back into device blocks.
+
+        Returns ``(blocks, scatters, dropped)``: ``blocks`` are device
+        ids in the handle's order; ``scatters`` lists
+        ``(host_id, device_bid)`` pairs whose host bytes the caller must
+        write into the device cache (blocks with a live device twin are
+        re-shared with zero bytes moved); ``dropped`` lists host ids
+        whose last hold was just redeemed — the caller frees their host
+        bytes AFTER performing the scatters.
+
+        Fresh materializations draw from the caller's *reservation*;
+        the call validates refcounts and reservation up front and raises
+        before mutating anything (over-restore is an accounting bug).
+        """
+        counts: Dict[int, int] = {}
+        for h in hb.ids:
+            counts[h] = counts.get(h, 0) + 1
+        for h, c in counts.items():
+            if c > self._host_refs.get(h, 0):
+                raise ValueError(
+                    f"restore: host block {h} redeemed {c} time(s) but "
+                    f"held {self._host_refs.get(h, 0)}")
+        fresh = self.restore_cost(hb)
+        if fresh > self.reserved:
+            raise RuntimeError(
+                f"restore needs {fresh} fresh block(s) but only "
+                f"{self.reserved} reserved: caller must reserve the "
+                "restore_cost before redeeming")
+        blocks: List[int] = []
+        scatters: List[Tuple[int, int]] = []
+        dropped: List[int] = []
+        for h in hb.ids:
+            d = self._dev_of.get(h)
+            if d is None:
+                d = self.alloc(1)[0]
+                scatters.append((h, d))
+                self.restored_blocks += 1
+                self._dev_of[h] = d
+                self._host_of[d] = h
+            else:
+                self.share([d])
+            blocks.append(d)
+            self._host_refs[h] -= 1
+            if self._host_refs[h] == 0:
+                del self._host_refs[h]
+                dropped.append(h)
+                d2 = self._dev_of.pop(h, None)
+                if d2 is not None:
+                    del self._host_of[d2]
+        return blocks, scatters, dropped
+
+    def discard(self, hb: HostBlocks) -> List[int]:
+        """Release a host handle without restoring it (a parked request
+        was cancelled or its vote group decided).  Returns the host ids
+        whose last hold was dropped — the caller frees their bytes.
+        Over-discard raises before mutating."""
+        counts: Dict[int, int] = {}
+        for h in hb.ids:
+            counts[h] = counts.get(h, 0) + 1
+        for h, c in counts.items():
+            if c > self._host_refs.get(h, 0):
+                raise ValueError(
+                    f"discard: host block {h} dropped {c} time(s) but "
+                    f"held {self._host_refs.get(h, 0)}")
+        dropped: List[int] = []
+        for h in hb.ids:
+            self._host_refs[h] -= 1
+            if self._host_refs[h] == 0:
+                del self._host_refs[h]
+                dropped.append(h)
+                d = self._dev_of.pop(h, None)
+                if d is not None:
+                    del self._host_of[d]
+        return dropped
 
     def leak_report(self) -> "str | None":
         """None when the pool has fully drained (every block free, no
@@ -239,11 +432,15 @@ class BlockPool:
         loop must restore after arbitrary mid-flight admission/eviction
         churn.  Otherwise a human-readable description of what is still
         held, for test assertions and shutdown diagnostics."""
-        if self.in_use == 0 and self.reserved == 0:
+        if self.in_use == 0 and self.reserved == 0 and not self._host_refs:
             return None
         held = {i: c for i, c in self._refs.items()}
-        return (f"pool not drained: in_use={self.in_use} "
-                f"reserved={self.reserved} held_refs={held}")
+        msg = (f"pool not drained: in_use={self.in_use} "
+               f"reserved={self.reserved} held_refs={held}")
+        if self._host_refs:
+            msg += (f" host_in_use={self.host_in_use} "
+                    f"host_refs={dict(self._host_refs)}")
+        return msg
 
     def __repr__(self):
         return (f"BlockPool(blocks={self.n_blocks}, bs={self.block_size}, "

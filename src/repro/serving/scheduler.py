@@ -99,10 +99,27 @@ the prompt-bucket width, so chunked serving is bit-identical to
 whole-prompt serving — for dense, paged, and shared caches, greedy
 and sampled (tests/test_serving_trace.py).
 
+Preemption & host offload (``ServingLoop.preempt``/``resume``)
+--------------------------------------------------------------
+A live lane can be *parked*: its KV pages move to host RAM
+(``BlockPool.offload`` + ``batch.gather_blocks``; dense: a row
+snapshot), its lane and reservation free immediately, and ``resume``
+later restores it into ANY free lane bit-identically — the PRNG
+contract keys sampling by (uid, token index), so nothing about lane
+index or block ids matters.  With ``Scheduler(auto_preempt=True)``,
+admission under pool pressure preempts the coldest preemptible lane
+(LRU by last-harvest round; never mid-prefill, never mid-verify, never
+the last live member of a vote group) instead of backpressuring, and
+parked requests re-admit automatically as blocks free.  Releasing an
+unfinished uid cancels it outright (see :meth:`ServingLoop.release`).
+See docs/architecture.md "Preemption & host offload".
+
 Request lifecycle:  pending -> admitted (prefill + lane insert;
   chunked: lane parked, prompt streams through chunk jobs)
   -> decoding (one round at a time) -> finished (EOS | budget)
                                     -> cancelled (group decided)
+  decoding <-> parked (preempt: KV offloaded to host; resume: restored
+  into any free lane, bit-identically)
 
 Determinism: request ``uid``'s step-t sample uses
 ``fold_in(fold_in(master_key, uid), t)`` (the batch.py PRNG contract),
@@ -134,12 +151,12 @@ from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving.batch import (GenConfig, copy_blocks, decode_round,
                                  decode_round_spec, fanout_lanes,
-                                 harvest_lengths, insert_lanes,
+                                 gather_blocks, harvest_lengths, insert_lanes,
                                  insert_lanes_paged, insert_lanes_shared,
                                  make_buckets, pad_token_rows, pick_bucket,
                                  prefill_chunk_jit, prefill_jit,
-                                 prefill_shared)
-from repro.serving.block_pool import BlockPool
+                                 prefill_shared, scatter_blocks)
+from repro.serving.block_pool import BlockPool, HostBlocks
 
 
 @dataclasses.dataclass
@@ -229,6 +246,11 @@ class SchedStats:
     spec_rounds: int = 0         # rounds that ran the verify path
     drafted_tokens: int = 0      # draft tokens fed to verify rounds
     accepted_draft_tokens: int = 0   # drafts committed by verification
+    # preemption + host offload
+    preempts: int = 0            # lanes parked (explicit or pool pressure)
+    resumes: int = 0             # parked requests restored into a lane
+    offload_bytes: int = 0       # K/V bytes copied device -> host
+    host_blocks_peak: int = 0    # host-pool high-water (paged only)
     # per-round host/device time breakdown (all entry points)
     sched_s: float = 0.0         # host scheduling: admission, chunk queue,
     #                              table growth, draft staging
@@ -329,6 +351,39 @@ class _Lane:
     # chunk-prefilled — the lane rides decode rounds done-masked and
     # joins the decode batch the round its final chunk lands
     ready: bool = True
+    # loop round when the lane last harvested a token (or was admitted /
+    # resumed) — the pressure policy's LRU coldness key
+    last_tok_round: int = 0
+
+
+@dataclasses.dataclass
+class _Parked:
+    """A preempted request: everything :meth:`ServingLoop.resume` needs
+    to continue it bit-identically in any free lane.
+
+    Because sampling is keyed ``fold_in(fold_in(key, uid), token_index)``
+    and the cache state is a pure function of the committed tokens, the
+    whole resume payload is the generated-so-far tokens, the decode-entry
+    logits row, and the KV pages — nothing about the original lane index
+    or block ids needs to survive."""
+    req: Request
+    budget: int
+    parts: List[np.ndarray]
+    generated: int
+    first_tok_s: Optional[float]
+    prompt_len: int
+    pos: int                     # decode position (cache["pos"][lane])
+    logits_row: np.ndarray       # (vocab,) decode-entry logits
+    # hold=True: parked until an explicit resume(); False: the loop
+    # auto-resumes it as soon as a lane slot + pool capacity free up
+    hold: bool = False
+    parked_round: int = 0
+    # paged: host handle + block count (bytes live in ServingLoop._host_kv)
+    host: Optional[HostBlocks] = None
+    n_blocks: int = 0
+    # dense: the lane's full cache row per layer-stacked entry, plus its
+    # cache_pos validity row (copied verbatim — ring-layout safe)
+    dense_row: Optional[Dict[str, np.ndarray]] = None
 
 
 @dataclasses.dataclass
@@ -413,6 +468,15 @@ class Scheduler:
         bit-identical to undrafted serving and to the one-shot oracle
         (tests/test_serving_trace.py).  Attention-only, non-MoE,
         unquantized models; dense caches must be non-ring.
+    auto_preempt:
+        Paged only.  When admission would block on pool pressure, park
+        the coldest preemptible lane's KV to host RAM
+        (``ServingLoop._preempt_coldest``) instead of backpressuring,
+        and re-admit parked requests as blocks free.  Preemption is
+        also available explicitly (``ServingLoop.preempt``/``resume``)
+        without this flag; either way resumed lanes continue
+        bit-identically (the PRNG contract keys sampling by uid and
+        token index, never by lane or block layout).
     """
 
     def __init__(self, params, cfg: ModelConfig, tokenizer, gcfg: GenConfig,
@@ -426,7 +490,8 @@ class Scheduler:
                  prefix_cache_entries: int = 256,
                  chunk_size: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
-                 spec_k: Optional[int] = None):
+                 spec_k: Optional[int] = None,
+                 auto_preempt: bool = False):
         self.params, self.cfg, self.tokenizer, self.gcfg = \
             params, cfg, tokenizer, gcfg
         self.n_lanes = n_lanes
@@ -512,11 +577,17 @@ class Scheduler:
                     "draft writes into a ring slot would overwrite window "
                     "history sequential decode still reads, and a rejected "
                     "draft could not roll that back")
+        self.auto_preempt = auto_preempt
+        if auto_preempt and not paged:
+            raise ValueError("auto_preempt requires paged=True: dense "
+                             "admission never blocks on cache memory")
         # ladders bounding compiled shapes of the shared fan-out paths
         # (lanes per prefill row, CoW copy pairs per wave)
         self._fan_buckets = make_buckets(n_lanes, 1)
         if paged:
             self.max_blocks = -(-self.s_max // block_size)
+            # offload/restore id-list ladder (blocks moved per preempt)
+            self._blk_buckets = make_buckets(self.max_blocks, 1)
             self.pool_blocks = (n_lanes * self.max_blocks
                                 if pool_blocks is None else pool_blocks)
             if self.pool_blocks < self.max_blocks:
@@ -752,6 +823,20 @@ class ServingLoop:
         # continuation of the request's output beginning at generated
         # offset `start` (see add_drafts)
         self._drafts: Dict[int, Tuple[int, List[int]]] = {}
+        # preemption: parked requests (uid -> _Parked, insertion order =
+        # resume priority) and the host-side KV bytes backing them
+        # (host block id -> (k, v) numpy arrays, paged only)
+        self._parked: "collections.OrderedDict[int, _Parked]" = \
+            collections.OrderedDict()
+        self._host_kv: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._round_no = 0
+        # releases of in-flight uids arriving while a round is dispatched
+        # are applied at the next dispatch (the harvest indexes lanes)
+        self._cancelq: set = set()
+        # streaming hook: called as on_tokens(uid, tokens) from harvest
+        # with each batch of newly committed tokens for a live request
+        # (launch/async_serve.py feeds per-client queues from it)
+        self.on_tokens = None
 
     # -- submission ----------------------------------------------------
     def submit(self, requests: Sequence,
@@ -801,19 +886,80 @@ class ServingLoop:
             if lane is not None and lane.req.uid == uid:
                 return (np.concatenate(lane.parts) if lane.parts
                         else np.zeros((0,), np.int32))
+        parked = self._parked.get(uid)
+        if parked is not None:
+            return (np.concatenate(parked.parts) if parked.parts
+                    else np.zeros((0,), np.int32))
         comp = self.completions.get(uid)
         return comp.tokens if comp is not None else None
 
     @property
     def has_work(self) -> bool:
-        """True while any request is pending, admitted, or in flight."""
+        """True while any request is pending, admitted, parked, or in
+        flight."""
         return (bool(self.pending) or self._inflight is not None
+                or bool(self._parked)
                 or any(l is not None for l in self.lanes))
 
     def live_groups(self) -> set:
-        """Group ids with at least one lane currently decoding."""
-        return {l.req.group for l in self.lanes
-                if l is not None and l.req.group is not None}
+        """Group ids with at least one lane currently decoding or
+        parked."""
+        return ({l.req.group for l in self.lanes
+                 if l is not None and l.req.group is not None}
+                | {p.req.group for p in self._parked.values()
+                   if p.req.group is not None})
+
+    def parked_uids(self) -> List[int]:
+        """Uids currently parked in host RAM, oldest first."""
+        return list(self._parked)
+
+    # -- preemption: park / resume -------------------------------------
+    def preempt(self, uid: int, hold: bool = True) -> None:
+        """Park a live request: its lane is freed (paged: its KV blocks
+        move to host RAM via ``BlockPool.offload``; dense: its cache row
+        is snapshotted) and the request waits in the parked set.  With
+        ``hold=True`` (default) it stays parked until an explicit
+        :meth:`resume`; ``hold=False`` lets the loop re-admit it
+        automatically once a lane and pool capacity free up — the
+        pressure policy's mode.
+
+        A lane still mid-chunk-prefill has generated nothing and
+        consumed no PRNG, so preempting it abandons the partial prefill
+        and requeues the request at the head of the pending queue
+        instead of offloading half-written state.
+
+        Resume is bit-exact wherever the request lands: sampling is
+        keyed ``fold_in(fold_in(key, uid), token_index)``, so the next
+        token depends only on the committed tokens and logits carried in
+        the parked record, never on the lane index or block ids."""
+        if self._inflight is not None:
+            raise RuntimeError("preempt() with a round in flight; "
+                               "harvest() first")
+        for i, lane in enumerate(self.lanes):
+            if lane is not None and lane.req.uid == uid:
+                break
+        else:
+            raise KeyError(f"preempt: uid {uid} has no live lane")
+        if not lane.ready:
+            self._requeue_prefilling(i)
+        else:
+            self._preempt_lane(i, hold)
+
+    def resume(self, uid: int) -> bool:
+        """Restore a parked request into a free lane now.  Returns False
+        when no lane slot or pool capacity is available — the request
+        stays parked but is marked auto-resumable, so the loop restores
+        it as soon as capacity frees."""
+        if self._inflight is not None:
+            raise RuntimeError("resume() with a round in flight; "
+                               "harvest() first")
+        parked = self._parked.get(uid)
+        if parked is None:
+            raise KeyError(f"resume: uid {uid} is not parked")
+        if self._restore_parked(uid):
+            return True
+        parked.hold = False
+        return False
 
     # -- the streaming core --------------------------------------------
     def step(self, key=None) -> List[Completion]:
@@ -833,7 +979,10 @@ class ServingLoop:
     def drain(self) -> List[Completion]:
         """Step until every submitted request has completed; returns
         all completions in submission order (skipping any a streaming
-        consumer already released)."""
+        consumer already released).  Parked requests are resumed —
+        drain means run everything, so explicit holds are lifted."""
+        for parked in self._parked.values():
+            parked.hold = False
         while self.has_work:
             self.step()
         return [self.completions[uid] for uid in self._order
@@ -853,12 +1002,24 @@ class ServingLoop:
         pool (plus one int per decided vote group, which must be
         remembered to drop late submissions), not by total requests
         served.  drain() returns only unreleased completions, so batch
-        (:meth:`Scheduler.run`) callers never release."""
+        (:meth:`Scheduler.run`) callers never release.
+
+        Releasing an *unfinished* uid cancels it — the client went away
+        (launch/async_serve.py maps stream cancellation here): a pending
+        uid is dropped at admission, a decoding or mid-prefill lane is
+        finalized cancelled with its blocks freed, a parked record drops
+        its host blocks.  If a round is in flight the cancellation is
+        applied at the next dispatch — within one round."""
         for uid in uids:
             self.completions.pop(uid, None)
             self._submit_s.pop(uid, None)
             self._enc.pop(uid, None)
+            self._drafts.pop(uid, None)
             self._released.add(uid)
+            if self._inflight is not None:
+                self._cancelq.add(uid)
+            else:
+                self._cancel_live(uid)
         # amortized O(1) compaction of the submission-order log
         if len(self._released) > max(64, len(self._order) // 2):
             self._order = [u for u in self._order
@@ -883,6 +1044,7 @@ class ServingLoop:
         self.sched._cache_stats(self.stats, self.cache, self.pool)
         if self.pool is not None:
             self.stats.cow_copies = self.pool.cow_copies
+            self.stats.host_blocks_peak = self.pool.host_blocks_peak
             # leak audit at shutdown: None means the pool drained; a
             # report string means blocks/reservations are still held
             # (a real leak, or close() before the backlog drained) —
@@ -904,6 +1066,17 @@ class ServingLoop:
         if self._inflight is not None:
             raise RuntimeError("dispatch() with a round already in flight")
         t0 = time.time()
+        self._round_no += 1
+        if self._cancelq:
+            # releases that arrived while the previous round was in
+            # flight: applied before admission, i.e. within one round
+            uids, self._cancelq = self._cancelq, set()
+            for uid in uids:
+                self._cancel_live(uid)
+        if self._parked:
+            # resume before admitting: parked requests were admitted
+            # once already, so they outrank the pending queue
+            self._try_resumes()
         if self.sched.share_prefix:
             self._admit_shared()
         else:
@@ -1055,6 +1228,10 @@ class ServingLoop:
             lane.parts.append(rows[j, :n])
             lane.generated += n
             self.stats.generated_tokens += n
+            if n > 0:
+                lane.last_tok_round = self._round_no
+                if self.on_tokens is not None:
+                    self.on_tokens(lane.req.uid, rows[j, :n])
             if eos_found[j] or lane.generated >= lane.budget:
                 newly.append(i)
 
@@ -1068,6 +1245,11 @@ class ServingLoop:
             for i in range(self.sched.n_lanes):
                 if lanes[i] is not None and lanes[i].req.group in self.decided:
                     self._finalize(i, cancelled=True)
+            for uid in [u for u, p in self._parked.items()
+                        if p.req.group in self.decided]:
+                # a parked member of a decided group will never resume:
+                # drop its host blocks now, not at close
+                self._finalize_parked(uid, cancelled=True)
         out = self._take_emitted()
         self.stats.harvest_s += time.time() - t0
         return out
@@ -1111,7 +1293,10 @@ class ServingLoop:
         comp = Completion(lane.req.uid, lane.req.group, toks, len(toks),
                           text, cancelled, lane.req.meta,
                           ttft_s=ttft, ttd_s=ttd)
-        self.completions[lane.req.uid] = comp
+        if lane.req.uid not in self._released:
+            # a released (cancelled) uid's client is gone: don't retain
+            # or emit a record nobody will claim
+            self.completions[lane.req.uid] = comp
         if self.sched.paged:
             # reclaim immediately: blocks (and the unused tail of the
             # reservation) go back to the pool mid-flight, and the
@@ -1128,7 +1313,8 @@ class ServingLoop:
         self._drafts.pop(lane.req.uid, None)
         if cancelled:
             self.stats.cancelled += 1
-        self._emitted.append(comp)
+        if lane.req.uid not in self._released:
+            self._emitted.append(comp)
         return comp
 
     def _drop_decided(self, members: List[Request]) -> None:
@@ -1143,6 +1329,204 @@ class ServingLoop:
             self._drafts.pop(m.uid, None)
             self.stats.cancelled += 1
             self._emitted.append(comp)
+
+    # -- preemption internals ------------------------------------------
+    # Dense cache entries stacked (n_layers, batch, ...) — a lane's row
+    # is [:, i]; "pos" (batch,) and "cache_pos" (batch, sc) index [i].
+    _LANE_AXIS1 = ("k", "v", "k_scale", "v_scale", "conv", "ssm")
+
+    def _requeue_prefilling(self, i: int) -> None:
+        """Preempt a lane whose prompt is still chunk-prefilling: free
+        its blocks (shared holds just decrement — co-members keep
+        decoding) and put the request back at the head of the queue.
+        Its dead chunk job is reaped before the next chunk batch runs,
+        and re-admission reproduces the prefill exactly (no tokens were
+        generated, no PRNG consumed)."""
+        lane = self.lanes[i]
+        if self.sched.paged:
+            self.pool.free(lane.blocks)
+            self.pool.unreserve(lane.reserved)
+            self._host_table[i] = 0
+            self._table_dirty = True
+        self.lanes[i] = None
+        self._host_done[i] = True
+        self.pending.appendleft(lane.req)
+        self.stats.preempts += 1
+
+    def _preempt_lane(self, i: int, hold: bool) -> None:
+        """Park a ready lane: snapshot its decode-entry logits, move its
+        KV to host, free the lane slot and its pool reservation."""
+        lane = self.lanes[i]
+        parked = _Parked(req=lane.req, budget=lane.budget, parts=lane.parts,
+                         generated=lane.generated,
+                         first_tok_s=lane.first_tok_s,
+                         prompt_len=lane.prompt_len,
+                         pos=int(np.asarray(self.cache["pos"][i])),
+                         logits_row=np.asarray(self.cur_logits[i]),
+                         hold=hold, parked_round=self._round_no)
+        if self.sched.paged:
+            parked.n_blocks = len(lane.blocks)
+            parked.host, copies = self.pool.offload(lane.blocks)
+            if copies:
+                self._copy_blocks_to_host(copies)
+            self.pool.unreserve(lane.reserved)
+            self._host_table[i] = 0
+            self._table_dirty = True
+        else:
+            row = {name: np.asarray(self.cache[name][:, i])
+                   for name in self._LANE_AXIS1 if name in self.cache}
+            if "cache_pos" in self.cache:
+                row["cache_pos"] = np.asarray(self.cache["cache_pos"][i])
+            parked.dense_row = row
+            self.stats.offload_bytes += sum(a.nbytes for a in row.values())
+        self.lanes[i] = None
+        self._host_done[i] = True
+        self._parked[lane.req.uid] = parked
+        self.stats.preempts += 1
+
+    def _copy_blocks_to_host(self, copies: List[Tuple[int, int]]) -> None:
+        """Snapshot the listed (device block, host block) pairs' KV into
+        host RAM.  The gather captures the cache arrays' current values
+        (immutable under JAX's functional updates), so later writes into
+        recycled blocks can never corrupt the parked bytes."""
+        n = pick_bucket(len(copies), self.sched._blk_buckets)
+        ids = np.zeros((n,), np.int32)      # padding gathers trash
+        ids[: len(copies)] = [b for b, _ in copies]
+        k, v = gather_blocks(self.cache, jnp.asarray(ids))
+        k, v = np.asarray(k), np.asarray(v)
+        for j, (_, h) in enumerate(copies):
+            kj, vj = k[:, j].copy(), v[:, j].copy()
+            self._host_kv[h] = (kj, vj)
+            self.stats.offload_bytes += kj.nbytes + vj.nbytes
+
+    def _restore_parked(self, uid: int) -> bool:
+        """Move a parked request back into a free lane (any lane —
+        resume is layout-independent).  False when no lane slot or pool
+        capacity is available; never mutates state before success."""
+        parked = self._parked[uid]
+        sched = self.sched
+        free_i = next((i for i in range(sched.n_lanes)
+                       if self.lanes[i] is None), None)
+        if free_i is None:
+            return False
+        lane = _Lane(parked.req, parked.budget, parts=parked.parts,
+                     generated=parked.generated,
+                     first_tok_s=parked.first_tok_s,
+                     prompt_len=parked.prompt_len,
+                     last_tok_round=self._round_no)
+        if sched.paged:
+            growth = sched._reservation(parked.prompt_len,
+                                        parked.budget) - parked.n_blocks
+            need = self.pool.restore_cost(parked.host) + growth
+            if not self.pool.reserve(need):
+                return False
+            blocks, scatters, dropped = self.pool.restore(parked.host)
+            if scatters:
+                n = pick_bucket(len(scatters), sched._blk_buckets)
+                ids = np.zeros((n,), np.int32)   # padding writes to trash
+                k0, v0 = self._host_kv[scatters[0][0]]
+                ks = np.zeros((k0.shape[0], n) + k0.shape[1:], k0.dtype)
+                vs = np.zeros((v0.shape[0], n) + v0.shape[1:], v0.dtype)
+                for j, (h, d) in enumerate(scatters):
+                    ids[j] = d
+                    ks[:, j], vs[:, j] = self._host_kv[h]
+                self.cache = scatter_blocks(self.cache, jnp.asarray(ids),
+                                            jnp.asarray(ks), jnp.asarray(vs))
+            for h in dropped:
+                self._host_kv.pop(h, None)
+            lane.blocks, lane.reserved = blocks, growth
+            self._host_table[free_i] = 0
+            self._host_table[free_i, : len(blocks)] = blocks
+            self._table_dirty = True
+        else:
+            for name, arr in parked.dense_row.items():
+                if name == "cache_pos":
+                    self.cache[name] = self.cache[name].at[free_i].set(
+                        jnp.asarray(arr))
+                else:
+                    self.cache[name] = self.cache[name].at[:, free_i].set(
+                        jnp.asarray(arr))
+        self.cache["pos"] = self.cache["pos"].at[free_i].set(parked.pos)
+        self.cur_logits = self.cur_logits.at[free_i].set(
+            jnp.asarray(parked.logits_row))
+        self._salts[free_i] = parked.req.uid & 0x7FFFFFFF
+        self._host_done[free_i] = False
+        self.lanes[free_i] = lane
+        del self._parked[uid]
+        self.stats.resumes += 1
+        return True
+
+    def _try_resumes(self) -> None:
+        """Re-admit auto-resumable parked requests, oldest first,
+        stopping at the first that does not fit (FIFO fairness: a big
+        parked request is not starved by smaller ones jumping it)."""
+        for uid in [u for u, p in self._parked.items() if not p.hold]:
+            if not self._restore_parked(uid):
+                break
+
+    def _preempt_coldest(self) -> Optional[int]:
+        """Pressure policy: park the least-recently-productive
+        preemptible lane (LRU by last-harvest round, uid tiebreak).
+        Never preempts a lane that is mid-chunk-prefill, has queued
+        drafts mid-verify, was admitted/resumed this same round (the
+        anti-thrash guard), or is the last live member of its vote
+        group.  Returns the freed lane index, or None."""
+        groups = collections.Counter(
+            lane.req.group for lane in self.lanes
+            if lane is not None and lane.req.group is not None)
+        cands = []
+        for i, lane in enumerate(self.lanes):
+            if lane is None or not lane.ready:
+                continue
+            if lane.last_tok_round >= self._round_no:
+                continue
+            if lane.req.uid in self._drafts:
+                continue
+            g = lane.req.group
+            if g is not None and groups[g] <= 1:
+                continue
+            cands.append((lane.last_tok_round, lane.req.uid, i))
+        if not cands:
+            return None
+        i = min(cands)[2]
+        self._preempt_lane(i, hold=False)
+        return i
+
+    def _finalize_parked(self, uid: int, cancelled: bool) -> None:
+        """Finish a parked request without resuming it (its vote group
+        decided, or its client released it): drop its host blocks and
+        emit whatever it generated before parking."""
+        parked = self._parked.pop(uid)
+        if parked.host is not None:
+            for h in self.pool.discard(parked.host):
+                self._host_kv.pop(h, None)
+        toks = (np.concatenate(parked.parts) if parked.parts
+                else np.zeros((0,), np.int32))
+        text = self.sched.tokenizer.decode(toks) if self.sched.tokenizer \
+            else ""
+        ttft, ttd = self._latency(uid, parked.first_tok_s, time.time())
+        comp = Completion(uid, parked.req.group, toks, len(toks), text,
+                          cancelled, parked.req.meta, ttft_s=ttft, ttd_s=ttd)
+        if uid not in self._released:
+            self.completions[uid] = comp
+            self._emitted.append(comp)
+        self._submit_s.pop(uid, None)
+        self._drafts.pop(uid, None)
+        if cancelled:
+            self.stats.cancelled += 1
+
+    def _cancel_live(self, uid: int) -> None:
+        """Cancel a released uid wherever it currently lives: a decoding
+        or still-prefilling lane is finalized cancelled (blocks freed,
+        prefix registration skipped by the job-reap machinery), a parked
+        record drops its host blocks.  Pending uids need no action —
+        admission skips released uids."""
+        for i, lane in enumerate(self.lanes):
+            if lane is not None and lane.req.uid == uid:
+                self._finalize(i, cancelled=True)
+                return
+        if uid in self._parked:
+            self._finalize_parked(uid, cancelled=True)
 
     # -- chunked prefill -----------------------------------------------
     def _job_alive(self, job: _PrefillJob) -> bool:
@@ -1337,6 +1721,9 @@ class ServingLoop:
         wave: List[Request] = []
         while pending and len(wave) < len(free):
             req = pending[0]
+            if req.uid in self._released:
+                pending.popleft()    # client cancelled before admission
+                continue
             if req.group in self.decided:
                 pending.popleft()
                 self._drop_decided([req])
@@ -1347,8 +1734,14 @@ class ServingLoop:
                 need = sched._reservation(max(len(self._enc[req.uid]), 1),
                                           sched._budget(req))
                 if not self.pool.reserve(need):
-                    # pool pressure: leave the queue intact (FIFO) and
-                    # retry after the next round frees blocks
+                    # pool pressure: evict the coldest preemptible lane
+                    # to host RAM and retry, or leave the queue intact
+                    # (FIFO) and retry after the next round frees blocks
+                    if sched.auto_preempt:
+                        idx = self._preempt_coldest()
+                        if idx is not None:
+                            free.append(idx)
+                            continue
                     self.stats.admission_blocked += 1
                     break
             pending.popleft()
@@ -1364,7 +1757,8 @@ class ServingLoop:
             for r in wave:
                 i = free.pop(0)
                 toks = self._enc[r.uid]
-                lane = _Lane(r, sched._budget(r), ready=False)
+                lane = _Lane(r, sched._budget(r), ready=False,
+                             last_tok_round=self._round_no)
                 read_row = write_row = None
                 if sched.paged:
                     lane.prompt_len = max(len(toks), 1)
@@ -1403,7 +1797,8 @@ class ServingLoop:
             for j, r in enumerate(grp):
                 i = free.pop(0)
                 lane_ids[j] = i
-                lane = _Lane(r, sched._budget(r))
+                lane = _Lane(r, sched._budget(r),
+                             last_tok_round=self._round_no)
                 if sched.paged:
                     lane.prompt_len = max(len(self._enc[r.uid]), 1)
                     n_pb = -(-lane.prompt_len // sched.block_size)
@@ -1453,6 +1848,10 @@ class ServingLoop:
             unit = pending[0]
             members = (unit.requests if isinstance(unit, RequestGroup)
                        else [unit])
+            members = [m for m in members if m.uid not in self._released]
+            if not members:
+                pending.popleft()    # every member cancelled pre-admission
+                continue
             if all(m.group is not None and m.group in self.decided
                    for m in members):
                 pending.popleft()
@@ -1479,9 +1878,14 @@ class ServingLoop:
                     break
                 if pool.reserve(need):
                     break
-                # pool pressure: shed warm prefix-cache blocks before
-                # backpressuring admission
+                # pool pressure: shed warm prefix-cache blocks, then
+                # preempt cold lanes, before backpressuring admission
                 if not self.prefix_cache.evict_lru():
+                    if sched.auto_preempt:
+                        idx = self._preempt_coldest()
+                        if idx is not None:
+                            free.append(idx)
+                            continue
                     stats.admission_blocked += 1
                     blocked = True
                     break
@@ -1525,7 +1929,8 @@ class ServingLoop:
                 lane_ids, lane_objs = [], []
                 for m in row.members:
                     i = free.pop(0)
-                    lane = _Lane(m, sched._budget(m), ready=False)
+                    lane = _Lane(m, sched._budget(m), ready=False,
+                                 last_tok_round=self._round_no)
                     lane.prompt_len = p_len
                     lane.blocks = list(prompt_blocks)
                     lane.reserved = sched._reservation(
@@ -1590,7 +1995,8 @@ class ServingLoop:
                         tail_of[m.uid] = blk
                 for mj, m in enumerate(row.members):
                     i = free.pop(0)
-                    lane = _Lane(m, sched._budget(m))
+                    lane = _Lane(m, sched._budget(m),
+                                 last_tok_round=self._round_no)
                     lane.prompt_len = p_len
                     lane.blocks = list(prompt_blocks)
                     if row.partial:

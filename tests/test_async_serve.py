@@ -1,0 +1,183 @@
+"""Asyncio streaming front-end (launch/async_serve.py).
+
+Three contracts: (1) what a client sees on its token stream is exactly
+what the serving loop finalized (and what the one-shot oracle says it
+should be); (2) a client that disappears mid-stream releases its lane
+within one decode round with nothing delivered and no leaked blocks;
+(3) the two-class fair queue keeps ttft-class admission latency bounded
+under a throughput-tenant flood, where plain FIFO admission does not.
+
+All tests drive a real ServingLoop on the tiny trace-harness model via
+``asyncio.run`` — no event-loop plugin needed.
+"""
+
+import asyncio
+
+import jax
+import numpy as np
+import pytest
+
+from repro.launch.async_serve import THROUGHPUT, TTFT, AsyncServer, FairQueue
+from repro.serving.scheduler import Request
+
+from test_serving_trace import MASTER_KEY, MAXNEW, Oracle, _scheduler, _setup
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return _setup()
+
+
+async def _consume(stream, out):
+    async for tok in stream:
+        out.append(tok)
+
+
+def test_fair_queue_unit():
+    """take() grants ttft_burst ttft-class pops per throughput pop;
+    fair=False degrades to arrival-order FIFO."""
+    q = FairQueue(ttft_burst=2)
+    for u in range(4):
+        q.push(THROUGHPUT, Request(uid=u, tokens=[]))
+    for u in range(4, 8):
+        q.push(TTFT, Request(uid=u, tokens=[]))
+    assert [r.uid for r in q.take(6)] == [4, 5, 0, 6, 7, 1]
+    assert [r.uid for r in q.take(9)] == [2, 3]
+    assert len(q) == 0
+    q = FairQueue(fair=False)
+    q.push(THROUGHPUT, Request(uid=0, tokens=[]))
+    q.push(TTFT, Request(uid=1, tokens=[]))
+    q.push(THROUGHPUT, Request(uid=2, tokens=[]))
+    assert [r.uid for r in q.take(5)] == [0, 1, 2]
+    with pytest.raises(ValueError, match="tenant"):
+        q.push("batch", Request(uid=9, tokens=[]))
+
+
+def test_stream_matches_completion_and_oracle(setup):
+    """Per-request stream ordering: the concatenation of every yielded
+    token equals the Completion's token array, which equals the
+    one-shot oracle — streaming changes delivery, not content."""
+    params, cfg, _ = _setup()
+    sched = _scheduler(params, cfg, 0.7, "paged", chunked=False)
+    oracle = Oracle(params, cfg, sched, 0.7)
+    prompts = {0: [5, 6, 7], 1: [9] * 11, 2: [8, 3], 3: [4] * 20}
+
+    async def run():
+        server = AsyncServer(sched, jax.random.PRNGKey(MASTER_KEY))
+        await server.start()
+        got = {u: [] for u in prompts}
+        streams = [
+            server.submit(u, toks,
+                          tenant=TTFT if u % 2 else THROUGHPUT)
+            for u, toks in prompts.items()]
+        await asyncio.gather(*(_consume(s, got[u])
+                               for u, s in zip(prompts, streams)))
+        await server.close()
+        return got, server
+
+    got, server = asyncio.run(run())
+    for u, toks in prompts.items():
+        comp = server.results[u]
+        assert got[u] == comp.tokens.tolist(), \
+            "stream must deliver exactly the completion's tokens, in order"
+        want = oracle.tokens(u, toks, MAXNEW)
+        assert np.array_equal(comp.tokens, want)
+    assert sched.pool.leak_report() is None
+
+
+def test_submit_before_start_lazy_starts_driver(setup):
+    """A submit with no prior start() must still stream: the driver is
+    lazy-started, so a consumer can never hang on a loop nothing
+    drives."""
+    params, cfg, _ = _setup()
+    sched = _scheduler(params, cfg, 0.0, "paged", chunked=False)
+    oracle = Oracle(params, cfg, sched, 0.0)
+
+    async def run():
+        server = AsyncServer(sched, jax.random.PRNGKey(MASTER_KEY))
+        got = []
+        await _consume(server.submit(0, [5, 6, 7]), got)
+        await server.close()
+        return got
+
+    got = asyncio.run(run())
+    assert np.array_equal(got, oracle.tokens(0, [5, 6, 7], MAXNEW))
+    assert sched.pool.leak_report() is None
+
+
+def test_cancel_mid_stream_releases_lane_within_one_round(setup):
+    """A client that cancels after its first tokens: the stream ends,
+    no completion is recorded, the lane is free again within one decode
+    round, and the pool comes back clean."""
+    params, cfg, _ = _setup()
+    sched = _scheduler(params, cfg, 0.7, "paged", chunked=False)
+    oracle = Oracle(params, cfg, sched, 0.7)
+
+    async def run():
+        server = AsyncServer(sched, jax.random.PRNGKey(MASTER_KEY))
+        await server.start()
+        s0 = server.submit(0, [5] * 9)
+        s1 = server.submit(1, [7, 8])
+        got1 = []
+        survivor = asyncio.ensure_future(_consume(s1, got1))
+        first = []
+        async for tok in s0:
+            first.append(tok)
+            break                       # client walks away mid-stream
+        cancel_round = server.rounds
+        server.cancel(0)
+        while any(lane is not None and lane.req.uid == 0
+                  for lane in server.loop.lanes):
+            await asyncio.sleep(0)
+        freed_after = server.rounds - cancel_round
+        await survivor
+        await server.close()
+        return first, got1, freed_after, server
+
+    first, got1, freed_after, server = asyncio.run(run())
+    assert freed_after <= 1, "cancel must release the lane within a round"
+    assert 0 not in server.results, "cancelled request must deliver nothing"
+    want0 = oracle.tokens(0, [5] * 9, MAXNEW)
+    assert first == want0[: len(first)].tolist()
+    assert got1 == oracle.tokens(1, [7, 8], MAXNEW).tolist()
+    assert sched.pool.leak_report() is None
+
+
+def test_fair_queue_bounds_ttft_under_flood(setup):
+    """12 throughput-tenant requests arrive ahead of 4 ttft-tenant
+    ones.  FIFO admission makes the interactive requests wait out the
+    whole flood; the fair queue admits them within the first admission
+    cycles, so their ttft (in rounds) stays bounded and strictly below
+    FIFO's."""
+    params, cfg, _ = _setup()
+
+    def p95(server, uids):
+        return float(np.percentile([server.ttft_rounds[u] for u in uids],
+                                   95))
+
+    async def run(fair):
+        sched = _scheduler(params, cfg, 0.0, "paged", chunked=False)
+        server = AsyncServer(sched, jax.random.PRNGKey(MASTER_KEY),
+                             fair=fair)
+        streams = []
+        for u in range(12):
+            streams.append(server.submit(u, [4, 5, 6],
+                                         tenant=THROUGHPUT))
+        ttft_uids = list(range(12, 16))
+        for u in ttft_uids:
+            streams.append(server.submit(u, [7, 8], tenant=TTFT))
+        await server.start()
+        sinks = [[] for _ in streams]
+        await asyncio.gather(*(_consume(s, sink)
+                               for s, sink in zip(streams, sinks)))
+        await server.close()
+        assert len(server.results) == 16
+        assert sched.pool.leak_report() is None
+        return p95(server, ttft_uids)
+
+    fair_p95 = asyncio.run(run(True))
+    fifo_p95 = asyncio.run(run(False))
+    assert fair_p95 < fifo_p95, \
+        f"fair queue should beat FIFO for ttft tenants " \
+        f"({fair_p95} vs {fifo_p95})"
+    assert fair_p95 <= 3, f"ttft p95 unbounded under flood: {fair_p95}"

@@ -122,6 +122,25 @@ def test_chunked_invariants_pass_and_fail():
         {"table": {"serve": {"whole": {"ttft_p95_s": 1.0}}}}) == []
 
 
+def _preempt_row(resumes=4, blocked_no_off=10, blocked_pre=2, equal=True):
+    return {"no_offload": {"admission_blocked": blocked_no_off},
+            "preempt": {"admission_blocked": blocked_pre,
+                        "resumes": resumes},
+            "completions_bitequal": equal}
+
+
+def test_preempt_invariants_pass_and_fail():
+    assert gate.check_preempt_invariants(
+        {"table": {"arith": _preempt_row()}}) == []
+    msgs = gate.check_preempt_invariants(
+        {"table": {"arith": _preempt_row(resumes=0, blocked_pre=10,
+                                         equal=False)}})
+    assert len(msgs) == 3          # resumes, bit-identity, strict blocked win
+    # rows without both paths are ignored, not crashed on
+    assert gate.check_preempt_invariants(
+        {"table": {"arith": {"preempt": {"resumes": 1}}}}) == []
+
+
 # ----------------------------------------------------------------------
 # main(): exit codes and --update
 # ----------------------------------------------------------------------

@@ -176,18 +176,27 @@ def test_cow_unallocated_raises():
 
 def drive_block_pool(ops, n_blocks=12, block_size=8):
     """Interpret (op, arg) pairs as reserve/unreserve/alloc/share/cow/
-    free against a model of holders, checking after every step:
+    free/offload/restore/discard against a model of holders, checking
+    after every step:
 
       invariant 1:  in_use + n_free == n_blocks (no leak),
       invariant 2:  reserved <= n_free (promises are backed),
       sharing:      refcount(b) == holds the model granted — so a block
                     is never live in two *unrelated* lanes (alloc and
                     cow assert their fresh block has no other holder),
-      free list:    refcount 0 <=> the block is in the free list.
+      free list:    refcount 0 <=> the block is in the free list,
+      host side:    every host hold the model granted (offload moves a
+                    device hold across the boundary one-for-one, restore
+                    moves it back) is exactly what the pool records; the
+                    dual-residence twin maps are a bijection touching
+                    only blocks live on BOTH sides; over-restore raises
+                    before mutating anything.
     """
     pool = BlockPool(n_blocks, block_size)
     lanes = []                    # each: list of held block ids
     holds = collections.Counter()
+    host_holds = collections.Counter()
+    parked = []                   # outstanding HostBlocks handles
     reserved = 0
     for op, arg in ops:
         if op == 0:               # reserve
@@ -243,15 +252,74 @@ def drive_block_pool(ops, n_blocks=12, block_size=8):
                 pool.free(lane)
                 for i in lane:
                     holds[i] -= 1
+        elif op == 6:             # park a lane's holds in host RAM
+            if lanes:
+                lane = lanes.pop(arg % len(lanes))
+                hb, copies = pool.offload(lane)
+                assert len(hb.ids) == len(lane)
+                # only first offloaders copy; co-holders attach for free
+                assert {h for _, h in copies} <= set(hb.ids)
+                for i in lane:
+                    holds[i] -= 1      # one device hold crosses over...
+                for h in hb.ids:
+                    host_holds[h] += 1  # ...to exactly one host hold
+                parked.append(hb)
+        elif op == 7:             # redeem a parked handle
+            if parked:
+                hb = parked[arg % len(parked)]
+                cost = pool.restore_cost(hb)
+                if cost > reserved:
+                    # over-restore raises BEFORE mutating anything
+                    snap = (pool.in_use, pool.reserved,
+                            dict(pool._host_refs), dict(pool._host_of))
+                    try:
+                        pool.restore(hb)
+                        raise AssertionError(
+                            "under-reserved restore must raise")
+                    except RuntimeError:
+                        pass
+                    assert snap == (pool.in_use, pool.reserved,
+                                    dict(pool._host_refs),
+                                    dict(pool._host_of))
+                else:
+                    parked.remove(hb)
+                    blocks, scatters, _ = pool.restore(hb)
+                    reserved -= cost
+                    assert len(blocks) == len(hb.ids)
+                    # twinned blocks re-share in place: no bytes moved
+                    assert len(scatters) == cost
+                    for i in blocks:
+                        holds[i] += 1
+                    for h in hb.ids:
+                        host_holds[h] -= 1
+                    lanes.append(list(blocks))
+        elif op == 8:             # drop a parked handle (cancellation)
+            if parked:
+                hb = parked.pop(arg % len(parked))
+                dropped = pool.discard(hb)
+                for h in hb.ids:
+                    host_holds[h] -= 1
+                assert set(dropped) == \
+                    {h for h in hb.ids if host_holds[h] == 0}
         assert pool.in_use + pool.n_free == pool.n_blocks
         assert pool.reserved == reserved
         assert pool.reserved <= pool.n_free
         for i in range(1, pool.n_blocks + 1):
             assert pool.refcount(i) == holds[i]
             assert (pool.refcount(i) == 0) == (i in pool._free_set)
+        # host refcounts: exactly the holds the model granted
+        assert pool._host_refs == {h: c for h, c in host_holds.items() if c}
+        # dual-residence twins: a bijection over blocks live on BOTH sides
+        assert pool._dev_of == {h: d for d, h in pool._host_of.items()}
+        for d, h in pool._host_of.items():
+            assert pool.refcount(d) > 0 and pool.host_refcount(h) > 0
     for lane in lanes:
         pool.free(lane)
+    for hb in parked:
+        pool.discard(hb)
+    pool.unreserve(reserved)
     assert pool.in_use == 0 and pool.n_free == pool.n_blocks
+    assert pool.leak_report() is None
 
 
 def test_block_pool_interleaved_ops_seeded_fuzz():
@@ -259,9 +327,114 @@ def test_block_pool_interleaved_ops_seeded_fuzz():
     tests/test_property.py (same driver), runnable without hypothesis."""
     rng = random.Random(0)
     for _ in range(150):
-        ops = [(rng.randrange(6), rng.randrange(64))
+        ops = [(rng.randrange(9), rng.randrange(64))
                for _ in range(rng.randrange(1, 40))]
         drive_block_pool(ops)
+
+
+# ----------------------------------------------------------------------
+# Host offload unit behaviour
+# ----------------------------------------------------------------------
+
+def test_offload_restore_roundtrip():
+    """A private lane offloads (device holds released, one copy per
+    block) and restores (fresh blocks from the caller's reservation,
+    one scatter per block, host side drained)."""
+    pool = BlockPool(8, block_size=8)
+    assert pool.reserve(3)
+    ids = pool.alloc(3)
+    hb, copies = pool.offload(ids)
+    assert [d for d, _ in copies] == ids          # first offload: all copy
+    assert pool.in_use == 0 and pool.host_in_use == 3
+    assert pool.offloaded_blocks == 3
+    assert pool.restore_cost(hb) == 3
+    assert pool.reserve(3)
+    blocks, scatters, dropped = pool.restore(hb)
+    assert len(blocks) == 3 and len(scatters) == 3
+    assert sorted(dropped) == sorted(hb.ids)      # last holds redeemed
+    assert pool.host_in_use == 0 and pool.in_use == 3
+    pool.free(blocks)
+    assert pool.leak_report() is None
+
+
+def test_offload_shared_block_copies_once():
+    """Two holders of a shared block each offload: the first copies,
+    the second attaches to the same host block (refcount 2), and the
+    host ids agree."""
+    pool = BlockPool(8, block_size=8)
+    assert pool.reserve(1)
+    (b,) = pool.alloc(1)
+    pool.share([b])                               # two holders
+    hb1, copies1 = pool.offload([b])
+    assert copies1 == [(b, hb1.ids[0])]
+    assert pool.refcount(b) == 1                  # co-holder still live
+    hb2, copies2 = pool.offload([b])
+    assert copies2 == [] and hb2.ids == hb1.ids   # attach, no second copy
+    assert pool.host_refcount(hb1.ids[0]) == 2
+    assert pool.in_use == 0 and pool.host_in_use == 1
+    # both restore shared: one fresh block, then a zero-copy re-share
+    assert pool.reserve(1)
+    blocks1, scatters1, dropped1 = pool.restore(hb1)
+    assert len(scatters1) == 1 and dropped1 == []
+    assert pool.restore_cost(hb2) == 0            # live twin: free
+    blocks2, scatters2, dropped2 = pool.restore(hb2)
+    assert blocks2 == blocks1 and scatters2 == []
+    assert dropped2 == hb2.ids
+    assert pool.refcount(blocks1[0]) == 2
+    pool.free(blocks1 + blocks2)
+    assert pool.leak_report() is None
+
+
+def test_restore_under_reserved_raises_before_mutating():
+    pool = BlockPool(8, block_size=8)
+    assert pool.reserve(2)
+    ids = pool.alloc(2)
+    hb, _ = pool.offload(ids)
+    assert pool.reserve(1)                        # 1 < restore_cost == 2
+    snap = (pool.in_use, pool.reserved, dict(pool._host_refs))
+    with pytest.raises(RuntimeError, match="reserve"):
+        pool.restore(hb)
+    assert snap == (pool.in_use, pool.reserved, dict(pool._host_refs))
+    pool.unreserve(1)
+    assert pool.reserve(2)
+    blocks, _, _ = pool.restore(hb)
+    pool.free(blocks)
+    assert pool.leak_report() is None
+
+
+def test_stale_handle_and_over_discard_raise():
+    pool = BlockPool(8, block_size=8)
+    assert pool.reserve(1)
+    hb, _ = pool.offload(pool.alloc(1))
+    assert pool.discard(hb) == hb.ids
+    with pytest.raises(ValueError, match="discard"):
+        pool.discard(hb)                          # handle already dead
+    with pytest.raises(ValueError, match="restore"):
+        pool.restore(hb)
+    assert pool.leak_report() is None
+
+
+def test_offload_requires_holds():
+    pool = BlockPool(4, block_size=8)
+    with pytest.raises(ValueError, match="offload"):
+        pool.offload([1])                         # never allocated
+    assert pool.reserve(1)
+    (b,) = pool.alloc(1)
+    with pytest.raises(ValueError, match="offload"):
+        pool.offload([b, b])                      # held once, listed twice
+    assert pool.refcount(b) == 1                  # nothing mutated
+    pool.free([b])
+    assert pool.leak_report() is None
+
+
+def test_leak_report_flags_host_side():
+    pool = BlockPool(4, block_size=8)
+    assert pool.reserve(1)
+    hb, _ = pool.offload(pool.alloc(1))
+    report = pool.leak_report()
+    assert report is not None and "host" in report
+    pool.discard(hb)
+    assert pool.leak_report() is None
 
 
 # ----------------------------------------------------------------------

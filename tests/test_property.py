@@ -118,15 +118,19 @@ def test_toa_bounded(recs):
     assert -0.5 <= val <= 1.5
 
 
-@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 63)),
+@given(st.lists(st.tuples(st.integers(0, 8), st.integers(0, 63)),
                 max_size=60))
 @settings(max_examples=300, deadline=None)
 def test_block_pool_invariants_under_interleaving(ops):
     """BlockPool under arbitrary interleaved reserve / alloc / share /
-    cow / free sequences: no leak (in_use + free == blocks), every
-    promise backed (reserved <= free), no block live in two unrelated
-    lanes (refcount == model holds; alloc/cow never hand out a held
-    block), and refcount 0 <=> the block is on the free list.  The
+    cow / free / offload / restore / discard sequences: no leak
+    (in_use + free == blocks), every promise backed (reserved <= free),
+    no block live in two unrelated lanes (refcount == model holds;
+    alloc/cow never hand out a held block), refcount 0 <=> the block is
+    on the free list, refcounts conserved across the device/host
+    boundary (offload moves each hold one-for-one, restore moves it
+    back), the dual-residence twin maps touch only blocks live on both
+    sides, and an under-reserved restore raises before mutating.  The
     op interpreter lives next to the allocator's unit tests
     (tests/test_block_pool.py) and is also driven there with seeded
     random sequences so the invariants hold even without hypothesis."""

@@ -7,8 +7,10 @@ settings) — never on when it arrived, which lane it landed in, which
 cache layout served it, or whether its prompt was prefilled whole or
 in chunks.  This module generates random serving traces — arrivals
 between rounds, vote-group sizes, per-request budgets, ``release()``
-calls, mid-flight StopPolicy kills — and drives them through every
-serving configuration:
+calls, mid-flight StopPolicy kills, and (in the preempted variants)
+random ``preempt()``/``resume()`` schedules that park live lanes to
+host RAM and restore them into whatever lane is free — and drives
+them through every serving configuration:
 
     {dense, paged, shared-prefix} x {chunked, unchunked} x {greedy, sampled}
 
@@ -81,7 +83,8 @@ def _gcfg(temperature):
 
 
 def _scheduler(params, cfg, temperature, mode, chunked,
-               prefill_budget=None, spec=False):
+               prefill_budget=None, spec=False, pool_blocks=None,
+               auto_preempt=False):
     return Scheduler(params, cfg, tokenizer=None, gcfg=_gcfg(temperature),
                      n_lanes=N_LANES, round_tokens=ROUND,
                      max_prompt_len=MAXP,
@@ -89,7 +92,8 @@ def _scheduler(params, cfg, temperature, mode, chunked,
                      share_prefix=mode == "shared",
                      chunk_size=BLOCK if chunked else None,
                      prefill_budget=prefill_budget if chunked else None,
-                     spec_k=4 if spec else None)
+                     spec_k=4 if spec else None,
+                     pool_blocks=pool_blocks, auto_preempt=auto_preempt)
 
 
 # ----------------------------------------------------------------------
@@ -207,11 +211,26 @@ def _flatten(rounds):
     return out
 
 
-def replay(sched: Scheduler, rounds, kill, release_rounds, draft_fn=None):
+def _random_preempts(loop, rng, hold_ok=True):
+    """Between rounds: randomly preempt live lanes (parking decoding
+    lanes to host RAM, requeueing mid-prefill ones) and resume randomly
+    chosen parked requests.  Any schedule is legal — trace independence
+    says the generated bits cannot change."""
+    for uid in [l.req.uid for l in loop.lanes if l is not None]:
+        if rng.rand() < 0.25:
+            loop.preempt(uid, hold=hold_ok and rng.rand() < 0.4)
+    for uid in loop.parked_uids():
+        if rng.rand() < 0.5:
+            loop.resume(uid)
+
+
+def replay(sched: Scheduler, rounds, kill, release_rounds, draft_fn=None,
+           preempt_rng=None):
     """Drive one scheduler through the trace: submit between rounds,
     step, release delivered uids on release rounds, then drain.
     ``draft_fn(req)``, if given, supplies each submission's speculative
-    draft queue (None to leave a request undrafted)."""
+    draft queue (None to leave a request undrafted).  ``preempt_rng``,
+    if given, weaves a random preempt/resume schedule between rounds."""
     loop = sched.loop(jax.random.PRNGKey(MASTER_KEY),
                       stop_policy=ScriptedKills(kill))
     got = {}
@@ -228,13 +247,22 @@ def replay(sched: Scheduler, rounds, kill, release_rounds, draft_fn=None):
                             drafts[m.uid] = d
                 drafts = drafts or None
             loop.submit(subs, draft_tokens=drafts)
+        if preempt_rng is not None:
+            _random_preempts(loop, preempt_rng)
         done = loop.step()
         for c in done:
             assert c.uid not in got, "uid completed twice"
             got[c.uid] = c
         if r in release_rounds:
             loop.release(c.uid for c in done)
+    if preempt_rng is not None:
+        for uid in loop.parked_uids():
+            loop.resume(uid)     # lift holds; failures downgrade to auto
     while loop.has_work:
+        if preempt_rng is not None:
+            # keep churning while draining, but only auto-resumable
+            # parks so the drain is guaranteed to make progress
+            _random_preempts(loop, preempt_rng, hold_ok=False)
         for c in loop.step():
             assert c.uid not in got, "uid completed twice"
             got[c.uid] = c
@@ -243,7 +271,7 @@ def replay(sched: Scheduler, rounds, kill, release_rounds, draft_fn=None):
 
 
 def check_trace(params, cfg, temperature, mode, chunked, trace,
-                prefill_budget=None, drafted=False):
+                prefill_budget=None, drafted=False, preempt_seed=None):
     rounds, kill, release_rounds = trace
     sched = _scheduler(params, cfg, temperature, mode, chunked,
                        prefill_budget, spec=drafted)
@@ -262,10 +290,16 @@ def check_trace(params, cfg, temperature, mode, chunked, trace,
             junk = drng.randint(3, 90,
                                 (int(drng.randint(0, 4)),)).tolist()
             return [int(t) for t in want[:m]] + junk
-    got, stats = replay(sched, rounds, kill, release_rounds, draft_fn)
+    preempt_rng = (np.random.RandomState(preempt_seed)
+                   if preempt_seed is not None else None)
+    got, stats = replay(sched, rounds, kill, release_rounds, draft_fn,
+                        preempt_rng=preempt_rng)
     if drafted:
         assert stats.accepted_draft_tokens > 0, \
             "drafted trace never accepted a draft — speculation untested"
+    if preempt_seed is not None:
+        assert stats.preempts > 0, \
+            "preempted trace never preempted — schedule untested"
     reqs = _flatten(rounds)
     assert set(got) == {r.uid for r in reqs}
     for r in reqs:
@@ -320,6 +354,179 @@ def test_trace_uncancelled_equal_across_modes(setup):
             sigs.append(sorted((u, c.tokens.tolist())
                                for u, c in got.items()))
     assert all(s == sigs[0] for s in sigs[1:])
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_preempt_trace_matrix_bitmatches_oracle(setup, temperature):
+    """A seeded-fuzz preempt/resume schedule woven into a randomized
+    trace must leave every completion bit-identical to the oracle in
+    every {cache} x {chunking} mode: parking a lane to host RAM and
+    restoring it (into whichever lane is free) is invisible in the
+    output, and both device and host pools come back leak-clean."""
+    params, cfg, _ = _setup()
+    trace = make_trace(17)
+    for mode in ("dense", "paged", "shared"):
+        for chunked in (False, True):
+            check_trace(params, cfg, temperature, mode, chunked, trace,
+                        preempt_seed=71)
+
+
+# ----------------------------------------------------------------------
+# Directed preempt/resume regressions
+# ----------------------------------------------------------------------
+
+def test_explicit_preempt_resume_roundtrip(setup):
+    """Park a decoding request mid-stream with ``hold=True``, let the
+    other lanes run on, resume it, and require a bit-exact completion —
+    in both cache layouts (paged offloads KV blocks to host, dense
+    snapshots its cache row)."""
+    params, cfg, _ = _setup()
+    for mode in ("paged", "dense"):
+        sched = _scheduler(params, cfg, 0.7, mode, chunked=False)
+        oracle = Oracle(params, cfg, sched, 0.7)
+        reqs = [Request(uid=u, tokens=[5 + u] * (3 + 7 * u),
+                        max_new_tokens=MAXNEW) for u in range(3)]
+        loop = sched.loop(jax.random.PRNGKey(MASTER_KEY))
+        loop.submit(reqs)
+        loop.step()
+        # whichever request is still decoding (some may EOS round 1)
+        target = next(l.req.uid for l in loop.lanes if l is not None)
+        loop.preempt(target, hold=True)
+        assert loop.parked_uids() == [target]
+        done_early = {c.uid for c in loop.step()}
+        assert target not in done_early, "held request must stay parked"
+        assert loop.resume(target)
+        comps = {c.uid: c for c in loop.drain()}
+        loop.close()
+        for r in reqs:
+            want = oracle.tokens(r.uid, r.tokens, r.max_new_tokens)
+            assert np.array_equal(comps[r.uid].tokens, want), mode
+        stats = loop.stats
+        assert stats.preempts == 1 and stats.resumes == 1
+        assert stats.offload_bytes > 0
+        if mode == "paged":
+            assert stats.host_blocks_peak > 0
+            assert sched.pool.leak_report() is None
+
+
+def test_preempt_during_chunked_prefill_requeues(setup):
+    """Preempting a lane whose prompt is still chunk-prefilling has no
+    KV worth offloading: the partial prefill is abandoned, its blocks
+    freed, and the request requeued — it must still complete
+    bit-identically."""
+    params, cfg, _ = _setup()
+    sched = _scheduler(params, cfg, 0.7, "paged", chunked=True,
+                       prefill_budget=BLOCK)    # one chunk per round
+    oracle = Oracle(params, cfg, sched, 0.7)
+    long_toks = np.random.RandomState(5).randint(3, 90, (40,)).tolist()
+    reqs = [Request(uid=0, tokens=long_toks, max_new_tokens=8),
+            Request(uid=1, tokens=[7, 8, 9], max_new_tokens=MAXNEW)]
+    loop = sched.loop(jax.random.PRNGKey(MASTER_KEY))
+    loop.submit(reqs)
+    loop.step()                                 # chunk 1 of 5 lands
+    lane0 = next(l for l in loop.lanes if l is not None and l.req.uid == 0)
+    assert not lane0.ready, "uid 0 should still be prefilling"
+    loop.preempt(0)
+    assert loop.parked_uids() == []             # requeued, not parked
+    assert loop.stats.preempts == 1
+    comps = {c.uid: c for c in loop.drain()}
+    loop.close()
+    for r in reqs:
+        want = oracle.tokens(r.uid, r.tokens, r.max_new_tokens)
+        assert np.array_equal(comps[r.uid].tokens, want)
+    assert sched.pool.leak_report() is None
+
+
+def test_shared_group_preempt_offloads_once_resumes_elsewhere(setup):
+    """Preempting two members of a shared-prefix vote group must
+    offload the read-only prompt blocks once (the second member
+    attaches to the first's host copies), and resuming after fillers
+    took the freed lanes must land them in *different* lanes — still
+    bit-exact, because nothing in the sampling stream depends on lane
+    index or block ids."""
+    params, cfg, _ = _setup()
+    sched = _scheduler(params, cfg, 0.7, "shared", chunked=False)
+    oracle = Oracle(params, cfg, sched, 0.7)
+    toks = np.random.RandomState(9).randint(3, 90, (17,)).tolist()
+    grp = RequestGroup([Request(uid=u, tokens=list(toks), group=0,
+                                max_new_tokens=MAXNEW) for u in range(3)])
+    loop = sched.loop(jax.random.PRNGKey(MASTER_KEY))
+    loop.submit([grp])
+    loop.step()
+    old_lane = {l.req.uid: i for i, l in enumerate(loop.lanes)
+                if l is not None}
+    loop.preempt(0, hold=True)
+    loop.preempt(1, hold=True)
+    h0 = set(loop._parked[0].host.ids)
+    h1 = set(loop._parked[1].host.ids)
+    assert h0 & h1, "shared prompt blocks must be co-held, not re-copied"
+    filler = Request(uid=9, tokens=[3, 4, 5], max_new_tokens=MAXNEW)
+    loop.submit([filler])
+    loop.step()                    # filler occupies one freed lane
+    assert loop.resume(0) and loop.resume(1)
+    new_lane = {l.req.uid: i for i, l in enumerate(loop.lanes)
+                if l is not None}
+    assert {new_lane[0], new_lane[1]} != {old_lane[0], old_lane[1]}, \
+        "resume should have landed at least one member in a new lane"
+    comps = {c.uid: c for c in loop.drain()}
+    loop.close()
+    for r in list(grp.requests) + [filler]:
+        want = oracle.tokens(r.uid, r.tokens, r.max_new_tokens)
+        assert np.array_equal(comps[r.uid].tokens, want)
+    assert loop.stats.resumes == 2
+    assert sched.pool.leak_report() is None
+
+
+def test_auto_preempt_offload_thrash_tiny_pool(setup):
+    """``auto_preempt=True`` with a pool too small for the offered load:
+    admission pressure must evict cold lanes to host RAM instead of
+    blocking, re-admit them later, and every completion must still be
+    bit-exact with both pools leak-clean."""
+    params, cfg, _ = _setup()
+    sched = _scheduler(params, cfg, 0.7, "paged", chunked=False,
+                       pool_blocks=14, auto_preempt=True)
+    oracle = Oracle(params, cfg, sched, 0.7)
+    rng = np.random.RandomState(21)
+    # 17-token prompts + MAXNEW budget = 4 blocks/lane, so 4 lanes want
+    # 16 blocks from a 14-block pool: admission must preempt to proceed
+    reqs = [Request(uid=u, tokens=rng.randint(3, 90, (17,)).tolist(),
+                    max_new_tokens=MAXNEW) for u in range(6)]
+    loop = sched.loop(jax.random.PRNGKey(MASTER_KEY))
+    loop.submit(reqs)
+    comps = {c.uid: c for c in loop.drain()}
+    loop.close()
+    for r in reqs:
+        want = oracle.tokens(r.uid, r.tokens, r.max_new_tokens)
+        assert np.array_equal(comps[r.uid].tokens, want)
+    stats = loop.stats
+    assert stats.preempts > 0 and stats.resumes > 0, \
+        "tiny pool should have forced at least one offload/resume cycle"
+    assert stats.host_blocks_peak > 0 and stats.offload_bytes > 0
+    assert sched.pool.leak_report() is None
+
+
+def test_release_mid_prefill_job_frees_blocks_skips_prefix_cache(setup):
+    """``release()`` of a request still queued in a ``_PrefillJob``
+    (client cancelled mid-chunk): the partial prompt blocks must come
+    back to the pool, the dead prompt must never be registered in the
+    prefix cache, and nothing is delivered for the released uids."""
+    params, cfg, _ = _setup()
+    sched = _scheduler(params, cfg, 0.0, "shared", chunked=True,
+                       prefill_budget=BLOCK)
+    loop = sched.loop(jax.random.PRNGKey(MASTER_KEY))
+    toks = np.random.RandomState(3).randint(3, 90, (40,)).tolist()
+    grp = RequestGroup([Request(uid=u, tokens=list(toks), group=0,
+                                max_new_tokens=6) for u in range(2)])
+    loop.submit([grp])
+    loop.step()                   # chunk 1 of 5 lands; job still active
+    assert any(l is not None and not l.ready for l in loop.lanes)
+    loop.release([0, 1])          # both clients went away mid-prefill
+    comps = loop.drain()
+    loop.close()
+    assert comps == [], "released requests must not be delivered"
+    assert len(loop.prefix_cache) == 0, \
+        "a prompt whose every lane was released must not be cached"
+    assert sched.pool.leak_report() is None
 
 
 # ----------------------------------------------------------------------
@@ -406,10 +613,10 @@ except ImportError:      # pragma: no cover - exercised on bare installs
 if HAVE_HYPOTHESIS:
 
     class ServingTraceMachine(RuleBasedStateMachine):
-        """Arbitrary interleavings of submit / step / kill / release
-        against the most intricate configuration (shared-prefix paged +
-        chunked prefill, sampled decoding), checked against the same
-        per-request oracle at teardown."""
+        """Arbitrary interleavings of submit / step / kill / release /
+        preempt / resume against the most intricate configuration
+        (shared-prefix paged + chunked prefill, sampled decoding),
+        checked against the same per-request oracle at teardown."""
 
         def __init__(self):
             super().__init__()
@@ -484,11 +691,35 @@ if HAVE_HYPOTHESIS:
             self.loop.release(self.last_delivered)
             self.last_delivered = []
 
+        @rule(seed=st.integers(0, 10 ** 6))
+        def preempt_random_live(self, seed):
+            live = [l.req.uid for l in self.loop.lanes if l is not None]
+            if live:
+                rng = np.random.RandomState(seed)
+                # auto-resumable parks only, so teardown's drain loop is
+                # guaranteed to make progress without explicit resumes
+                self.loop.preempt(int(live[rng.randint(len(live))]),
+                                  hold=False)
+
+        @rule(seed=st.integers(0, 10 ** 6))
+        def resume_random_parked(self, seed):
+            parked = self.loop.parked_uids()
+            if parked:
+                rng = np.random.RandomState(seed)
+                self.loop.resume(int(parked[rng.randint(len(parked))]))
+
         @invariant()
         def pool_accounting_sane(self):
             pool = self.sched.pool
             assert pool.in_use + pool.n_free == pool.n_blocks
             assert pool.reserved <= pool.n_free
+            # every parked record's host blocks are live host-side, and
+            # nothing else is
+            want_host = set()
+            for p in self.loop._parked.values():
+                if p.host is not None:
+                    want_host.update(p.host.ids)
+            assert set(pool._host_refs) == want_host
 
         def teardown(self):
             while self.loop.has_work:
