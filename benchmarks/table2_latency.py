@@ -10,6 +10,8 @@ AGL/AROL proxies use."""
 
 from __future__ import annotations
 
+import os
+
 import jax
 
 from benchmarks import common
@@ -556,6 +558,202 @@ def run_pipeline_smoke(n_items: int = 12, k: int = 4,
 
 
 # ----------------------------------------------------------------------
+# Sharded serving: lane scaling over a simulated mesh + tier placement
+# ----------------------------------------------------------------------
+
+def run_sharded_smoke(devices: int = 4, lanes_per_device: int = 4,
+                      n_requests: int = 24, round_tokens: int = 8,
+                      block_size: int = 8, new_tokens: int = 16,
+                      n_items_placement: int = 8, k: int = 4,
+                      seed: int = 0):
+    """No-training smoke for multi-device sharded serving, two phases
+    on a simulated ``devices``-wide host mesh
+    (``--xla_force_host_platform_device_count`` — no accelerator
+    involved, so this runs CI-gated on CPU).
+
+    **Lane scaling**: the same request stream served paged at a fixed
+    ``lanes_per_device``, once single-device (no mesh) and once with
+    the lane dim and per-shard KV pools sharded over the mesh's data
+    axis (``Scheduler(mesh=...)``: decode rounds under shard_map, one
+    block-pool slab per shard, no cross-shard gathers on the decode hot
+    path).  The per-request PRNG contract makes completions bit-equal
+    BY CONSTRUCTION — shard placement is pure layout — so the gate
+    (scripts/check_bench_regression.py) requires exact token equality
+    plus an aggregate lane count >= 3x the single-device run.
+    Per-device tokens/sec and scaling efficiency are *reported*, not
+    gated: simulated CPU devices share one host's cores, so efficiency
+    on this rig measures sharding overhead, not real scaling.
+
+    **Tier placement**: the two-tier cascade of ``run_pipeline_smoke``
+    (one SLM, tau unreachable, sampled decoding) with ``placement``
+    pinning tier 0 to the first half of the mesh's devices and the
+    escalation tier to the second half — run once as per-tier barriers
+    (``run_cascade``: the slices run back-to-back, the *serialized*
+    placement baseline) and once pipelined
+    (``run_cascade_pipelined``: escalated groups decode on their slice
+    while tier 0 keeps decoding on its own).  The gate always requires
+    equal accuracy/tier histogram, ``n_loops == 2`` (disjoint slices
+    deliberately un-fuse the host loop) and ``overlap_fraction > 0``
+    (host iterations where BOTH slices had rounds in flight — the
+    escalation tier decoding concurrently with tier 0, not merely
+    interleaved).  The *wall* gate — pipelined strictly below the
+    serialized placement — additionally arms only when the host has
+    >= 2 CPU cores (``wall_gate_armed``): simulated devices timeshare
+    the host's cores, so on a single-core rig both placements do
+    identical total compute and wall parity is the physical ceiling;
+    with two or more cores the two slices' XLA executions genuinely
+    run in parallel and the concurrent placement must win.  Each serve
+    runs twice (first pass pays the jit compiles) and reports min wall.
+    """
+    import time
+
+    import numpy as np
+
+    from repro.core import cascade_multi as cm
+    from repro.core.experiment import TINY, model_config
+    from repro.data.tasks import make_benchmark
+    from repro.data.tokenizer import default_tokenizer
+    from repro.launch.mesh import make_sim_mesh
+    from repro.models import model as model_lib
+    from repro.serving.batch import GenConfig
+    from repro.serving.scheduler import Request, Scheduler
+
+    tok = default_tokenizer()
+    cfg = model_config(TINY)
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    items = make_benchmark("arith", n_requests, seed=seed)
+    reqs, max_len = [], 0
+    for i, item in enumerate(items):
+        toks = tok.encode(f"Q: {item.question}\nA: ", bos=True)
+        max_len = max(max_len, len(toks))
+        reqs.append(Request(uid=i, tokens=toks))
+    gcfg = GenConfig(max_new_tokens=new_tokens, temperature=0.7)
+
+    def serve(mesh, n_lanes, n_devices):
+        sched = Scheduler(params, cfg, tok, gcfg, n_lanes=n_lanes,
+                          round_tokens=round_tokens, max_prompt_len=max_len,
+                          paged=True, block_size=block_size, mesh=mesh)
+        best_wall, comps, stats = None, None, None
+        for _ in range(2):           # first pass pays compiles; min-of-2
+            loop = sched.loop(jax.random.PRNGKey(5))
+            loop.submit(reqs)
+            t0 = time.time()
+            comps = loop.drain()
+            wall = time.time() - t0
+            stats = loop.close()
+            assert stats.leak_report is None
+            best_wall = wall if best_wall is None else min(best_wall, wall)
+        gen = int(stats.generated_tokens)
+        return {
+            "wall_s": best_wall,
+            "rounds": int(stats.rounds),
+            "generated_tokens": gen,
+            "n_lanes": n_lanes,
+            "n_devices": n_devices,
+            "aggregate_tok_s": gen / max(best_wall, 1e-9),
+            "tok_s_per_device": gen / max(best_wall, 1e-9) / n_devices,
+        }, {str(c.uid): [int(t) for t in c.tokens] for c in comps}
+
+    single, toks_1 = serve(None, lanes_per_device, 1)
+    sharded, toks_n = serve(make_sim_mesh(devices),
+                            lanes_per_device * devices, devices)
+    scaling = {
+        "single": single,
+        "sharded": sharded,
+        "lane_scale": sharded["n_lanes"] / single["n_lanes"],
+        "scaling_efficiency": sharded["aggregate_tok_s"]
+                              / max(single["aggregate_tok_s"], 1e-9)
+                              / devices,
+        "completions_bitequal": bool(toks_n == toks_1),
+    }
+
+    # --- tier placement: serialized slices vs concurrent slices ------
+    slm = make_slm(params, TINY)
+    slm.round_tokens = round_tokens
+    slm.lane_budget = 4 * lanes_per_device
+    p_items = eval_items(TINY, "arith")[:n_items_placement]
+    tiers = [cm.Tier(slm=slm, tau=UNREACHABLE_TAU, mode="FCV", k=k),
+             cm.Tier(slm=slm, tau=UNREACHABLE_TAU, mode="FCV", k=k)]
+    terminal = cm.TerminalTier(llm=common.oracle_llm())
+    key = jax.random.PRNGKey(5)
+    half = devices // 2
+    devs = jax.devices()
+    placement = {0: devs[:half], 1: devs[half:devices]}
+
+    walls_seq, walls_pipe = [], []
+    for _ in range(2):             # first pass pays compiles; min-of-2
+        t0 = time.time()
+        out_seq, tier_stats = cm.run_cascade(tiers, terminal, p_items, key,
+                                             stream_early_stop=True,
+                                             return_stats=True,
+                                             placement=placement)
+        walls_seq.append(time.time() - t0)
+    for _ in range(2):
+        out_pipe, ps = cm.run_cascade_pipelined(tiers, terminal, p_items,
+                                                key, placement=placement)
+        walls_pipe.append(ps.wall_s)
+    wall_seq, wall_pipe = min(walls_seq), min(walls_pipe)
+    s_seq = cm.summarize(out_seq, len(tiers))
+    s_pipe = cm.summarize(out_pipe, len(tiers))
+    seq_rounds = sum(s.rounds for s in tier_stats if s is not None)
+    placement_row = {
+        "sequential": {
+            "wall_s": wall_seq,
+            "rounds": int(seq_rounds),
+            "accuracy": s_seq["accuracy"],
+            "tier_histogram": s_seq["tier_histogram"],
+        },
+        "pipelined": {
+            "wall_s": wall_pipe,
+            "rounds": int(ps.rounds),
+            "accuracy": s_pipe["accuracy"],
+            "tier_histogram": s_pipe["tier_histogram"],
+            "overlap_fraction": ps.overlap_fraction,
+            "n_loops": int(ps.n_loops),
+        },
+        "speedup": wall_seq / max(wall_pipe, 1e-9),
+        "rounds_cut": 1.0 - ps.rounds / max(seq_rounds, 1),
+        "tier_devices": [half, devices - half],
+        "equal_accuracy": bool(
+            s_seq["accuracy"] == s_pipe["accuracy"]
+            and s_seq["tier_histogram"] == s_pipe["tier_histogram"]),
+        "host_cores": int(os.cpu_count() or 1),
+        "wall_gate_armed": bool((os.cpu_count() or 1) >= 2),
+    }
+    return {"arith": {"scaling": scaling, "placement": placement_row}}
+
+
+def format_sharded(table, devices: int) -> str:
+    row = table["arith"]
+    sc, pl = row["scaling"], row["placement"]
+    lines = [f"sharded serving on {devices} simulated devices",
+             f"{'':12s} {'devices':>8s} {'lanes':>6s} {'wall':>7s} "
+             f"{'rounds':>7s} {'gen':>6s} {'tok/s/dev':>10s} "
+             f"{'agg tok/s':>10s}"]
+    for name in ("single", "sharded"):
+        r = sc[name]
+        lines.append(
+            f"{name:12s} {r['n_devices']:8d} {r['n_lanes']:6d} "
+            f"{r['wall_s']:6.2f}s {r['rounds']:7d} "
+            f"{r['generated_tokens']:6d} {r['tok_s_per_device']:10.1f} "
+            f"{r['aggregate_tok_s']:10.1f}")
+    lines.append(
+        f"lane scale: {sc['lane_scale']:.1f}x  scaling efficiency: "
+        f"{sc['scaling_efficiency']:.0%}  completions bit-equal: "
+        f"{sc['completions_bitequal']}")
+    seq, pipe = pl["sequential"], pl["pipelined"]
+    lines.append(
+        f"tier placement ({pl['tier_devices'][0]}+{pl['tier_devices'][1]} "
+        f"devices): serialized {seq['wall_s']:.2f}s / {seq['rounds']} "
+        f"rounds vs concurrent {pipe['wall_s']:.2f}s / {pipe['rounds']} "
+        f"rounds  speedup {pl['speedup']:.2f}x"
+        f"{'' if pl['wall_gate_armed'] else ' (wall gate unarmed: 1 core)'}"
+        f"  overlap {pipe['overlap_fraction']:.0%}  acc= "
+        f"{'yes' if pl['equal_accuracy'] else 'NO'}")
+    return "\n".join(lines)
+
+
+# ----------------------------------------------------------------------
 # Speculative cascade: rejected-tier drafts verified by the next tier
 # ----------------------------------------------------------------------
 
@@ -780,12 +978,34 @@ if __name__ == "__main__":
                     help="smoke block-granular preemption with host KV "
                          "offload: a 2-lane pool served with and without "
                          "auto_preempt against an ample-pool reference")
+    ap.add_argument("--sharded", action="store_true",
+                    help="smoke multi-device sharded serving on simulated "
+                         "host devices: lane scaling at bit-equal "
+                         "completions + cascade tier placement (serialized "
+                         "vs concurrent slices)")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="simulated device count for --sharded (default 4)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the result table as JSON (CI artifact)")
     args = ap.parse_args()
     if args.share_prefix and not args.paged:
         ap.error("--share-prefix requires --paged")
-    if args.preempt:
+    if args.sharded:
+        if not args.smoke or args.paged or args.pipeline_cascade \
+                or args.chunked_serve or args.spec_cascade or args.preempt:
+            ap.error("--sharded is a standalone --smoke benchmark")
+        if args.devices < 2 or args.devices % 2:
+            ap.error("--devices must be an even count >= 2")
+        # must run before the first jax device query locks the backend
+        from repro.launch.mesh import ensure_sim_devices
+        ensure_sim_devices(args.devices)
+        t = run_sharded_smoke(devices=args.devices)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"sharded_smoke": True, "smoke": True,
+                           "devices": args.devices, "table": t}, f, indent=2)
+        print(format_sharded(t, args.devices))
+    elif args.preempt:
         if not args.smoke or args.paged or args.pipeline_cascade \
                 or args.chunked_serve or args.spec_cascade:
             ap.error("--preempt is a standalone --smoke benchmark")

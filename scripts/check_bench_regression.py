@@ -35,7 +35,17 @@ cost metric regressed beyond its tolerance:
     invariants: the tiny pool must force at least one offload/resume
     cycle, preempted completions must be bit-equal to the ample-pool
     reference, and the preempting path must block admission strictly
-    less often than the same pool without offload.
+    less often than the same pool without offload;
+  * the sharded JSON (``--sharded``) carries its own baseline-free
+    invariants: the mesh run must carry >= 3x the single-device lane
+    count at bit-equal completions, and the tier-placement phase must
+    keep accuracy/tier histogram equal with both slices' rounds
+    genuinely in flight together (``overlap_fraction > 0`` across the
+    two un-fused loops); the strict wall win of the concurrent
+    placement over the serialized one additionally gates only when the
+    producing rig could physically parallelize (``wall_gate_armed`` —
+    simulated devices timeshare the host's cores, so a single-core
+    host tops out at wall parity).
 
 Usage:
     python scripts/check_bench_regression.py CURRENT.json BASELINE.json
@@ -226,6 +236,51 @@ def check_preempt_invariants(cur):
     return failures
 
 
+def check_shard_invariants(cur):
+    """Baseline-free acceptance checks for --sharded JSONs: the mesh
+    run must scale lane count >= 3x at bit-equal completions, and the
+    tier-placement phase must show the escalation tier's slice decoding
+    concurrently with tier 0's (overlap > 0 across the two un-fused
+    loops) at equal accuracy.  The strict wall win over the serialized
+    placement gates only when the producing rig had >= 2 host cores
+    (``wall_gate_armed``) — on a single core both placements do the
+    same total compute, so wall parity is the ceiling there."""
+    failures = []
+    for bench, row in cur.get("table", {}).items():
+        sc, pl = row.get("scaling"), row.get("placement")
+        if not (isinstance(sc, dict) and isinstance(pl, dict)):
+            continue
+        if not sc.get("completions_bitequal", False):
+            failures.append(f"{bench}: sharded completions diverged from "
+                            "the single-device oracle (bit-identity "
+                            "violated)")
+        if not sc.get("lane_scale", 0) >= 3:
+            failures.append(
+                f"{bench}: sharded lane scale {sc.get('lane_scale', 0):.1f}x "
+                "below the 3x aggregate-lane bar")
+        if not pl.get("equal_accuracy", False):
+            failures.append(f"{bench}: placed-pipelined accuracy/tier "
+                            "histogram diverged from the serialized "
+                            "placement")
+        pipe = pl.get("pipelined", {})
+        if not pipe.get("n_loops", 0) == 2:
+            failures.append(
+                f"{bench}: disjoint tier slices ran {pipe.get('n_loops', 0)} "
+                "host loop(s), expected 2 (placement did not un-fuse)")
+        if not pipe.get("overlap_fraction", 0) > 0:
+            failures.append(
+                f"{bench}: zero overlap — the escalation tier's slice never "
+                "decoded while tier 0's slice had rounds in flight")
+        seq = pl.get("sequential", {})
+        if pl.get("wall_gate_armed", False) and \
+                not pipe.get("wall_s", 0) < seq.get("wall_s", 0):
+            failures.append(
+                f"{bench}: concurrent placement wall {pipe.get('wall_s', 0):.2f}s "
+                f"not strictly below serialized {seq.get('wall_s', 0):.2f}s "
+                f"on a {pl.get('host_cores')}-core rig")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh smoke JSON from this CI run")
@@ -256,6 +311,8 @@ def main():
         failures += check_spec_invariants(cur)
     if cur.get("preempt_smoke"):
         failures += check_preempt_invariants(cur)
+    if cur.get("sharded_smoke"):
+        failures += check_shard_invariants(cur)
 
     width = max((len(r[0]) for r in rows), default=20)
     print(f"{args.current} vs {args.baseline}:")

@@ -81,10 +81,50 @@ class MultiOutcome:
     arol: int                    # overhead latency if terminal answered
 
 
+def _apply_placement(tiers: Sequence[Tier],
+                     placement: "Optional[Dict[int, list]]") -> List[Tier]:
+    """Resolve ``placement`` — tier index -> explicit device slice — into
+    a tier chain whose SLMs carry per-tier meshes (``SLM.mesh``), so each
+    placed tier's scheduler decodes under shard_map on exactly its slice
+    (launch/mesh.make_tier_mesh).  Distinct tiers placed on DISJOINT
+    slices therefore decode concurrently — the device-level overlap the
+    pipelined driver's split-phase host loop exposes.
+
+    Placement changes SLM object identity, which is what keys loop
+    fusion: two tiers sharing one SLM *and* one slice still fuse onto a
+    single loop (the replaced SLM is memoized per (slm, slice) pair),
+    while the same SLM placed on two different slices deliberately
+    un-fuses into two loops with duplicated params — concurrency bought
+    with memory.  Unplaced tiers are left untouched.
+    """
+    if not placement:
+        return list(tiers)
+    from repro.launch.mesh import make_tier_mesh
+    for t_i in placement:
+        if not 0 <= t_i < len(tiers):
+            raise ValueError(f"placement names tier {t_i} but the chain "
+                             f"has {len(tiers)} tiers")
+    memo: Dict[tuple, SLM] = {}
+    out: List[Tier] = []
+    for t_i, tier in enumerate(tiers):
+        devs = placement.get(t_i)
+        if devs is None:
+            out.append(tier)
+            continue
+        mkey = (id(tier.slm), tuple(id(d) for d in devs))
+        slm = memo.get(mkey)
+        if slm is None:
+            slm = dataclasses.replace(tier.slm, mesh=make_tier_mesh(devs))
+            memo[mkey] = slm
+        out.append(dataclasses.replace(tier, slm=slm))
+    return out
+
+
 def run_cascade(tiers: Sequence[Tier], terminal: TerminalTier,
                 items: Sequence[TaskItem], key,
                 stream_early_stop: bool = False,
-                return_stats: bool = False):
+                return_stats: bool = False,
+                placement: "Optional[Dict[int, list]]" = None):
     """Drive every question through the tier chain, one tier at a time
     (each tier is a *barrier*: tier i+1 starts only after tier i has
     drained — see :func:`run_cascade_pipelined` for the overlapped
@@ -102,7 +142,14 @@ def run_cascade(tiers: Sequence[Tier], terminal: TerminalTier,
     With ``return_stats=True`` returns ``(outcomes, tier_stats)`` where
     ``tier_stats[i]`` is tier i's serving :class:`SchedStats` (None for
     a tier that ran in simulation mode or had no survivors).
+
+    ``placement`` (tier index -> device slice, see
+    :func:`_apply_placement`) pins each placed tier's decode to its own
+    mesh slice.  Under this driver's per-tier barriers the slices run
+    back-to-back — it is the *serialized* placement baseline the
+    pipelined driver's overlap is measured against.
     """
+    tiers = _apply_placement(tiers, placement)
     n = len(items)
     prompt_toks = [len(format_prompt(it)) for it in items]
     cost = [0.0] * n
@@ -198,7 +245,8 @@ class PipelineStats:
 
 def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
                           items: Sequence[TaskItem], key,
-                          draft_rejected: bool = False
+                          draft_rejected: bool = False,
+                          placement: "Optional[Dict[int, list]]" = None
                           ) -> "tuple[List[MultiOutcome], PipelineStats]":
     """The cascade with *pipelined* tiers: each question's tier-(i+1)
     vote group is submitted the moment tier i's ``VoteEarlyStop``
@@ -235,8 +283,17 @@ def run_cascade_pipelined(tiers: Sequence[Tier], terminal: TerminalTier,
     round counts and wall-clock drop, in proportion to inter-tier
     agreement on the escalated questions.
 
+    ``placement`` (tier index -> device slice, see
+    :func:`_apply_placement`) pins each placed tier to its own mesh
+    slice.  Combined with this driver's split-phase host loop, tiers on
+    disjoint slices decode *device*-concurrently — tier 0's next round
+    and the escalation tier's verify round are genuinely in flight at
+    once, not merely interleaved on one device — so wall-clock drops
+    strictly below :func:`run_cascade` with the same placement.
+
     Returns ``(outcomes, PipelineStats)``.
     """
+    tiers = _apply_placement(tiers, placement)
     n = len(items)
     kmax = max((t.k for t in tiers), default=1)
     prompt_toks = [len(format_prompt(it)) for it in items]

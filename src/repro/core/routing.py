@@ -49,6 +49,11 @@ class SLM:
     #                                      queued draft tokens (e.g. a
     #                                      rejected tier's completion) up to
     #                                      k per round (serving/scheduler)
+    mesh: "object | None" = None         # jax Mesh: shard lanes/KV over its
+    #                                      'data' axis and pin decode to its
+    #                                      devices (cascade tier placement —
+    #                                      launch/mesh.make_tier_mesh); the
+    #                                      serving loop requires model=1
 
 
 @dataclasses.dataclass
@@ -91,6 +96,12 @@ def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
     while big ones still compile once per width bucket."""
     n_lanes = pick_bucket(min(max(n_requests, 1), slm.lane_budget),
                           make_buckets(slm.lane_budget, 1))
+    if slm.mesh is not None:
+        # sharded lanes: the pool splits evenly over the mesh's data
+        # axis, and every shard needs >= 2 lanes (the scheduler's
+        # size-1 batch-dim rule), so round the bucket up accordingly
+        s = slm.mesh.shape["data"]
+        n_lanes = max(2 * s, -(-n_lanes // s) * s)
     return Scheduler(slm.params, slm.cfg, slm.tokenizer, slm.gcfg,
                      n_lanes=n_lanes, round_tokens=slm.round_tokens,
                      max_prompt_len=slm.max_prompt_len, paged=slm.paged,
@@ -98,7 +109,7 @@ def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
                      share_prefix=slm.share_prefix,
                      chunk_size=slm.chunk_size,
                      prefill_budget=slm.prefill_budget,
-                     spec_k=slm.spec_k)
+                     spec_k=slm.spec_k, mesh=slm.mesh)
 
 
 def batch_generate(slm: SLM, prompts: Sequence[str], key):

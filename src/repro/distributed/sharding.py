@@ -191,6 +191,34 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int, seq_len: int = 0,
     return spec
 
 
+def serving_cache_specs(cache) -> dict:
+    """PartitionSpec dict for a SERVING-loop decode cache (the dicts
+    built by model.init_decode_state / init_paged_decode_state), lane-
+    (data-)parallel for the sharded serving path (serving/scheduler.py).
+
+    Dense caches shard the lane axis: ``pos``/``cache_pos`` lead with
+    it, every layer-stacked leaf (k, v, scales, conv, ssm) carries it
+    second (axis 0 is layers).  Paged caches shard the BLOCK axis of
+    k/v instead — the pool is built as S equal per-shard slabs (see
+    Scheduler ``mesh=``), so splitting axis 1 over ``data`` hands each
+    shard exactly its own slab — while ``block_tables`` shards over
+    lanes and ``kpos`` (the shared position ruler) stays replicated.
+    Under shard_map these specs make the decode hot path collective-
+    free: every lane reads only its own shard's blocks.
+    """
+    spec = {}
+    for name in cache:
+        if name == "pos":
+            spec[name] = P("data")
+        elif name == "kpos":
+            spec[name] = P()
+        elif name in ("cache_pos", "block_tables"):
+            spec[name] = P("data", None)
+        else:                   # layer-stacked: k/v/k_scale/v_scale/conv/ssm
+            spec[name] = P(None, "data")
+    return spec
+
+
 def named(mesh: Mesh, spec_tree):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
                         is_leaf=lambda x: isinstance(x, P))

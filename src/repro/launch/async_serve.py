@@ -33,6 +33,13 @@ Preemption composes for free: run the loop with ``auto_preempt=True``
 and a cold interactive session's KV pages migrate to host RAM under
 pressure instead of pinning the pool (see serving/scheduler.py) —
 because resume is bit-exact, the stream's tokens are unaffected.
+
+Device placement is surfaced like ``launch/serve.py`` surfaces it:
+``describe()`` returns the startup banner (device mesh + lanes/shard
+when the Scheduler serves sharded over a data mesh — log it once
+before accepting clients) and ``close()`` returns the final summary
+dict carrying that banner alongside rounds driven, requests served,
+and the loop's closing stats.
 """
 
 from __future__ import annotations
@@ -124,6 +131,7 @@ class AsyncServer:
 
     def __init__(self, sched: Scheduler, key, stop_policy=None,
                  ttft_burst: int = 2, fair: bool = True):
+        self.sched = sched
         self.loop = sched.loop(key, stop_policy=stop_policy)
         self.loop.on_tokens = self._on_tokens
         self.n_lanes = sched.n_lanes
@@ -168,15 +176,30 @@ class AsyncServer:
         client.queue.put_nowait(_DONE)
         self._wake.set()
 
-    async def close(self) -> None:
+    def describe(self) -> str:
+        """Startup banner line: device mesh plus lane-pool sharding —
+        an API server should log this once before accepting clients so
+        the serve log records where (and how sharded) it ran."""
+        from repro.launch.mesh import describe_mesh
+        line = describe_mesh(self.sched.mesh)
+        if self.sched.mesh is not None:
+            line += (f"; lane pool sharded data={self.sched.n_shards} "
+                     f"({self.sched.lanes_per_shard} lanes/shard)")
+        return line
+
+    async def close(self) -> dict:
         """Stop the driver after the current round and close the loop
-        (callers should drain their streams first)."""
+        (callers should drain their streams first).  Returns the final
+        summary: the device/mesh banner, rounds driven, requests
+        served, and the loop's closing :class:`ServeStats`."""
         self._closing = True
         self._wake.set()
         if self._driver is not None:
             await self._driver
             self._driver = None
-        self.loop.close()
+        stats = self.loop.close()
+        return {"devices": self.describe(), "rounds": self.rounds,
+                "served": len(self.results), "stats": stats}
 
     # -- the driver coroutine ------------------------------------------
     async def start(self) -> None:

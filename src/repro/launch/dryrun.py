@@ -1,6 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch x input-shape) pair on
 the production meshes, with no device allocation (ShapeDtypeStruct).
 
@@ -24,6 +21,7 @@ Usage:
 import argparse
 import dataclasses
 import json
+import os
 import time
 import traceback
 
@@ -451,6 +449,12 @@ def run_one(arch: str, shape_name: str, mesh_kind: str,
 
 
 def main():
+    # the CLI lowers against 512 simulated host devices; must run before
+    # anything initializes the jax backend (argparse below does not).
+    # Importing this module stays device-free so tests can use the step
+    # builders on whatever mesh the process already has.
+    from repro.launch.mesh import ensure_sim_devices
+    ensure_sim_devices(512)
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -1,14 +1,22 @@
-"""Production meshes (TPU v5e target).
+"""Production meshes (TPU v5e target) and simulated host meshes.
 
 Defined as FUNCTIONS so importing this module never touches jax device
 state; the dry-run sets XLA_FLAGS before calling them.
+:func:`ensure_sim_devices` is the one sanctioned way to request N
+simulated host devices (the ``--xla_force_host_platform_device_count``
+trick) — call it before anything initializes the jax backend and the
+env-var ordering footgun disappears behind one clear error message.
 
 Hardware constants used by the roofline analysis live here too.
 """
 
 from __future__ import annotations
 
+import os
+
 import jax
+
+_SIM_FLAG = "--xla_force_host_platform_device_count"
 
 
 def _axis_type_kwargs(n) -> dict:
@@ -30,6 +38,89 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_host_mesh():
     """Single-device mesh for CPU smoke testing of the pjit code path."""
     return jax.make_mesh((1, 1), ("data", "model"), **_axis_type_kwargs(2))
+
+
+def ensure_sim_devices(n: int) -> None:
+    """Request at least ``n`` simulated host (CPU) devices.
+
+    Extracted from launch/dryrun.py, which proved the trick: setting
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+    first backend query makes the CPU client expose N devices, so the
+    whole sharded serving path runs (and is CI-gated) without an
+    accelerator in sight.  The flag only takes effect if the backend
+    has not been initialized yet — the classic footgun is an earlier
+    ``jax.devices()`` (or any op) locking the device count at 1.  This
+    helper is safe to call any time BEFORE that first touch (merely
+    importing jax does not initialize the backend); afterwards it
+    raises with an actionable message instead of silently running
+    single-device.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    cur = 0
+    for tok in flags.split():
+        if tok.startswith(_SIM_FLAG + "="):
+            cur = int(tok.split("=", 1)[1])
+    if cur < n:
+        flags = " ".join(t for t in flags.split()
+                         if not t.startswith(_SIM_FLAG + "="))
+        os.environ["XLA_FLAGS"] = (flags + f" {_SIM_FLAG}={n}").strip()
+    if jax.local_device_count() < n:     # initializes the backend (now)
+        raise RuntimeError(
+            f"need {n} simulated host devices but the jax backend already "
+            f"initialized with {jax.local_device_count()}; call "
+            "ensure_sim_devices() before the first jax device query "
+            "(tests get this from tests/conftest.py)")
+
+
+def make_sim_mesh(data: int, model: int = 1):
+    """``(data, model)`` mesh over the first ``data*model`` host devices.
+
+    The serving loop's sharded mode (serving/scheduler.py) wants a
+    deterministic device order — ``jax.devices()[:n]`` — rather than
+    whatever ``jax.make_mesh`` picks, so cascade tier placement can
+    carve DISJOINT slices out of the same device list (see
+    :func:`make_tier_mesh`).  Call :func:`ensure_sim_devices` first
+    when running on CPU.
+    """
+    need = data * model
+    devs = jax.devices()
+    if len(devs) < need:
+        raise RuntimeError(
+            f"make_sim_mesh({data}, {model}) needs {need} devices but only "
+            f"{len(devs)} exist; on CPU call ensure_sim_devices({need}) "
+            "before the backend initializes")
+    import numpy as np
+    return jax.sharding.Mesh(
+        np.asarray(devs[:need]).reshape(data, model), ("data", "model"))
+
+
+def make_tier_mesh(devices):
+    """1-wide-model mesh over an explicit device slice — the unit of
+    cascade tier placement (core/cascade_multi.py ``placement=``): each
+    tier's scheduler decodes under shard_map on exactly these devices,
+    so tiers on disjoint slices decode concurrently."""
+    import numpy as np
+    devices = list(devices)
+    if not devices:
+        raise ValueError("make_tier_mesh: empty device slice")
+    return jax.sharding.Mesh(
+        np.asarray(devices).reshape(len(devices), 1), ("data", "model"))
+
+
+def describe_mesh(mesh) -> str:
+    """One-line device banner for launcher startup/summary output:
+    axis sizes, device count + platform, and the device ids covered —
+    so a serve log always records WHERE it ran (and tier placement
+    logs can name their slices).  ``None`` means no mesh: whatever
+    single device jax puts arrays on."""
+    if mesh is None:
+        d = jax.devices()[0]
+        return f"single device ({d.platform}:{d.id})"
+    axes = " ".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)
+    devs = list(mesh.devices.ravel())
+    ids = ",".join(str(d.id) for d in devs)
+    return (f"mesh {axes} over {len(devs)} {devs[0].platform} "
+            f"device(s) [{ids}]")
 
 
 def batch_axes(mesh) -> tuple:

@@ -14,6 +14,14 @@ context, keeping the pjit path exercised.
       --requests 8 --lanes 4 --new-tokens 16 --round-tokens 8 \
       --arrival-rate 4
 
+With ``--sim-devices N`` (requires ``--smoke``), the lane pool and the
+paged KV pool are split into N per-device shards over a simulated host
+mesh (``launch/mesh.ensure_sim_devices``) and decode rounds run under
+shard_map — the CPU-only way to drive the multi-device serving path
+end to end.  The startup banner and the final summary report the mesh
+shape, device ids, lanes per shard, and per-shard pool peaks, so a
+serve log always records where (and how sharded) it ran.
+
 The summary reports per-request latency — time-to-first-token and
 time-to-decision (submit -> finalize) mean/p50/p95 — alongside the
 aggregate throughput numbers, because under streaming arrivals the
@@ -52,7 +60,9 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, smoke_variant
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (describe_mesh, ensure_sim_devices,
+                               make_host_mesh, make_production_mesh,
+                               make_sim_mesh)
 from repro.models import model as model_lib
 from repro.serving.batch import GenConfig
 from repro.serving.scheduler import Request, RequestGroup, Scheduler
@@ -101,6 +111,11 @@ def main():
                          "coldest lane's KV blocks to host RAM and hand "
                          "its lane to the waiting request; the parked "
                          "request resumes bit-identically when blocks free")
+    ap.add_argument("--sim-devices", type=int, default=None,
+                    help="with --smoke: serve sharded over this many "
+                         "simulated host devices — lanes and KV pools "
+                         "split per-shard, decode rounds under shard_map "
+                         "(must divide --lanes, >= 2 lanes per shard)")
     args = ap.parse_args()
     if args.share_prefix and not args.paged:
         ap.error("--share-prefix requires --paged")
@@ -108,11 +123,18 @@ def main():
         ap.error("--prefill-budget requires --chunk-size")
     if (args.preempt or args.pool_blocks is not None) and not args.paged:
         ap.error("--preempt/--pool-blocks require --paged")
+    if args.sim_devices is not None and not args.smoke:
+        ap.error("--sim-devices requires --smoke (the production mesh "
+                 "shards the model axis, not the lane pool)")
+    if args.sim_devices is not None:
+        # must land before anything touches the jax backend
+        ensure_sim_devices(args.sim_devices)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
-        mesh = make_host_mesh()
+        mesh = (make_sim_mesh(args.sim_devices)
+                if args.sim_devices is not None else make_host_mesh())
     else:
         mesh = make_production_mesh()
 
@@ -150,7 +172,15 @@ def main():
                       chunk_size=args.chunk_size,
                       prefill_budget=args.prefill_budget,
                       pool_blocks=args.pool_blocks,
-                      auto_preempt=args.preempt)
+                      auto_preempt=args.preempt,
+                      mesh=mesh if args.sim_devices is not None else None)
+
+    print(f"devices: {describe_mesh(mesh)}")
+    if sched.mesh is not None:
+        print(f"  lane pool sharded data={sched.n_shards}: "
+              f"{sched.lanes_per_shard} lanes/shard"
+              + (f", {sched.pool_blocks} pool blocks/shard"
+                 if args.paged else ""))
 
     comps = []
     with mesh:
@@ -196,13 +226,21 @@ def main():
           f"p50 {_pct(ttft, 50) * 1e3:.0f}ms p95 {_pct(ttft, 95) * 1e3:.0f}ms"
           f" | time-to-decision mean {np.mean(ttd) * 1e3 if ttd else 0:.0f}ms"
           f" p50 {_pct(ttd, 50) * 1e3:.0f}ms p95 {_pct(ttd, 95) * 1e3:.0f}ms")
+    if sched.mesh is not None:
+        print(f"  {describe_mesh(mesh)}: {sched.n_shards} lane-pool "
+              f"shard(s) x {sched.lanes_per_shard} lanes")
     if args.paged:
+        pools = sched.pools or [sched.pool]
         print(f"  paged cache: peak {stats.peak_blocks_in_use}/"
               f"{stats.pool_blocks} blocks "
               f"({stats.peak_cache_bytes / 2**20:.2f} MiB vs dense "
               f"{stats.dense_cache_bytes / 2**20:.2f} MiB), "
               f"admission blocked {stats.admission_blocked}x, "
-              f"peak reserved {sched.pool.peak_reserved}")
+              f"peak reserved {max(p.peak_reserved for p in pools)}")
+        if len(pools) > 1:
+            print("  per-shard peaks: " + ", ".join(
+                f"s{i}={p.peak_in_use}/{sched.pool_blocks}"
+                for i, p in enumerate(pools)))
         # loop.close() runs BlockPool.leak_report(): any block still
         # held or reserved after the last lane drained is a serving bug
         print("  pool leak check: "
@@ -214,13 +252,14 @@ def main():
               f"{stats.host_blocks_peak} blocks, "
               f"{stats.offload_bytes / 2**20:.2f} MiB KV offloaded")
     if args.share_prefix:
-        pool = sched.pool
+        pools = sched.pools or [sched.pool]
         print(f"  prefix sharing: {stats.shared_lanes} lanes rode a "
               f"shared prefill, {stats.cow_copies} CoW block clones, "
               f"prefix cache {stats.prefix_hits} hits "
               f"({stats.prefix_hit_blocks} blocks reused); "
-              f"pool holds registered {pool.shared_holds}, "
-              f"end state in_use={pool.in_use} reserved={pool.reserved}")
+              f"pool holds registered {sum(p.shared_holds for p in pools)}, "
+              f"end state in_use={sum(p.in_use for p in pools)} "
+              f"reserved={sum(p.reserved for p in pools)}")
     if comps:
         first = min(comps, key=lambda c: c.uid)
         print(f"sample request {first.uid} tokens:",

@@ -64,6 +64,11 @@ from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving.sampler import sample_tokens_salted
 
+try:                                    # newer JAX exports it at top level
+    from jax import shard_map as _shard_map
+except ImportError:                     # older releases: experimental module
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 @dataclasses.dataclass(frozen=True)
 class GenConfig:
@@ -357,6 +362,129 @@ def decode_round_spec(params, cfg: ModelConfig, gcfg: GenConfig, cache,
                                        cache["cache_pos"])
     return (cache, logits, done, spec_toks, accept.astype(jnp.int32),
             jnp.swapaxes(toks, 0, 1))
+
+
+# ----------------------------------------------------------------------
+# Sharded (multi-device) decode rounds
+# ----------------------------------------------------------------------
+#
+# The scheduler's sharded mode (Scheduler(mesh=...)) runs the SAME round
+# bodies under shard_map over the mesh's 1-wide-model "data" axis: each
+# shard steps its own lanes_per_shard slice of the lane batch against
+# its own slab of the KV pool (distributed/sharding.py
+# serving_cache_specs), with params replicated via the param-spec rules.
+# The body is data-parallel and collective-free, and per-request PRNG
+# salting makes each lane's sample stream depend only on (master key,
+# request id, token index) — so the sharded round is BIT-IDENTICAL to
+# the single-device one as long as the per-shard batch keeps the >=2-row
+# geometry the oracle uses (size-1 batch dims lower reductions
+# differently).  Tensor parallelism over a model>1 axis is deliberately
+# NOT routed through here: the round body has no collectives, so a
+# model-sharded shard_map would silently compute garbage.  Model-axis TP
+# composes at the GSPMD level instead — device_put the params to
+# param_specs(...) shardings and call the plain jitted rounds
+# (tests/test_sharded_serving.py pins that path down to token equality
+# and logits-allclose; see docs/architecture.md for why allclose).
+
+# replication checking was renamed check_rep -> check_vma across JAX
+# releases; disable it under whichever name this JAX understands.
+import inspect as _inspect
+_SHARD_MAP_CHECK = {
+    ("check_vma" if "check_vma" in _inspect.signature(_shard_map).parameters
+     else "check_rep"): False}
+
+_SHARDED_FNS: dict = {}
+_SHARDED_PARAMS: dict = {}
+
+
+def _params_on_mesh(mesh, cfg: ModelConfig, params):
+    """device_put the weights to their param-spec shardings ONCE per
+    (mesh, params) pair.  Without this every sharded round would
+    re-broadcast the weights from their home device at call time, and
+    two cascade tiers placed on disjoint slices would serialize through
+    that one device's transfer path instead of decoding concurrently.
+    The memo holds a reference to the original params so the id() key
+    can never be recycled by a new object."""
+    key = (mesh, id(params))
+    hit = _SHARDED_PARAMS.get(key)
+    if hit is not None:
+        return hit[1]
+    from repro.distributed import sharding as dist_sharding
+    pspec = dist_sharding.param_specs(cfg, params, mesh)
+    placed = jax.device_put(params, dist_sharding.named(mesh, pspec))
+    _SHARDED_PARAMS[key] = (params, placed)
+    return placed
+
+
+def _sharded_round_fn(mesh, cfg: ModelConfig, gcfg: GenConfig, rounds: int,
+                      cache_keys: tuple, spec: bool, params):
+    """Build (and memoize) the jitted shard_map wrapper for one
+    (mesh, model, gen-config, round length, cache layout) combination —
+    the sharded analogue of the jit cache the plain rounds get from
+    their static argnames."""
+    key = (mesh, cfg, gcfg, rounds, cache_keys, spec)
+    fn = _SHARDED_FNS.get(key)
+    if fn is not None:
+        return fn
+    if mesh.shape.get("model", 1) != 1:
+        raise ValueError(
+            "sharded decode rounds are data-parallel only (model axis "
+            "must be 1): the round body has no collectives, so a "
+            "model-sharded shard_map would compute garbage.  Shard the "
+            "params with distributed.sharding.param_specs and call the "
+            "plain rounds for tensor parallelism.")
+    from jax.sharding import PartitionSpec as P
+    from repro.distributed import sharding as dist_sharding
+    pspec = dist_sharding.param_specs(cfg, params, mesh)
+    cache_spec = dist_sharding.serving_cache_specs(dict.fromkeys(cache_keys))
+    if spec:
+        def body(params, cache, cur_logits, done, key, salts, steps,
+                 draft_toks, draft_len):
+            return decode_round_spec.__wrapped__(
+                params, cfg, gcfg, cache, cur_logits, done, key, salts,
+                steps, draft_toks, draft_len, rounds)
+        in_specs = (pspec, cache_spec, P("data"), P("data"), P(),
+                    P("data"), P("data"), P("data"), P("data"))
+        out_specs = (cache_spec, P("data"), P("data"), P("data"),
+                     P("data"), P("data"))
+    else:
+        def body(params, cache, cur_logits, done, key, salts, steps):
+            return decode_round.__wrapped__(
+                params, cfg, gcfg, cache, cur_logits, done, key, salts,
+                steps, rounds)
+        in_specs = (pspec, cache_spec, P("data"), P("data"), P(),
+                    P("data"), P("data"))
+        out_specs = (cache_spec, P("data"), P("data"), P("data"))
+    fn = jax.jit(_shard_map(body, mesh=mesh, in_specs=in_specs,
+                            out_specs=out_specs, **_SHARD_MAP_CHECK))
+    _SHARDED_FNS[key] = fn
+    return fn
+
+
+def sharded_decode_round(mesh, params, cfg: ModelConfig, gcfg: GenConfig,
+                         cache, cur_logits, done, key, salts, steps,
+                         rounds: int):
+    """:func:`decode_round` under shard_map over ``mesh``'s data axis.
+    Same signature plus the leading mesh; bit-identical outputs."""
+    fn = _sharded_round_fn(mesh, cfg, gcfg, rounds, tuple(sorted(cache)),
+                           False, params)
+    params = _params_on_mesh(mesh, cfg, params)
+    return fn(params, cache, cur_logits, done, key, salts, steps)
+
+
+def sharded_decode_round_spec(mesh, params, cfg: ModelConfig,
+                              gcfg: GenConfig, cache, cur_logits, done, key,
+                              salts, steps, draft_toks, draft_len,
+                              rounds: int):
+    """:func:`decode_round_spec` under shard_map over ``mesh``'s data
+    axis.  Same signature plus the leading mesh; bit-identical outputs
+    (the verify pass reads the cache's LOCAL block tables, which the
+    sharded scheduler maintains — see scheduler ``_local_tables``)."""
+    fn = _sharded_round_fn(mesh, cfg, gcfg, rounds, tuple(sorted(cache)),
+                           True, params)
+    params = _params_on_mesh(mesh, cfg, params)
+    return fn(params, cache, cur_logits, done, key, salts, steps,
+              draft_toks, draft_len)
 
 
 # cache entries stacked per layer carry the lane axis at position 1

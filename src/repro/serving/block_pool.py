@@ -128,17 +128,28 @@ class BlockPool:
 
     TRASH = 0    # reserved block id: writes-to-nowhere land here
 
-    def __init__(self, n_blocks: int, block_size: int):
+    def __init__(self, n_blocks: int, block_size: int, id_base: int = 0):
         if n_blocks < 1:
             raise ValueError("pool needs at least one allocatable block")
+        if id_base < 0:
+            raise ValueError(f"id_base must be >= 0, got {id_base}")
         self.n_blocks = n_blocks
         self.block_size = block_size
+        # Sharded serving gives each data shard its own pool over a
+        # disjoint slab of the device block axis: shard s's pool hands
+        # out ids ``id_base+1 .. id_base+n_blocks`` (id_base =
+        # s * (n_blocks + 1), row id_base being that shard's local
+        # trash block).  Ids are then globally unique, so the
+        # scheduler's block tables and the GSPMD insert/gather/scatter
+        # call sites never need to know which shard owns a block.
+        self.id_base = id_base
         # LIFO free-list: recently freed (still-warm) blocks are reused
-        # first.  Ids 1..n_blocks; 0 is the trash block, never listed.
+        # first.  Ids base+1..base+n_blocks; 0 is the trash block (and
+        # every per-shard base row), never listed.
         # The set mirrors the list so free() can reject double-frees —
         # the one misuse that would corrupt the cache silently (one
         # physical block alloc'd to two live lanes) instead of erroring.
-        self._free: List[int] = list(range(n_blocks, 0, -1))
+        self._free: List[int] = list(range(id_base + n_blocks, id_base, -1))
         self._free_set = set(self._free)
         # holder count per live block; absent / 0 <=> block is free
         self._refs: Dict[int, int] = {}
@@ -271,9 +282,11 @@ class BlockPool:
         last holder releases it.  Over-releasing raises: a block freed
         more times than it is held would later back two live lanes."""
         counts: Dict[int, int] = {}
+        lo, hi = self.id_base + 1, self.id_base + self.n_blocks
         for i in ids:
-            if not 1 <= i <= self.n_blocks:
-                raise ValueError(f"free: {i} is not an allocatable block id")
+            if not lo <= i <= hi:
+                raise ValueError(f"free: {i} is not an allocatable block id "
+                                 f"of this pool (ids {lo}..{hi})")
             counts[i] = counts.get(i, 0) + 1
         for i, c in counts.items():
             if c > self._refs.get(i, 0):

@@ -155,7 +155,9 @@ from repro.serving.batch import (GenConfig, copy_blocks, decode_round,
                                  insert_lanes_paged, insert_lanes_shared,
                                  make_buckets, pad_token_rows, pick_bucket,
                                  prefill_chunk_jit, prefill_jit,
-                                 prefill_shared, scatter_blocks)
+                                 prefill_shared, scatter_blocks,
+                                 sharded_decode_round,
+                                 sharded_decode_round_spec)
 from repro.serving.block_pool import BlockPool, HostBlocks
 
 
@@ -334,6 +336,10 @@ class _PlanRow:
     n_pb: int                    # ceil(P / block_size) prompt blocks
     n_full: int                  # P // block_size read-only full blocks
     partial: bool                # last prompt block is partially filled
+    # placement, set at admission: the data shard whose pool backs the
+    # row's blocks, and the lanes assigned to its members (in order)
+    shard: int = 0
+    lanes: List[int] = dataclasses.field(default_factory=list)
 
 
 @dataclasses.dataclass
@@ -381,6 +387,9 @@ class _Parked:
     # paged: host handle + block count (bytes live in ServingLoop._host_kv)
     host: Optional[HostBlocks] = None
     n_blocks: int = 0
+    # data shard the request was parked from — sharded serving restores
+    # it into the same shard (its blocks belong to that shard's slab)
+    shard: int = 0
     # dense: the lane's full cache row per layer-stacked entry, plus its
     # cache_pos validity row (copied verbatim — ring-layout safe)
     dense_row: Optional[Dict[str, np.ndarray]] = None
@@ -477,6 +486,28 @@ class Scheduler:
         without this flag; either way resumed lanes continue
         bit-identically (the PRNG contract keys sampling by uid and
         token index, never by lane or block layout).
+    mesh:
+        Multi-device serving.  A ``(data, model)`` jax Mesh with model
+        axis 1 (``launch.mesh.make_sim_mesh`` / ``make_tier_mesh``)
+        runs every decode round under shard_map over the mesh's data
+        axis (``batch.sharded_decode_round``): the lane pool splits
+        into ``S = data`` equal shards of ``n_lanes / S`` lanes, and —
+        paged — each shard owns a private ``pool_blocks``-block slab of
+        the device block axis (``pool_blocks`` becomes PER-SHARD), so
+        the decode hot path is collective-free: every lane reads only
+        its own shard's blocks.  Admission balances requests across
+        shards, shared-prefix units admit atomically into one shard,
+        and preempted requests resume into their own shard.  The PRNG
+        contract keys sampling by (uid, token index) only, so sharded
+        serving is bit-identical to single-device serving
+        (tests/test_serving_trace.py sharded mode).  ``n_lanes`` must
+        divide by ``S`` with >= 2 lanes per shard (the oracle's
+        >=2-row geometry).  A 1-device mesh is honored too — it pins
+        execution to that device, which is how cascade tier placement
+        (core/cascade_multi.py ``placement=``) puts tiers on disjoint
+        device slices.  Model-axis tensor parallelism composes at the
+        GSPMD level instead (distributed.sharding.param_specs + the
+        plain rounds); passing a model>1 mesh here raises.
     """
 
     def __init__(self, params, cfg: ModelConfig, tokenizer, gcfg: GenConfig,
@@ -491,11 +522,38 @@ class Scheduler:
                  chunk_size: Optional[int] = None,
                  prefill_budget: Optional[int] = None,
                  spec_k: Optional[int] = None,
-                 auto_preempt: bool = False):
+                 auto_preempt: bool = False,
+                 mesh=None):
         self.params, self.cfg, self.tokenizer, self.gcfg = \
             params, cfg, tokenizer, gcfg
         self.n_lanes = n_lanes
         self.round_tokens = round_tokens
+        self.mesh = mesh
+        if mesh is not None:
+            if "data" not in mesh.shape:
+                raise ValueError("Scheduler mesh needs a 'data' axis: the "
+                                 "lane pool shards over it")
+            if mesh.shape.get("model", 1) != 1:
+                raise ValueError(
+                    "Scheduler(mesh=...) is data-parallel only (model axis "
+                    "must be 1): shard the params with "
+                    "distributed.sharding.param_specs for tensor "
+                    "parallelism instead")
+            n_shards = mesh.shape["data"]
+            if n_lanes % n_shards:
+                raise ValueError(
+                    f"n_lanes={n_lanes} must divide evenly over the mesh's "
+                    f"{n_shards} data shards")
+            if n_lanes // n_shards < 2:
+                raise ValueError(
+                    f"n_lanes={n_lanes} over {n_shards} shards leaves "
+                    "fewer than 2 lanes per shard; size-1 batch dims "
+                    "lower to differently-ordered reductions, breaking "
+                    "the bit-match with single-device serving")
+        else:
+            n_shards = 1
+        self.n_shards = n_shards
+        self.lanes_per_shard = n_lanes // n_shards
         self.buckets = tuple(sorted(buckets or make_buckets(max_prompt_len)))
         # admission waves pad to at least 2 rows: size-1 batch dims can
         # lower to differently-ordered reductions (ulp-level drift), and
@@ -509,6 +567,7 @@ class Scheduler:
         self.paged = paged
         self.block_size = block_size
         self.pool: Optional[BlockPool] = None    # most recent run's pool
+        self.pools: Optional[List[BlockPool]] = None  # per-shard (sharded)
         self.share_prefix = share_prefix
         self.prefix_cache_entries = prefix_cache_entries
         self.prefix_cache: Optional[_PrefixCache] = None  # most recent run's
@@ -588,7 +647,10 @@ class Scheduler:
             self.max_blocks = -(-self.s_max // block_size)
             # offload/restore id-list ladder (blocks moved per preempt)
             self._blk_buckets = make_buckets(self.max_blocks, 1)
-            self.pool_blocks = (n_lanes * self.max_blocks
+            # pool_blocks is PER SHARD (n_shards is 1 without a mesh):
+            # each shard's lanes allocate from a private slab, so the
+            # device block axis totals n_shards * (pool_blocks + 1) rows
+            self.pool_blocks = (self.lanes_per_shard * self.max_blocks
                                 if pool_blocks is None else pool_blocks)
             if self.pool_blocks < self.max_blocks:
                 raise ValueError(
@@ -623,16 +685,19 @@ class Scheduler:
 
         Sharing off (or dense): groups dissolve into their members.
         Sharing on: groups survive as atomic units, chunked to the lane
-        pool width so a K > n_lanes group can still admit."""
+        pool width (sharded: one SHARD's width — a unit's lanes must
+        land in one shard's slab) so an oversized group can still
+        admit."""
         units: List = []
         order: List[int] = []
         for r in requests:
             if isinstance(r, RequestGroup):
                 order.extend(m.uid for m in r.requests)
                 if self.share_prefix:
-                    for i in range(0, len(r.requests), self.n_lanes):
+                    w = self.lanes_per_shard
+                    for i in range(0, len(r.requests), w):
                         units.append(RequestGroup(
-                            list(r.requests[i:i + self.n_lanes])))
+                            list(r.requests[i:i + w])))
                 else:
                     units.extend(r.requests)
             else:
@@ -705,8 +770,11 @@ class Scheduler:
         return comps, loop.close()
 
     # ------------------------------------------------------------------
-    def _cache_stats(self, stats: SchedStats, cache, pool: Optional[BlockPool]):
-        """Fill the K/V-footprint fields (see SchedStats)."""
+    def _cache_stats(self, stats: SchedStats, cache,
+                     pools: Optional[List[BlockPool]]):
+        """Fill the K/V-footprint fields (see SchedStats).  Sharded
+        loops report aggregates over their per-shard pools (pool_blocks
+        = total allocatable, peaks summed per shard)."""
         if not self.cfg.has_attention:
             return
         kv_bytes = cache["k"].nbytes + cache["v"].nbytes
@@ -714,12 +782,14 @@ class Scheduler:
             if s in cache:
                 kv_bytes += cache[s].nbytes
         if self.paged:
-            per_block = kv_bytes // (self.pool_blocks + 1)   # incl. trash
+            # block axis: one (pool_blocks + 1)-row slab per shard
+            per_block = kv_bytes // (self.n_shards * (self.pool_blocks + 1))
             per_slot = per_block // self.block_size
             sc = model_lib.cache_length(self.cfg, self.s_max)
-            stats.pool_blocks = self.pool_blocks
-            stats.peak_blocks_in_use = pool.peak_in_use
-            stats.peak_cache_bytes = per_block * pool.peak_in_use
+            peak = sum(p.peak_in_use for p in pools)
+            stats.pool_blocks = self.pool_blocks * self.n_shards
+            stats.peak_blocks_in_use = peak
+            stats.peak_cache_bytes = per_block * peak
             stats.dense_cache_bytes = per_slot * sc * self.n_lanes
         else:
             stats.peak_cache_bytes = kv_bytes
@@ -783,25 +853,46 @@ class ServingLoop:
         self._order: List[int] = []
         self.lanes: List[Optional[_Lane]] = [None] * sched.n_lanes
         self._host_done = np.ones((sched.n_lanes,), bool)
+        S = sched.n_shards
         if sched.paged:
-            self.pool: Optional[BlockPool] = BlockPool(sched.pool_blocks,
-                                                       sched.block_size)
-            sched.pool = self.pool
-            self.prefix_cache = (_PrefixCache(self.pool, sched.block_size,
-                                              sched.prefix_cache_entries)
-                                 if sched.share_prefix else None)
+            # one pool per data shard, over a private (pool_blocks+1)-row
+            # slab of the device block axis.  Block ids are GLOBAL
+            # (id_base = s * (pool_blocks + 1)), so every piece of host
+            # bookkeeping — lane tables, prefix caches, parked handles —
+            # and every GSPMD insert/gather/scatter call site works on
+            # them unchanged; only the decode dispatch converts to
+            # shard-local ids (_local_tables)
+            self.pools: Optional[List[BlockPool]] = [
+                BlockPool(sched.pool_blocks, sched.block_size,
+                          id_base=s * (sched.pool_blocks + 1))
+                for s in range(S)]
+            self.pool = self.pools[0] if S == 1 else None
+            self.prefix_caches = (
+                [_PrefixCache(p, sched.block_size,
+                              sched.prefix_cache_entries)
+                 for p in self.pools] if sched.share_prefix else None)
             self.cache = model_lib.init_paged_decode_state(
                 sched.cfg, sched.n_lanes, sched.s_max, sched.block_size,
-                sched.pool_blocks)
+                S * (sched.pool_blocks + 1) - 1)
             self._host_table = np.zeros((sched.n_lanes, sched.max_blocks),
                                         np.int32)
             self._table_dirty = False
+            # per-lane global->local id offset (lane i's shard's slab base)
+            self._lane_base = np.repeat(
+                np.arange(S, dtype=np.int32) * (sched.pool_blocks + 1),
+                sched.lanes_per_shard)[:, None]
         else:
+            self.pools = None
             self.pool = None
-            self.prefix_cache = None
+            self.prefix_caches = None
+        self.prefix_cache = (self.prefix_caches[0]
+                             if self.prefix_caches and S == 1 else None)
+        sched.pool = self.pool
+        sched.pools = self.pools
+        sched.prefix_cache = self.prefix_cache
+        if not sched.paged:
             self.cache = model_lib.init_decode_state(sched.cfg, sched.n_lanes,
                                                      sched.s_max)
-        sched.prefix_cache = self.prefix_cache
         self.cur_logits = jnp.zeros((sched.n_lanes, sched.cfg.vocab_size),
                                     jnp.float32)
         self.completions: Dict[int, Completion] = {}
@@ -825,10 +916,12 @@ class ServingLoop:
         self._drafts: Dict[int, Tuple[int, List[int]]] = {}
         # preemption: parked requests (uid -> _Parked, insertion order =
         # resume priority) and the host-side KV bytes backing them
-        # (host block id -> (k, v) numpy arrays, paged only)
+        # ((shard, host block id) -> (k, v) numpy arrays, paged only —
+        # host ids are per-pool counters, so the shard disambiguates)
         self._parked: "collections.OrderedDict[int, _Parked]" = \
             collections.OrderedDict()
-        self._host_kv: Dict[int, Tuple[np.ndarray, np.ndarray]] = {}
+        self._host_kv: Dict[Tuple[int, int],
+                            Tuple[np.ndarray, np.ndarray]] = {}
         self._round_no = 0
         # releases of in-flight uids arriving while a round is dispatched
         # are applied at the next dispatch (the harvest indexes lanes)
@@ -837,6 +930,41 @@ class ServingLoop:
         # with each batch of newly committed tokens for a live request
         # (launch/async_serve.py feeds per-client queues from it)
         self.on_tokens = None
+
+    # -- shard helpers (n_shards is 1 without a mesh) -------------------
+    def _shard_of(self, i: int) -> int:
+        """Data shard owning lane ``i``."""
+        return i // self.sched.lanes_per_shard
+
+    def _pool(self, i: int) -> BlockPool:
+        """The block pool lane ``i`` allocates from."""
+        return self.pools[i // self.sched.lanes_per_shard]
+
+    def _prefix_cache_of(self, s: int) -> Optional["_PrefixCache"]:
+        return self.prefix_caches[s] if self.prefix_caches else None
+
+    def _free_by_shard(self) -> List[List[int]]:
+        """Free lane ids grouped by shard, ascending within each."""
+        out: List[List[int]] = [[] for _ in range(self.sched.n_shards)]
+        for i in range(self.sched.n_lanes):
+            if self.lanes[i] is None:
+                out[self._shard_of(i)].append(i)
+        return out
+
+    def _shard_order(self, free_by: List[List[int]]) -> List[int]:
+        """Shards with free lanes, most-free first (ties: lowest id) —
+        the admission balance policy."""
+        return sorted((s for s in range(self.sched.n_shards) if free_by[s]),
+                      key=lambda s: (-len(free_by[s]), s))
+
+    def _local_tables(self) -> np.ndarray:
+        """Per-shard-local block tables for the shard_map'd decode
+        round: each shard's slab starts at s * (pool_blocks + 1), so a
+        global id maps to (id - base); 0 (trash) maps to the shard's
+        own local trash row."""
+        return np.where(self._host_table > 0,
+                        self._host_table - self._lane_base,
+                        0).astype(np.int32)
 
     # -- submission ----------------------------------------------------
     def submit(self, requests: Sequence,
@@ -1038,18 +1166,25 @@ class ServingLoop:
             # finalize the in-flight round without dropping its results:
             # they stay claimable via take_completed() / completions
             self._emitted = self.harvest()
-        if self.prefix_cache is not None:
-            self.prefix_cache.clear()
+        if self.prefix_caches is not None:
+            for pc in self.prefix_caches:
+                pc.clear()
         self.stats.wall_s = time.time() - self._t0
-        self.sched._cache_stats(self.stats, self.cache, self.pool)
-        if self.pool is not None:
-            self.stats.cow_copies = self.pool.cow_copies
-            self.stats.host_blocks_peak = self.pool.host_blocks_peak
-            # leak audit at shutdown: None means the pool drained; a
-            # report string means blocks/reservations are still held
-            # (a real leak, or close() before the backlog drained) —
-            # launch/serve.py surfaces it in the end-of-run summary
-            self.stats.leak_report = self.pool.leak_report()
+        self.sched._cache_stats(self.stats, self.cache, self.pools)
+        if self.pools is not None:
+            self.stats.cow_copies = sum(p.cow_copies for p in self.pools)
+            self.stats.host_blocks_peak = sum(p.host_blocks_peak
+                                              for p in self.pools)
+            # leak audit at shutdown: None means every shard's pool
+            # drained; a report string means blocks/reservations are
+            # still held (a real leak, or close() before the backlog
+            # drained) — launch/serve.py surfaces it in the summary
+            reports = [(s, p.leak_report())
+                       for s, p in enumerate(self.pools)]
+            reports = [f"shard {s}: {r}" if len(self.pools) > 1 else r
+                       for s, r in reports if r is not None]
+            self.stats.leak_report = ("; ".join(reports)
+                                      if reports else None)
         return self.stats
 
     # -- split-phase step: dispatch / harvest --------------------------
@@ -1106,14 +1241,19 @@ class ServingLoop:
                            lane.prompt_len + lane.budget)
                 grow = -(-upto // self.sched.block_size) - len(lane.blocks)
                 if grow > 0:
-                    new_ids = self.pool.alloc(grow)
+                    new_ids = self._pool(i).alloc(grow)
                     self._host_table[i, len(lane.blocks):
                                      len(lane.blocks) + grow] = new_ids
                     lane.blocks.extend(new_ids)
                     lane.reserved -= grow
                     self._table_dirty = True
             if self._table_dirty:
-                self.cache["block_tables"] = jnp.asarray(self._host_table)
+                # sharded rounds read per-shard LOCAL tables (each shard
+                # sees only its own slab of the block axis); all other
+                # call sites (GSPMD inserts/gathers) use global ids
+                tbl = (self._local_tables() if self.sched.mesh is not None
+                       else self._host_table)
+                self.cache["block_tables"] = jnp.asarray(tbl)
                 self._table_dirty = False
         steps = np.array([0 if l is None else l.generated
                           for l in self.lanes], np.int32)
@@ -1129,22 +1269,38 @@ class ServingLoop:
                 self.stats.drafted_tokens += n
             t1 = time.time()
             self.stats.sched_s += t1 - t0
-            self.cache, self.cur_logits, _, spec_toks, accept, toks = \
-                decode_round_spec(
-                    self.sched.params, self.sched.cfg, self.sched.gcfg,
-                    self.cache, self.cur_logits,
-                    jnp.asarray(self._host_done), self.key,
-                    jnp.asarray(self._salts), jnp.asarray(steps),
-                    jnp.asarray(draft_mat), jnp.asarray(dlen_arr), r)
+            if self.sched.mesh is not None:
+                self.cache, self.cur_logits, _, spec_toks, accept, toks = \
+                    sharded_decode_round_spec(
+                        self.sched.mesh, self.sched.params, self.sched.cfg,
+                        self.sched.gcfg, self.cache, self.cur_logits,
+                        jnp.asarray(self._host_done), self.key,
+                        jnp.asarray(self._salts), jnp.asarray(steps),
+                        jnp.asarray(draft_mat), jnp.asarray(dlen_arr), r)
+            else:
+                self.cache, self.cur_logits, _, spec_toks, accept, toks = \
+                    decode_round_spec(
+                        self.sched.params, self.sched.cfg, self.sched.gcfg,
+                        self.cache, self.cur_logits,
+                        jnp.asarray(self._host_done), self.key,
+                        jnp.asarray(self._salts), jnp.asarray(steps),
+                        jnp.asarray(draft_mat), jnp.asarray(dlen_arr), r)
             self.stats.spec_rounds += 1
             spec = (spec_toks, accept, fed)
         else:
             t1 = time.time()
             self.stats.sched_s += t1 - t0
-            self.cache, self.cur_logits, _, toks = decode_round(
-                self.sched.params, self.sched.cfg, self.sched.gcfg,
-                self.cache, self.cur_logits, jnp.asarray(self._host_done),
-                self.key, jnp.asarray(self._salts), jnp.asarray(steps), r)
+            if self.sched.mesh is not None:
+                self.cache, self.cur_logits, _, toks = sharded_decode_round(
+                    self.sched.mesh, self.sched.params, self.sched.cfg,
+                    self.sched.gcfg, self.cache, self.cur_logits,
+                    jnp.asarray(self._host_done), self.key,
+                    jnp.asarray(self._salts), jnp.asarray(steps), r)
+            else:
+                self.cache, self.cur_logits, _, toks = decode_round(
+                    self.sched.params, self.sched.cfg, self.sched.gcfg,
+                    self.cache, self.cur_logits, jnp.asarray(self._host_done),
+                    self.key, jnp.asarray(self._salts), jnp.asarray(steps), r)
             spec = None
         self.stats.rounds += 1
         self.stats.lane_rounds += len(live)
@@ -1302,8 +1458,8 @@ class ServingLoop:
             # reservation) go back to the pool mid-flight, and the
             # lane's table row points at the trash block so its
             # remaining in-round steps write nowhere
-            self.pool.free(lane.blocks)
-            self.pool.unreserve(lane.reserved)
+            self._pool(i).free(lane.blocks)
+            self._pool(i).unreserve(lane.reserved)
             lane.blocks, lane.reserved = [], 0
             self._host_table[i] = 0
             self._table_dirty = True
@@ -1344,8 +1500,8 @@ class ServingLoop:
         generated, no PRNG consumed)."""
         lane = self.lanes[i]
         if self.sched.paged:
-            self.pool.free(lane.blocks)
-            self.pool.unreserve(lane.reserved)
+            self._pool(i).free(lane.blocks)
+            self._pool(i).unreserve(lane.reserved)
             self._host_table[i] = 0
             self._table_dirty = True
         self.lanes[i] = None
@@ -1363,13 +1519,14 @@ class ServingLoop:
                          prompt_len=lane.prompt_len,
                          pos=int(np.asarray(self.cache["pos"][i])),
                          logits_row=np.asarray(self.cur_logits[i]),
-                         hold=hold, parked_round=self._round_no)
+                         hold=hold, parked_round=self._round_no,
+                         shard=self._shard_of(i))
         if self.sched.paged:
             parked.n_blocks = len(lane.blocks)
-            parked.host, copies = self.pool.offload(lane.blocks)
+            parked.host, copies = self._pool(i).offload(lane.blocks)
             if copies:
-                self._copy_blocks_to_host(copies)
-            self.pool.unreserve(lane.reserved)
+                self._copy_blocks_to_host(copies, parked.shard)
+            self._pool(i).unreserve(lane.reserved)
             self._host_table[i] = 0
             self._table_dirty = True
         else:
@@ -1384,11 +1541,14 @@ class ServingLoop:
         self._parked[lane.req.uid] = parked
         self.stats.preempts += 1
 
-    def _copy_blocks_to_host(self, copies: List[Tuple[int, int]]) -> None:
+    def _copy_blocks_to_host(self, copies: List[Tuple[int, int]],
+                             shard: int) -> None:
         """Snapshot the listed (device block, host block) pairs' KV into
         host RAM.  The gather captures the cache arrays' current values
         (immutable under JAX's functional updates), so later writes into
-        recycled blocks can never corrupt the parked bytes."""
+        recycled blocks can never corrupt the parked bytes.  Host block
+        ids are per-pool counters, so the host store keys on
+        ``(shard, host_id)``."""
         n = pick_bucket(len(copies), self.sched._blk_buckets)
         ids = np.zeros((n,), np.int32)      # padding gathers trash
         ids[: len(copies)] = [b for b, _ in copies]
@@ -1396,7 +1556,7 @@ class ServingLoop:
         k, v = np.asarray(k), np.asarray(v)
         for j, (_, h) in enumerate(copies):
             kj, vj = k[:, j].copy(), v[:, j].copy()
-            self._host_kv[h] = (kj, vj)
+            self._host_kv[(shard, h)] = (kj, vj)
             self.stats.offload_bytes += kj.nbytes + vj.nbytes
 
     def _restore_parked(self, uid: int) -> bool:
@@ -1405,7 +1565,14 @@ class ServingLoop:
         capacity is available; never mutates state before success."""
         parked = self._parked[uid]
         sched = self.sched
-        free_i = next((i for i in range(sched.n_lanes)
+        if sched.paged:
+            # paged: the parked blocks belong to one shard's slab, so
+            # the request must land back in a lane of that shard
+            lo = parked.shard * sched.lanes_per_shard
+            lane_range = range(lo, lo + sched.lanes_per_shard)
+        else:
+            lane_range = range(sched.n_lanes)
+        free_i = next((i for i in lane_range
                        if self.lanes[i] is None), None)
         if free_i is None:
             return False
@@ -1415,25 +1582,26 @@ class ServingLoop:
                      prompt_len=parked.prompt_len,
                      last_tok_round=self._round_no)
         if sched.paged:
+            pool = self.pools[parked.shard]
             growth = sched._reservation(parked.prompt_len,
                                         parked.budget) - parked.n_blocks
-            need = self.pool.restore_cost(parked.host) + growth
-            if not self.pool.reserve(need):
+            need = pool.restore_cost(parked.host) + growth
+            if not pool.reserve(need):
                 return False
-            blocks, scatters, dropped = self.pool.restore(parked.host)
+            blocks, scatters, dropped = pool.restore(parked.host)
             if scatters:
                 n = pick_bucket(len(scatters), sched._blk_buckets)
                 ids = np.zeros((n,), np.int32)   # padding writes to trash
-                k0, v0 = self._host_kv[scatters[0][0]]
+                k0, v0 = self._host_kv[(parked.shard, scatters[0][0])]
                 ks = np.zeros((k0.shape[0], n) + k0.shape[1:], k0.dtype)
                 vs = np.zeros((v0.shape[0], n) + v0.shape[1:], v0.dtype)
                 for j, (h, d) in enumerate(scatters):
                     ids[j] = d
-                    ks[:, j], vs[:, j] = self._host_kv[h]
+                    ks[:, j], vs[:, j] = self._host_kv[(parked.shard, h)]
                 self.cache = scatter_blocks(self.cache, jnp.asarray(ids),
                                             jnp.asarray(ks), jnp.asarray(vs))
             for h in dropped:
-                self._host_kv.pop(h, None)
+                self._host_kv.pop((parked.shard, h), None)
             lane.blocks, lane.reserved = blocks, growth
             self._host_table[free_i] = 0
             self._host_table[free_i, : len(blocks)] = blocks
@@ -1464,19 +1632,23 @@ class ServingLoop:
             if not self._restore_parked(uid):
                 break
 
-    def _preempt_coldest(self) -> Optional[int]:
+    def _preempt_coldest(self, shard: Optional[int] = None) -> Optional[int]:
         """Pressure policy: park the least-recently-productive
         preemptible lane (LRU by last-harvest round, uid tiebreak).
         Never preempts a lane that is mid-chunk-prefill, has queued
         drafts mid-verify, was admitted/resumed this same round (the
         anti-thrash guard), or is the last live member of its vote
-        group.  Returns the freed lane index, or None."""
+        group.  ``shard`` restricts candidates to one data shard (a
+        sharded shared-prefix unit needs lanes AND blocks from the same
+        shard).  Returns the freed lane index, or None."""
         groups = collections.Counter(
             lane.req.group for lane in self.lanes
             if lane is not None and lane.req.group is not None)
         cands = []
         for i, lane in enumerate(self.lanes):
             if lane is None or not lane.ready:
+                continue
+            if shard is not None and self._shard_of(i) != shard:
                 continue
             if lane.last_tok_round >= self._round_no:
                 continue
@@ -1498,8 +1670,8 @@ class ServingLoop:
         emit whatever it generated before parking."""
         parked = self._parked.pop(uid)
         if parked.host is not None:
-            for h in self.pool.discard(parked.host):
-                self._host_kv.pop(h, None)
+            for h in self.pools[parked.shard].discard(parked.host):
+                self._host_kv.pop((parked.shard, h), None)
         toks = (np.concatenate(parked.parts) if parked.parts
                 else np.zeros((0,), np.int32))
         text = self.sched.tokenizer.decode(toks) if self.sched.tokenizer \
@@ -1546,7 +1718,7 @@ class ServingLoop:
                 live.append(job)
                 continue
             if job.cow_reserved > 0:
-                self.pool.unreserve(job.cow_reserved)
+                self._pool(job.lanes[0]).unreserve(job.cow_reserved)
                 job.cow_reserved = 0
         self._prefill_q = collections.deque(live)
 
@@ -1659,7 +1831,7 @@ class ServingLoop:
         prompt blocks, register the prompt with the prefix cache (only
         now — its blocks are finally fully written), and replicate the
         prompt-last-token logits / position into every lane."""
-        sched, pool = self.sched, self.pool
+        sched = self.sched
         cow_src: List[int] = []
         cow_dst: List[int] = []
         nrows = pick_bucket(len(shared_done), sched.admit_buckets)
@@ -1669,6 +1841,7 @@ class ServingLoop:
         lens_arr = np.ones((nrows,), np.int32)
         row_ids = np.zeros((nrows,), np.int32)
         for r_i, (j, job) in enumerate(shared_done):
+            pool = self._pool(job.lanes[0])   # a job's lanes share a shard
             row_ids[r_i] = j
             lens_arr[r_i] = max(len(job.toks), 1)
             alive = [(i, lane) for i, lane in zip(job.lanes, job.lane_objs)
@@ -1697,9 +1870,9 @@ class ServingLoop:
                 # dead members never drew their CoW allowance
                 pool.unreserve(job.cow_reserved)
                 job.cow_reserved = 0
-            if alive and self.prefix_cache is not None:
-                self.prefix_cache.register(job.toks,
-                                           job.prompt_blocks[: job.n_full])
+            pc = self._prefix_cache_of(self._shard_of(job.lanes[0]))
+            if alive and pc is not None:
+                pc.register(job.toks, job.prompt_blocks[: job.n_full])
         sel = chunk_logits[jnp.asarray(row_ids)]
         self.cache, self.cur_logits = fanout_lanes(
             self.cache, self.cur_logits, sel, jnp.asarray(lane_rows),
@@ -1715,11 +1888,16 @@ class ServingLoop:
 
     def _admit(self) -> None:
         """Dense / paged (non-shared) admission: fill free lanes from
-        the pending queue, bucket the wave, prefill, insert."""
+        the pending queue, bucket the wave, prefill, insert.
+
+        Sharded: each request is placed in the shard with the most free
+        lanes whose pool can cover its reservation (its lane is fixed
+        here — lane index never affects completions, only which slab
+        its blocks come from)."""
         sched, lanes, pending = self.sched, self.lanes, self.pending
-        free = [i for i in range(sched.n_lanes) if lanes[i] is None]
-        wave: List[Request] = []
-        while pending and len(wave) < len(free):
+        free_by = self._free_by_shard()
+        wave: List[Tuple[Request, int]] = []    # (request, assigned lane)
+        while pending and any(free_by):
             req = pending[0]
             if req.uid in self._released:
                 pending.popleft()    # client cancelled before admission
@@ -1730,22 +1908,32 @@ class ServingLoop:
                 continue
             if req.uid not in self._enc:
                 self._enc[req.uid] = sched._encode(req)
+            lane_i = None
             if sched.paged:
                 need = sched._reservation(max(len(self._enc[req.uid]), 1),
                                           sched._budget(req))
-                if not self.pool.reserve(need):
-                    # pool pressure: evict the coldest preemptible lane
-                    # to host RAM and retry, or leave the queue intact
-                    # (FIFO) and retry after the next round frees blocks
+                for s in self._shard_order(free_by):
+                    if self.pools[s].reserve(need):
+                        lane_i = free_by[s].pop(0)
+                        break
+                if lane_i is None:
+                    # pool pressure in every shard with a free lane:
+                    # evict the coldest preemptible lane to host RAM
+                    # and retry (the freed lane's shard regains blocks
+                    # AND a lane), or leave the queue intact (FIFO) and
+                    # retry after the next round frees blocks
                     if sched.auto_preempt:
                         idx = self._preempt_coldest()
                         if idx is not None:
-                            free.append(idx)
+                            free_by[self._shard_of(idx)].append(idx)
                             continue
                     self.stats.admission_blocked += 1
                     break
+            else:
+                s = self._shard_order(free_by)[0]
+                lane_i = free_by[s].pop(0)
             pending.popleft()
-            wave.append(req)
+            wave.append((req, lane_i))
         if not wave:
             return
         if sched.chunk_size is not None:
@@ -1754,8 +1942,7 @@ class ServingLoop:
             # prefilling it — the lane rides decode rounds done-masked
             # until its final chunk lands.  Its block-table row stays all
             # trash meanwhile, so the masked decode writes land nowhere.
-            for r in wave:
-                i = free.pop(0)
+            for r, i in wave:
                 toks = self._enc[r.uid]
                 lane = _Lane(r, sched._budget(r), ready=False,
                              last_tok_round=self._round_no)
@@ -1763,7 +1950,7 @@ class ServingLoop:
                 if sched.paged:
                     lane.prompt_len = max(len(toks), 1)
                     n_pb = -(-lane.prompt_len // sched.block_size)
-                    lane.blocks = self.pool.alloc(n_pb)
+                    lane.blocks = self._pool(i).alloc(n_pb)
                     lane.reserved = sched._reservation(
                         lane.prompt_len, lane.budget) - n_pb
                     row = np.zeros((sched.max_blocks,), np.int32)
@@ -1779,30 +1966,30 @@ class ServingLoop:
                     bucket=pick_bucket(max(len(toks), 1), sched.buckets),
                     lanes=[i], lane_objs=[lane], members=[r],
                     read_row=read_row, write_row=write_row))
-            for r in wave:
+            for r, _ in wave:
                 self._enc.pop(r.uid, None)
             return
-        by_bucket: Dict[int, List[Request]] = collections.defaultdict(list)
-        for r in wave:
+        by_bucket: Dict[int, List[Tuple[Request, int]]] = \
+            collections.defaultdict(list)
+        for r, i in wave:
             by_bucket[pick_bucket(len(self._enc[r.uid]), sched.buckets)
-                      ].append(r)
+                      ].append((r, i))
         for bucket in sorted(by_bucket):
             grp = by_bucket[bucket]
             admit_n = pick_bucket(len(grp), sched.admit_buckets)
-            toks, lens = pad_token_rows([self._enc[r.uid] for r in grp],
+            toks, lens = pad_token_rows([self._enc[r.uid] for r, _ in grp],
                                         sched.gcfg.pad_id, bucket, admit_n)
             lane_ids = np.full((admit_n,), sched.n_lanes, np.int32)
             block_rows = (np.zeros((admit_n, sched.max_blocks), np.int32)
                           if sched.paged else None)
-            for j, r in enumerate(grp):
-                i = free.pop(0)
+            for j, (r, i) in enumerate(grp):
                 lane_ids[j] = i
                 lane = _Lane(r, sched._budget(r),
                              last_tok_round=self._round_no)
                 if sched.paged:
                     lane.prompt_len = max(len(self._enc[r.uid]), 1)
                     n_pb = -(-lane.prompt_len // sched.block_size)
-                    lane.blocks = self.pool.alloc(n_pb)
+                    lane.blocks = self._pool(i).alloc(n_pb)
                     lane.reserved = sched._reservation(
                         lane.prompt_len, lane.budget) - n_pb
                     block_rows[j, :n_pb] = lane.blocks
@@ -1830,8 +2017,8 @@ class ServingLoop:
             self.stats.prefills += 1
             self.stats.prefill_prompts += len(grp)
             self.stats.prefill_tokens += sum(len(self._enc[r.uid])
-                                             for r in grp)
-        for r in wave:
+                                             for r, _ in grp)
+        for r, _ in wave:
             self._enc.pop(r.uid, None)   # memo only matters pre-admission
 
     def _admit_shared(self) -> None:
@@ -1840,10 +2027,9 @@ class ServingLoop:
         member lane, CoW on partial tails, prefix-cache
         reuse/registration.  See the Scheduler docstring."""
         sched, lanes, pending = self.sched, self.lanes, self.pending
-        pool, stats = self.pool, self.stats
-        free = [i for i in range(sched.n_lanes) if lanes[i] is None]
+        stats = self.stats
+        free_by = self._free_by_shard()
         planned: List[_PlanRow] = []
-        taken = 0
         while pending:
             unit = pending[0]
             members = (unit.requests if isinstance(unit, RequestGroup)
@@ -1857,53 +2043,70 @@ class ServingLoop:
                 pending.popleft()
                 self._drop_decided(members)
                 continue
-            if taken + len(members) > len(free):
-                break              # atomic: the whole unit or nothing
+            # atomic AND single-shard: the unit's lanes must all come
+            # from one shard, whose slab holds its shared blocks
+            cands = [s for s in self._shard_order(free_by)
+                     if len(free_by[s]) >= len(members)]
+            if not cands:
+                break              # the whole unit or nothing
             for m in members:
                 if m.uid not in self._enc:
                     self._enc[m.uid] = sched._encode(m)
             rows = None
-            blocked = False
-            while True:
-                rows, need = sched._plan_unit(members, self._enc,
-                                              self.prefix_cache)
-                if need > sched.pool_blocks:
-                    # the unit can never fit atomically: degrade to
-                    # per-lane units (constructor guarantees any single
-                    # lane fits) and re-examine the head
-                    pending.popleft()
-                    for m in reversed(members):
-                        pending.appendleft(m)
+            shard = None
+            degraded = False
+            for s in cands:
+                pool = self.pools[s]
+                pc = self._prefix_cache_of(s)
+                while True:
+                    rows, need = sched._plan_unit(members, self._enc, pc)
+                    if need > sched.pool_blocks:
+                        # the unit can never fit atomically in one
+                        # shard's slab: degrade to per-lane units
+                        # (constructor guarantees any single lane fits)
+                        # and re-examine the head
+                        pending.popleft()
+                        for m in reversed(members):
+                            pending.appendleft(m)
+                        rows = None
+                        degraded = True
+                        break
+                    if pool.reserve(need):
+                        shard = s
+                        break
+                    # shard pool pressure: shed its warm prefix-cache
+                    # blocks, then preempt its cold lanes, before
+                    # falling through to the next candidate shard
+                    if pc.evict_lru():
+                        continue
+                    if sched.auto_preempt:
+                        idx = self._preempt_coldest(shard=s)
+                        if idx is not None:
+                            free_by[s].append(idx)
+                            continue
                     rows = None
                     break
-                if pool.reserve(need):
+                if degraded or shard is not None:
                     break
-                # pool pressure: shed warm prefix-cache blocks, then
-                # preempt cold lanes, before backpressuring admission
-                if not self.prefix_cache.evict_lru():
-                    if sched.auto_preempt:
-                        idx = self._preempt_coldest()
-                        if idx is not None:
-                            free.append(idx)
-                            continue
-                    stats.admission_blocked += 1
-                    blocked = True
-                    break
-            if blocked:
-                break
-            if rows is None:
+            if degraded:
                 continue
+            if shard is None:
+                stats.admission_blocked += 1
+                break
+            pool = self.pools[shard]
             # hold the cache-hit blocks for every lane of each row now,
             # so later evictions can only drop the cache's own hold,
-            # never the blocks these lanes are about to map
+            # never the blocks these lanes are about to map; fix each
+            # row's shard and lane assignment while we are at it
             for row in rows:
+                row.shard = shard
+                row.lanes = [free_by[shard].pop(0) for _ in row.members]
                 if row.hit:
                     pool.share(row.hit, len(row.members))
                     stats.prefix_hits += 1
                     stats.prefix_hit_blocks += len(row.hit)
             pending.popleft()
             planned.extend(rows)
-            taken += len(members)
         if not planned:
             return
         if sched.chunk_size is not None:
@@ -1915,6 +2118,7 @@ class ServingLoop:
             # registration wait until the row's final chunk has landed,
             # so no other admission can ever read half-written blocks.
             for row in planned:
+                pool = self.pools[row.shard]
                 p_len = max(len(row.toks), 1)
                 h = len(row.hit)
                 own = pool.alloc(row.n_pb - h)
@@ -1927,8 +2131,7 @@ class ServingLoop:
                 if k_members > 1 and own:
                     pool.share(own, k_members - 1)
                 lane_ids, lane_objs = [], []
-                for m in row.members:
-                    i = free.pop(0)
+                for m, i in zip(row.members, row.lanes):
                     lane = _Lane(m, sched._budget(m), ready=False,
                                  last_tok_round=self._round_no)
                     lane.prompt_len = p_len
@@ -1971,6 +2174,7 @@ class ServingLoop:
             lane_rows = np.full((admit_n, kmax), sched.n_lanes, np.int32)
             write_rows = np.zeros((admit_n, sched.max_blocks), np.int32)
             for j, row in enumerate(rows):
+                pool = self.pools[row.shard]
                 p_len = max(len(row.toks), 1)
                 h = len(row.hit)
                 own = pool.alloc(row.n_pb - h)
@@ -1982,8 +2186,8 @@ class ServingLoop:
                 k_members = len(row.members)
                 if k_members > 1 and own:
                     pool.share(own, k_members - 1)
-                self.prefix_cache.register(row.toks,
-                                           prompt_blocks[:row.n_full])
+                self._prefix_cache_of(row.shard).register(
+                    row.toks, prompt_blocks[:row.n_full])
                 tail_of = {}
                 if row.partial:
                     tail = prompt_blocks[-1]
@@ -1993,8 +2197,7 @@ class ServingLoop:
                             cow_src.append(tail)
                             cow_dst.append(blk)
                         tail_of[m.uid] = blk
-                for mj, m in enumerate(row.members):
-                    i = free.pop(0)
+                for mj, (m, i) in enumerate(zip(row.members, row.lanes)):
                     lane = _Lane(m, sched._budget(m),
                                  last_tok_round=self._round_no)
                     lane.prompt_len = p_len

@@ -1,9 +1,20 @@
-"""Initialize jax's device count (1 CPU device) before any test module
-can import repro.launch.dryrun, which sets
-XLA_FLAGS=--xla_force_host_platform_device_count=512 for the dry-run
-process.  Touching jax.devices() here locks the backend first, so tests
-always see exactly one device."""
+"""Lock the jax backend to a known simulated-device count for the whole
+test process.
 
-import jax
+Sharded-serving tests (test_serving_trace.py sharded mode,
+test_sharded_serving.py) need a multi-device host mesh; the
+``--xla_force_host_platform_device_count`` trick only works if the env
+var is set before anything initializes the backend.  Doing it here —
+conftest imports before every test module — gives every test 8
+simulated CPU devices without env-var ordering footguns, and still
+protects against repro.launch.dryrun (which requests 512 for its own
+process) re-raising the count mid-suite: the backend is locked below.
+"""
 
-jax.devices()
+from repro.launch.mesh import ensure_sim_devices
+
+ensure_sim_devices(8)    # sets XLA_FLAGS, then locks the backend
+
+import jax  # noqa: E402
+
+assert jax.local_device_count() >= 8

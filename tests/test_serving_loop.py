@@ -261,6 +261,42 @@ def test_pipelined_cascade_distinct_slms_two_loops(setup):
     assert [o.correct for o in out_pipe] == [o.correct for o in out_seq]
 
 
+def test_pipelined_cascade_tier_placement(setup):
+    """``placement`` pins each tier to its own device slice: outcomes
+    must be unchanged (placement is pure layout), one shared SLM placed
+    on two DISJOINT slices deliberately un-fuses into two loops, and
+    the same SLM placed twice on the SAME slice keeps its fused loop."""
+    params, cfg, tok = setup
+    slm = routing_lib.SLM(params, cfg, tok,
+                          GenConfig(max_new_tokens=8, temperature=0.0),
+                          max_prompt_len=MAXP, lane_budget=4,
+                          round_tokens=4)
+    items = tasks_lib.make_benchmark("arith", 2, seed=7)
+    tiers = [cm.Tier(slm=slm, tau=1.0, mode="FCV", k=2),
+             cm.Tier(slm=slm, tau=1.0, mode="FCV", k=2)]
+    terminal = cm.TerminalTier(llm=routing_lib.OracleLLM(accuracy=1.0))
+    key = jax.random.PRNGKey(6)
+    devs = jax.devices()
+
+    out_ref, _ = cm.run_cascade_pipelined(tiers, terminal, items, key)
+    out_disj, ps = cm.run_cascade_pipelined(
+        tiers, terminal, items, key,
+        placement={0: devs[0:2], 1: devs[2:4]})
+    assert ps.n_loops == 2 and ps.fused_loops == 0
+    out_same, ps2 = cm.run_cascade_pipelined(
+        tiers, terminal, items, key,
+        placement={0: devs[0:2], 1: devs[0:2]})
+    assert ps2.n_loops == 1 and ps2.fused_loops == 1
+    for out in (out_disj, out_same):
+        assert [o.accepted_tier for o in out] == \
+            [o.accepted_tier for o in out_ref]
+        assert [o.correct for o in out] == [o.correct for o in out_ref]
+
+    with pytest.raises(ValueError, match="placement names tier"):
+        cm.run_cascade_pipelined(tiers, terminal, items, key,
+                                 placement={5: devs[0:1]})
+
+
 def test_cascade_decisions_equal(setup):
     """decide-level parity: voting.decide_no_early_stop over the same
     greedy votes must agree with what both cascade paths recorded (the

@@ -84,16 +84,17 @@ def _gcfg(temperature):
 
 def _scheduler(params, cfg, temperature, mode, chunked,
                prefill_budget=None, spec=False, pool_blocks=None,
-               auto_preempt=False):
+               auto_preempt=False, mesh=None, n_lanes=N_LANES):
     return Scheduler(params, cfg, tokenizer=None, gcfg=_gcfg(temperature),
-                     n_lanes=N_LANES, round_tokens=ROUND,
+                     n_lanes=n_lanes, round_tokens=ROUND,
                      max_prompt_len=MAXP,
                      paged=mode in ("paged", "shared"), block_size=BLOCK,
                      share_prefix=mode == "shared",
                      chunk_size=BLOCK if chunked else None,
                      prefill_budget=prefill_budget if chunked else None,
                      spec_k=4 if spec else None,
-                     pool_blocks=pool_blocks, auto_preempt=auto_preempt)
+                     pool_blocks=pool_blocks, auto_preempt=auto_preempt,
+                     mesh=mesh)
 
 
 # ----------------------------------------------------------------------
@@ -271,10 +272,12 @@ def replay(sched: Scheduler, rounds, kill, release_rounds, draft_fn=None,
 
 
 def check_trace(params, cfg, temperature, mode, chunked, trace,
-                prefill_budget=None, drafted=False, preempt_seed=None):
+                prefill_budget=None, drafted=False, preempt_seed=None,
+                mesh=None, n_lanes=N_LANES):
     rounds, kill, release_rounds = trace
     sched = _scheduler(params, cfg, temperature, mode, chunked,
-                       prefill_budget, spec=drafted)
+                       prefill_budget, spec=drafted, mesh=mesh,
+                       n_lanes=n_lanes)
     oracle = Oracle(params, cfg, sched, temperature)
     draft_fn = None
     if drafted:
@@ -316,6 +319,9 @@ def check_trace(params, cfg, temperature, mode, chunked, trace,
                 f"uid {r.uid} ({mode}, chunked={chunked}): tokens diverged"
     if sched.pool is not None:
         assert sched.pool.leak_report() is None
+    # close() joins every per-shard pool's leak report into stats (the
+    # sharded loop has no single ``pool``); None covers all shards
+    assert stats.leak_report is None
     return got
 
 
@@ -354,6 +360,44 @@ def test_trace_uncancelled_equal_across_modes(setup):
             sigs.append(sorted((u, c.tokens.tolist())
                                for u, c in got.items()))
     assert all(s == sigs[0] for s in sigs[1:])
+
+
+# ----------------------------------------------------------------------
+# Sharded serving: the same traces on a simulated 4-device mesh
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_sharded_trace_matrix_bitmatches_oracle(setup, temperature):
+    """The same randomized traces on a simulated 4-device data mesh
+    (per-shard lane/KV pools, decode rounds under shard_map) must
+    reproduce the unchanged single-device ``engine.generate`` oracle
+    bit-for-bit across {paged, shared} x {whole, chunked} — shard
+    placement is pure layout, invisible in the output — and every
+    shard's pool must come back leak-clean (``stats.leak_report``
+    joins all four)."""
+    from repro.launch.mesh import make_sim_mesh
+    params, cfg, _ = _setup()
+    mesh = make_sim_mesh(4)
+    trace = make_trace(29)
+    for mode in ("paged", "shared"):
+        for chunked in (False, True):
+            check_trace(params, cfg, temperature, mode, chunked, trace,
+                        mesh=mesh, n_lanes=8)
+
+
+def test_sharded_trace_drafted_and_preempted(setup):
+    """Sharded decode's other two hot paths ride the same oracle check:
+    speculative verify rounds (``sharded_decode_round_spec``) and a
+    random preempt/resume schedule (host offload keyed per shard,
+    restore pinned to the parked shard's lanes)."""
+    from repro.launch.mesh import make_sim_mesh
+    params, cfg, _ = _setup()
+    mesh = make_sim_mesh(4)
+    trace = make_trace(11)
+    check_trace(params, cfg, 0.7, "paged", False, trace,
+                mesh=mesh, n_lanes=8, drafted=True)
+    check_trace(params, cfg, 0.7, "shared", True, trace,
+                mesh=mesh, n_lanes=8, preempt_seed=71)
 
 
 @pytest.mark.parametrize("temperature", [0.0, 0.7])

@@ -1,0 +1,290 @@
+"""Unit tests for the sharded-serving building blocks.
+
+The end-to-end contract (randomized traces on a simulated 4-device mesh
+bit-matching the single-device oracle) lives in test_serving_trace.py's
+sharded mode; this module covers the pieces in isolation:
+
+  * ``distributed/sharding.py`` divisibility fallbacks — mamba2's 50280
+    vocab is not divisible by model=16 so the embedding falls back to
+    sharding d_model, and the FSDP expert-weight rule crosses its
+    parameter threshold — checked on an AbstractMesh, proving the rules
+    never touch device state;
+  * ``serving_cache_specs``, the lane/block-axis spec dict the sharded
+    decode rounds run under;
+  * per-shard ``BlockPool`` id namespaces (``id_base``): disjoint global
+    ids, per-pool trash rows, and the global->local table arithmetic the
+    dispatch path uses;
+  * ``launch/mesh.py`` sim-device helpers (the conftest gives the whole
+    test process 8 simulated CPU devices);
+  * ``Scheduler(mesh=...)`` validation plus device *pinning*: a 1-device
+    mesh is a legal "shard count 1" that routes decode through shard_map
+    onto exactly that device — the unit of cascade tier placement;
+  * model-axis tensor parallelism via plain GSPMD (device_put to the
+    param specs): greedy tokens equal, which is the documented contract
+    for model>1 (shard_map data-parallel is the bit-exact path; the
+    model axis is allclose-level and therefore lives OUTSIDE the
+    serving loop's mesh, which rejects model>1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import AbstractMesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.distributed import sharding as sh
+from repro.launch.mesh import (ensure_sim_devices, make_sim_mesh,
+                               make_tier_mesh)
+from repro.serving.batch import GenConfig
+from repro.serving.block_pool import BlockPool
+from repro.serving.scheduler import Request, Scheduler
+
+POD_ABSTRACT = AbstractMesh((("data", 16), ("model", 16)))
+
+
+# ----------------------------------------------------------------------
+# param_spec divisibility fallbacks (AbstractMesh: no device state)
+# ----------------------------------------------------------------------
+
+def _abstract_params(cfg):
+    from repro.models import model as M
+    return jax.eval_shape(lambda k: M.init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def test_mamba2_vocab_falls_back_to_dmodel_sharding():
+    """50280 % 16 != 0: the embedding cannot shard its vocab dim over
+    model=16, so the rule falls back to d_model (2048, divisible)."""
+    cfg = get_config("mamba2-1.3b")
+    assert cfg.vocab_size % 16 != 0 and cfg.d_model % 16 == 0
+    specs = sh.param_specs(cfg, _abstract_params(cfg), POD_ABSTRACT)
+    assert specs["embed"]["embedding"] == P(None, "model")
+
+
+def test_embedding_replicates_when_nothing_divides():
+    """Neither dim divisible -> fully replicated, never a crash."""
+    cfg = get_config("mamba2-1.3b")
+    leaf = jax.ShapeDtypeStruct((50280, 2049), jnp.float32)
+    spec = sh.param_spec(cfg, (jax.tree_util.DictKey("embedding"),),
+                         leaf, POD_ABSTRACT)
+    assert spec == P(None, None)
+
+
+def test_fsdp_threshold_crossover():
+    """The same 4-d MoE expert leaf is data-sharded on dim 2 only when
+    the config's parameter count crosses FSDP_PARAM_THRESHOLD."""
+    path = (jax.tree_util.DictKey("moe"), jax.tree_util.DictKey("wi_gate"))
+    leaf = jax.ShapeDtypeStruct((4, 16, 5120, 8192), jnp.float32)
+    big = get_config("llama4-scout-17b-a16e")
+    small = get_config("olmoe-1b-7b")
+    assert big.param_count() > sh.FSDP_PARAM_THRESHOLD
+    assert small.param_count() < sh.FSDP_PARAM_THRESHOLD
+    assert sh.param_spec(big, path, leaf, POD_ABSTRACT) == \
+        P(None, "model", "data", None)
+    assert sh.param_spec(small, path, leaf, POD_ABSTRACT) == \
+        P(None, "model", None, None)
+
+
+def test_serving_cache_specs_layout():
+    """Lane axis on pos/cache_pos/block_tables, block axis on the
+    layer-stacked leaves, the shared position ruler replicated."""
+    spec = sh.serving_cache_specs(
+        {"pos": 0, "kpos": 0, "cache_pos": 0, "block_tables": 0,
+         "k": 0, "v": 0, "k_scale": 0, "conv": 0, "ssm": 0})
+    assert spec["pos"] == P("data")
+    assert spec["kpos"] == P()
+    assert spec["cache_pos"] == P("data", None)
+    assert spec["block_tables"] == P("data", None)
+    for name in ("k", "v", "k_scale", "conv", "ssm"):
+        assert spec[name] == P(None, "data")
+
+
+# ----------------------------------------------------------------------
+# Per-shard BlockPool id namespaces
+# ----------------------------------------------------------------------
+
+def test_block_pool_id_base_namespaces_disjoint():
+    """Shard s's pool owns global ids s*(n+1)+1 .. s*(n+1)+n; id 0 of
+    each slab is that shard's trash row.  Allocations from different
+    pools can never collide, and each pool rejects foreign ids."""
+    n = 6
+    pools = [BlockPool(n, 8, id_base=s * (n + 1)) for s in range(3)]
+    for p in pools:
+        assert p.reserve(n)
+    got = [set(p.alloc(n)) for p in pools]
+    assert got[0] == set(range(1, n + 1))
+    assert got[1] == set(range(n + 2, 2 * n + 2))
+    assert not (got[0] & got[1]) and not (got[1] & got[2])
+    # global -> local arithmetic used by the dispatch path
+    for s, ids in enumerate(got):
+        local = {g - s * (n + 1) for g in ids}
+        assert local == set(range(1, n + 1))
+    with pytest.raises(ValueError, match="not an allocatable block id"):
+        pools[0].free([n + 2])          # shard 1's id in shard 0's pool
+    for p, ids in zip(pools, got):
+        p.free(sorted(ids))
+        assert p.leak_report() is None
+
+
+def test_block_pool_zero_base_unchanged():
+    """id_base=0 is exactly the historical single-pool layout."""
+    p = BlockPool(4, 8)
+    assert p.reserve(4)
+    assert sorted(p.alloc(4)) == [1, 2, 3, 4]
+
+
+# ----------------------------------------------------------------------
+# Sim-device helpers
+# ----------------------------------------------------------------------
+
+def test_sim_mesh_device_order_and_tier_slices():
+    """make_sim_mesh takes the FIRST n devices in jax.devices() order so
+    tier placement can carve disjoint slices; make_tier_mesh builds a
+    model=1 mesh over an explicit slice and rejects empty ones."""
+    devs = jax.devices()
+    assert len(devs) >= 8          # conftest ran ensure_sim_devices(8)
+    mesh = make_sim_mesh(4)
+    assert dict(mesh.shape) == {"data": 4, "model": 1}
+    assert list(mesh.devices.ravel()) == devs[:4]
+    tier = make_tier_mesh(devs[4:6])
+    assert dict(tier.shape) == {"data": 2, "model": 1}
+    assert list(tier.devices.ravel()) == devs[4:6]
+    with pytest.raises(ValueError, match="empty"):
+        make_tier_mesh([])
+
+
+def test_ensure_sim_devices_raises_after_backend_lock(monkeypatch):
+    """The backend is locked at 8 by conftest: asking for more must be
+    a loud RuntimeError, not a silent single-device run."""
+    import os
+    monkeypatch.setenv("XLA_FLAGS", os.environ.get("XLA_FLAGS", ""))
+    ensure_sim_devices(8)          # satisfied: no-op
+    with pytest.raises(RuntimeError, match="already"):
+        ensure_sim_devices(64)
+
+
+# ----------------------------------------------------------------------
+# Scheduler(mesh=...): validation + device pinning
+# ----------------------------------------------------------------------
+
+def _tiny_cfg():
+    return ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                       d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                       d_ff=128, vocab_size=96, remat=False, source="test")
+
+
+def _gcfg():
+    return GenConfig(max_new_tokens=6, temperature=0.7, top_p=1.0, eos_id=2)
+
+
+def test_scheduler_mesh_validation():
+    cfg = _tiny_cfg()
+    no_data = jax.sharding.Mesh(np.asarray(jax.devices()[:2]), ("model",))
+    with pytest.raises(ValueError, match="data"):
+        Scheduler(None, cfg, None, _gcfg(), n_lanes=4, mesh=no_data)
+    with pytest.raises(ValueError, match="model"):
+        Scheduler(None, cfg, None, _gcfg(), n_lanes=4,
+                  mesh=make_sim_mesh(2, 2))
+    with pytest.raises(ValueError, match="divide"):
+        Scheduler(None, cfg, None, _gcfg(), n_lanes=6, mesh=make_sim_mesh(4))
+    with pytest.raises(ValueError, match="lanes per shard"):
+        Scheduler(None, cfg, None, _gcfg(), n_lanes=4, mesh=make_sim_mesh(4))
+
+
+def test_one_device_mesh_pins_execution():
+    """A 1-device mesh is shard count 1 with the semantics of PLACEMENT:
+    the loop's cache lives on exactly that device and completions still
+    match the (device-0) single-device run — the primitive cascade tier
+    placement is built from."""
+    from repro.models import model as M
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    target = jax.devices()[3]
+    reqs = [Request(uid=u, tokens=[5 + u] * (3 + 5 * u), max_new_tokens=6)
+            for u in range(3)]
+
+    def run(mesh):
+        sched = Scheduler(params, cfg, None, _gcfg(), n_lanes=2,
+                          paged=True, block_size=8, max_prompt_len=32,
+                          mesh=mesh)
+        loop = sched.loop(jax.random.PRNGKey(7))
+        loop.submit(reqs)
+        comps = {c.uid: c.tokens.tolist() for c in loop.drain()}
+        devs = {d for leaf in jax.tree.leaves(loop.cache)
+                for d in leaf.devices()}
+        loop.close()
+        return comps, devs
+
+    pinned, devs = run(make_tier_mesh([target]))
+    assert devs == {target}, "cache must live on the placed device"
+    baseline, _ = run(None)
+    assert pinned == baseline
+
+
+# ----------------------------------------------------------------------
+# Model-axis TP: plain GSPMD, greedy tokens equal
+# ----------------------------------------------------------------------
+
+def test_model_axis_tp_gspmd_tokens_equal():
+    """device_put the params to their (2, 2)-mesh specs and run the
+    UNMODIFIED engine under GSPMD: greedy completions equal the
+    single-device run.  (Model-axis matmul reductions reorder floats —
+    allclose logits, not bit-equal — which is exactly why the serving
+    loop's bit-exact sharded mode keeps model=1 and TP composes outside
+    it via GSPMD.)"""
+    from repro.models import model as M
+    from repro.serving.engine import generate
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.RandomState(3)
+    rows = rng.randint(3, 90, (4, 16)).astype(np.int32)
+    lens = np.full((4,), 16, np.int32)
+    gcfg = GenConfig(max_new_tokens=8, temperature=0.0, top_p=1.0, eos_id=2)
+    ref, _ = generate(params, cfg, rows, lens, jax.random.PRNGKey(1), gcfg)
+    mesh = make_sim_mesh(2, 2)
+    specs = sh.param_specs(cfg, params, mesh)
+    sharded = jax.device_put(params, sh.named(mesh, specs))
+    with mesh:
+        got, _ = generate(sharded, cfg, rows, lens, jax.random.PRNGKey(1),
+                          gcfg)
+    assert np.array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ----------------------------------------------------------------------
+# Launcher surfacing: the async front-end reports mesh + shard layout
+# ----------------------------------------------------------------------
+
+def test_async_server_surfaces_mesh_and_shards():
+    """AsyncServer.describe() names the mesh and lanes/shard, and
+    close() returns the final summary carrying the same banner — the
+    launcher-side contract for 'a serve log records where it ran'."""
+    import asyncio
+
+    from repro.launch.async_serve import TTFT, AsyncServer
+    from repro.models import model as M
+
+    cfg = _tiny_cfg()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    sched = Scheduler(params, cfg, None, _gcfg(), n_lanes=8, paged=True,
+                      block_size=8, max_prompt_len=32,
+                      mesh=make_sim_mesh(4))
+
+    async def serve():
+        server = AsyncServer(sched, jax.random.PRNGKey(9))
+        banner = server.describe()
+        streams = {u: server.submit(u, [5 + u] * 4, tenant=TTFT)
+                   for u in range(3)}
+        toks = {}
+        for u, s in streams.items():
+            toks[u] = [t async for t in s]
+        summary = await server.close()
+        return banner, toks, summary
+
+    banner, toks, summary = asyncio.run(serve())
+    assert "data=4" in banner and "2 lanes/shard" in banner
+    assert summary["devices"] == banner
+    assert summary["served"] == 3 and summary["rounds"] > 0
+    assert summary["stats"].leak_report is None
+    assert all(len(v) == 6 for v in toks.values())
