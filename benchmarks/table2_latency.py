@@ -456,6 +456,145 @@ def format_preempt(table) -> str:
 
 
 # ----------------------------------------------------------------------
+# Quantized serving tier: int8 paged KV (+ int8 weights) vs fp32
+# ----------------------------------------------------------------------
+
+def run_quant_smoke(n_requests: int = 12, round_tokens: int = 8,
+                    block_size: int = 8, new_tokens: int = 16,
+                    max_prompt_len: int = 64, seed: int = 0):
+    """No-training smoke for the quantized serving tier: the same
+    request stream served twice through the paged scheduler at an
+    *equal lane count* —
+
+      * ``fp32`` — the reference tier (fp weights, fp KV pages);
+      * ``int8`` — the quantized tier built through the exact SLM knobs
+        a cascade would use (``kv_quant=True`` for int8 KV pages with
+        per-(slot, head) f32 scales, ``quantize="int8"`` for
+        round-tripped int8 weights), via ``routing.make_scheduler``.
+
+    Because the lane count and cache geometry are identical, the HBM
+    story reduces to bytes per cached slot: fp32 pays
+    ``2 * KV * dh * 4`` bytes while int8 pays ``2 * KV * dh + 2 * KV *
+    4`` (values + scales), so ``lanes_per_byte_gain`` — how many more
+    lanes one HBM byte budget could hold — is the deterministic ratio
+    of the two dense-equivalent footprints, and ``kv_bytes_cut`` is
+    the same story as a fraction of the fp32 peak.  Quantized decoding
+    is *not* bit-equal to fp32 (that is the point of the gate's
+    tolerance mode): the smoke reports mean token-prefix agreement and
+    both accuracies, and the gate (scripts/check_bench_regression.py
+    ``check_quant_invariants``) requires the int8 accuracy within a
+    relative ``--tol`` of fp32, the int8 footprint strictly below, and
+    the gain over its floor.  Each path runs twice (first pass pays
+    the jit compiles) and reports min wall-clock."""
+    import time
+
+    import numpy as np
+
+    from repro.core.experiment import TINY, model_config
+    from repro.core.routing import make_scheduler
+    from repro.data.tasks import is_correct, make_benchmark
+    from repro.models import model as model_lib
+    from repro.serving.batch import GenConfig
+    from repro.serving.scheduler import Request
+
+    cfg = model_config(TINY)
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0))
+    items = make_benchmark("arith", n_requests, seed=seed)
+    reqs = [Request(uid=i, prompt=f"Q: {item.question}\nA: ")
+            for i, item in enumerate(items)]
+    gcfg = GenConfig(max_new_tokens=new_tokens, temperature=0.7, top_p=1.0)
+
+    def serve(quant: bool):
+        slm = make_slm(params, TINY)
+        slm.gcfg = gcfg
+        slm.round_tokens = round_tokens
+        slm.max_prompt_len = max_prompt_len
+        slm.paged = True
+        slm.block_size = block_size
+        if quant:
+            slm.kv_quant = True
+            slm.quantize = "int8"
+        sched = make_scheduler(slm, n_requests)
+        best_wall, comps, stats = None, None, None
+        for _ in range(2):           # first pass pays compiles; min-of-2
+            loop = sched.loop(jax.random.PRNGKey(5))
+            loop.submit([Request(**vars(r)) for r in reqs])
+            t0 = time.time()
+            comps = loop.drain()
+            wall = time.time() - t0
+            stats = loop.close()
+            assert sched.pool.leak_report() is None
+            best_wall = wall if best_wall is None else min(best_wall, wall)
+        tok = slm.tokenizer
+        acc = float(np.mean([is_correct(items[c.uid], tok.decode(c.tokens))
+                             for c in comps]))
+        return {
+            "wall_s": best_wall,
+            "rounds": int(stats.rounds),
+            "generated_tokens": int(stats.generated_tokens),
+            "n_lanes": int(sched.n_lanes),
+            "pool_blocks": int(stats.pool_blocks),
+            "peak_blocks_in_use": int(stats.peak_blocks_in_use),
+            "peak_cache_bytes": int(stats.peak_cache_bytes),
+            "dense_cache_bytes": int(stats.dense_cache_bytes),
+            "accuracy": acc,
+            "tokens": {str(c.uid): [int(t) for t in c.tokens]
+                       for c in comps},
+        }
+
+    fp32 = serve(False)
+    int8 = serve(True)
+    fp_toks, q_toks = fp32.pop("tokens"), int8.pop("tokens")
+
+    def prefix_agreement(got, want):
+        if not want:
+            return 1.0
+        n = 0
+        for a, b in zip(got, want):
+            if a != b:
+                break
+            n += 1
+        return n / len(want)
+
+    agreement = float(np.mean([prefix_agreement(q_toks[u], fp_toks[u])
+                               for u in fp_toks]))
+    return {"arith": {
+        "fp32": fp32,
+        "int8": int8,
+        "n_requests": n_requests,
+        "equal_lanes": bool(fp32["n_lanes"] == int8["n_lanes"]),
+        # deterministic geometry ratio: bytes per cached slot at equal
+        # lane count (fp32 values vs int8 values + f32 scales)
+        "lanes_per_byte_gain": fp32["dense_cache_bytes"]
+                               / max(int8["dense_cache_bytes"], 1),
+        "kv_bytes_cut": 1.0 - int8["peak_cache_bytes"]
+                        / max(fp32["peak_cache_bytes"], 1e-9),
+        "token_agreement": agreement,
+    }}
+
+
+def format_quant(table) -> str:
+    row = table["arith"]
+    lines = ["quantized serving tier: int8 paged KV + int8 weights vs fp32 "
+             "(equal lanes)",
+             f"{'':8s} {'wall':>7s} {'rounds':>7s} {'gen':>6s} {'acc':>5s} "
+             f"{'peak-KV':>9s} {'dense-eq':>9s} {'blocks':>7s}"]
+    for name in ("fp32", "int8"):
+        r = row[name]
+        lines.append(
+            f"{name:8s} {r['wall_s']:6.2f}s {r['rounds']:7d} "
+            f"{r['generated_tokens']:6d} {r['accuracy']:5.2f} "
+            f"{r['peak_cache_bytes'] / 1024:7.1f}Ki "
+            f"{r['dense_cache_bytes'] / 1024:7.1f}Ki "
+            f"{r['peak_blocks_in_use']:7d}")
+    lines.append(
+        f"lanes/HBM-byte gain: {row['lanes_per_byte_gain']:.2f}x  "
+        f"peak-KV cut: {row['kv_bytes_cut']:.0%}  "
+        f"token agreement: {row['token_agreement']:.0%}")
+    return "\n".join(lines)
+
+
+# ----------------------------------------------------------------------
 # Pipelined multi-tier cascade: barrier tiers vs mid-flight escalation
 # ----------------------------------------------------------------------
 
@@ -978,6 +1117,10 @@ if __name__ == "__main__":
                     help="smoke block-granular preemption with host KV "
                          "offload: a 2-lane pool served with and without "
                          "auto_preempt against an ample-pool reference")
+    ap.add_argument("--quant", action="store_true",
+                    help="smoke the quantized serving tier: int8 paged KV "
+                         "(+ int8 weights) vs fp32 at equal lane count "
+                         "(HBM footprint, accuracy at tolerance)")
     ap.add_argument("--sharded", action="store_true",
                     help="smoke multi-device sharded serving on simulated "
                          "host devices: lane scaling at bit-equal "
@@ -992,7 +1135,8 @@ if __name__ == "__main__":
         ap.error("--share-prefix requires --paged")
     if args.sharded:
         if not args.smoke or args.paged or args.pipeline_cascade \
-                or args.chunked_serve or args.spec_cascade or args.preempt:
+                or args.chunked_serve or args.spec_cascade or args.preempt \
+                or args.quant:
             ap.error("--sharded is a standalone --smoke benchmark")
         if args.devices < 2 or args.devices % 2:
             ap.error("--devices must be an even count >= 2")
@@ -1005,9 +1149,19 @@ if __name__ == "__main__":
                 json.dump({"sharded_smoke": True, "smoke": True,
                            "devices": args.devices, "table": t}, f, indent=2)
         print(format_sharded(t, args.devices))
+    elif args.quant:
+        if not args.smoke or args.paged or args.pipeline_cascade \
+                or args.chunked_serve or args.spec_cascade or args.preempt:
+            ap.error("--quant is a standalone --smoke benchmark")
+        t = run_quant_smoke()
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"quant_smoke": True, "smoke": True,
+                           "table": t}, f, indent=2)
+        print(format_quant(t))
     elif args.preempt:
         if not args.smoke or args.paged or args.pipeline_cascade \
-                or args.chunked_serve or args.spec_cascade:
+                or args.chunked_serve or args.spec_cascade or args.quant:
             ap.error("--preempt is a standalone --smoke benchmark")
         t = run_preempt_smoke()
         if args.json:

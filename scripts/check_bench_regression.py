@@ -45,7 +45,21 @@ cost metric regressed beyond its tolerance:
     placement over the serialized one additionally gates only when the
     producing rig could physically parallelize (``wall_gate_armed`` —
     simulated devices timeshare the host's cores, so a single-core
-    host tops out at wall parity).
+    host tops out at wall parity);
+  * the quantized-tier JSON (``--quant``) carries its own baseline-free
+    invariants: the int8 tier must sit *strictly below* the fp32 tier
+    on both KV-footprint metrics at an equal lane count, clear the
+    efficiency bar (lanes-per-HBM-byte gain >= 1.7x, or peak-KV cut
+    >= 40%), and hold fp32 accuracy within the relative ``--tol``.
+    Quantized serving is the one path that is NOT bit-equal to its
+    reference — ``--tol`` is the stated accuracy tolerance that
+    replaces the bit-identity checks every other smoke gates on.
+
+``--tol`` (default 0.10) is the generic accuracy tolerance: any
+``accuracy`` / ``token_agreement`` metric present in both trees gates
+downward against the baseline at that relative tolerance (plus a small
+absolute slack), and the quant invariants reuse it for the int8-vs-fp32
+accuracy comparison.
 
 Usage:
     python scripts/check_bench_regression.py CURRENT.json BASELINE.json
@@ -89,8 +103,15 @@ COUNTERS = {
     "resumes": ("low", 0.5, 4),
     "admission_blocked": ("low", 0.5, 4),
     "host_blocks_peak": ("low", 0.5, 4),
+    # quantized tier: the footprint win must not erode vs baseline
+    "lanes_per_byte_gain": ("high", 0.05, 0.0),
+    "kv_bytes_cut": ("high", 0.0, 0.05),
 }
 WALL_METRICS = ("wall_s", "ttft_mean_s", "ttft_p50_s", "ttft_p95_s")
+# accuracy-type metrics gate downward at the generic --tol (relative)
+# plus a small absolute slack for all-but-empty smokes
+ACCURACY_METRICS = ("accuracy", "token_agreement")
+ACCURACY_ABS_SLACK = 0.02
 
 
 def walk(cur, base, path=""):
@@ -103,18 +124,22 @@ def walk(cur, base, path=""):
         if isinstance(v, dict):
             yield from walk(v, base.get(k), p)
         elif isinstance(v, (int, float)) and not isinstance(v, bool):
-            if k in COUNTERS or k in WALL_METRICS:
+            if k in COUNTERS or k in WALL_METRICS or k in ACCURACY_METRICS:
                 b = base.get(k) if isinstance(base, dict) else None
                 if isinstance(b, (int, float)) and not isinstance(b, bool):
                     yield p, k, float(v), float(b)
 
 
-def check_metrics(cur, base, wall_slack):
+def check_metrics(cur, base, wall_slack, tol=0.1):
     failures, rows = [], []
     for path, key, v, b in walk(cur, base):
         if key in WALL_METRICS:
             ok = v <= b * wall_slack
             bound = f"<= {b * wall_slack:.2f} ({wall_slack:.1f}x slack)"
+        elif key in ACCURACY_METRICS:
+            limit = b * (1 - tol) - ACCURACY_ABS_SLACK
+            ok = v >= limit
+            bound = f">= {limit:.2f} (--tol {tol:.2f})"
         else:
             direction, rel, slack = COUNTERS[key]
             if direction == "low":
@@ -281,6 +306,50 @@ def check_shard_invariants(cur):
     return failures
 
 
+def check_quant_invariants(cur, tol=0.1):
+    """Baseline-free acceptance checks for --quant JSONs: the int8 tier
+    must strictly undercut the fp32 tier on both KV-footprint metrics
+    at an equal lane count, clear the efficiency bar (>= 1.7x
+    lanes-per-HBM-byte, or >= 40% peak-KV cut), and hold fp32 accuracy
+    within the relative ``tol``.  Token agreement with the fp32 stream
+    is additionally floored at 0.25: quantized serving may legitimately
+    diverge token by token, but near-zero agreement means the int8 path
+    is not serving the same model anymore."""
+    failures = []
+    for bench, row in cur.get("table", {}).items():
+        fp32, int8 = row.get("fp32"), row.get("int8")
+        if not (isinstance(fp32, dict) and isinstance(int8, dict)):
+            continue
+        if not row.get("equal_lanes", False):
+            failures.append(
+                f"{bench}: lane counts differ (fp32 {fp32.get('n_lanes')} "
+                f"vs int8 {int8.get('n_lanes')}) — the footprint "
+                "comparison is only meaningful at equal lanes")
+        for metric in ("peak_cache_bytes", "dense_cache_bytes"):
+            if not int8[metric] < fp32[metric]:
+                failures.append(
+                    f"{bench}: int8 {metric} {int8[metric]} not strictly "
+                    f"below fp32 {fp32[metric]}")
+        gain = row.get("lanes_per_byte_gain", 0)
+        cut = row.get("kv_bytes_cut", 0)
+        if not (gain >= 1.7 or cut >= 0.4):
+            failures.append(
+                f"{bench}: efficiency bar missed — lanes/HBM-byte gain "
+                f"{gain:.2f}x < 1.7x and peak-KV cut {cut:.0%} < 40%")
+        limit = fp32["accuracy"] * (1 - tol)
+        if not int8["accuracy"] >= limit:
+            failures.append(
+                f"{bench}: int8 accuracy {int8['accuracy']:.3f} below the "
+                f"tolerance bound {limit:.3f} (fp32 {fp32['accuracy']:.3f} "
+                f"at --tol {tol:.2f})")
+        if not row.get("token_agreement", 0) >= 0.25:
+            failures.append(
+                f"{bench}: token agreement "
+                f"{row.get('token_agreement', 0):.0%} below the 25% floor "
+                "— the int8 tier no longer tracks the fp32 model")
+    return failures
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("current", help="fresh smoke JSON from this CI run")
@@ -288,6 +357,10 @@ def main():
     ap.add_argument("--wall-slack", type=float, default=3.0,
                     help="allowed wall-clock factor over baseline "
                          "(runners differ; default 3.0)")
+    ap.add_argument("--tol", type=float, default=0.1,
+                    help="relative accuracy tolerance: accuracy / "
+                         "token_agreement metrics may trail the baseline "
+                         "by this fraction (default 0.10)")
     ap.add_argument("--update", action="store_true",
                     help="rewrite the baseline from the current run")
     args = ap.parse_args()
@@ -302,7 +375,7 @@ def main():
     with open(args.baseline) as f:
         base = json.load(f)
 
-    failures, rows = check_metrics(cur, base, args.wall_slack)
+    failures, rows = check_metrics(cur, base, args.wall_slack, args.tol)
     if cur.get("pipeline_cascade"):
         failures += check_pipeline_invariants(cur)
     if cur.get("chunked_serve"):
@@ -313,6 +386,8 @@ def main():
         failures += check_preempt_invariants(cur)
     if cur.get("sharded_smoke"):
         failures += check_shard_invariants(cur)
+    if cur.get("quant_smoke"):
+        failures += check_quant_invariants(cur, args.tol)
 
     width = max((len(r[0]) for r in rows), default=20)
     print(f"{args.current} vs {args.baseline}:")

@@ -54,6 +54,14 @@ class SLM:
     #                                      devices (cascade tier placement —
     #                                      launch/mesh.make_tier_mesh); the
     #                                      serving loop requires model=1
+    kv_quant: bool = False       # int8 KV cache with per-(slot, head) f32
+    #                              scales (dense and paged; serving output is
+    #                              tolerance-comparable to fp, not bit-equal)
+    quantize: "str | None" = None        # weight quantization for the tier:
+    #                                      "int8" round-trips every matmul
+    #                                      weight through per-output-channel
+    #                                      absmax int8 at scheduler build
+    #                                      (memoized — quantize once per SLM)
 
 
 @dataclasses.dataclass
@@ -87,13 +95,71 @@ class ModelLLM:
 
 
 # ----------------------------------------------------------------------
+# Weight quantization for cheap cascade tiers
+# ----------------------------------------------------------------------
+
+def quantize_params_int8(params):
+    """Round-trip every matmul-shaped weight through per-output-channel
+    absmax int8: ``q = round(w / s)`` with ``s = absmax(column) / 127``,
+    returned as ``q * s`` in the original dtype.
+
+    Only leaves with ndim >= 2 are touched (matmul weights, embeddings);
+    norm gains / biases / router scalars stay exact.  The round-trip
+    representation keeps every downstream apply site unchanged (they all
+    cast weights to the compute dtype anyway) while making the tier's
+    numerics exactly those of an int8-weight deployment.
+    """
+    import jax.numpy as jnp
+
+    def q(w):
+        if w.ndim < 2:
+            return w
+        wf = w.astype(jnp.float32)
+        s = jnp.max(jnp.abs(wf), axis=-2, keepdims=True) / 127.0
+        qw = jnp.round(wf / jnp.maximum(s, 1e-8))
+        return (qw * s).astype(w.dtype)
+
+    return jax.tree.map(q, params)
+
+
+# quantize-once memo: SLMs are rebuilt per call site but reuse one params
+# tree; key on id(params) and hold a reference so the id can't recycle
+_QUANT_PARAMS: Dict[int, tuple] = {}
+
+
+def _tier_params(slm: SLM):
+    """The params tree a scheduler for this SLM should serve — the
+    original weights, or their memoized int8 round-trip when
+    ``slm.quantize`` is set."""
+    if slm.quantize is None:
+        return slm.params
+    if slm.quantize != "int8":
+        raise ValueError(
+            f"unsupported SLM.quantize={slm.quantize!r}: only 'int8' "
+            "(per-output-channel absmax round-trip) is implemented")
+    hit = _QUANT_PARAMS.get(id(slm.params))
+    if hit is not None:
+        return hit[1]
+    quantized = quantize_params_int8(slm.params)
+    _QUANT_PARAMS[id(slm.params)] = (slm.params, quantized)
+    return quantized
+
+
+# ----------------------------------------------------------------------
 # Streaming generation through the continuous-batching scheduler
 # ----------------------------------------------------------------------
 
 def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
     """Scheduler over the SLM's lane pool.  The pool width is bucketed
     to the request count so small calls don't decode a full-width pool
-    while big ones still compile once per width bucket."""
+    while big ones still compile once per width bucket.
+
+    Quantized tiers funnel through here too: ``slm.kv_quant`` flips the
+    model config's int8-KV flag and ``slm.quantize`` swaps in the
+    memoized int8-round-tripped weights — so a multi-tier cascade can
+    mix precisions per tier with no cascade-side changes
+    (core/cascade_multi builds each tier's scheduler via this exact
+    function)."""
     n_lanes = pick_bucket(min(max(n_requests, 1), slm.lane_budget),
                           make_buckets(slm.lane_budget, 1))
     if slm.mesh is not None:
@@ -102,7 +168,10 @@ def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
         # size-1 batch-dim rule), so round the bucket up accordingly
         s = slm.mesh.shape["data"]
         n_lanes = max(2 * s, -(-n_lanes // s) * s)
-    return Scheduler(slm.params, slm.cfg, slm.tokenizer, slm.gcfg,
+    cfg = slm.cfg
+    if slm.kv_quant and not cfg.kv_quant:
+        cfg = dataclasses.replace(cfg, kv_quant=True)
+    return Scheduler(_tier_params(slm), cfg, slm.tokenizer, slm.gcfg,
                      n_lanes=n_lanes, round_tokens=slm.round_tokens,
                      max_prompt_len=slm.max_prompt_len, paged=slm.paged,
                      block_size=slm.block_size,

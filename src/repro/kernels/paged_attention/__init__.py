@@ -1,1 +1,2 @@
-from repro.kernels.paged_attention.ops import paged_decode_attention  # noqa: F401
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    paged_decode_attention, paged_decode_attention_quant)

@@ -19,6 +19,12 @@ masking by absolute position ``ki * block_size + offset``.
 
 Page 0 is the allocator's trash block; block-table entries past a
 lane's allocation point at it and are always masked by length.
+
+The quantized sibling (``_paged_quant_kernel``) fetches int8 pages
+plus their per-(slot, kv-head) f32 scale pages through the same block
+table and dequantizes *inside* the kernel — the f32 K/V tile exists
+only in registers/VMEM for the one block being processed, never in
+HBM, which is the whole point of the int8 cache layout.
 """
 
 from __future__ import annotations
@@ -32,6 +38,27 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 MIN_LANE = 128
+
+
+def _flash_update(q, k, v, k_start, length, window, block_size,
+                  m_ref, l_ref, acc_ref):
+    """One online-softmax block update shared by the fp and quantized
+    kernels: q (1, d) pre-scaled, k/v (bs, d) already f32."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, bs)
+    kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
+    mask = kpos < length
+    mask = mask & jnp.where(window > 0, kpos >= length - window, True)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                    # (1, 128)
+    m_cur = jnp.max(s, axis=-1)[:, None]
+    m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
+    p = jnp.exp(s - m_new[:, :1])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)[:, None]
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr[:, :1] + \
+        jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
 
 
 def _paged_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
@@ -58,21 +85,45 @@ def _paged_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, d)
         k = k_ref[0, 0].astype(jnp.float32)                    # (bs, d)
         v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # (1, bs)
-        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (1, block_size), 1)
-        mask = kpos < length
-        mask = mask & jnp.where(window > 0, kpos >= length - window, True)
-        s = jnp.where(mask, s, NEG_INF)
+        _flash_update(q, k, v, k_start, length, window, block_size,
+                      m_ref, l_ref, acc_ref)
 
-        m_prev = m_ref[...]                                    # (1, 128)
-        m_cur = jnp.max(s, axis=-1)[:, None]
-        m_new = jnp.maximum(m_prev, jnp.broadcast_to(m_cur, m_prev.shape))
-        p = jnp.exp(s - m_new[:, :1])
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)[:, None]
-        m_ref[...] = m_new
-        acc_ref[...] = acc_ref[...] * corr[:, :1] + \
-            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = l_ref[...][:, :1]
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def _paged_quant_kernel(bt_ref, len_ref, win_ref, q_ref, k_ref, v_ref,
+                        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        scale: float, block_size: int):
+    """Dequant-fused variant: k/v pages arrive int8 with per-(slot,
+    kv-head) f32 scale pages gathered through the same block table;
+    the f32 tile exists only for the block in flight."""
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    n_k = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = len_ref[b]
+    window = win_ref[0]
+    k_start = ki * block_size
+    in_range = k_start < length
+    in_window = jnp.where(window > 0,
+                          k_start + block_size - 1 >= length - window, True)
+
+    @pl.when(in_range & in_window)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale            # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32) * ks_ref[0, 0]     # (bs, d)*(bs, 1)
+        v = v_ref[0, 0].astype(jnp.float32) * vs_ref[0, 0]
+        _flash_update(q, k, v, k_start, length, window, block_size,
+                      m_ref, l_ref, acc_ref)
 
     @pl.when(ki == n_k - 1)
     def _finalize():
@@ -122,3 +173,51 @@ def paged_decode_attention_pallas(q, k_pages, v_pages, block_tables, lengths,
         out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
         interpret=interpret,
     )(block_tables, lengths, window, q, k_pages, v_pages)
+
+
+def paged_decode_attention_quant_pallas(q, k_pages, v_pages, k_scale,
+                                        v_scale, block_tables, lengths,
+                                        window, *, interpret: bool = False):
+    """q: (B, H, 1, D); k_pages, v_pages: (P, KV, bs, D) int8;
+    k_scale, v_scale: (P, KV, bs, 1) f32 per-(slot, kv-head) absmax
+    scales; block_tables: (B, M) int32; lengths: (B,); window: (1,)
+    int32.  Returns (B, H, 1, D) in q.dtype.
+
+    Same grid and flash state as :func:`paged_decode_attention_pallas`;
+    the scale pages ride two extra BlockSpecs through the identical
+    block-table index map, and dequantization happens on the tile in
+    VMEM — int8 is the only K/V representation that ever leaves HBM.
+    """
+    b, h, _, d = q.shape
+    kv, bs = k_pages.shape[1], k_pages.shape[2]
+    m = block_tables.shape[1]
+    group = h // kv
+    grid = (b, h, m)
+    kernel = functools.partial(_paged_quant_kernel, scale=d ** -0.5,
+                               block_size=bs)
+    page_spec = pl.BlockSpec((1, 1, bs, d), lambda bb, hh, ki, bt, ln, w:
+                             (bt[bb, ki], hh // group, 0, 0))
+    scale_spec = pl.BlockSpec((1, 1, bs, 1), lambda bb, hh, ki, bt, ln, w:
+                              (bt[bb, ki], hh // group, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,     # block_tables, lengths, window
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, d), lambda bb, hh, ki, bt, ln, w:
+                         (bb, hh, 0, 0)),
+            page_spec, page_spec, scale_spec, scale_spec,
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, d), lambda bb, hh, ki, bt, ln, w:
+                               (bb, hh, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, MIN_LANE), jnp.float32),
+            pltpu.VMEM((1, MIN_LANE), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, h, 1, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, lengths, window, q, k_pages, v_pages, k_scale, v_scale)

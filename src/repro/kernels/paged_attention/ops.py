@@ -16,7 +16,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.paged_attention.kernel import paged_decode_attention_pallas
+from repro.kernels.paged_attention.kernel import (
+    paged_decode_attention_pallas, paged_decode_attention_quant_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -39,4 +40,35 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, lengths,
     out = paged_decode_attention_pallas(qt, kt, vt, bt,
                                         lengths.astype(jnp.int32), win,
                                         interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention_quant(q, k_pages, v_pages, k_scale, v_scale,
+                                 block_tables, lengths, window=0,
+                                 interpret: bool = None):
+    """Dequant-fused paged decode attention.
+
+    q: (B, 1, H, D); k_pages, v_pages: (P, bs, KV, D) int8; k_scale,
+    v_scale: (P, bs, KV) f32 per-(slot, kv-head) absmax scales (the
+    model cache layout — slot-major, like the values); block_tables:
+    (B, M) int32; lengths: (B,); window: int or scalar (0 = full).
+    Returns (B, 1, H, D) in q.dtype.
+
+    The kernel gathers int8 pages AND their scale pages through the
+    block table and dequantizes in VMEM; off-TPU it runs in Pallas
+    interpret mode like the fp kernel.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt = jnp.swapaxes(q, 1, 2)                       # (B, H, 1, D)
+    kt = jnp.transpose(k_pages, (0, 2, 1, 3))        # (P, KV, bs, D)
+    vt = jnp.transpose(v_pages, (0, 2, 1, 3))
+    kst = jnp.transpose(k_scale, (0, 2, 1))[..., None]   # (P, KV, bs, 1)
+    vst = jnp.transpose(v_scale, (0, 2, 1))[..., None]
+    bt = jnp.maximum(block_tables.astype(jnp.int32), 0)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    out = paged_decode_attention_quant_pallas(
+        qt, kt, vt, kst, vst, bt, lengths.astype(jnp.int32), win,
+        interpret=interpret)
     return jnp.swapaxes(out, 1, 2)

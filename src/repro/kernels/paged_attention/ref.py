@@ -31,3 +31,16 @@ def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, lengths,
     p = jax.nn.softmax(s_mat, axis=-1)
     out = jnp.einsum("bkgs,bksd->bkgd", p, v.astype(jnp.float32))
     return out.reshape(b, h, 1, d).astype(q.dtype)
+
+
+def paged_decode_attention_quant_ref(q, k_pages, v_pages, k_scale, v_scale,
+                                     block_tables, lengths, window: int = 0):
+    """Quantized oracle: dequantize the int8 pages with their
+    per-(slot, kv-head) scales, then run the fp reference.
+
+    q: (B, H, 1, D); k_pages, v_pages: (P, KV, bs, D) int8; k_scale,
+    v_scale: (P, KV, bs) f32; block_tables: (B, M); lengths: (B,)
+    -> (B, H, 1, D)."""
+    k = k_pages.astype(jnp.float32) * k_scale[..., None]
+    v = v_pages.astype(jnp.float32) * v_scale[..., None]
+    return paged_decode_attention_ref(q, k, v, block_tables, lengths, window)

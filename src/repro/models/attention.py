@@ -313,7 +313,8 @@ def dequantize_kv(q, s, dtype):
 
 def attention_decode_paged(cfg: ModelConfig, p, x, pos, k_pages, v_pages,
                            write_slot, gather_idx, kpos, block_tables,
-                           window, use_kernel=None):
+                           window, use_kernel=None,
+                           k_scale=None, v_scale=None):
     """One-token decode against a block-paged KV cache.
 
     x: (B,1,D); pos: (B,) absolute position of the new token.
@@ -329,10 +330,21 @@ def attention_decode_paged(cfg: ModelConfig, p, x, pos, k_pages, v_pages,
     exactly like the dense cache — greedy decoding through pages
     bit-matches the dense path (tests/test_scheduler.py).
 
+    With ``k_scale``/``v_scale`` set ((P, bs, KV) f32 per-(slot,
+    kv-head) scale pages, ``cfg.kv_quant``), the pages are int8: the
+    new token's K/V are quantized before the scatter and the attention
+    reads dequantize — fused in the quant Pallas kernel on TPU, as a
+    transient gathered view on the jnp path.  A trash-routed write
+    lands garbage values AND a garbage scale in page 0, which is safe
+    for the same reason garbage values alone are: those slots are
+    always masked, so their probs are exact zeros whatever the slot
+    dequantizes to.
+
     ``use_kernel=None`` picks the Pallas paged-attention kernel on TPU
     and the pure-jnp gather path elsewhere; the jnp path is the
     semantic reference the kernel is tested against.
-    Returns (out (B,1,D), k_pages, v_pages).
+    Returns (out (B,1,D), k_pages, v_pages) — plus the updated scale
+    pages when quantized.
     """
     cdt = jnp.dtype(cfg.compute_dtype)
     b = x.shape[0]
@@ -345,14 +357,33 @@ def attention_decode_paged(cfg: ModelConfig, p, x, pos, k_pages, v_pages,
     q = apply_rope(q, pos[:, None], cfg.rope_theta)
     k = apply_rope(k, pos[:, None], cfg.rope_theta)
 
+    quant = k_scale is not None
     k_flat = k_pages.reshape(pb * bs, cfg.n_kv_heads, dh)
     v_flat = v_pages.reshape(pb * bs, cfg.n_kv_heads, dh)
-    k_flat = k_flat.at[write_slot].set(k[:, 0].astype(k_flat.dtype))
-    v_flat = v_flat.at[write_slot].set(v[:, 0].astype(v_flat.dtype))
+    if quant:
+        kq, ks = quantize_kv(k[:, 0])
+        vq, vs = quantize_kv(v[:, 0])
+        k_flat = k_flat.at[write_slot].set(kq)
+        v_flat = v_flat.at[write_slot].set(vq)
+        ks_flat = k_scale.reshape(pb * bs, cfg.n_kv_heads)
+        vs_flat = v_scale.reshape(pb * bs, cfg.n_kv_heads)
+        ks_flat = ks_flat.at[write_slot].set(ks)
+        vs_flat = vs_flat.at[write_slot].set(vs)
+    else:
+        k_flat = k_flat.at[write_slot].set(k[:, 0].astype(k_flat.dtype))
+        v_flat = v_flat.at[write_slot].set(v[:, 0].astype(v_flat.dtype))
 
     if use_kernel is None:
         use_kernel = jax.default_backend() == "tpu"
-    if use_kernel:
+    if use_kernel and quant:
+        from repro.kernels.paged_attention import paged_decode_attention_quant
+        out = paged_decode_attention_quant(
+            q, k_flat.reshape(pb, bs, cfg.n_kv_heads, dh),
+            v_flat.reshape(pb, bs, cfg.n_kv_heads, dh),
+            ks_flat.reshape(pb, bs, cfg.n_kv_heads),
+            vs_flat.reshape(pb, bs, cfg.n_kv_heads),
+            block_tables, pos + 1, window=window)
+    elif use_kernel:
         from repro.kernels.paged_attention import paged_decode_attention
         out = paged_decode_attention(
             q, k_flat.reshape(pb, bs, cfg.n_kv_heads, dh),
@@ -362,8 +393,14 @@ def attention_decode_paged(cfg: ModelConfig, p, x, pos, k_pages, v_pages,
         # gather the lane's logical cache view (B, S, KV, Dh); transient
         # per layer, exactly the dense layout so masking/softmax match
         # the dense path bit-for-bit
-        k_att = k_flat[gather_idx]
-        v_att = v_flat[gather_idx]
+        if quant:
+            k_att = dequantize_kv(k_flat[gather_idx], ks_flat[gather_idx],
+                                  cdt)
+            v_att = dequantize_kv(v_flat[gather_idx], vs_flat[gather_idx],
+                                  cdt)
+        else:
+            k_att = k_flat[gather_idx]
+            v_att = v_flat[gather_idx]
         k_positions = jnp.broadcast_to(kpos[None, :], gather_idx.shape)
         valid = kpos[None, :] <= pos[:, None]
         if kpos.shape[0] > 64 * 1024:     # same switch as the dense path
@@ -374,6 +411,11 @@ def attention_decode_paged(cfg: ModelConfig, p, x, pos, k_pages, v_pages,
             out = direct_attention(cfg, q, k_att, v_att, pos[:, None],
                                    k_positions, window, valid_k=valid)
     out = out.reshape(b, 1, cfg.n_heads * dh) @ p["wo"].astype(cdt)
+    if quant:
+        return (out, k_flat.reshape(pb, bs, cfg.n_kv_heads, dh),
+                v_flat.reshape(pb, bs, cfg.n_kv_heads, dh),
+                ks_flat.reshape(pb, bs, cfg.n_kv_heads),
+                vs_flat.reshape(pb, bs, cfg.n_kv_heads))
     return (out, k_flat.reshape(pb, bs, cfg.n_kv_heads, dh),
             v_flat.reshape(pb, bs, cfg.n_kv_heads, dh))
 

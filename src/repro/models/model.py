@@ -278,30 +278,41 @@ def init_paged_decode_state(cfg: ModelConfig, batch: int, s_max: int,
     from it (``kpos <= pos``), so no per-slot ``cache_pos`` is needed.
 
     Constraints: attention-only caching (SSM state stays per-lane and
-    dense — it is O(1) per lane already), no kv_quant (the scheduler's
-    prefill-insert path never quantizes; same restriction as the dense
-    scheduler), and no pure-ring sliding-window configs (paged lanes
-    are append-only; windows are enforced by masking instead, any mix
-    with a global layer is fine).
+    dense — it is O(1) per lane already) and no pure-ring
+    sliding-window configs (paged lanes are append-only; windows are
+    enforced by masking instead, any mix with a global layer is fine).
+
+    With ``cfg.kv_quant`` the page pools are int8 and each (block-slot,
+    kv-head) carries an f32 absmax scale in ``k_scale``/``v_scale``
+    pools of shape ``(L, n_blocks + 1, block_size, KV)`` — the scale
+    pools are indexed by exactly the same flat slot ids as the value
+    pools, so block sharing/CoW/offload move scales verbatim alongside
+    their int8 blocks.
     """
     if not cfg.has_attention:
         raise ValueError("paged decode cache requires an attention model")
-    if cfg.kv_quant:
-        raise ValueError("paged decode cache does not support kv_quant")
     if cache_length(cfg, s_max) != s_max:
         raise ValueError("paged decode cache requires full-length caching "
                          "(pure sliding-window ring configs decode dense)")
     cdt = cache_dtype or jnp.dtype(cfg.compute_dtype)
     L = cfg.n_layers
     dh = cfg.resolved_head_dim
+    kv_dt = jnp.int8 if cfg.kv_quant else cdt
     max_blocks = -(-s_max // block_size)
     cache = {
         "pos": jnp.zeros((batch,), jnp.int32),
         "kpos": jnp.arange(s_max, dtype=jnp.int32),
         "block_tables": jnp.zeros((batch, max_blocks), jnp.int32),
-        "k": jnp.zeros((L, n_blocks + 1, block_size, cfg.n_kv_heads, dh), cdt),
-        "v": jnp.zeros((L, n_blocks + 1, block_size, cfg.n_kv_heads, dh), cdt),
+        "k": jnp.zeros((L, n_blocks + 1, block_size, cfg.n_kv_heads, dh),
+                       kv_dt),
+        "v": jnp.zeros((L, n_blocks + 1, block_size, cfg.n_kv_heads, dh),
+                       kv_dt),
     }
+    if cfg.kv_quant:
+        cache["k_scale"] = jnp.zeros(
+            (L, n_blocks + 1, block_size, cfg.n_kv_heads), jnp.float32)
+        cache["v_scale"] = jnp.zeros(
+            (L, n_blocks + 1, block_size, cfg.n_kv_heads), jnp.float32)
     if cfg.has_ssm:
         di, n, h, conv_ch, _ = ssm_mod.ssm_dims(cfg)
         cache["conv"] = jnp.zeros((L, batch, cfg.ssm_conv_width, conv_ch), cdt)
@@ -432,6 +443,15 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
 
     Attention-only: SSM conv/ssm states are sequential across the whole
     prompt and are not carried between chunks.
+
+    Quantized caches (``k_scale`` present): the chunk's K/V are
+    quantized per (slot, kv-head) before the scatter, and the cache
+    view each chunk attends over is the dequantized int8 cache.  A
+    chunked quantized prompt therefore matches whole-prompt-then-
+    quantize only to tolerance (later chunks read earlier chunks
+    through the int8 round-trip), but it IS bit-stable across chunk
+    schedules that cover the same slots — per-slot quantization is
+    elementwise deterministic.
     """
     if cfg.has_ssm:
         raise ValueError("prefill_chunk requires an attention-only model: "
@@ -442,6 +462,8 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
     q_pos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # (Nb,C)
     windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
     paged = "block_tables" in cache
+    quant = "k_scale" in cache
+    cdt = jnp.dtype(cfg.compute_dtype)
     dh = cfg.resolved_head_dim
 
     if paged:
@@ -461,7 +483,7 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
                                       (b, sb))
 
     def block(carry, layer):
-        x, k_stack, v_stack = carry
+        x, k_stack, v_stack, ks_stack, vs_stack = carry
         lp = layer["lp"]
         window = layer["window"]
         idx = layer["idx"]
@@ -469,12 +491,31 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
         q, k, v = attn_mod.chunk_qkv(cfg, lp["attn"], h, q_pos)
         k_l = jax.lax.dynamic_index_in_dim(k_stack, idx, 0, keepdims=False)
         v_l = jax.lax.dynamic_index_in_dim(v_stack, idx, 0, keepdims=False)
+        if quant:
+            ks_l = jax.lax.dynamic_index_in_dim(ks_stack, idx, 0,
+                                                keepdims=False)
+            vs_l = jax.lax.dynamic_index_in_dim(vs_stack, idx, 0,
+                                                keepdims=False)
+            k, ksc = attn_mod.quantize_kv(k)                   # (Nb,C,KV)
+            v, vsc = attn_mod.quantize_kv(v)
         if paged:
             k_flat = k_l.reshape(pb * bs, cfg.n_kv_heads, dh)
             v_flat = v_l.reshape(pb * bs, cfg.n_kv_heads, dh)
             k_flat = k_flat.at[write_tgt].set(k.astype(k_flat.dtype))
             v_flat = v_flat.at[write_tgt].set(v.astype(v_flat.dtype))
-            k_att, v_att = k_flat[gather_idx], v_flat[gather_idx]
+            if quant:
+                ks_flat = ks_l.reshape(pb * bs, cfg.n_kv_heads)
+                vs_flat = vs_l.reshape(pb * bs, cfg.n_kv_heads)
+                ks_flat = ks_flat.at[write_tgt].set(ksc)
+                vs_flat = vs_flat.at[write_tgt].set(vsc)
+                k_att = attn_mod.dequantize_kv(k_flat[gather_idx],
+                                               ks_flat[gather_idx], cdt)
+                v_att = attn_mod.dequantize_kv(v_flat[gather_idx],
+                                               vs_flat[gather_idx], cdt)
+                ks_l = ks_flat.reshape(pb, bs, cfg.n_kv_heads)
+                vs_l = vs_flat.reshape(pb, bs, cfg.n_kv_heads)
+            else:
+                k_att, v_att = k_flat[gather_idx], v_flat[gather_idx]
             k_l = k_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
             v_l = v_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
         else:
@@ -482,7 +523,15 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
                                                     mode="drop")
             v_l = v_l.at[lanes[:, None], q_pos].set(v.astype(v_l.dtype),
                                                     mode="drop")
-            k_att, v_att = k_l[lanes, :sb], v_l[lanes, :sb]
+            if quant:
+                ks_l = ks_l.at[lanes[:, None], q_pos].set(ksc, mode="drop")
+                vs_l = vs_l.at[lanes[:, None], q_pos].set(vsc, mode="drop")
+                k_att = attn_mod.dequantize_kv(k_l[lanes, :sb],
+                                               ks_l[lanes, :sb], cdt)
+                v_att = attn_mod.dequantize_kv(v_l[lanes, :sb],
+                                               vs_l[lanes, :sb], cdt)
+            else:
+                k_att, v_att = k_l[lanes, :sb], v_l[lanes, :sb]
         a_out = attn_mod.chunk_attend(cfg, lp["attn"], q, k_att, v_att,
                                       q_pos, k_pos_view, window)
         x = x + a_out
@@ -491,13 +540,21 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
             x = x + ch
         k_stack = jax.lax.dynamic_update_index_in_dim(k_stack, k_l, idx, 0)
         v_stack = jax.lax.dynamic_update_index_in_dim(v_stack, v_l, idx, 0)
-        return (x, k_stack, v_stack), None
+        if quant:
+            ks_stack = jax.lax.dynamic_update_index_in_dim(
+                ks_stack, ks_l, idx, 0)
+            vs_stack = jax.lax.dynamic_update_index_in_dim(
+                vs_stack, vs_l, idx, 0)
+        return (x, k_stack, v_stack, ks_stack, vs_stack), None
 
     L = cfg.n_layers
     xs = {"lp": params["layers"], "window": windows,
           "idx": jnp.arange(L, dtype=jnp.int32)}
-    (x, k_stack, v_stack), _ = jax.lax.scan(
-        block, (x, cache["k"], cache["v"]), xs)
+    zero = jnp.zeros((), x.dtype)
+    ks0 = cache["k_scale"] if quant else zero
+    vs0 = cache["v_scale"] if quant else zero
+    (x, k_stack, v_stack, ks_stack, vs_stack), _ = jax.lax.scan(
+        block, (x, cache["k"], cache["v"], ks0, vs0), xs)
     x = apply_norm(cfg, params["final_norm"], x)
     last = jnp.clip(jnp.minimum(start + c, lengths) - 1 - start, 0, c - 1)
     idx = last[:, None, None].astype(jnp.int32)
@@ -506,6 +563,8 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
     logits = logits_from_hidden(cfg, params["embed"], x_last)          # (Nb,V)
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = k_stack, v_stack
+    if quant:
+        new_cache["k_scale"], new_cache["v_scale"] = ks_stack, vs_stack
     return logits, new_cache
 
 
@@ -542,16 +601,21 @@ def verify_step(params, cfg: ModelConfig, tokens, cache, draft_len=None):
     (the ``chunk_qkv`` argument; tests/test_spec_decode.py asserts the
     bit-match).
 
-    Attention-only and unquantized caches (same limits as
-    :func:`prefill_chunk`; the scheduler gates spec mode on the same
-    predicates).
+    Attention-only (same limit as :func:`prefill_chunk`; the scheduler
+    gates spec mode on the same predicate).
+
+    Quantized caches (``k_scale`` present): drafts are quantized per
+    (slot, kv-head) before the scatter and scored against the
+    dequantized cache view.  Rollback stays bit-stable — a rejected
+    slot's int8 value+scale pair is simply overwritten when the true
+    token later lands on the same slot, and per-slot quantization is
+    elementwise deterministic, so the rewritten slot is identical to
+    what a non-speculative run writes.
     """
     if cfg.has_ssm:
         raise ValueError("verify_step requires an attention-only model: "
                          "SSM state is sequential per token and cannot "
                          "score k draft positions in one pass")
-    if "k_scale" in cache:
-        raise ValueError("verify_step does not support kv_quant caches")
     x = embed_tokens(cfg, params["embed"], tokens)
     b, kd, _ = x.shape
     pos = cache["pos"]                                                 # (B,)
@@ -586,8 +650,11 @@ def verify_step(params, cfg: ModelConfig, tokens, cache, draft_len=None):
         bidx = jnp.arange(b)[:, None]
         cache_pos = cache["cache_pos"].at[bidx, slots].set(q_pos, mode="drop")
 
+    quant = "k_scale" in cache
+    cdt = jnp.dtype(cfg.compute_dtype)
+
     def block(carry, layer):
-        x, k_stack, v_stack = carry
+        x, k_stack, v_stack, ks_stack, vs_stack = carry
         lp = layer["lp"]
         window = layer["window"]
         idx = layer["idx"]
@@ -595,12 +662,31 @@ def verify_step(params, cfg: ModelConfig, tokens, cache, draft_len=None):
         q, k, v = attn_mod.chunk_qkv(cfg, lp["attn"], h, q_pos)
         k_l = jax.lax.dynamic_index_in_dim(k_stack, idx, 0, keepdims=False)
         v_l = jax.lax.dynamic_index_in_dim(v_stack, idx, 0, keepdims=False)
+        if quant:
+            ks_l = jax.lax.dynamic_index_in_dim(ks_stack, idx, 0,
+                                                keepdims=False)
+            vs_l = jax.lax.dynamic_index_in_dim(vs_stack, idx, 0,
+                                                keepdims=False)
+            k, ksc = attn_mod.quantize_kv(k)                   # (B,Kd,KV)
+            v, vsc = attn_mod.quantize_kv(v)
         if paged:
             k_flat = k_l.reshape(pb * bs, cfg.n_kv_heads, dh)
             v_flat = v_l.reshape(pb * bs, cfg.n_kv_heads, dh)
             k_flat = k_flat.at[write_tgt].set(k.astype(k_flat.dtype))
             v_flat = v_flat.at[write_tgt].set(v.astype(v_flat.dtype))
-            k_att, v_att = k_flat[gather_idx], v_flat[gather_idx]
+            if quant:
+                ks_flat = ks_l.reshape(pb * bs, cfg.n_kv_heads)
+                vs_flat = vs_l.reshape(pb * bs, cfg.n_kv_heads)
+                ks_flat = ks_flat.at[write_tgt].set(ksc)
+                vs_flat = vs_flat.at[write_tgt].set(vsc)
+                k_att = attn_mod.dequantize_kv(k_flat[gather_idx],
+                                               ks_flat[gather_idx], cdt)
+                v_att = attn_mod.dequantize_kv(v_flat[gather_idx],
+                                               vs_flat[gather_idx], cdt)
+                ks_l = ks_flat.reshape(pb, bs, cfg.n_kv_heads)
+                vs_l = vs_flat.reshape(pb, bs, cfg.n_kv_heads)
+            else:
+                k_att, v_att = k_flat[gather_idx], v_flat[gather_idx]
             a_out = attn_mod.verify_attend(cfg, lp["attn"], q, k_att, v_att,
                                            q_pos, k_pos_view, window)
             k_l = k_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
@@ -608,7 +694,14 @@ def verify_step(params, cfg: ModelConfig, tokens, cache, draft_len=None):
         else:
             k_l = k_l.at[bidx, slots].set(k.astype(k_l.dtype), mode="drop")
             v_l = v_l.at[bidx, slots].set(v.astype(v_l.dtype), mode="drop")
-            a_out = attn_mod.verify_attend(cfg, lp["attn"], q, k_l, v_l,
+            if quant:
+                ks_l = ks_l.at[bidx, slots].set(ksc, mode="drop")
+                vs_l = vs_l.at[bidx, slots].set(vsc, mode="drop")
+                k_att = attn_mod.dequantize_kv(k_l, ks_l, cdt)
+                v_att = attn_mod.dequantize_kv(v_l, vs_l, cdt)
+            else:
+                k_att, v_att = k_l, v_l
+            a_out = attn_mod.verify_attend(cfg, lp["attn"], q, k_att, v_att,
                                            q_pos, cache_pos, window,
                                            valid_k=cache_pos >= 0)
         x = x + a_out
@@ -617,17 +710,27 @@ def verify_step(params, cfg: ModelConfig, tokens, cache, draft_len=None):
             x = x + ch
         k_stack = jax.lax.dynamic_update_index_in_dim(k_stack, k_l, idx, 0)
         v_stack = jax.lax.dynamic_update_index_in_dim(v_stack, v_l, idx, 0)
-        return (x, k_stack, v_stack), None
+        if quant:
+            ks_stack = jax.lax.dynamic_update_index_in_dim(
+                ks_stack, ks_l, idx, 0)
+            vs_stack = jax.lax.dynamic_update_index_in_dim(
+                vs_stack, vs_l, idx, 0)
+        return (x, k_stack, v_stack, ks_stack, vs_stack), None
 
     L = cfg.n_layers
     xs = {"lp": params["layers"], "window": windows,
           "idx": jnp.arange(L, dtype=jnp.int32)}
-    (x, k_stack, v_stack), _ = jax.lax.scan(
-        block, (x, cache["k"], cache["v"]), xs)
+    zero = jnp.zeros((), x.dtype)
+    ks0 = cache["k_scale"] if quant else zero
+    vs0 = cache["v_scale"] if quant else zero
+    (x, k_stack, v_stack, ks_stack, vs_stack), _ = jax.lax.scan(
+        block, (x, cache["k"], cache["v"], ks0, vs0), xs)
     x = apply_norm(cfg, params["final_norm"], x)
     logits = logits_from_hidden(cfg, params["embed"], x)               # (B,Kd,V)
     new_cache = dict(cache)
     new_cache["k"], new_cache["v"] = k_stack, v_stack
+    if quant:
+        new_cache["k_scale"], new_cache["v_scale"] = ks_stack, vs_stack
     if not paged:
         new_cache["cache_pos"] = cache_pos
     return logits, new_cache
@@ -692,7 +795,20 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
         if has_attn:
             k_l = jax.lax.dynamic_index_in_dim(k_stack, idx, 0, keepdims=False)
             v_l = jax.lax.dynamic_index_in_dim(v_stack, idx, 0, keepdims=False)
-            if paged:
+            if paged and quant:
+                ks_l = jax.lax.dynamic_index_in_dim(ks_stack, idx, 0,
+                                                    keepdims=False)
+                vs_l = jax.lax.dynamic_index_in_dim(vs_stack, idx, 0,
+                                                    keepdims=False)
+                a_out, k_l, v_l, ks_l, vs_l = attn_mod.attention_decode_paged(
+                    cfg, lp["attn"], h, pos, k_l, v_l, write_slot,
+                    gather_idx, kpos, bt, window,
+                    k_scale=ks_l, v_scale=vs_l)
+                ks_stack = jax.lax.dynamic_update_index_in_dim(
+                    ks_stack, ks_l, idx, 0)
+                vs_stack = jax.lax.dynamic_update_index_in_dim(
+                    vs_stack, vs_l, idx, 0)
+            elif paged:
                 a_out, k_l, v_l = attn_mod.attention_decode_paged(
                     cfg, lp["attn"], h, pos, k_l, v_l, write_slot,
                     gather_idx, kpos, bt, window)
@@ -747,13 +863,13 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
     if has_attn:
         new_cache["k"] = k_stack
         new_cache["v"] = v_stack
+        if quant:
+            new_cache["k_scale"] = ks_stack
+            new_cache["v_scale"] = vs_stack
         if paged:
             new_cache["kpos"] = kpos
             new_cache["block_tables"] = bt
         else:
-            if quant:
-                new_cache["k_scale"] = ks_stack
-                new_cache["v_scale"] = vs_stack
             new_cache["cache_pos"] = cache_pos
     if cfg.has_ssm:
         new_cache["conv"] = new_layer_caches["conv"]

@@ -491,14 +491,39 @@ def sharded_decode_round_spec(mesh, params, cfg: ModelConfig,
 _LAYER_STACKED = ("k", "v", "k_scale", "v_scale", "conv", "ssm")
 
 
+def _quantize_prefill(cache, new_cache):
+    """Bridge a *floating-point* prefilled sub-batch onto a *quantized*
+    lane pool: quantize the prompt K/V per (slot, kv-head) and emit the
+    matching scale entries.
+
+    Prefill always runs in the compute dtype (quantizing inside the
+    prompt pass would make each prompt position attend over the int8
+    round-trip of earlier ones, i.e. whole-prefill would stop matching
+    itself across buckets); the int8 representation is decided HERE, at
+    lane insertion, once per slot — which is also what keeps every
+    insert path (dense, paged, shared) writing bit-identical int8
+    blocks for the same prompt.
+    """
+    if "k_scale" not in cache or "k_scale" in new_cache:
+        return new_cache
+    from repro.models.attention import quantize_kv
+    new_cache = dict(new_cache)
+    new_cache["k"], new_cache["k_scale"] = quantize_kv(new_cache["k"])
+    new_cache["v"], new_cache["v_scale"] = quantize_kv(new_cache["v"])
+    return new_cache
+
+
 @jax.jit
 def insert_lanes(cache, cur_logits, new_cache, new_logits, lanes):
     """Scatter a freshly prefilled sub-batch into the global lane pool.
 
     lanes: (Nb,) int32 target lane per new row; rows padded up to the
     admit bucket carry an out-of-range sentinel (>= n_lanes) and are
-    dropped by the scatter.
+    dropped by the scatter.  Quantized pools (``k_scale`` in the cache)
+    take fp-prefilled rows: the prompt K/V is quantized at insertion
+    (:func:`_quantize_prefill`).
     """
+    new_cache = _quantize_prefill(cache, new_cache)
     out = {}
     for name, val in cache.items():
         new = new_cache[name]
@@ -533,15 +558,20 @@ def insert_lanes_paged(cache, cur_logits, new_cache, new_logits, lanes,
 
     The device block tables are NOT written here: the host owns them
     (serving/block_pool.py) and pushes the full table before the next
-    decode round.
+    decode round.  Quantized pools take fp-prefilled rows; the prompt
+    K/V is quantized at insertion and the scale pages ride the same
+    flat-slot scatter (:func:`_quantize_prefill`).
     """
+    new_cache = _quantize_prefill(cache, new_cache)
     L, _, bucket = new_cache["k"].shape[:3]
     pb, bs = cache["k"].shape[1], cache["k"].shape[2]
     p = jnp.arange(bucket, dtype=jnp.int32)
     tgt = (block_rows[:, p // bs] * bs + p[None, :] % bs).reshape(-1)
 
     out = dict(cache)
-    for name in ("k", "v"):
+    for name in ("k", "v", "k_scale", "v_scale"):
+        if name not in cache:
+            continue
         flat = cache[name].reshape(L, pb * bs, *cache[name].shape[3:])
         new = new_cache[name].reshape(L, -1, *new_cache[name].shape[3:])
         out[name] = flat.at[:, tgt].set(new.astype(flat.dtype)).reshape(
@@ -578,15 +608,22 @@ def insert_lanes_shared(cache, cur_logits, new_cache, new_logits, lane_rows,
 
     Host-owned block tables are not written here; each lane's *read*
     table (shared prompt blocks + its private CoW tail) is pushed by the
-    scheduler before the next decode round.
+    scheduler before the next decode round.  Quantized pools take
+    fp-prefilled group rows; quantization happens once per shared slot
+    at insertion (:func:`_quantize_prefill`), so every lane of the
+    group — and every later prefix-cache hit — reads bit-identical
+    int8+scale pairs.
     """
+    new_cache = _quantize_prefill(cache, new_cache)
     L, _, bucket = new_cache["k"].shape[:3]
     pb, bs = cache["k"].shape[1], cache["k"].shape[2]
     p = jnp.arange(bucket, dtype=jnp.int32)
     tgt = (block_rows[:, p // bs] * bs + p[None, :] % bs).reshape(-1)
 
     out = dict(cache)
-    for name in ("k", "v"):
+    for name in ("k", "v", "k_scale", "v_scale"):
+        if name not in cache:
+            continue
         flat = cache[name].reshape(L, pb * bs, *cache[name].shape[3:])
         new = new_cache[name].reshape(L, -1, *new_cache[name].shape[3:])
         out[name] = flat.at[:, tgt].set(new.astype(flat.dtype)).reshape(
@@ -615,38 +652,52 @@ def copy_blocks(cache, src, dst):
     vote lane needs a private copy of the group's last partial prompt
     block, the allocator picks the ids and this kernel moves the bytes.
     Pairs are padded to a bucket with (0, 0) — trash overwriting trash —
-    so the compile count stays O(#pair buckets).
+    so the compile count stays O(#pair buckets).  Quantized pools clone
+    the scale pages alongside their int8 blocks, verbatim — CoW never
+    requantizes, so a cloned tail stays bit-identical to its source.
     """
     out = dict(cache)
-    for name in ("k", "v"):
-        out[name] = cache[name].at[:, dst].set(cache[name][:, src])
+    for name in ("k", "v", "k_scale", "v_scale"):
+        if name in cache:
+            out[name] = cache[name].at[:, dst].set(cache[name][:, src])
     return out
+
+
+# pool entries moved whole-block by offload/restore, in a fixed order so
+# the host tuples line up across gather and scatter
+_BLOCK_POOL_KEYS = ("k", "v", "k_scale", "v_scale")
 
 
 @jax.jit
 def gather_blocks(cache, ids):
-    """Read whole pool blocks out of the paged cache: returns
-    ``(k[:, ids], v[:, ids])`` of shape ``(L, n, bs, KV, dh)``.
+    """Read whole pool blocks out of the paged cache: returns a tuple of
+    ``cache[name][:, ids]`` for each pool entry present (``(k, v)`` fp,
+    ``(k, v, k_scale, v_scale)`` quantized), each ``(L, n, bs, ...)``.
 
     The device half of ``BlockPool.offload``: the allocator decides
     which blocks need a host copy, this op pulls their bytes in one
     gather (the caller then ``np.asarray``s the result into host RAM).
     ``ids`` is padded to a bucket with 0 — gathering the trash block —
     so the compile count stays O(#id buckets); the caller slices the
-    real prefix off host-side.
+    real prefix off host-side.  Quantized blocks offload as raw
+    int8+scale pairs — no dequantization round-trip, so a
+    restored block is bit-identical to what was parked.
     """
-    return cache["k"][:, ids], cache["v"][:, ids]
+    return tuple(cache[name][:, ids] for name in _BLOCK_POOL_KEYS
+                 if name in cache)
 
 
 @jax.jit
-def scatter_blocks(cache, ids, k, v):
+def scatter_blocks(cache, ids, arrays):
     """Write whole pool blocks back into the paged cache:
-    ``k/v[:, ids[i]] <- k/v[i]`` — the device half of
+    ``cache[name][:, ids[i]] <- arrays[j][i]`` with ``arrays`` ordered
+    as :func:`gather_blocks` returns — the device half of
     ``BlockPool.restore`` for blocks without a live device twin.
     Padded with id 0 + junk rows (writes land in the trash block)."""
     out = dict(cache)
-    out["k"] = cache["k"].at[:, ids].set(k.astype(cache["k"].dtype))
-    out["v"] = cache["v"].at[:, ids].set(v.astype(cache["v"].dtype))
+    names = [name for name in _BLOCK_POOL_KEYS if name in cache]
+    for name, arr in zip(names, arrays):
+        out[name] = cache[name].at[:, ids].set(arr.astype(cache[name].dtype))
     return out
 
 

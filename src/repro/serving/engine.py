@@ -54,6 +54,14 @@ def generate(params, cfg: ModelConfig, prompts: np.ndarray,
     if s_max is None:
         s_max = int(s) + gcfg.max_new_tokens
     last, cache = prefill_jit(params, cfg, prompts, lengths, int(s_max))
+    if cfg.kv_quant:
+        # same per-slot absmax quantization the scheduler applies at
+        # lane insertion (serving/batch._quantize_prefill), so a quant
+        # scheduler lane still reproduces this engine bit-for-bit
+        from repro.models.attention import quantize_kv
+        cache = dict(cache)
+        cache["k"], cache["k_scale"] = quantize_kv(cache["k"])
+        cache["v"], cache["v_scale"] = quantize_kv(cache["v"])
     done0 = jnp.zeros((b,), bool)
     steps0 = jnp.zeros((b,), jnp.int32)
     _, _, _, toks = decode_round(params, cfg, gcfg, cache, last, done0,

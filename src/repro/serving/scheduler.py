@@ -587,8 +587,6 @@ class Scheduler:
                     "chunked prefill does not support MoE models: expert "
                     "capacity depends on the tokens per forward pass, so a "
                     "chunked prompt would not reproduce whole-prompt prefill")
-            if cfg.kv_quant:
-                raise ValueError("chunked prefill does not support kv_quant")
             if chunk_size < 8:
                 raise ValueError(
                     f"chunk_size={chunk_size} too small: sub-8 batch dims "
@@ -625,10 +623,6 @@ class Scheduler:
                     "speculative decoding does not support MoE models: "
                     "expert capacity depends on tokens per forward pass, so "
                     "a verify round would not reproduce sequential decode")
-            if cfg.kv_quant:
-                raise ValueError(
-                    "speculative decoding does not support kv_quant: "
-                    "requantizing a rolled-back block is not bit-stable")
             if not paged and \
                     model_lib.cache_length(cfg, self.s_max) != self.s_max:
                 raise ValueError(
@@ -916,12 +910,12 @@ class ServingLoop:
         self._drafts: Dict[int, Tuple[int, List[int]]] = {}
         # preemption: parked requests (uid -> _Parked, insertion order =
         # resume priority) and the host-side KV bytes backing them
-        # ((shard, host block id) -> (k, v) numpy arrays, paged only —
-        # host ids are per-pool counters, so the shard disambiguates)
+        # ((shard, host block id) -> per-pool-entry numpy arrays — (k, v)
+        # fp, (k, v, k_scale, v_scale) quantized, paged only — host ids
+        # are per-pool counters, so the shard disambiguates)
         self._parked: "collections.OrderedDict[int, _Parked]" = \
             collections.OrderedDict()
-        self._host_kv: Dict[Tuple[int, int],
-                            Tuple[np.ndarray, np.ndarray]] = {}
+        self._host_kv: Dict[Tuple[int, int], Tuple[np.ndarray, ...]] = {}
         self._round_no = 0
         # releases of in-flight uids arriving while a round is dispatched
         # are applied at the next dispatch (the harvest indexes lanes)
@@ -1552,12 +1546,15 @@ class ServingLoop:
         n = pick_bucket(len(copies), self.sched._blk_buckets)
         ids = np.zeros((n,), np.int32)      # padding gathers trash
         ids[: len(copies)] = [b for b, _ in copies]
-        k, v = gather_blocks(self.cache, jnp.asarray(ids))
-        k, v = np.asarray(k), np.asarray(v)
+        # tuple of (k, v) for fp pools, (k, v, k_scale, v_scale) for
+        # quantized ones — blocks park as raw int8+scale pairs, no
+        # dequantization round-trip, so restore is bit-exact
+        arrays = [np.asarray(a) for a in
+                  gather_blocks(self.cache, jnp.asarray(ids))]
         for j, (_, h) in enumerate(copies):
-            kj, vj = k[:, j].copy(), v[:, j].copy()
-            self._host_kv[(shard, h)] = (kj, vj)
-            self.stats.offload_bytes += kj.nbytes + vj.nbytes
+            parts = tuple(a[:, j].copy() for a in arrays)
+            self._host_kv[(shard, h)] = parts
+            self.stats.offload_bytes += sum(p.nbytes for p in parts)
 
     def _restore_parked(self, uid: int) -> bool:
         """Move a parked request back into a free lane (any lane —
@@ -1592,14 +1589,17 @@ class ServingLoop:
             if scatters:
                 n = pick_bucket(len(scatters), sched._blk_buckets)
                 ids = np.zeros((n,), np.int32)   # padding writes to trash
-                k0, v0 = self._host_kv[(parked.shard, scatters[0][0])]
-                ks = np.zeros((k0.shape[0], n) + k0.shape[1:], k0.dtype)
-                vs = np.zeros((v0.shape[0], n) + v0.shape[1:], v0.dtype)
+                first = self._host_kv[(parked.shard, scatters[0][0])]
+                bufs = [np.zeros((p.shape[0], n) + p.shape[1:], p.dtype)
+                        for p in first]
                 for j, (h, d) in enumerate(scatters):
                     ids[j] = d
-                    ks[:, j], vs[:, j] = self._host_kv[(parked.shard, h)]
-                self.cache = scatter_blocks(self.cache, jnp.asarray(ids),
-                                            jnp.asarray(ks), jnp.asarray(vs))
+                    for buf, part in zip(
+                            bufs, self._host_kv[(parked.shard, h)]):
+                        buf[:, j] = part
+                self.cache = scatter_blocks(
+                    self.cache, jnp.asarray(ids),
+                    tuple(jnp.asarray(b) for b in bufs))
             for h in dropped:
                 self._host_kv.pop((parked.shard, h), None)
             lane.blocks, lane.reserved = blocks, growth

@@ -141,6 +141,74 @@ def test_preempt_invariants_pass_and_fail():
         {"table": {"arith": {"preempt": {"resumes": 1}}}}) == []
 
 
+def _quant_row(fp_peak=1000, int8_peak=300, fp_dense=4000, int8_dense=1200,
+               fp_acc=0.5, int8_acc=0.5, gain=3.3, cut=0.7, agree=0.8,
+               equal=True):
+    return {"fp32": {"peak_cache_bytes": fp_peak, "dense_cache_bytes": fp_dense,
+                     "accuracy": fp_acc, "n_lanes": 12},
+            "int8": {"peak_cache_bytes": int8_peak,
+                     "dense_cache_bytes": int8_dense,
+                     "accuracy": int8_acc, "n_lanes": 12},
+            "equal_lanes": equal,
+            "lanes_per_byte_gain": gain, "kv_bytes_cut": cut,
+            "token_agreement": agree}
+
+
+def test_quant_invariants_pass_and_fail():
+    assert gate.check_quant_invariants(
+        {"table": {"arith": _quant_row()}}) == []
+    bad = {"table": {"arith": _quant_row(
+        int8_peak=1000, int8_dense=5000, gain=1.2, cut=0.1,
+        int8_acc=0.1, agree=0.05, equal=False)}}
+    msgs = gate.check_quant_invariants(bad)
+    # lanes, peak bytes, dense bytes, efficiency bar, accuracy, agreement
+    assert len(msgs) == 6
+    # rows without both precisions are ignored, not crashed on
+    assert gate.check_quant_invariants(
+        {"table": {"arith": {"fp32": {"peak_cache_bytes": 1}}}}) == []
+
+
+def test_quant_invariants_efficiency_bar_is_either_or():
+    # a 1.7x lanes/byte gain clears the bar even with a small peak cut
+    assert gate.check_quant_invariants(
+        {"table": {"a": _quant_row(gain=1.7, cut=0.1)}}) == []
+    # ...and a 40% peak cut clears it even at a low gain
+    assert gate.check_quant_invariants(
+        {"table": {"a": _quant_row(gain=1.2, cut=0.4)}}) == []
+    assert len(gate.check_quant_invariants(
+        {"table": {"a": _quant_row(gain=1.69, cut=0.39)}})) == 1
+
+
+def test_quant_invariants_accuracy_respects_tol():
+    row = _quant_row(fp_acc=0.5, int8_acc=0.4)
+    assert len(gate.check_quant_invariants({"table": {"a": row}},
+                                           tol=0.1)) == 1
+    assert gate.check_quant_invariants({"table": {"a": row}},
+                                       tol=0.2) == []
+
+
+# ----------------------------------------------------------------------
+# --tol: generic accuracy tolerance in check_metrics
+# ----------------------------------------------------------------------
+
+def test_accuracy_metrics_gate_downward_at_tol():
+    base = {"accuracy": 0.80, "token_agreement": 0.90}
+    # bound = base * (1 - tol) - 0.02 abs slack
+    ok = {"accuracy": 0.80 * 0.9 - 0.02, "token_agreement": 0.90 * 0.9 - 0.02}
+    failures, _ = gate.check_metrics(ok, base, 3.0, tol=0.1)
+    assert failures == []
+    bad = {"accuracy": 0.80 * 0.9 - 0.03, "token_agreement": 0.90 * 0.9 - 0.03}
+    failures, _ = gate.check_metrics(bad, base, 3.0, tol=0.1)
+    assert len(failures) == 2
+    # a looser --tol admits the same run
+    failures, _ = gate.check_metrics(bad, base, 3.0, tol=0.2)
+    assert failures == []
+    # improvements never fail
+    failures, _ = gate.check_metrics({"accuracy": 1.0, "token_agreement": 1.0},
+                                     base, 3.0, tol=0.0)
+    assert failures == []
+
+
 # ----------------------------------------------------------------------
 # main(): exit codes and --update
 # ----------------------------------------------------------------------
@@ -179,6 +247,16 @@ def test_main_exit_nonzero_on_invariant_failure(tmp_path, monkeypatch):
            "table": {"serve": _chunk_row(chunk_p95=2.0)}}
     rc, _, _ = _run_main(tmp_path, monkeypatch, cur, {})
     assert rc == 1
+
+
+def test_main_dispatches_quant_invariants_and_tol(tmp_path, monkeypatch):
+    cur = {"quant_smoke": True,
+           "table": {"arith": _quant_row(fp_acc=0.5, int8_acc=0.4)}}
+    rc, _, _ = _run_main(tmp_path, monkeypatch, cur, {})
+    assert rc == 1                 # default --tol 0.1 rejects a 20% drop
+    rc, _, _ = _run_main(tmp_path, monkeypatch, cur, {},
+                         extra=("--tol", "0.2"))
+    assert rc == 0
 
 
 def test_main_update_rewrites_baseline(tmp_path, monkeypatch):

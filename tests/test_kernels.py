@@ -122,6 +122,57 @@ def test_paged_decode_attention_vs_ref(b, h, kv, d, bs, m, window, dtype):
                                np.asarray(ref, np.float32), **_tol(dtype))
 
 
+def _quantize_pages(k, v):
+    """Per-(slot, kv-head) absmax int8 pages + f32 scales, layout
+    (P, bs, KV, ...) matching the ops-level entry point."""
+    from repro.models.attention import quantize_kv
+    kq, ks = quantize_kv(k)
+    vq, vs = quantize_kv(v)
+    return kq, vq, ks, vs
+
+
+@pytest.mark.parametrize("b,h,kv,d,bs,m,window", [
+    (2, 4, 2, 64, 16, 8, 0),         # GQA
+    (1, 4, 1, 64, 32, 5, 0),         # MQA
+    (2, 2, 2, 128, 16, 8, 48),       # sliding window through pages
+])
+def test_paged_decode_attention_quant_vs_ref(b, h, kv, d, bs, m, window):
+    """The dequant-fused kernel (int8 pages + scales dequantized inside
+    the flash loop) against the quant ref — and both against the fp
+    kernel run on the pre-dequantized pages, which must agree exactly:
+    dequantize-then-attend and attend-with-fused-dequant read identical
+    f32 values."""
+    from repro.kernels.paged_attention.ops import (
+        paged_decode_attention_quant)
+    from repro.kernels.paged_attention.ref import (
+        paged_decode_attention_quant_ref)
+    from repro.models.attention import dequantize_kv
+    q, k, v, bt, lengths = _paged_case(jax.random.PRNGKey(9), b, h, kv, d,
+                                       bs, m, jnp.float32)
+    kq, vq, ks, vs = _quantize_pages(k, v)
+    out = paged_decode_attention_quant(q, kq, vq, ks, vs, bt, lengths,
+                                       window=window, interpret=True)
+    qt = jnp.swapaxes(q, 1, 2)
+    kt, vt = (jnp.transpose(x, (0, 2, 1, 3)) for x in (kq, vq))
+    kst, vst = (jnp.transpose(x, (0, 2, 1)) for x in (ks, vs))
+    ref = jnp.swapaxes(
+        paged_decode_attention_quant_ref(qt, kt, vt, kst, vst, bt, lengths,
+                                         window=window), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+    kdq = dequantize_kv(kq, ks, jnp.float32)
+    vdq = dequantize_kv(vq, vs, jnp.float32)
+    fused_free = paged_decode_attention(q, kdq, vdq, bt, lengths,
+                                        window=window, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fused_free),
+                               rtol=2e-5, atol=2e-5)
+    # and the whole quantized path stays close to unquantized attention
+    fp = paged_decode_attention(q, k, v, bt, lengths, window=window,
+                                interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(fp),
+                               rtol=5e-2, atol=5e-2)
+
+
 def test_paged_ref_matches_dense_ref_through_block_table():
     """Gathering pages in block-table order must reproduce dense decode
     attention over the equivalent contiguous cache exactly."""

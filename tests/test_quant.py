@@ -1,0 +1,278 @@
+"""Quantized serving tiers (int8 KV + int8 weights).
+
+The quantized tier's contract is three-layered:
+
+  * **determinism**: quantization is elementwise and per-slot, so the
+    quant serving output is bit-identical across *every* serving
+    configuration (dense vs paged vs shared-prefix, drafted, preempted)
+    and bit-identical to the quantized one-shot engine — the broad
+    trace form lives in tests/test_serving_trace.py; this module pins
+    the one-shot equalities;
+  * **tolerance**: quant vs fp32 serving agrees only approximately —
+    the comparison is a stated tolerance on token-prefix agreement,
+    never bit-equality;
+  * **construction**: the serving guards lifted for quantized caches
+    (paged, chunked prefill, speculative verify) must now construct,
+    while the genuinely-unsupported combos (SSM/MoE chunking or spec,
+    ring caches, share-prefix without paging) still fail fast with
+    actionable messages.
+
+Weight quantization (``SLM.quantize="int8"``) is covered at the same
+three layers: round-trip properties, quantize-once memoization, and a
+mixed-precision cascade where only the cheap tier is quantized.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import cascade_multi as cm
+from repro.core import routing as routing_lib
+from repro.data import tasks as tasks_lib
+from repro.serving.batch import GenConfig
+from repro.serving.scheduler import Request, Scheduler
+
+MAXP = 48
+MAXNEW = 10
+KEY = 7
+
+
+@pytest.fixture(scope="module")
+def setup():
+    from repro.data.tokenizer import default_tokenizer
+    from repro.models import model as M
+    tok = default_tokenizer()
+    cfg = ModelConfig(name="tiny", arch_type="dense", n_layers=2,
+                      d_model=64, n_heads=2, n_kv_heads=2, head_dim=32,
+                      d_ff=128, vocab_size=tok.vocab_size, remat=False,
+                      source="test")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return params, cfg, tok
+
+
+def _gcfg(temperature=0.0):
+    return GenConfig(max_new_tokens=MAXNEW, temperature=temperature,
+                     top_p=1.0, eos_id=2)
+
+
+def _sched(params, cfg, temperature=0.0, **kw):
+    base = dict(n_lanes=4, round_tokens=5, max_prompt_len=MAXP)
+    base.update(kw)
+    return Scheduler(params, cfg, None, _gcfg(temperature), **base)
+
+
+def _reqs(n=6, seed=3):
+    rng = np.random.RandomState(seed)
+    return [Request(uid=u,
+                    tokens=rng.randint(3, 90,
+                                       (int(rng.randint(1, 34)),)).tolist(),
+                    max_new_tokens=MAXNEW)
+            for u in range(n)]
+
+
+def _tokens(comps):
+    return {c.uid: list(c.tokens) for c in comps}
+
+
+def _prefix_agreement(got, want):
+    """Fraction of ``want`` that ``got`` reproduces as an exact prefix."""
+    if not want:
+        return 1.0
+    n = 0
+    for a, b in zip(got, want):
+        if a != b:
+            break
+        n += 1
+    return n / len(want)
+
+
+# ----------------------------------------------------------------------
+# Determinism: quant serving is bit-equal across cache layouts
+# ----------------------------------------------------------------------
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_quant_serving_bitexact_across_layouts(setup, temperature):
+    """Dense, paged, and shared-prefix quant schedulers must produce
+    literally identical completions: quantization happens once per
+    cache slot at lane insertion, and blocks move as raw int8 + scales
+    everywhere after that."""
+    params, cfg, _ = setup
+    qcfg = dataclasses.replace(cfg, kv_quant=True)
+    reqs = _reqs()
+    outs = []
+    for kw in (dict(),
+               dict(paged=True, block_size=8),
+               dict(paged=True, block_size=8, share_prefix=True),
+               dict(paged=True, block_size=8, chunk_size=8),
+               dict(paged=True, block_size=8, spec_k=4)):
+        sched = _sched(params, qcfg, temperature, **kw)
+        comps, _ = sched.run([Request(**vars(r)) for r in reqs], KEY)
+        outs.append(_tokens(comps))
+        if sched.pool is not None:
+            assert sched.pool.leak_report() is None
+    # whole-prefill layouts are all bit-equal (index 3 is chunked: its
+    # prompt K/V quantize chunk-by-chunk, so it only joins the family
+    # at tolerance — asserted below)
+    for i in (1, 2, 4):
+        assert outs[i] == outs[0], f"layout {i} diverged from dense quant"
+    agree = [_prefix_agreement(outs[3][u], outs[0][u]) for u in outs[0]]
+    assert np.mean(agree) >= 0.5, \
+        "chunked quant drifted too far from whole-prefill quant"
+
+
+# ----------------------------------------------------------------------
+# Tolerance: quant vs fp32 serving
+# ----------------------------------------------------------------------
+
+def test_quant_tracks_fp_at_tolerance_not_bitexact(setup):
+    """int8 KV serving must stay close to fp32 serving (the tier is
+    useful) without being bit-equal (the tolerance mode exists for a
+    reason).  Greedy decoding, so divergence is purely quantization
+    noise crossing an argmax boundary — never sampling jitter."""
+    params, cfg, _ = setup
+    qcfg = dataclasses.replace(cfg, kv_quant=True)
+    reqs = _reqs(n=8, seed=5)
+    fp, _ = _sched(params, cfg, 0.0, paged=True, block_size=8).run(
+        [Request(**vars(r)) for r in reqs], KEY)
+    q, _ = _sched(params, qcfg, 0.0, paged=True, block_size=8).run(
+        [Request(**vars(r)) for r in reqs], KEY)
+    fp_t, q_t = _tokens(fp), _tokens(q)
+    agree = [_prefix_agreement(q_t[u], fp_t[u]) for u in fp_t]
+    assert np.mean(agree) >= 0.5, \
+        f"quant/fp token agreement collapsed: {agree}"
+
+
+# ----------------------------------------------------------------------
+# Weight quantization: round-trip properties + memoization
+# ----------------------------------------------------------------------
+
+def test_quantize_params_int8_roundtrip_properties(setup):
+    params, _, _ = setup
+    quant = routing_lib.quantize_params_int8(params)
+    leaves = jax.tree.leaves(params)
+    qleaves = jax.tree.leaves(quant)
+    assert len(leaves) == len(qleaves)
+    changed = 0
+    for w, qw in zip(leaves, qleaves):
+        assert w.shape == qw.shape and w.dtype == qw.dtype
+        if w.ndim < 2:
+            # norm gains / biases / scalars stay exact
+            assert np.array_equal(np.asarray(w), np.asarray(qw))
+            continue
+        wf = np.asarray(w, np.float32)
+        qf = np.asarray(qw, np.float32)
+        # per-output-channel absmax scale bounds the error at half a
+        # quantization step per column
+        step = np.abs(wf).max(axis=-2, keepdims=True) / 127.0
+        assert np.all(np.abs(wf - qf) <= 0.5 * step + 1e-6)
+        changed += int(not np.array_equal(wf, qf))
+    # the random-init matmul weights cannot all survive int8 bit-exactly
+    assert changed > 0, "int8 round-trip was a no-op on every weight"
+
+
+def test_tier_params_memoizes_and_validates(setup):
+    params, cfg, tok = setup
+    slm = routing_lib.SLM(params, cfg, tok, _gcfg())
+    # no quantization requested: the original tree, by identity
+    assert routing_lib._tier_params(slm) is params
+    q8 = dataclasses.replace(slm, quantize="int8")
+    first = routing_lib._tier_params(q8)
+    assert first is not params
+    # quantize-once: the same params tree maps to the same quantized
+    # tree, even through a distinct SLM wrapper
+    assert routing_lib._tier_params(q8) is first
+    assert routing_lib._tier_params(
+        dataclasses.replace(slm, quantize="int8")) is first
+    with pytest.raises(ValueError, match="only 'int8'"):
+        routing_lib._tier_params(dataclasses.replace(slm, quantize="fp4"))
+
+
+def test_make_scheduler_applies_tier_quantization(setup):
+    params, cfg, tok = setup
+    slm = routing_lib.SLM(params, cfg, tok, _gcfg(), lane_budget=4,
+                          kv_quant=True, quantize="int8")
+    sched = routing_lib.make_scheduler(slm, 4)
+    assert sched.cfg.kv_quant
+    assert sched.params is routing_lib._tier_params(slm)
+    assert sched.params is not params
+    # the SLM's own cfg is untouched (replace, not mutation)
+    assert not cfg.kv_quant
+
+
+# ----------------------------------------------------------------------
+# Mixed-precision cascade: one chain, per-tier precision
+# ----------------------------------------------------------------------
+
+def test_mixed_precision_cascade_runs_end_to_end(setup):
+    """A cascade whose cheap tier serves int8 KV + int8 weights while
+    the next tier stays fp must run through the unchanged
+    ``run_cascade`` driver: precision is an SLM attribute, invisible to
+    the cascade logic."""
+    params, cfg, tok = setup
+    gcfg = GenConfig(max_new_tokens=16, temperature=0.0)
+    cheap = routing_lib.SLM(params, cfg, tok, gcfg, max_prompt_len=64,
+                            lane_budget=8, round_tokens=4,
+                            paged=True, block_size=8,
+                            kv_quant=True, quantize="int8")
+    full = routing_lib.SLM(params, cfg, tok, gcfg, max_prompt_len=64,
+                           lane_budget=8, round_tokens=4)
+    items = tasks_lib.make_benchmark("arith", 3, seed=1)
+    tiers = [cm.Tier(slm=cheap, tau=1.0, mode="FCV", k=2),
+             cm.Tier(slm=full, tau=1.0, mode="FCV", k=2)]
+    terminal = cm.TerminalTier(llm=routing_lib.OracleLLM(accuracy=1.0))
+    out = cm.run_cascade(tiers, terminal, items, jax.random.PRNGKey(9),
+                         stream_early_stop=True)
+    assert len(out) == len(items)
+    s = cm.summarize(out, len(tiers))
+    assert sum(s["tier_histogram"]) == len(items)
+    assert 0.0 <= s["accuracy"] <= 1.0
+
+
+# ----------------------------------------------------------------------
+# Construction guards: lifted for quant, kept where real
+# ----------------------------------------------------------------------
+
+def test_quant_combos_construct(setup):
+    """Every guard ISSUE 9 lifts: paged caches, chunked prefill, and
+    speculative verify must all accept ``kv_quant`` configs now."""
+    params, cfg, _ = setup
+    qcfg = dataclasses.replace(cfg, kv_quant=True)
+    from repro.models import model as model_lib
+    cache = model_lib.init_paged_decode_state(qcfg, 2, 32, 8, 6)
+    assert cache["k"].dtype == jnp.int8
+    assert cache["k_scale"].shape == cache["k"].shape[:-1]
+    assert cache["k_scale"].dtype == jnp.float32
+    _sched(params, qcfg, paged=True, block_size=8, chunk_size=8)
+    _sched(params, qcfg, paged=True, block_size=8, spec_k=4)
+    _sched(params, qcfg, spec_k=4)
+    _sched(params, qcfg, paged=True, block_size=8, share_prefix=True,
+           chunk_size=8, spec_k=4)
+
+
+def test_remaining_guards_still_actionable(setup):
+    """The combos that stay unsupported must keep failing at
+    construction with messages that say *why* — quant lifting must not
+    have widened any of them."""
+    params, cfg, _ = setup
+    ring = dataclasses.replace(cfg, sliding_window=8, global_every=0,
+                               kv_quant=True)
+    with pytest.raises(ValueError, match="non-ring"):
+        _sched(params, ring, spec_k=4)
+    with pytest.raises(ValueError, match="full-length"):
+        _sched(params, ring, paged=True, block_size=8)
+    with pytest.raises(ValueError, match="share_prefix requires paged"):
+        _sched(params, cfg, share_prefix=True)
+    ssm = dataclasses.replace(cfg, ssm_state=16)
+    with pytest.raises(ValueError, match="attention-only"):
+        _sched(params, ssm, chunk_size=8)
+    with pytest.raises(ValueError, match="attention-only"):
+        _sched(params, ssm, spec_k=4)
+    moe = dataclasses.replace(cfg, n_experts=4)
+    with pytest.raises(ValueError, match="MoE"):
+        _sched(params, moe, chunk_size=8)
+    with pytest.raises(ValueError, match="MoE"):
+        _sched(params, moe, spec_k=4)

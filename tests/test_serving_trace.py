@@ -271,14 +271,38 @@ def replay(sched: Scheduler, rounds, kill, release_rounds, draft_fn=None,
     return got, loop.stats
 
 
+def _prefix_agreement(got, want):
+    """Fraction of ``want`` that ``got`` reproduces as an exact prefix
+    (1.0 for an empty oracle stream)."""
+    if not len(want):
+        return 1.0
+    n = 0
+    for a, b in zip(got, want):
+        if a != b:
+            break
+        n += 1
+    return n / len(want)
+
+
 def check_trace(params, cfg, temperature, mode, chunked, trace,
                 prefill_budget=None, drafted=False, preempt_seed=None,
-                mesh=None, n_lanes=N_LANES):
+                mesh=None, n_lanes=N_LANES, tol=0.0, oracle_cfg=None):
+    """Replay ``trace`` and compare against the per-request oracle.
+
+    ``tol=0.0`` (every non-quantized mode, and whole-prefill quantized
+    modes against a same-config oracle) demands bit-equality.  A
+    nonzero ``tol`` switches to the quantized tiers' tolerance
+    contract: mean token-prefix agreement across uncancelled requests
+    must reach ``1 - tol`` (quantization noise may flip a token, after
+    which the streams legitimately diverge — so agreement is measured
+    up to the first mismatch, not pointwise).  ``oracle_cfg`` lets a
+    quantized trace be scored against the fp oracle."""
     rounds, kill, release_rounds = trace
     sched = _scheduler(params, cfg, temperature, mode, chunked,
                        prefill_budget, spec=drafted, mesh=mesh,
                        n_lanes=n_lanes)
-    oracle = Oracle(params, cfg, sched, temperature)
+    oracle = Oracle(params, oracle_cfg if oracle_cfg is not None else cfg,
+                    sched, temperature)
     draft_fn = None
     if drafted:
         # drafts mix exact oracle prefixes (real acceptance, any
@@ -305,18 +329,29 @@ def check_trace(params, cfg, temperature, mode, chunked, trace,
             "preempted trace never preempted — schedule untested"
     reqs = _flatten(rounds)
     assert set(got) == {r.uid for r in reqs}
-    for r in reqs:
-        c = got[r.uid]
-        want = oracle.tokens(r.uid, r.tokens, r.max_new_tokens)
-        if c.cancelled:
-            # killed mid-flight: whatever it generated must be an exact
-            # prefix of what it would have generated
-            assert c.gen_len <= len(want)
-            assert np.array_equal(c.tokens, want[:c.gen_len]), \
-                f"uid {r.uid} ({mode}, chunked={chunked}): prefix diverged"
-        else:
-            assert np.array_equal(c.tokens, want), \
-                f"uid {r.uid} ({mode}, chunked={chunked}): tokens diverged"
+    if tol:
+        agree = [_prefix_agreement(got[r.uid].tokens,
+                                   oracle.tokens(r.uid, r.tokens,
+                                                 r.max_new_tokens))
+                 for r in reqs if not got[r.uid].cancelled]
+        assert np.mean(agree) >= 1.0 - tol, \
+            f"({mode}, chunked={chunked}): mean prefix agreement " \
+            f"{np.mean(agree):.3f} below tolerance {1.0 - tol}"
+    else:
+        for r in reqs:
+            c = got[r.uid]
+            want = oracle.tokens(r.uid, r.tokens, r.max_new_tokens)
+            if c.cancelled:
+                # killed mid-flight: whatever it generated must be an
+                # exact prefix of what it would have generated
+                assert c.gen_len <= len(want)
+                assert np.array_equal(c.tokens, want[:c.gen_len]), \
+                    f"uid {r.uid} ({mode}, chunked={chunked}): " \
+                    "prefix diverged"
+            else:
+                assert np.array_equal(c.tokens, want), \
+                    f"uid {r.uid} ({mode}, chunked={chunked}): " \
+                    "tokens diverged"
     if sched.pool is not None:
         assert sched.pool.leak_report() is None
     # close() joins every per-shard pool's leak report into stats (the
@@ -360,6 +395,80 @@ def test_trace_uncancelled_equal_across_modes(setup):
             sigs.append(sorted((u, c.tokens.tolist())
                                for u, c in got.items()))
     assert all(s == sigs[0] for s in sigs[1:])
+
+
+# ----------------------------------------------------------------------
+# Quantized tiers: bit-exact vs the quant oracle, tolerance vs fp
+# ----------------------------------------------------------------------
+
+def _quant_cfg(cfg):
+    import dataclasses
+    return dataclasses.replace(cfg, kv_quant=True)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.7])
+def test_quant_trace_matrix_bitmatches_quant_oracle(setup, temperature):
+    """int8-KV serving keeps the full determinism contract *within* the
+    quantized world: every whole-prefill quant configuration — dense,
+    paged, shared-prefix, drafted verify rounds, a random
+    preempt/resume schedule — must reproduce the quantized one-shot
+    engine bit-for-bit.  Quantization happens once per cache slot at
+    lane insertion; after that, blocks move as raw int8 + scales
+    through sharing, CoW, offload, and rollback, so nothing in the
+    serving trace can perturb a single bit."""
+    params, cfg, _ = _setup()
+    qcfg = _quant_cfg(cfg)
+    trace = make_trace(31)
+    for mode in ("dense", "paged", "shared"):
+        check_trace(params, qcfg, temperature, mode, False, trace)
+    check_trace(params, qcfg, temperature, "paged", False, trace,
+                drafted=True)
+    check_trace(params, qcfg, temperature, "paged", False, trace,
+                preempt_seed=71)
+
+
+def test_quant_chunked_trace_within_tolerance_and_schedule_stable(setup):
+    """Chunked prefill is the one quant mode that is *not* bit-equal to
+    the whole-prefill oracle (each chunk's K/V is computed over the
+    previous chunks' dequantized values, then quantized — a different
+    rounding than quantizing the whole prompt at once), so it is held
+    to the tolerance contract instead.  It must still be bit-stable
+    across prefill budgets: the chunk width fixes the rounding points,
+    so *when* chunks land cannot change the bits."""
+    params, cfg, _ = _setup()
+    qcfg = _quant_cfg(cfg)
+    trace = make_trace(31)
+    trace = (trace[0], set(), trace[2])   # no kills: a cancelled lane's
+    #                                       length depends on round timing
+    got1 = check_trace(params, qcfg, 0.7, "paged", True, trace, tol=0.5)
+    got2 = check_trace(params, qcfg, 0.7, "paged", True, trace,
+                       prefill_budget=16, tol=0.5)
+    sig = lambda got: sorted((u, c.tokens.tolist()) for u, c in got.items())
+    assert sig(got1) == sig(got2), \
+        "chunked quant output depended on the prefill budget"
+
+
+def test_quant_trace_tracks_fp_oracle_at_tolerance(setup):
+    """Scored against the *fp* oracle, the quant trace passes only the
+    tolerance bar — and greedy decoding shows the divergence is real
+    quantization noise, not sampling jitter."""
+    params, cfg, _ = _setup()
+    qcfg = _quant_cfg(cfg)
+    trace = make_trace(31)
+    check_trace(params, qcfg, 0.0, "paged", False, trace, tol=0.5,
+                oracle_cfg=cfg)
+
+
+def test_quant_sharded_trace_bitmatches_quant_oracle(setup):
+    """Scale pools shard exactly like their int8 value pools (same flat
+    slot ids, same specs), so the 4-shard quant trace keeps the
+    single-device quant oracle bit-for-bit."""
+    from repro.launch.mesh import make_sim_mesh
+    params, cfg, _ = _setup()
+    qcfg = _quant_cfg(cfg)
+    trace = make_trace(29)
+    check_trace(params, qcfg, 0.7, "paged", False, trace,
+                mesh=make_sim_mesh(4), n_lanes=8)
 
 
 # ----------------------------------------------------------------------
