@@ -893,6 +893,155 @@ def format_sharded(table, devices: int) -> str:
 
 
 # ----------------------------------------------------------------------
+# Heterogeneous cascade: a recurrent (mamba2-style) tier escalating to
+# a transformer tier, each loop on its own cache protocol
+# ----------------------------------------------------------------------
+
+def run_hetero_smoke(n_items: int = 8, k: int = 4,
+                     tau: float = UNREACHABLE_TAU, lane_budget: int = 8,
+                     round_tokens: int = 8, new_tokens: int = 24,
+                     block_size: int = 8):
+    """No-training smoke for mixed-architecture cascading: tier 0 is a
+    tiny mamba2-style *pure-SSM* model served paged under the
+    state-slot protocol (a constant-size conv + SSD state slot per
+    lane — no KV blocks at all), tier 1 the TINY dense transformer on
+    block-paged KV.  The tiers are distinct SLMs, so the pipelined
+    driver opens one serving loop per architecture — two lane pools,
+    two cache protocols, interleaved in one split-phase host loop.
+
+    Both tiers use ``UNREACHABLE_TAU``: acceptance is impossible by
+    construction, so every question runs the SSM tier's vote lanes,
+    escalates to the transformer tier, and lands on the oracle
+    terminal — making the accuracy/tier-histogram equality gate
+    against the per-tier barrier path
+    (``run_cascade(stream_early_stop=True)``) deterministic under
+    sampled decoding, exactly as in ``run_pipeline_smoke``.
+
+    The gated invariants (scripts/check_bench_regression.py) are the
+    protocol split itself: ``n_loops == 2`` (distinct cache protocols
+    cannot fuse onto one lane pool), the SSM tier's state-slot pool
+    saturating at its cap with ``peak_state_bytes`` equal to
+    ``peak_state_slots * state_slot_bytes`` (recurrent state is O(1)
+    per lane — the pool never grows the way a KV block table does),
+    the transformer tier holding zero state slots, and every loop
+    draining leak-clean.
+    """
+    import time
+
+    from repro.configs.base import ModelConfig
+    from repro.core import cascade_multi as cm
+    from repro.core.experiment import TINY, model_config
+    from repro.data.tokenizer import default_tokenizer
+    from repro.models import model as model_lib
+    from repro.serving.batch import GenConfig
+
+    tok = default_tokenizer()
+    ssm_cfg = ModelConfig(
+        name="smoke-mamba2", arch_type="ssm", n_layers=2, d_model=64,
+        n_heads=0, n_kv_heads=0, head_dim=0, d_ff=192, ssm_state=16,
+        ssm_head_dim=32, ssm_chunk=16, vocab_size=tok.vocab_size,
+        remat=False, source="hetero smoke: recurrent tier-0")
+    ssm_params = model_lib.init_params(ssm_cfg, jax.random.PRNGKey(1))
+    gcfg = GenConfig(max_new_tokens=new_tokens, temperature=0.7, top_p=1.0)
+    ssm_slm = routing_lib.SLM(ssm_params, ssm_cfg, tok, gcfg,
+                              max_prompt_len=TINY.max_len,
+                              lane_budget=lane_budget, paged=True,
+                              round_tokens=round_tokens)
+    attn_params = model_lib.init_params(model_config(TINY),
+                                        jax.random.PRNGKey(0))
+    attn_slm = make_slm(attn_params, TINY)
+    attn_slm.round_tokens = round_tokens
+    attn_slm.lane_budget = lane_budget
+    attn_slm.paged = True
+    attn_slm.block_size = block_size
+    attn_slm.gcfg = gcfg
+
+    items = eval_items(TINY, "arith")[:n_items]
+    tiers = [cm.Tier(slm=ssm_slm, tau=tau, mode="FCV", k=k),
+             cm.Tier(slm=attn_slm, tau=tau, mode="FCV", k=k)]
+    terminal = cm.TerminalTier(llm=common.oracle_llm())
+    key = jax.random.PRNGKey(5)
+
+    walls_seq, walls_pipe = [], []
+    for _ in range(2):             # first pass pays compiles; min-of-2
+        t0 = time.time()
+        out_seq, tier_stats = cm.run_cascade(tiers, terminal, items, key,
+                                             stream_early_stop=True,
+                                             return_stats=True)
+        walls_seq.append(time.time() - t0)
+    for _ in range(2):
+        out_pipe, ps = cm.run_cascade_pipelined(tiers, terminal, items, key)
+        walls_pipe.append(ps.wall_s)
+    wall_seq, wall_pipe = min(walls_seq), min(walls_pipe)
+    s_seq = cm.summarize(out_seq, len(tiers))
+    s_pipe = cm.summarize(out_pipe, len(tiers))
+    seq_rounds = sum(s.rounds for s in tier_stats if s is not None)
+
+    # loops follow tier order: loop 0 serves the SSM tier, loop 1 the
+    # transformer tier (distinct SLMs never fuse)
+    ssm_st, attn_st = ps.loop_stats
+
+    def tier_row(st):
+        return {
+            "rounds": int(st.rounds),
+            "generated_tokens": int(st.generated_tokens),
+            "state_slots": int(st.state_slots),
+            "peak_state_slots": int(st.peak_state_slots),
+            "state_slot_bytes": int(st.state_slot_bytes),
+            "peak_state_bytes": int(st.peak_state_bytes),
+            "peak_blocks_in_use": int(st.peak_blocks_in_use),
+        }
+
+    return {"arith": {
+        "sequential": {
+            "wall_s": wall_seq,
+            "rounds": int(seq_rounds),
+            "accuracy": s_seq["accuracy"],
+            "tier_histogram": s_seq["tier_histogram"],
+        },
+        "pipelined": {
+            "wall_s": wall_pipe,
+            "rounds": int(ps.rounds),
+            "accuracy": s_pipe["accuracy"],
+            "tier_histogram": s_pipe["tier_histogram"],
+            "overlap_fraction": ps.overlap_fraction,
+            "n_loops": int(ps.n_loops),
+        },
+        "ssm_tier": tier_row(ssm_st),
+        "attn_tier": tier_row(attn_st),
+        "equal_accuracy": bool(
+            s_seq["accuracy"] == s_pipe["accuracy"]
+            and s_seq["tier_histogram"] == s_pipe["tier_histogram"]),
+        "leak_clean": bool(all(s.leak_report is None
+                               for s in ps.loop_stats)
+                           and all(s is None or s.leak_report is None
+                                   for s in tier_stats)),
+    }}
+
+
+def format_hetero(table) -> str:
+    row = table["arith"]
+    seq, pipe = row["sequential"], row["pipelined"]
+    ssm, attn = row["ssm_tier"], row["attn_tier"]
+    lines = ["heterogeneous cascade: SSM tier-0 -> transformer tier-1",
+             f"{'tier':18s} {'rounds':>7s} {'gen':>6s} {'slots':>6s} "
+             f"{'peak':>5s} {'state B':>9s} {'KV blk':>7s}"]
+    for name, r in (("ssm (mamba2)", ssm), ("attn (paged KV)", attn)):
+        lines.append(
+            f"{name:18s} {r['rounds']:7d} {r['generated_tokens']:6d} "
+            f"{r['state_slots']:6d} {r['peak_state_slots']:5d} "
+            f"{r['peak_state_bytes']:9d} {r['peak_blocks_in_use']:7d}")
+    lines.append(
+        f"serialized {seq['wall_s']:.2f}s / {seq['rounds']} rounds vs "
+        f"pipelined {pipe['wall_s']:.2f}s / {pipe['rounds']} rounds "
+        f"({pipe['n_loops']} loops, overlap "
+        f"{pipe['overlap_fraction']:.0%})  acc= "
+        f"{'yes' if row['equal_accuracy'] else 'NO'}  leak-clean: "
+        f"{'yes' if row['leak_clean'] else 'NO'}")
+    return "\n".join(lines)
+
+
+# ----------------------------------------------------------------------
 # Speculative cascade: rejected-tier drafts verified by the next tier
 # ----------------------------------------------------------------------
 
@@ -1128,12 +1277,28 @@ if __name__ == "__main__":
                          "vs concurrent slices)")
     ap.add_argument("--devices", type=int, default=4,
                     help="simulated device count for --sharded (default 4)")
+    ap.add_argument("--hetero", action="store_true",
+                    help="smoke the mixed-architecture cascade: a "
+                         "mamba2-style pure-SSM tier-0 (paged state-slot "
+                         "pool) escalating to a paged-KV transformer "
+                         "tier-1, pipelined vs per-tier barriers")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also dump the result table as JSON (CI artifact)")
     args = ap.parse_args()
     if args.share_prefix and not args.paged:
         ap.error("--share-prefix requires --paged")
-    if args.sharded:
+    if args.hetero:
+        if not args.smoke or args.paged or args.pipeline_cascade \
+                or args.chunked_serve or args.spec_cascade or args.preempt \
+                or args.quant or args.sharded:
+            ap.error("--hetero is a standalone --smoke benchmark")
+        t = run_hetero_smoke(k=args.k or 4)
+        if args.json:
+            with open(args.json, "w") as f:
+                json.dump({"hetero_smoke": True, "smoke": True,
+                           "table": t}, f, indent=2)
+        print(format_hetero(t))
+    elif args.sharded:
         if not args.smoke or args.paged or args.pipeline_cascade \
                 or args.chunked_serve or args.spec_cascade or args.preempt \
                 or args.quant:

@@ -46,6 +46,13 @@ cost metric regressed beyond its tolerance:
     producing rig could physically parallelize (``wall_gate_armed`` —
     simulated devices timeshare the host's cores, so a single-core
     host tops out at wall parity);
+  * the heterogeneous-cascade JSON (``--hetero``) carries its own
+    baseline-free invariants: the mixed SSM -> transformer cascade must
+    keep accuracy/tier histogram equal to the per-tier barrier path,
+    open one serving loop per cache protocol (``n_loops == 2``), and
+    account recurrent state exactly (SSM tier peak state bytes ==
+    peak slots x slot size at a saturated pool; zero state slots on
+    the transformer tier; all loops leak-clean);
   * the quantized-tier JSON (``--quant``) carries its own baseline-free
     invariants: the int8 tier must sit *strictly below* the fp32 tier
     on both KV-footprint metrics at an equal lane count, clear the
@@ -306,6 +313,58 @@ def check_shard_invariants(cur):
     return failures
 
 
+def check_hetero_invariants(cur):
+    """Baseline-free acceptance checks for --hetero JSONs: the
+    mixed-architecture cascade must keep accuracy/tier histogram equal
+    to the per-tier barrier path, run one serving loop per architecture
+    (n_loops == 2 — distinct cache protocols cannot fuse onto one lane
+    pool), and account recurrent state exactly: the SSM tier's
+    state-slot pool saturates at its cap with peak state bytes equal to
+    peak slots x slot size (state is O(1) per lane — the pool never
+    grows the way a KV block table does) while the transformer tier
+    holds zero state slots, with every loop draining leak-clean."""
+    failures = []
+    for bench, row in cur.get("table", {}).items():
+        ssm, attn = row.get("ssm_tier"), row.get("attn_tier")
+        if not (isinstance(ssm, dict) and isinstance(attn, dict)):
+            continue
+        if not row.get("equal_accuracy", False):
+            failures.append(f"{bench}: pipelined hetero accuracy/tier "
+                            "histogram diverged from the per-tier barrier "
+                            "path")
+        pipe = row.get("pipelined", {})
+        if not pipe.get("n_loops", 0) == 2:
+            failures.append(
+                f"{bench}: mixed architectures ran {pipe.get('n_loops', 0)} "
+                "host loop(s), expected 2 (one per cache protocol)")
+        if not ssm.get("state_slots", 0) > 0:
+            failures.append(f"{bench}: the SSM tier reported no state-slot "
+                            "pool — it did not serve under the state-slot "
+                            "protocol")
+        if not ssm.get("peak_state_slots", -1) == ssm.get("state_slots", 0):
+            failures.append(
+                f"{bench}: SSM tier peak slot occupancy "
+                f"{ssm.get('peak_state_slots')} below its cap "
+                f"{ssm.get('state_slots')} — demand never saturated the "
+                "pool, so slot backpressure went unexercised")
+        want = ssm.get("peak_state_slots", 0) * ssm.get("state_slot_bytes", 0)
+        if not (ssm.get("state_slot_bytes", 0) > 0
+                and ssm.get("peak_state_bytes", -1) == want):
+            failures.append(
+                f"{bench}: SSM tier peak state bytes "
+                f"{ssm.get('peak_state_bytes')} != slots x slot size "
+                f"{want} — recurrent state stopped being O(1) per lane")
+        if not attn.get("state_slots", 1) == 0:
+            failures.append(
+                f"{bench}: the transformer tier holds "
+                f"{attn.get('state_slots')} state slot(s) — the attention "
+                "protocol must not carry a state-slot pool")
+        if not row.get("leak_clean", False):
+            failures.append(f"{bench}: a serving loop closed with a leak "
+                            "report (blocks or state slots not drained)")
+    return failures
+
+
 def check_quant_invariants(cur, tol=0.1):
     """Baseline-free acceptance checks for --quant JSONs: the int8 tier
     must strictly undercut the fp32 tier on both KV-footprint metrics
@@ -388,6 +447,8 @@ def main():
         failures += check_shard_invariants(cur)
     if cur.get("quant_smoke"):
         failures += check_quant_invariants(cur, args.tol)
+    if cur.get("hetero_smoke"):
+        failures += check_hetero_invariants(cur)
 
     width = max((len(r[0]) for r in rows), default=20)
     print(f"{args.current} vs {args.baseline}:")

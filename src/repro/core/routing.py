@@ -49,6 +49,11 @@ class SLM:
     #                                      queued draft tokens (e.g. a
     #                                      rejected tier's completion) up to
     #                                      k per round (serving/scheduler)
+    state_slots: "int | None" = None     # recurrent-state slot cap for a
+    #                                      paged SSM/hybrid tier (default:
+    #                                      one slot per lane); admission
+    #                                      backpressures on slot exhaustion
+    #                                      like KV-block exhaustion
     mesh: "object | None" = None         # jax Mesh: shard lanes/KV over its
     #                                      'data' axis and pin decode to its
     #                                      devices (cascade tier placement —
@@ -178,7 +183,8 @@ def make_scheduler(slm: SLM, n_requests: int) -> Scheduler:
                      share_prefix=slm.share_prefix,
                      chunk_size=slm.chunk_size,
                      prefill_budget=slm.prefill_budget,
-                     spec_k=slm.spec_k, mesh=slm.mesh)
+                     spec_k=slm.spec_k, state_slots=slm.state_slots,
+                     mesh=slm.mesh)
 
 
 def batch_generate(slm: SLM, prompts: Sequence[str], key):

@@ -102,6 +102,11 @@ def main():
                     help="with --chunk-size: chunk-capacity tokens each "
                          "round may spend on prompt processing "
                          "(default: finish every queued prompt per round)")
+    ap.add_argument("--state-slots", type=int, default=None,
+                    help="with --paged on an SSM/hybrid arch: cap the "
+                         "recurrent-state slot pool (default: one slot "
+                         "per lane); a smaller cap forces admission "
+                         "backpressure on the state axis")
     ap.add_argument("--pool-blocks", type=int, default=None,
                     help="with --paged: cap the device block pool (default "
                          "sizes it so every lane can run to budget; a "
@@ -123,6 +128,8 @@ def main():
         ap.error("--prefill-budget requires --chunk-size")
     if (args.preempt or args.pool_blocks is not None) and not args.paged:
         ap.error("--preempt/--pool-blocks require --paged")
+    if args.state_slots is not None and not args.paged:
+        ap.error("--state-slots requires --paged")
     if args.sim_devices is not None and not args.smoke:
         ap.error("--sim-devices requires --smoke (the production mesh "
                  "shards the model axis, not the lane pool)")
@@ -172,6 +179,7 @@ def main():
                       chunk_size=args.chunk_size,
                       prefill_budget=args.prefill_budget,
                       pool_blocks=args.pool_blocks,
+                      state_slots=args.state_slots,
                       auto_preempt=args.preempt,
                       mesh=mesh if args.sim_devices is not None else None)
 
@@ -230,17 +238,28 @@ def main():
         print(f"  {describe_mesh(mesh)}: {sched.n_shards} lane-pool "
               f"shard(s) x {sched.lanes_per_shard} lanes")
     if args.paged:
-        pools = sched.pools or [sched.pool]
-        print(f"  paged cache: peak {stats.peak_blocks_in_use}/"
-              f"{stats.pool_blocks} blocks "
-              f"({stats.peak_cache_bytes / 2**20:.2f} MiB vs dense "
-              f"{stats.dense_cache_bytes / 2**20:.2f} MiB), "
-              f"admission blocked {stats.admission_blocked}x, "
-              f"peak reserved {max(p.peak_reserved for p in pools)}")
+        # a pure-SSM arch pages recurrent state, not KV blocks: it has
+        # state-slot pools but no BlockPool, so the KV lines are skipped
+        pools = [p for p in (sched.pools or [sched.pool]) if p is not None]
+        if pools:
+            print(f"  paged cache: peak {stats.peak_blocks_in_use}/"
+                  f"{stats.pool_blocks} blocks "
+                  f"({stats.peak_cache_bytes / 2**20:.2f} MiB vs dense "
+                  f"{stats.dense_cache_bytes / 2**20:.2f} MiB), "
+                  f"admission blocked {stats.admission_blocked}x, "
+                  f"peak reserved {max(p.peak_reserved for p in pools)}")
+        else:
+            print(f"  admission blocked {stats.admission_blocked}x "
+                  f"(state-slot backpressure)")
         if len(pools) > 1:
             print("  per-shard peaks: " + ", ".join(
                 f"s{i}={p.peak_in_use}/{sched.pool_blocks}"
                 for i, p in enumerate(pools)))
+        if stats.state_slots:
+            print(f"  state slots: peak {stats.peak_state_slots}/"
+                  f"{stats.state_slots} "
+                  f"({stats.peak_state_bytes / 2**20:.2f} MiB at "
+                  f"{stats.state_slot_bytes / 2**20:.2f} MiB/slot)")
         # loop.close() runs BlockPool.leak_report(): any block still
         # held or reserved after the last lane drained is a serving bug
         print("  pool leak check: "

@@ -1,0 +1,80 @@
+"""Explicit per-architecture decode-cache protocol.
+
+The serving stack historically dispatched on the cache pytree's shape
+("``block_tables`` present => paged attention"), which conflated two
+independent axes: how *attention* KV is stored (dense per-lane rows vs
+a block pool) and whether the model carries *recurrent* (conv + SSD)
+state at all.  That implicit test mis-served anything that was not an
+attention-only transformer: a pure-SSM model has no KV to page, a
+hybrid has both kinds of state, and the scheduler's admission /
+preemption / accounting paths each need to know which pieces exist.
+
+:class:`CacheProtocol` names the three storage families explicitly:
+
+``dense_attention``
+    KV in per-lane dense ``(L, B, sc, KV, dh)`` rows
+    (:func:`model.init_decode_state`).  Cost grows with ``sc``.
+``paged_attention``
+    KV in a shared block pool indexed through per-lane block tables
+    (:func:`model.init_paged_decode_state`), host-managed by
+    ``serving/block_pool.BlockPool``.  Cost grows with tokens written.
+``state_slots``
+    Per-lane recurrent state: conv tail ``(L, B, W, Cc)`` + SSD state
+    ``(L, B, H, P, N)``.  O(1) per lane regardless of sequence length,
+    so "paging" it means *slot accounting* (admission backpressure,
+    preempt/offload byte tracking, leak audit —
+    ``serving/block_pool.StateSlotPool``), not block indirection.
+
+A config maps to a protocol via :func:`cache_protocol` (attention-only
+=> one of the first two; mamba2 => state_slots only; hymba => KV family
++ state_slots).  :func:`protocol_of` recovers the protocol from a live
+cache pytree — the jit-static replacement for the old ``"block_tables"
+in cache`` test.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheProtocol:
+    """Which state families a decode cache carries, and how."""
+    dense_attention: bool = False
+    paged_attention: bool = False
+    state_slots: bool = False
+
+    @property
+    def has_attention(self) -> bool:
+        return self.dense_attention or self.paged_attention
+
+    @property
+    def hybrid(self) -> bool:
+        return self.has_attention and self.state_slots
+
+
+def cache_protocol(cfg: ModelConfig, paged: bool) -> CacheProtocol:
+    """The protocol a scheduler with ``paged=<paged>`` serves ``cfg``
+    under.  ``paged=True`` on a pure-SSM model means state-slot
+    accounting only (there is no KV to page); on a hybrid it means
+    paged KV *plus* state slots."""
+    if not (cfg.has_attention or cfg.has_ssm):
+        raise ValueError(f"{cfg.name}: no token mixer (neither attention "
+                         "nor SSM) — nothing to cache")
+    return CacheProtocol(
+        dense_attention=cfg.has_attention and not paged,
+        paged_attention=cfg.has_attention and paged,
+        state_slots=cfg.has_ssm,
+    )
+
+
+def protocol_of(cache, cfg: ModelConfig) -> CacheProtocol:
+    """Recover the protocol from a live cache pytree (static under jit:
+    key presence is part of the pytree structure)."""
+    return CacheProtocol(
+        dense_attention=cfg.has_attention and "block_tables" not in cache,
+        paged_attention=cfg.has_attention and "block_tables" in cache,
+        state_slots=cfg.has_ssm,
+    )

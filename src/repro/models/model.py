@@ -88,11 +88,15 @@ def _maybe_seq_shard(cfg: ModelConfig, x):
     return jax.lax.with_sharding_constraint(x, P(U, "model", U))
 
 
-def _mixer_forward(cfg: ModelConfig, lp, x, positions, window):
+def _mixer_forward(cfg: ModelConfig, lp, x, positions, window, lengths=None):
     """Token mixer (attention / ssm / both), full sequence.
 
     Returns (mix_out, cache_parts) where cache_parts has the per-layer
-    state needed for decode (k/v and/or conv/ssm states).
+    state needed for decode (k/v and/or conv/ssm states).  ``lengths``
+    (B,), when given, marks positions >= lengths as right-padding the
+    SSM state recurrence must skip — without it a padded prompt's
+    conv/SSD states absorb pad tokens (attention masks padding by
+    position; SSM state is cumulative, so it needs the explicit mask).
     """
     parts = {}
     h = apply_norm(cfg, lp["norm1"], x)
@@ -102,7 +106,8 @@ def _mixer_forward(cfg: ModelConfig, lp, x, positions, window):
         outs.append(a_out)
         parts["k"], parts["v"] = k, v
     if cfg.has_ssm:
-        s_out, (conv_state, ssm_state) = ssm_mod.ssm_forward(cfg, lp["ssm"], h)
+        s_out, (conv_state, ssm_state) = ssm_mod.ssm_forward(
+            cfg, lp["ssm"], h, positions=positions, lengths=lengths)
         outs.append(s_out)
         parts["conv"], parts["ssm"] = conv_state, ssm_state
     if len(outs) == 2:       # hymba: parallel heads, mean-fused
@@ -112,21 +117,28 @@ def _mixer_forward(cfg: ModelConfig, lp, x, positions, window):
     return mix, parts
 
 
-def _channel_forward(cfg: ModelConfig, lp, x):
-    """FFN / MoE sublayer.  Returns (out, aux)."""
+def _channel_forward(cfg: ModelConfig, lp, x, dropless: bool = False):
+    """FFN / MoE sublayer.  Returns (out, aux).
+
+    ``dropless=True`` — every inference entry point (prefill, chunked
+    prefill, decode, verify) — makes MoE capacity cover all tokens, so
+    a token's output never depends on the batch it shares a forward
+    pass with (the serving determinism contract).  Training keeps the
+    capacity scheme."""
     if cfg.is_moe:
         h = apply_norm(cfg, lp["norm2"], x)
-        return moe_mod.apply_moe(cfg, lp["moe"], h)
+        return moe_mod.apply_moe(cfg, lp["moe"], h, dropless=dropless)
     if cfg.d_ff:
         h = apply_norm(cfg, lp["norm2"], x)
         return apply_mlp(cfg, lp["mlp"], h), None
     return None, None
 
 
-def _block_forward(cfg: ModelConfig, lp, x, positions, window):
-    mix, parts = _mixer_forward(cfg, lp, x, positions, window)
+def _block_forward(cfg: ModelConfig, lp, x, positions, window, lengths=None,
+                   dropless: bool = False):
+    mix, parts = _mixer_forward(cfg, lp, x, positions, window, lengths)
     x = _maybe_seq_shard(cfg, x + mix)
-    ch, aux = _channel_forward(cfg, lp, x)
+    ch, aux = _channel_forward(cfg, lp, x, dropless)
     if ch is not None:
         x = _maybe_seq_shard(cfg, x + ch)
     return x, parts, aux
@@ -277,10 +289,15 @@ def init_paged_decode_state(cfg: ModelConfig, batch: int, s_max: int,
     lane's logical cache width through jit, and validity masks derive
     from it (``kpos <= pos``), so no per-slot ``cache_pos`` is needed.
 
-    Constraints: attention-only caching (SSM state stays per-lane and
-    dense — it is O(1) per lane already) and no pure-ring
-    sliding-window configs (paged lanes are append-only; windows are
-    enforced by masking instead, any mix with a global layer is fine).
+    Per-architecture cache protocol (models/cache_protocol.py): only
+    attention KV is block-paged.  SSM conv/SSD state is O(1) per lane
+    and stays lane-indexed dense — a pure-SSM config gets a cache of
+    just ``pos`` + ``conv`` + ``ssm`` (the *state-slot* protocol; the
+    scheduler accounts for it with ``block_pool.StateSlotPool`` instead
+    of a block table), and a hybrid carries both families.  No
+    pure-ring sliding-window configs (paged lanes are append-only;
+    windows are enforced by masking instead, any mix with a global
+    layer is fine).
 
     With ``cfg.kv_quant`` the page pools are int8 and each (block-slot,
     kv-head) carries an f32 absmax scale in ``k_scale``/``v_scale``
@@ -289,30 +306,30 @@ def init_paged_decode_state(cfg: ModelConfig, batch: int, s_max: int,
     pools, so block sharing/CoW/offload move scales verbatim alongside
     their int8 blocks.
     """
-    if not cfg.has_attention:
-        raise ValueError("paged decode cache requires an attention model")
-    if cache_length(cfg, s_max) != s_max:
-        raise ValueError("paged decode cache requires full-length caching "
-                         "(pure sliding-window ring configs decode dense)")
+    if not (cfg.has_attention or cfg.has_ssm):
+        raise ValueError(f"{cfg.name}: no token mixer to cache state for")
     cdt = cache_dtype or jnp.dtype(cfg.compute_dtype)
     L = cfg.n_layers
-    dh = cfg.resolved_head_dim
-    kv_dt = jnp.int8 if cfg.kv_quant else cdt
-    max_blocks = -(-s_max // block_size)
-    cache = {
-        "pos": jnp.zeros((batch,), jnp.int32),
-        "kpos": jnp.arange(s_max, dtype=jnp.int32),
-        "block_tables": jnp.zeros((batch, max_blocks), jnp.int32),
-        "k": jnp.zeros((L, n_blocks + 1, block_size, cfg.n_kv_heads, dh),
-                       kv_dt),
-        "v": jnp.zeros((L, n_blocks + 1, block_size, cfg.n_kv_heads, dh),
-                       kv_dt),
-    }
-    if cfg.kv_quant:
-        cache["k_scale"] = jnp.zeros(
-            (L, n_blocks + 1, block_size, cfg.n_kv_heads), jnp.float32)
-        cache["v_scale"] = jnp.zeros(
-            (L, n_blocks + 1, block_size, cfg.n_kv_heads), jnp.float32)
+    cache = {"pos": jnp.zeros((batch,), jnp.int32)}
+    if cfg.has_attention:
+        if cache_length(cfg, s_max) != s_max:
+            raise ValueError(
+                "paged decode cache requires full-length caching "
+                "(pure sliding-window ring configs decode dense)")
+        dh = cfg.resolved_head_dim
+        kv_dt = jnp.int8 if cfg.kv_quant else cdt
+        max_blocks = -(-s_max // block_size)
+        cache["kpos"] = jnp.arange(s_max, dtype=jnp.int32)
+        cache["block_tables"] = jnp.zeros((batch, max_blocks), jnp.int32)
+        cache["k"] = jnp.zeros(
+            (L, n_blocks + 1, block_size, cfg.n_kv_heads, dh), kv_dt)
+        cache["v"] = jnp.zeros(
+            (L, n_blocks + 1, block_size, cfg.n_kv_heads, dh), kv_dt)
+        if cfg.kv_quant:
+            cache["k_scale"] = jnp.zeros(
+                (L, n_blocks + 1, block_size, cfg.n_kv_heads), jnp.float32)
+            cache["v_scale"] = jnp.zeros(
+                (L, n_blocks + 1, block_size, cfg.n_kv_heads), jnp.float32)
     if cfg.has_ssm:
         di, n, h, conv_ch, _ = ssm_mod.ssm_dims(cfg)
         cache["conv"] = jnp.zeros((L, batch, cfg.ssm_conv_width, conv_ch), cdt)
@@ -353,7 +370,8 @@ def prefill(params, cfg: ModelConfig, tokens=None, embeds=None,
     def block(carry, layer):
         x, aux = carry
         lp, window = layer
-        x, parts, la = _block_forward(cfg, lp, x, positions, window)
+        x, parts, la = _block_forward(cfg, lp, x, positions, window,
+                                      lengths=lengths, dropless=True)
         if la is not None:
             aux = {k: aux[k] + la[k] for k in aux}
         out_parts = {}
@@ -441,8 +459,14 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
     ``cache_pos`` validity, the scheduler's logits buffer) is the
     caller's job — see serving/batch.py ``prefill_chunk_jit``.
 
-    Attention-only: SSM conv/ssm states are sequential across the whole
-    prompt and are not carried between chunks.
+    SSM / hybrid caches: each chunk reads the lane's carried conv +
+    SSD state (``ssm_forward(init_state=..., init_conv=...)``), rows
+    whose ``start == 0`` reading zeros instead (a first chunk must not
+    see a previous occupant's state), and writes the updated states
+    back to the lane rows.  Bit-identity with whole-prompt prefill
+    needs chunk starts aligned to ``cfg.ssm_chunk`` (the SSD
+    intra-chunk einsums must see the same chunk boundaries) — the
+    scheduler enforces ``chunk_size % ssm_chunk == 0``.
 
     Quantized caches (``k_scale`` present): the chunk's K/V are
     quantized per (slot, kv-head) before the scatter, and the cache
@@ -453,20 +477,27 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
     schedules that cover the same slots — per-slot quantization is
     elementwise deterministic.
     """
-    if cfg.has_ssm:
-        raise ValueError("prefill_chunk requires an attention-only model: "
-                         "SSM prompt state is sequential and is not carried "
-                         "across chunks")
+    from repro.models.cache_protocol import protocol_of
     x = embed_tokens(cfg, params["embed"], tokens)
     b, c, _ = x.shape
     q_pos = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]  # (Nb,C)
     windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
-    paged = "block_tables" in cache
+    proto = protocol_of(cache, cfg)
+    has_attn = proto.has_attention
+    has_ssm = proto.state_slots
+    paged = proto.paged_attention
     quant = "k_scale" in cache
     cdt = jnp.dtype(cfg.compute_dtype)
     dh = cfg.resolved_head_dim
+    if has_ssm:
+        # a row's first chunk must read zero state, not whatever a
+        # previous lane occupant left in the rows (chunked admission
+        # never resets the state arrays)
+        fresh = start == 0
 
-    if paged:
+    if not has_attn:
+        pass
+    elif paged:
         pb, bs = cache["k"].shape[1], cache["k"].shape[2]
         kpos_sb = jnp.arange(sb, dtype=jnp.int32)
         # per-row flat pool slots: reads follow read_rows (shared prompt
@@ -483,78 +514,114 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
                                       (b, sb))
 
     def block(carry, layer):
-        x, k_stack, v_stack, ks_stack, vs_stack = carry
+        x, k_stack, v_stack, ks_stack, vs_stack, conv_stack, ssm_stack = carry
         lp = layer["lp"]
         window = layer["window"]
         idx = layer["idx"]
         h = apply_norm(cfg, lp["norm1"], x)
-        q, k, v = attn_mod.chunk_qkv(cfg, lp["attn"], h, q_pos)
-        k_l = jax.lax.dynamic_index_in_dim(k_stack, idx, 0, keepdims=False)
-        v_l = jax.lax.dynamic_index_in_dim(v_stack, idx, 0, keepdims=False)
-        if quant:
-            ks_l = jax.lax.dynamic_index_in_dim(ks_stack, idx, 0,
-                                                keepdims=False)
-            vs_l = jax.lax.dynamic_index_in_dim(vs_stack, idx, 0,
-                                                keepdims=False)
-            k, ksc = attn_mod.quantize_kv(k)                   # (Nb,C,KV)
-            v, vsc = attn_mod.quantize_kv(v)
-        if paged:
-            k_flat = k_l.reshape(pb * bs, cfg.n_kv_heads, dh)
-            v_flat = v_l.reshape(pb * bs, cfg.n_kv_heads, dh)
-            k_flat = k_flat.at[write_tgt].set(k.astype(k_flat.dtype))
-            v_flat = v_flat.at[write_tgt].set(v.astype(v_flat.dtype))
+        outs = []
+        if has_attn:
+            q, k, v = attn_mod.chunk_qkv(cfg, lp["attn"], h, q_pos)
+            k_l = jax.lax.dynamic_index_in_dim(k_stack, idx, 0,
+                                               keepdims=False)
+            v_l = jax.lax.dynamic_index_in_dim(v_stack, idx, 0,
+                                               keepdims=False)
             if quant:
-                ks_flat = ks_l.reshape(pb * bs, cfg.n_kv_heads)
-                vs_flat = vs_l.reshape(pb * bs, cfg.n_kv_heads)
-                ks_flat = ks_flat.at[write_tgt].set(ksc)
-                vs_flat = vs_flat.at[write_tgt].set(vsc)
-                k_att = attn_mod.dequantize_kv(k_flat[gather_idx],
-                                               ks_flat[gather_idx], cdt)
-                v_att = attn_mod.dequantize_kv(v_flat[gather_idx],
-                                               vs_flat[gather_idx], cdt)
-                ks_l = ks_flat.reshape(pb, bs, cfg.n_kv_heads)
-                vs_l = vs_flat.reshape(pb, bs, cfg.n_kv_heads)
+                ks_l = jax.lax.dynamic_index_in_dim(ks_stack, idx, 0,
+                                                    keepdims=False)
+                vs_l = jax.lax.dynamic_index_in_dim(vs_stack, idx, 0,
+                                                    keepdims=False)
+                k, ksc = attn_mod.quantize_kv(k)               # (Nb,C,KV)
+                v, vsc = attn_mod.quantize_kv(v)
+            if paged:
+                k_flat = k_l.reshape(pb * bs, cfg.n_kv_heads, dh)
+                v_flat = v_l.reshape(pb * bs, cfg.n_kv_heads, dh)
+                k_flat = k_flat.at[write_tgt].set(k.astype(k_flat.dtype))
+                v_flat = v_flat.at[write_tgt].set(v.astype(v_flat.dtype))
+                if quant:
+                    ks_flat = ks_l.reshape(pb * bs, cfg.n_kv_heads)
+                    vs_flat = vs_l.reshape(pb * bs, cfg.n_kv_heads)
+                    ks_flat = ks_flat.at[write_tgt].set(ksc)
+                    vs_flat = vs_flat.at[write_tgt].set(vsc)
+                    k_att = attn_mod.dequantize_kv(k_flat[gather_idx],
+                                                   ks_flat[gather_idx], cdt)
+                    v_att = attn_mod.dequantize_kv(v_flat[gather_idx],
+                                                   vs_flat[gather_idx], cdt)
+                    ks_l = ks_flat.reshape(pb, bs, cfg.n_kv_heads)
+                    vs_l = vs_flat.reshape(pb, bs, cfg.n_kv_heads)
+                else:
+                    k_att, v_att = k_flat[gather_idx], v_flat[gather_idx]
+                k_l = k_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
+                v_l = v_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
             else:
-                k_att, v_att = k_flat[gather_idx], v_flat[gather_idx]
-            k_l = k_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
-            v_l = v_flat.reshape(pb, bs, cfg.n_kv_heads, dh)
-        else:
-            k_l = k_l.at[lanes[:, None], q_pos].set(k.astype(k_l.dtype),
-                                                    mode="drop")
-            v_l = v_l.at[lanes[:, None], q_pos].set(v.astype(v_l.dtype),
-                                                    mode="drop")
+                k_l = k_l.at[lanes[:, None], q_pos].set(k.astype(k_l.dtype),
+                                                        mode="drop")
+                v_l = v_l.at[lanes[:, None], q_pos].set(v.astype(v_l.dtype),
+                                                        mode="drop")
+                if quant:
+                    ks_l = ks_l.at[lanes[:, None], q_pos].set(ksc,
+                                                              mode="drop")
+                    vs_l = vs_l.at[lanes[:, None], q_pos].set(vsc,
+                                                              mode="drop")
+                    k_att = attn_mod.dequantize_kv(k_l[lanes, :sb],
+                                                   ks_l[lanes, :sb], cdt)
+                    v_att = attn_mod.dequantize_kv(v_l[lanes, :sb],
+                                                   vs_l[lanes, :sb], cdt)
+                else:
+                    k_att, v_att = k_l[lanes, :sb], v_l[lanes, :sb]
+            a_out = attn_mod.chunk_attend(cfg, lp["attn"], q, k_att, v_att,
+                                          q_pos, k_pos_view, window)
+            outs.append(a_out)
+            k_stack = jax.lax.dynamic_update_index_in_dim(k_stack, k_l,
+                                                          idx, 0)
+            v_stack = jax.lax.dynamic_update_index_in_dim(v_stack, v_l,
+                                                          idx, 0)
             if quant:
-                ks_l = ks_l.at[lanes[:, None], q_pos].set(ksc, mode="drop")
-                vs_l = vs_l.at[lanes[:, None], q_pos].set(vsc, mode="drop")
-                k_att = attn_mod.dequantize_kv(k_l[lanes, :sb],
-                                               ks_l[lanes, :sb], cdt)
-                v_att = attn_mod.dequantize_kv(v_l[lanes, :sb],
-                                               vs_l[lanes, :sb], cdt)
-            else:
-                k_att, v_att = k_l[lanes, :sb], v_l[lanes, :sb]
-        a_out = attn_mod.chunk_attend(cfg, lp["attn"], q, k_att, v_att,
-                                      q_pos, k_pos_view, window)
-        x = x + a_out
-        ch, _ = _channel_forward(cfg, lp, x)
+                ks_stack = jax.lax.dynamic_update_index_in_dim(
+                    ks_stack, ks_l, idx, 0)
+                vs_stack = jax.lax.dynamic_update_index_in_dim(
+                    vs_stack, vs_l, idx, 0)
+        if has_ssm:
+            conv_l = jax.lax.dynamic_index_in_dim(conv_stack, idx, 0,
+                                                  keepdims=False)
+            ssm_l = jax.lax.dynamic_index_in_dim(ssm_stack, idx, 0,
+                                                 keepdims=False)
+            # lane-row gather (out-of-range dummy rows clamp — their
+            # writes drop below); first chunks read zero state
+            conv_rows = jnp.where(fresh[:, None, None], 0.0, conv_l[lanes])
+            ssm_rows = jnp.where(fresh[:, None, None, None], 0.0,
+                                 ssm_l[lanes])
+            s_out, (conv_new, ssm_new) = ssm_mod.ssm_forward(
+                cfg, lp["ssm"], h, init_state=ssm_rows, init_conv=conv_rows,
+                positions=q_pos, lengths=lengths)
+            outs.append(s_out)
+            conv_l = conv_l.at[lanes].set(conv_new.astype(conv_l.dtype),
+                                          mode="drop")
+            ssm_l = ssm_l.at[lanes].set(ssm_new, mode="drop")
+            conv_stack = jax.lax.dynamic_update_index_in_dim(
+                conv_stack, conv_l, idx, 0)
+            ssm_stack = jax.lax.dynamic_update_index_in_dim(
+                ssm_stack, ssm_l, idx, 0)
+        mix = (outs[0] + outs[1]) * 0.5 if len(outs) == 2 else outs[0]
+        x = x + mix
+        ch, _ = _channel_forward(cfg, lp, x, dropless=True)
         if ch is not None:
             x = x + ch
-        k_stack = jax.lax.dynamic_update_index_in_dim(k_stack, k_l, idx, 0)
-        v_stack = jax.lax.dynamic_update_index_in_dim(v_stack, v_l, idx, 0)
-        if quant:
-            ks_stack = jax.lax.dynamic_update_index_in_dim(
-                ks_stack, ks_l, idx, 0)
-            vs_stack = jax.lax.dynamic_update_index_in_dim(
-                vs_stack, vs_l, idx, 0)
-        return (x, k_stack, v_stack, ks_stack, vs_stack), None
+        return (x, k_stack, v_stack, ks_stack, vs_stack, conv_stack,
+                ssm_stack), None
 
     L = cfg.n_layers
     xs = {"lp": params["layers"], "window": windows,
           "idx": jnp.arange(L, dtype=jnp.int32)}
     zero = jnp.zeros((), x.dtype)
+    k0 = cache["k"] if has_attn else zero
+    v0 = cache["v"] if has_attn else zero
     ks0 = cache["k_scale"] if quant else zero
     vs0 = cache["v_scale"] if quant else zero
-    (x, k_stack, v_stack, ks_stack, vs_stack), _ = jax.lax.scan(
-        block, (x, cache["k"], cache["v"], ks0, vs0), xs)
+    conv0 = cache["conv"] if has_ssm else zero
+    ssm0 = cache["ssm"] if has_ssm else zero
+    (x, k_stack, v_stack, ks_stack, vs_stack, conv_stack, ssm_stack), _ = \
+        jax.lax.scan(block, (x, k0, v0, ks0, vs0, conv0, ssm0), xs)
     x = apply_norm(cfg, params["final_norm"], x)
     last = jnp.clip(jnp.minimum(start + c, lengths) - 1 - start, 0, c - 1)
     idx = last[:, None, None].astype(jnp.int32)
@@ -562,9 +629,12 @@ def prefill_chunk(params, cfg: ModelConfig, tokens, cache, start, lengths,
         idx, (b, 1, x.shape[-1])), axis=1)[:, 0]
     logits = logits_from_hidden(cfg, params["embed"], x_last)          # (Nb,V)
     new_cache = dict(cache)
-    new_cache["k"], new_cache["v"] = k_stack, v_stack
+    if has_attn:
+        new_cache["k"], new_cache["v"] = k_stack, v_stack
     if quant:
         new_cache["k_scale"], new_cache["v_scale"] = ks_stack, vs_stack
+    if has_ssm:
+        new_cache["conv"], new_cache["ssm"] = conv_stack, ssm_stack
     return logits, new_cache
 
 
@@ -601,8 +671,11 @@ def verify_step(params, cfg: ModelConfig, tokens, cache, draft_len=None):
     (the ``chunk_qkv`` argument; tests/test_spec_decode.py asserts the
     bit-match).
 
-    Attention-only (same limit as :func:`prefill_chunk`; the scheduler
-    gates spec mode on the same predicate).
+    Attention models only — a rejected draft's recurrent (SSM) state
+    could not be rolled back (the scheduler's spec guard gates on the
+    same predicate).  MoE configs verify fine: dropless decode dispatch
+    makes each token's expert output independent of the verify batch
+    width, so verify logits still bit-match sequential decode.
 
     Quantized caches (``k_scale`` present): drafts are quantized per
     (slot, kv-head) before the scatter and scored against the
@@ -705,7 +778,7 @@ def verify_step(params, cfg: ModelConfig, tokens, cache, draft_len=None):
                                            q_pos, cache_pos, window,
                                            valid_k=cache_pos >= 0)
         x = x + a_out
-        ch, _ = _channel_forward(cfg, lp, x)
+        ch, _ = _channel_forward(cfg, lp, x, dropless=True)
         if ch is not None:
             x = x + ch
         k_stack = jax.lax.dynamic_update_index_in_dim(k_stack, k_l, idx, 0)
@@ -741,10 +814,12 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
 
     The cache may be dense (from :func:`init_decode_state` /
     :func:`prefill`) or block-paged (from
-    :func:`init_paged_decode_state`) — the presence of
-    ``"block_tables"`` in the pytree selects the path statically under
-    jit.  Returns (logits (B,V), new cache).
+    :func:`init_paged_decode_state`) — ``cache_protocol.protocol_of``
+    names which state families it carries and how (static under jit:
+    key presence is pytree structure).  Returns (logits (B,V), new
+    cache).
     """
+    from repro.models.cache_protocol import protocol_of
     if embeds is not None:
         x = embeds.astype(jnp.dtype(cfg.compute_dtype))
     else:
@@ -753,8 +828,9 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
     pos = cache["pos"]                                                 # (B,)
     windows = jnp.asarray(cfg.layer_windows(), jnp.int32)
 
-    has_attn = cfg.has_attention
-    paged = has_attn and "block_tables" in cache
+    proto = protocol_of(cache, cfg)
+    has_attn = proto.has_attention
+    paged = proto.paged_attention
 
     cache_pos = bt = kpos = write_slot = gather_idx = None
     if paged:
@@ -837,7 +913,7 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, embeds=None):
             new_parts["conv"], new_parts["ssm"] = conv_s, ssm_s
         mix = (outs[0] + outs[1]) * 0.5 if len(outs) == 2 else outs[0]
         x = x + mix
-        ch, _ = _channel_forward(cfg, lp, x)
+        ch, _ = _channel_forward(cfg, lp, x, dropless=True)
         if ch is not None:
             x = x + ch
         return (x, k_stack, v_stack, ks_stack, vs_stack), new_parts

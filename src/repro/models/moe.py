@@ -52,16 +52,21 @@ def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
     return max(cfg.moe_top_k, min(c, n_tokens))
 
 
-def apply_moe(cfg: ModelConfig, p, x):
+def apply_moe(cfg: ModelConfig, p, x, dropless: bool = False):
     """x: (B, S, D) -> (out (B,S,D), aux dict of scalars).
 
     With cfg.moe_dispatch_chunks > 1 the token stream is processed in
     chunks via lax.scan, bounding the (E, C, D) dispatch buffers (and the
     position-in-expert cumsum) to one chunk at a time — at 1M-token
     prefill the unchunked buffers alone are tens of GB/device (olmoe:
-    145 GB/dev -> fits after chunking; EXPERIMENTS.md §Perf)."""
+    145 GB/dev -> fits after chunking; EXPERIMENTS.md §Perf).
+
+    ``dropless=True`` (inference/serving) sizes capacity so no token is
+    ever dropped, making each token's output independent of the batch
+    composition — the serving determinism contract.  Training keeps the
+    capacity scheme (and its load-balance pressure)."""
     b, s, d = x.shape
-    if cfg.moe_shard_map and cfg.mlp_gated:
+    if cfg.moe_shard_map and cfg.mlp_gated and not dropless:
         from repro.models import moe_shard_map as msm
         mesh = msm.get_mesh()
         if mesh is not None and cfg.n_experts % int(mesh.shape["model"]) == 0:
@@ -95,19 +100,27 @@ def apply_moe(cfg: ModelConfig, p, x):
 
         def one(carry, xc):
             bc, sc, _ = xc.shape
-            out_c, aux_c = _moe_tokens(cfg, p, xc.reshape(bc * sc, d))
+            out_c, aux_c = _moe_tokens(cfg, p, xc.reshape(bc * sc, d),
+                                       dropless)
             return carry, (out_c.reshape(bc, sc, d), aux_c)
 
         _, (outs, auxs) = jax.lax.scan(one, 0, xs)
         out = jnp.swapaxes(outs, 0, 1).reshape(b, s, d)
         aux = jax.tree.map(jnp.mean, auxs)
         return out, aux
-    out, aux = _moe_tokens(cfg, p, x.reshape(t, d))
+    out, aux = _moe_tokens(cfg, p, x.reshape(t, d), dropless)
     return out.reshape(b, s, d), aux
 
 
-def _moe_tokens(cfg: ModelConfig, p, xf):
-    """Core top-k capacity dispatch on a flat token batch (T, D)."""
+def _moe_tokens(cfg: ModelConfig, p, xf, dropless: bool = False):
+    """Core top-k capacity dispatch on a flat token batch (T, D).
+
+    ``dropless=True`` sets capacity to T itself: top_k assigns a token
+    to an expert at most once, so position-in-expert is at most T-1 and
+    ``keep`` is all-true — nothing drops, and because the (E, C, D)
+    expert einsum treats each (e, c) row independently, every token's
+    output is bitwise independent of which other tokens share the
+    batch (the decode-lane-count invariance serving relies on)."""
     cdt = jnp.dtype(cfg.compute_dtype)
     t, d = xf.shape
     e, k = cfg.n_experts, cfg.moe_top_k
@@ -125,7 +138,7 @@ def _moe_tokens(cfg: ModelConfig, p, xf):
     z_loss = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
 
     # --- capacity dispatch ---
-    cap = moe_capacity(cfg, t)
+    cap = t if dropless else moe_capacity(cfg, t)
     flat_e = top_i.reshape(-1)                                       # (T*k,)
     onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)              # (T*k, E)
     pos = jnp.cumsum(onehot, axis=0) - onehot                        # pos BEFORE this row

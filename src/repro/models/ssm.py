@@ -77,6 +77,26 @@ def _conv_full(p, u):
     return out + p["conv_b"].astype(u.dtype)
 
 
+def _conv_valid(p, full):
+    """Depthwise conv over pre-concatenated (B, W-1+S, C) inputs.
+
+    The caller prepends the W-1 context rows (zeros for a fresh
+    sequence, the carried conv state's tail for a chunk continuation),
+    so a VALID conv yields exactly S causal outputs.  One code path
+    serves training, whole-prompt prefill, and chunked prefill — each
+    output position is the same width-W dot product regardless of where
+    its window's inputs came from."""
+    w = p["conv_w"]                                       # (W, 1, C)
+    out = jax.lax.conv_general_dilated(
+        full, w.astype(full.dtype),
+        window_strides=(1,),
+        padding=[(0, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=full.shape[-1],
+    )
+    return out + p["conv_b"].astype(full.dtype)
+
+
 def _conv_step(p, conv_state, u_t):
     """conv_state: (B, W, C) last W inputs INCLUDING current after update."""
     conv_state = jnp.concatenate([conv_state[:, 1:], u_t[:, None]], axis=1)
@@ -175,14 +195,23 @@ def ssd_decode_step(xbar_t, a_t, b_t, c_t, state):
 # Layer-level entry points
 # ----------------------------------------------------------------------
 
-def _ssd_inputs(cfg: ModelConfig, p, xbc_conv, dt_raw):
-    """Split post-conv channels and build SSD inputs."""
+def _ssd_inputs(cfg: ModelConfig, p, xbc_conv, dt_raw, valid=None):
+    """Split post-conv channels and build SSD inputs.
+
+    ``valid`` (broadcastable to dt's shape) zeroes dt at padding
+    positions: with dt=0 both xbar (= x*dt) and a (= dt*A) vanish, so a
+    pad step contributes nothing to the state and decays nothing
+    (exp(0)=1) — the final state is exactly the state at the last valid
+    position.  Valid positions multiply dt by 1.0, which is exact, so
+    masking never perturbs real outputs."""
     di, n, h, _, _ = ssm_dims(cfg)
     p_dim = cfg.ssm_head_dim
     xs = xbc_conv[..., :di]
     b = xbc_conv[..., di:di + G * n]
     c = xbc_conv[..., di + G * n:]
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    if valid is not None:
+        dt = dt * valid.astype(dt.dtype)
     a_neg = -jnp.exp(p["A_log"])                                      # (H,) < 0
     shp = xs.shape[:-1]
     xh = xs.reshape(*shp, h, p_dim)
@@ -191,10 +220,23 @@ def _ssd_inputs(cfg: ModelConfig, p, xbc_conv, dt_raw):
     return xh, xbar, a, b.reshape(*shp, G, n), c.reshape(*shp, G, n), dt
 
 
-def ssm_forward(cfg: ModelConfig, p, x, init_state=None):
+def ssm_forward(cfg: ModelConfig, p, x, init_state=None, init_conv=None,
+                positions=None, lengths=None):
     """Full-sequence SSM mixer.  x: (B,S,D).
 
     Returns y (B,S,D), (conv_state (B,W,Cc), ssm_state (B,H,P,N)).
+
+    ``init_state`` / ``init_conv`` carry SSD and conv state from a
+    previous call (chunked prefill): ``init_conv`` is the (B, W, Cc)
+    raw pre-conv inputs exactly as a previous call returned them —
+    row m is the input at chunk-local position m - W, so the conv
+    window of this call's first outputs reads the previous chunk's
+    tail instead of zeros.  ``positions`` (B,S) are the tokens'
+    absolute positions (default arange) and ``lengths`` (B,) the
+    per-row total valid length: positions >= lengths are padding and
+    are masked out of the state recurrence (dt -> 0), so the returned
+    states are exactly the states at each row's last valid position
+    and the returned conv state gathers the last W *valid* inputs.
     """
     from repro.models.layers import rmsnorm_gated
     cdt = jnp.dtype(cfg.compute_dtype)
@@ -203,14 +245,33 @@ def ssm_forward(cfg: ModelConfig, p, x, init_state=None):
     x = x.astype(cdt)
     zxbcdt = x @ p["in_proj"].astype(cdt)
     z, xbc, dt_raw = _split_proj(cfg, zxbcdt)
-    # final conv state: last W raw (pre-conv) channel inputs
     bsz, s, _ = xbc.shape
-    if s >= width:
-        conv_state = xbc[:, s - width:, :]
+    if positions is None:
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (bsz, s))
+    # causal conv with explicit left context: the W-1 inputs before
+    # this call's window (zeros for a fresh sequence)
+    if init_conv is None:
+        prev = jnp.zeros((bsz, width, conv_ch), xbc.dtype)
     else:
-        conv_state = jnp.pad(xbc, ((0, 0), (width - s, 0), (0, 0)))
-    xbc_c = jax.nn.silu(_conv_full(p, xbc))
-    xh, xbar, a, b, c, dt = _ssd_inputs(cfg, p, xbc_c, dt_raw)
+        prev = init_conv.astype(xbc.dtype)
+    xbc_c = jax.nn.silu(_conv_valid(
+        p, jnp.concatenate([prev[:, 1:], xbc], axis=1)))
+    # final conv state: the last W raw inputs at each row's valid end.
+    # state_src[i] is the input at chunk-local position i - W, so the
+    # window [end, end + W) is the inputs at [end - W, end) — for a
+    # short row it mixes carried context and fresh inputs.
+    state_src = jnp.concatenate([prev, xbc], axis=1)       # (B, W+S, Cc)
+    if lengths is None:
+        end = jnp.full((bsz,), s, jnp.int32)
+        valid = None
+    else:
+        end = jnp.clip(lengths - positions[:, 0], 0, s).astype(jnp.int32)
+        valid = (positions < lengths[:, None])[..., None]   # (B,S,1) vs dt (B,S,H)
+    idx = end[:, None] + jnp.arange(width, dtype=jnp.int32)[None]
+    conv_state = jnp.take_along_axis(
+        state_src, idx[:, :, None], axis=1)                # (B, W, Cc)
+    xh, xbar, a, b, c, dt = _ssd_inputs(cfg, p, xbc_c, dt_raw, valid)
     y, ssm_state = ssd_chunked(xbar, a, b, c, cfg.ssm_chunk, init_state)
     y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
     y = y.reshape(bsz, s, di).astype(cdt)

@@ -28,10 +28,13 @@ oracle, bit for bit.
 
 The primitives are cache-layout agnostic where they can be:
 ``decode_round`` steps whatever cache pytree ``model.decode_step``
-understands (dense or block-paged), while lane insertion is
-layout-specific — ``insert_lanes`` scatters dense cache rows,
-``insert_lanes_paged`` scatters prompt K/V into allocator-assigned
-pool pages (see serving/block_pool.py and serving/scheduler.py).
+understands (any of the per-architecture protocols in
+models/cache_protocol.py — dense or block-paged attention KV,
+per-lane SSM state slots, or a hybrid of both), while lane insertion
+is layout-specific — ``insert_lanes`` scatters dense cache rows
+(including conv/ssm state rows), ``insert_lanes_paged`` scatters
+prompt K/V into allocator-assigned pool pages (see
+serving/block_pool.py and serving/scheduler.py).
 
 Prefix sharing adds a third insert path: ``prefill_shared`` prefills
 one row per *vote group* (not per lane) and ``insert_lanes_shared``
@@ -222,13 +225,18 @@ def decode_round(params, cfg: ModelConfig, gcfg: GenConfig, cache,
     afterwards: their writes stay confined to the same few
     never-validated slots round after round instead of marching through
     the cache, which is what lets a chunk-prefilling lane ride the
-    round harmlessly until its prompt is complete.
+    round harmlessly until its prompt is complete.  Recurrent state
+    (``conv``/``ssm`` lane rows) is restored the same way — it is
+    CUMULATIVE, so unlike KV slots the phantom steps would corrupt it
+    in place, not just scribble on never-read positions.
 
     Returns (cache, next_logits, done, tokens (B, rounds)).
     """
     done_in = done
     pos_in = cache["pos"]
     cpos_in = cache.get("cache_pos")
+    conv_in = cache.get("conv")
+    ssm_in = cache.get("ssm")
 
     def step(carry, t):
         cache, logits, done = carry
@@ -249,6 +257,11 @@ def decode_round(params, cfg: ModelConfig, gcfg: GenConfig, cache,
     if cpos_in is not None:
         cache["cache_pos"] = jnp.where(done_in[:, None], cpos_in,
                                        cache["cache_pos"])
+    if conv_in is not None:
+        cache["conv"] = jnp.where(done_in[None, :, None, None], conv_in,
+                                  cache["conv"])
+        cache["ssm"] = jnp.where(done_in[None, :, None, None, None], ssm_in,
+                                 cache["ssm"])
     return cache, logits, done, jnp.swapaxes(toks, 0, 1)
 
 
@@ -288,7 +301,11 @@ def decode_round_spec(params, cfg: ModelConfig, gcfg: GenConfig, cache,
 
     Lanes done at entry (dead or parked mid-chunk-prefill) ride the
     round exactly as in :func:`decode_round`: draft_len 0, accept 0,
-    pos/cache_pos restored at the end.
+    pos/cache_pos restored at the end.  Recurrent (conv/ssm) caches
+    never reach this round: draft rejection would need to rewind
+    cumulative state, which has no trash-slot analogue, so the
+    scheduler's spec guard keeps SSM-bearing configs on the plain
+    rounds (see Scheduler.__init__).
 
     Returns (cache, next_logits, done, spec_toks (B, Kd), accept (B,),
     toks (B, rounds)) — committed draft-phase tokens are pad-masked
@@ -563,19 +580,19 @@ def insert_lanes_paged(cache, cur_logits, new_cache, new_logits, lanes,
     flat-slot scatter (:func:`_quantize_prefill`).
     """
     new_cache = _quantize_prefill(cache, new_cache)
-    L, _, bucket = new_cache["k"].shape[:3]
-    pb, bs = cache["k"].shape[1], cache["k"].shape[2]
-    p = jnp.arange(bucket, dtype=jnp.int32)
-    tgt = (block_rows[:, p // bs] * bs + p[None, :] % bs).reshape(-1)
-
     out = dict(cache)
-    for name in ("k", "v", "k_scale", "v_scale"):
-        if name not in cache:
-            continue
-        flat = cache[name].reshape(L, pb * bs, *cache[name].shape[3:])
-        new = new_cache[name].reshape(L, -1, *new_cache[name].shape[3:])
-        out[name] = flat.at[:, tgt].set(new.astype(flat.dtype)).reshape(
-            cache[name].shape)
+    if "k" in cache:     # pure-SSM pools have no KV pages to scatter
+        L, _, bucket = new_cache["k"].shape[:3]
+        pb, bs = cache["k"].shape[1], cache["k"].shape[2]
+        p = jnp.arange(bucket, dtype=jnp.int32)
+        tgt = (block_rows[:, p // bs] * bs + p[None, :] % bs).reshape(-1)
+        for name in ("k", "v", "k_scale", "v_scale"):
+            if name not in cache:
+                continue
+            flat = cache[name].reshape(L, pb * bs, *cache[name].shape[3:])
+            new = new_cache[name].reshape(L, -1, *new_cache[name].shape[3:])
+            out[name] = flat.at[:, tgt].set(new.astype(flat.dtype)).reshape(
+                cache[name].shape)
     for name in ("conv", "ssm"):
         if name in cache:
             out[name] = cache[name].at[:, lanes].set(

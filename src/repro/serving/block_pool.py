@@ -1,9 +1,11 @@
-"""Host-side block-pool allocator for the paged KV cache.
+"""Host-side allocators for the paged serving caches: ``BlockPool``
+for attention KV blocks, ``StateSlotPool`` for recurrent (SSM) state
+slots.
 
 The paged serving path (``Scheduler(paged=True)``) stores K/V in a flat
 pool of fixed-size *blocks* — ``(n_layers, n_blocks + 1, block_size,
 n_kv_heads, head_dim)`` device arrays — instead of one dense
-``(n_lanes, s_max)`` slab per lane.  This class is the host-side
+``(n_lanes, s_max)`` slab per lane.  ``BlockPool`` is the host-side
 book-keeper: a free-list of physical block ids plus a reservation
 counter that makes admission backpressure deadlock-free.
 
@@ -459,3 +461,172 @@ class BlockPool:
         return (f"BlockPool(blocks={self.n_blocks}, bs={self.block_size}, "
                 f"in_use={self.in_use}, reserved={self.reserved}, "
                 f"peak={self.peak_in_use}, cow={self.cow_copies})")
+
+
+class StateSlotPool:
+    """Allocator for per-lane recurrent *state slots* (conv tail + SSD
+    state) — the state-slot leg of the per-architecture cache protocol
+    (models/cache_protocol.py).
+
+    An SSM lane's state is O(1) in sequence length — one
+    ``(W, conv_ch)`` conv tail plus one ``(H, P, N)`` SSD state per
+    layer — and it lives in *lane-indexed* dense arrays, so there is no
+    block indirection to manage.  What "paging" it means is the rest of
+    what :class:`BlockPool` gives KV lanes:
+
+      * **admission backpressure** — a pool sized below ``n_lanes``
+        makes SSM admission block on ``reserve()`` exactly like a KV
+        lane blocks on block reservation (useful when the state slab,
+        not the lane count, is the HBM cap: mamba2-2.7b's slot is
+        ~7 MiB/lane where a gemma3 KV *slot* is KiB but grows per
+        token);
+      * **preempt/offload accounting** — ``offload()`` moves a slot's
+        hold to a monotonic host id (the scheduler owns the actual
+        byte snapshot, as it does for KV blocks) and ``restore()``
+        draws a fresh slot from the caller's reservation;
+      * **leak audit** — ``leak_report()`` must return None after a
+        drained serving run, mirroring the KV invariant.
+
+    Reservation and allocation are deliberately the same two-phase
+    protocol as :class:`BlockPool` (reserve at admission, draw lazily,
+    hard-error on overdraw) so the scheduler treats both pools
+    uniformly; a hybrid lane holds one slot here AND a block-table
+    there.  No refcounts: recurrent state is never shared between
+    lanes (each vote lane's state diverges from token 0 of decode, and
+    ``insert_lanes_shared`` replicates — not aliases — conv/ssm rows).
+
+    ``slot_bytes`` is the per-slot HBM cost (all layers, conv + SSD),
+    used only for reporting: ``peak_state_bytes`` is what the hetero
+    bench gate pins against ``lanes * slot size``.
+    """
+
+    def __init__(self, n_slots: int, slot_bytes: int = 0, id_base: int = 0):
+        if n_slots < 1:
+            raise ValueError("pool needs at least one state slot")
+        if id_base < 0:
+            raise ValueError(f"id_base must be >= 0, got {id_base}")
+        self.n_slots = n_slots
+        self.slot_bytes = slot_bytes
+        self.id_base = id_base
+        # LIFO free list, ids base+1 .. base+n_slots (0 kept unused for
+        # symmetry with BlockPool's trash row / per-shard id spacing)
+        self._free: List[int] = list(range(id_base + n_slots, id_base, -1))
+        self._held = set()
+        self.reserved = 0
+        self.peak_in_use = 0
+        self.peak_reserved = 0
+        # --- host offload side (preemption) ---------------------------
+        self._host = set()           # outstanding host ids
+        self._host_next = 1
+        self.host_slots_peak = 0
+        self.offloaded_slots = 0
+        self.restored_slots = 0
+
+    # -- queries -------------------------------------------------------
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_slots - len(self._free)
+
+    @property
+    def available(self) -> int:
+        """Slots neither allocated nor promised — what a new admission
+        may reserve."""
+        return len(self._free) - self.reserved
+
+    @property
+    def host_in_use(self) -> int:
+        return len(self._host)
+
+    @property
+    def peak_state_bytes(self) -> int:
+        """High-water HBM pinned by live slots (reporting only)."""
+        return self.peak_in_use * self.slot_bytes
+
+    # -- reservation / allocation --------------------------------------
+    def reserve(self, n: int = 1) -> bool:
+        """Promise ``n`` slots to lanes being admitted; False (reserving
+        nothing) when the pool cannot guarantee them — backpressure."""
+        if n > self.available:
+            return False
+        self.reserved += n
+        self.peak_reserved = max(self.peak_reserved, self.reserved)
+        return True
+
+    def unreserve(self, n: int = 1) -> None:
+        if n > self.reserved:
+            raise ValueError(f"unreserve({n}) exceeds reserved={self.reserved}")
+        self.reserved -= n
+
+    def alloc(self) -> int:
+        """Draw one slot from the caller's reservation.  Failure here is
+        a scheduler accounting bug (see BlockPool.alloc)."""
+        if self.reserved < 1:
+            raise RuntimeError("alloc() with no reservation: lane drew a "
+                               "slot it never reserved")
+        if not self._free:
+            raise RuntimeError("alloc() with no free slot: reservation "
+                               "invariant violated")
+        sid = self._free.pop()
+        self._held.add(sid)
+        self.reserved -= 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return sid
+
+    def free(self, sid: int) -> None:
+        """Release a slot (EOS, budget, StopPolicy kill).  Double-free
+        raises — a slot freed twice would back two live lanes."""
+        if sid not in self._held:
+            raise ValueError(f"free: slot {sid} is not allocated "
+                             f"(double-free or foreign id)")
+        self._held.discard(sid)
+        self._free.append(sid)
+
+    # -- host offload (preemption) -------------------------------------
+    def offload(self, sid: int) -> int:
+        """Move a slot's hold to a host id (monotonic, never recycled).
+        The caller snapshots the lane's conv/ssm rows itself — the pool
+        only does the accounting.  The device slot frees immediately."""
+        self.free(sid)
+        hid = self._host_next
+        self._host_next += 1
+        self._host.add(hid)
+        self.offloaded_slots += 1
+        self.host_slots_peak = max(self.host_slots_peak, len(self._host))
+        return hid
+
+    def restore(self, hid: int) -> int:
+        """Redeem a host id back into a device slot, drawn from the
+        caller's reservation (reserve 1 before redeeming)."""
+        if hid not in self._host:
+            raise ValueError(f"restore: host slot {hid} is not parked")
+        sid = self.alloc()
+        self._host.discard(hid)
+        self.restored_slots += 1
+        return sid
+
+    def discard(self, hid: int) -> None:
+        """Drop a host id without restoring (parked request cancelled or
+        its vote group decided)."""
+        if hid not in self._host:
+            raise ValueError(f"discard: host slot {hid} is not parked")
+        self._host.discard(hid)
+
+    def leak_report(self) -> "str | None":
+        """None when fully drained — every slot free, no reservation, no
+        parked host state; else a description for test assertions."""
+        if self.in_use == 0 and self.reserved == 0 and not self._host:
+            return None
+        msg = (f"state-slot pool not drained: in_use={self.in_use} "
+               f"reserved={self.reserved} held={sorted(self._held)}")
+        if self._host:
+            msg += f" host_in_use={len(self._host)}"
+        return msg
+
+    def __repr__(self):
+        return (f"StateSlotPool(slots={self.n_slots}, "
+                f"slot_bytes={self.slot_bytes}, in_use={self.in_use}, "
+                f"reserved={self.reserved}, peak={self.peak_in_use})")

@@ -158,7 +158,8 @@ from repro.serving.batch import (GenConfig, copy_blocks, decode_round,
                                  prefill_shared, scatter_blocks,
                                  sharded_decode_round,
                                  sharded_decode_round_spec)
-from repro.serving.block_pool import BlockPool, HostBlocks
+from repro.models.cache_protocol import cache_protocol
+from repro.serving.block_pool import BlockPool, HostBlocks, StateSlotPool
 
 
 @dataclasses.dataclass
@@ -251,8 +252,13 @@ class SchedStats:
     # preemption + host offload
     preempts: int = 0            # lanes parked (explicit or pool pressure)
     resumes: int = 0             # parked requests restored into a lane
-    offload_bytes: int = 0       # K/V bytes copied device -> host
+    offload_bytes: int = 0       # K/V + state bytes copied device -> host
     host_blocks_peak: int = 0    # host-pool high-water (paged only)
+    # recurrent state slots (paged SSM / hybrid only; cache_protocol)
+    state_slots: int = 0         # allocatable per-lane state slots
+    peak_state_slots: int = 0    # slot-pool high-water mark
+    state_slot_bytes: int = 0    # HBM per slot (conv + SSD, all layers)
+    peak_state_bytes: int = 0    # peak_state_slots x state_slot_bytes
     # per-round host/device time breakdown (all entry points)
     sched_s: float = 0.0         # host scheduling: admission, chunk queue,
     #                              table growth, draft staging
@@ -353,6 +359,10 @@ class _Lane:
     prompt_len: int = 0
     blocks: List[int] = dataclasses.field(default_factory=list)
     reserved: int = 0            # promised-but-undrawn pool blocks
+    # recurrent-state slot id (state-paged schedulers; 0 = none).  The
+    # bytes live in the lane-indexed conv/ssm arrays — the slot is the
+    # accounting handle (admission backpressure, offload, leak audit)
+    state_slot: int = 0
     # chunked prefill: False while the lane's prompt is still being
     # chunk-prefilled — the lane rides decode rounds done-masked and
     # joins the decode batch the round its final chunk lands
@@ -391,8 +401,12 @@ class _Parked:
     # it into the same shard (its blocks belong to that shard's slab)
     shard: int = 0
     # dense: the lane's full cache row per layer-stacked entry, plus its
-    # cache_pos validity row (copied verbatim — ring-layout safe)
+    # cache_pos validity row (copied verbatim — ring-layout safe).
+    # State-paged lanes park their conv/ssm rows here too (the KV side,
+    # if any, rides the block offload above)
     dense_row: Optional[Dict[str, np.ndarray]] = None
+    # state-slot host handle (StateSlotPool.offload; None = no slot)
+    state_host: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -437,13 +451,26 @@ class Scheduler:
         Prompt-length bucket ladder and admission-wave size ladder;
         compiled shapes are bounded by their product.
     paged, block_size, pool_blocks:
-        ``paged=True`` swaps the dense per-lane cache for the
-        block-paged pool: ``block_size`` slots per block,
-        ``pool_blocks`` allocatable blocks (default: enough for every
-        lane at full ``s_max`` — set it lower to trade admission
+        ``paged=True`` swaps the dense per-lane cache for the pooled
+        one, per the model's cache protocol
+        (models/cache_protocol.py): attention KV moves into the
+        block-paged pool (``block_size`` slots per block,
+        ``pool_blocks`` allocatable blocks — default: enough for every
+        lane at full ``s_max``; set it lower to trade admission
         concurrency for HBM, the allocator backpressures admission
-        instead of overflowing).  Must cover at least one worst-case
-        lane (``ceil(s_max / block_size)`` blocks).
+        instead of overflowing; must cover at least one worst-case
+        lane, ``ceil(s_max / block_size)`` blocks), and recurrent
+        (SSM) state comes under ``StateSlotPool`` accounting (see
+        ``state_slots``).  A pure-SSM model has no KV to page, so its
+        ``paged=True`` is slot accounting only; a hybrid gets both.
+    state_slots:
+        Allocatable recurrent-state slots per shard (paged,
+        SSM-bearing models only; default ``n_lanes`` per shard).  A
+        lane's conv+SSD state is O(1) in sequence length, so unlike
+        KV blocks a slot never grows — sizing ``state_slots`` below
+        the lane count makes the state slab (not the lane pool) the
+        admission bottleneck, with the same backpressure /
+        auto-preempt behavior paged KV lanes get.
     share_prefix, prefix_cache_entries:
         ``share_prefix=True`` (paged only) enables shared-prefix
         serving: RequestGroups are admitted atomically and prefilled
@@ -452,12 +479,13 @@ class Scheduler:
         ``prefix_cache_entries``-entry LRU cache sharing full prompt
         blocks across requests with a common token prefix.
     chunk_size, prefill_budget:
-        ``chunk_size`` (attention-only models; a multiple of
-        ``block_size`` when paged) switches admission to *chunked
-        prefill*: prompts are appended onto the cache ``chunk_size``
-        tokens at a time (``model.prefill_chunk``), interleaved with
-        decode rounds, so admitting a long prompt never stalls live
-        decode lanes for its whole prefill.  ``prefill_budget`` caps
+        ``chunk_size`` (a multiple of ``block_size`` when KV is paged,
+        and of ``cfg.ssm_chunk`` for SSM-bearing models, so chunk
+        starts align with SSD scan boundaries) switches admission to
+        *chunked prefill*: prompts are appended onto the cache
+        ``chunk_size`` tokens at a time (``model.prefill_chunk``),
+        interleaved with decode rounds, so admitting a long prompt
+        never stalls live decode lanes for its whole prefill.  ``prefill_budget`` caps
         the *real prompt tokens* each round spends on chunk work (a
         wave of short prompts is priced by its tokens, not by padded
         chunk capacity); ``None`` completes every queued prompt within
@@ -475,8 +503,10 @@ class Scheduler:
         and rolling back the rest.  Speculation changes round counts
         and wall-clock, never completions — drafted serving stays
         bit-identical to undrafted serving and to the one-shot oracle
-        (tests/test_serving_trace.py).  Attention-only, non-MoE,
-        unquantized models; dense caches must be non-ring.
+        (tests/test_serving_trace.py).  Attention models only (MoE
+        included — dropless decode dispatch is batch-independent):
+        rejecting a draft must roll the cache back, which recurrent
+        (SSM) state cannot do; dense caches must be non-ring.
     auto_preempt:
         Paged only.  When admission would block on pool pressure, park
         the coldest preemptible lane's KV to host RAM
@@ -523,6 +553,7 @@ class Scheduler:
                  prefill_budget: Optional[int] = None,
                  spec_k: Optional[int] = None,
                  auto_preempt: bool = False,
+                 state_slots: Optional[int] = None,
                  mesh=None):
         self.params, self.cfg, self.tokenizer, self.gcfg = \
             params, cfg, tokenizer, gcfg
@@ -565,43 +596,58 @@ class Scheduler:
         # cache sized so any prompt bucket + any budget fits one lane
         self.s_max = max(self.buckets) + gcfg.max_new_tokens
         self.paged = paged
+        # the cache protocol splits "paged" into its two real axes:
+        # block-paged attention KV and slot-accounted recurrent state
+        # (a pure-SSM model has no KV to page; a hybrid has both)
+        proto = cache_protocol(cfg, paged)
+        self.kv_paged = proto.paged_attention
+        self.state_paged = paged and proto.state_slots
         self.block_size = block_size
         self.pool: Optional[BlockPool] = None    # most recent run's pool
         self.pools: Optional[List[BlockPool]] = None  # per-shard (sharded)
         self.share_prefix = share_prefix
         self.prefix_cache_entries = prefix_cache_entries
         self.prefix_cache: Optional[_PrefixCache] = None  # most recent run's
-        if share_prefix and not paged:
-            raise ValueError("share_prefix requires paged=True: sharing is "
-                             "block-table indirection over the block pool")
+        if share_prefix and not self.kv_paged:
+            raise ValueError(
+                "share_prefix requires paged attention KV (paged=True on a "
+                "model with attention): sharing is block-table indirection "
+                "over the KV block pool, and recurrent (SSM) state cannot "
+                "alias — each lane's state diverges from decode step 0")
         self.chunk_size = chunk_size
         self.prefill_budget = prefill_budget
         if chunk_size is not None:
-            if not cfg.has_attention or cfg.has_ssm:
-                raise ValueError(
-                    "chunked prefill requires an attention-only model: SSM "
-                    "prompt state is sequential and is not carried across "
-                    "chunks")
-            if cfg.is_moe:
-                raise ValueError(
-                    "chunked prefill does not support MoE models: expert "
-                    "capacity depends on the tokens per forward pass, so a "
-                    "chunked prompt would not reproduce whole-prompt prefill")
             if chunk_size < 8:
                 raise ValueError(
                     f"chunk_size={chunk_size} too small: sub-8 batch dims "
                     "can lower to differently-ordered reductions, breaking "
                     "the chunked == whole-prefill bit-match")
-            from repro.models import attention as attn_mod
-            if max(self.buckets) > attn_mod.CHUNKED_THRESHOLD:
+            if cfg.has_ssm and chunk_size % cfg.ssm_chunk:
                 raise ValueError(
-                    f"chunked prefill requires every prompt bucket within "
-                    f"the direct-attention threshold "
-                    f"({attn_mod.CHUNKED_THRESHOLD}): above it whole-prompt "
-                    "prefill switches to online-softmax attention, whose "
-                    "reductions are not bitwise comparable to the chunk "
-                    "path's")
-            if paged and chunk_size % block_size:
+                    f"chunk_size={chunk_size} must be a multiple of "
+                    f"ssm_chunk={cfg.ssm_chunk}: the SSD scan groups its "
+                    "reductions per ssm_chunk positions, so a chunk start "
+                    "off that grid would regroup them — chunked prefill "
+                    "would stop bit-matching whole-prompt prefill")
+            if cfg.has_ssm and share_prefix:
+                raise ValueError(
+                    "chunked prefill with share_prefix does not support "
+                    "SSM-bearing models: a shared chunk row carries no "
+                    "lane to persist conv/ssm state between chunks, and "
+                    "fan-out replicates only pos/logits.  Use share_prefix "
+                    "with whole-prompt prefill (insert_lanes_shared "
+                    "replicates the state rows), or chunk without sharing")
+            if cfg.has_attention:
+                from repro.models import attention as attn_mod
+                if max(self.buckets) > attn_mod.CHUNKED_THRESHOLD:
+                    raise ValueError(
+                        f"chunked prefill requires every prompt bucket "
+                        f"within the direct-attention threshold "
+                        f"({attn_mod.CHUNKED_THRESHOLD}): above it "
+                        "whole-prompt prefill switches to online-softmax "
+                        "attention, whose reductions are not bitwise "
+                        "comparable to the chunk path's")
+            if self.kv_paged and chunk_size % block_size:
                 raise ValueError(
                     f"chunk_size={chunk_size} must be a multiple of "
                     f"block_size={block_size} so chunks land block-aligned "
@@ -614,15 +660,15 @@ class Scheduler:
         if spec_k is not None:
             if spec_k < 1:
                 raise ValueError(f"spec_k={spec_k} must be >= 1")
-            if not cfg.has_attention or cfg.has_ssm:
+            if cfg.has_ssm:
                 raise ValueError(
-                    "speculative decoding requires an attention-only model: "
-                    "SSM state has no multi-token verify/rollback")
-            if cfg.is_moe:
-                raise ValueError(
-                    "speculative decoding does not support MoE models: "
-                    "expert capacity depends on tokens per forward pass, so "
-                    "a verify round would not reproduce sequential decode")
+                    "speculative decoding does not support recurrent (SSM) "
+                    "state: rejecting a draft must roll the cache back, and "
+                    "cumulative conv/ssm state has no trash-slot rollback "
+                    "the way attention KV positions do.  Serve this config "
+                    "with spec_k=None (MoE and attention-only models keep "
+                    "spec support — dropless decode dispatch made MoE "
+                    "verify rounds batch-independent)")
             if not paged and \
                     model_lib.cache_length(cfg, self.s_max) != self.s_max:
                 raise ValueError(
@@ -637,7 +683,7 @@ class Scheduler:
         # ladders bounding compiled shapes of the shared fan-out paths
         # (lanes per prefill row, CoW copy pairs per wave)
         self._fan_buckets = make_buckets(n_lanes, 1)
-        if paged:
+        if self.kv_paged:
             self.max_blocks = -(-self.s_max // block_size)
             # offload/restore id-list ladder (blocks moved per preempt)
             self._blk_buckets = make_buckets(self.max_blocks, 1)
@@ -651,6 +697,21 @@ class Scheduler:
                     f"pool_blocks={self.pool_blocks} cannot hold one "
                     f"worst-case lane ({self.max_blocks} blocks): admission "
                     "could never make progress")
+        if state_slots is not None and not self.state_paged:
+            raise ValueError(
+                "state_slots requires paged=True and an SSM-bearing model: "
+                "dense serving keys recurrent state by lane, and attention "
+                "KV is accounted in blocks (pool_blocks), not state slots")
+        if self.state_paged:
+            # per-lane recurrent state is O(1) in sequence length, so a
+            # slot never grows — slots are PER SHARD like pool_blocks
+            self.state_slots = (self.lanes_per_shard
+                                if state_slots is None else state_slots)
+            if self.state_slots < 1:
+                raise ValueError(
+                    f"state_slots={self.state_slots} cannot hold one lane: "
+                    "admission could never make progress")
+        if paged:
             # fail fast on configs the paged cache cannot serve
             model_lib.init_paged_decode_state(cfg, 1, self.s_max,
                                               block_size, 1)
@@ -848,7 +909,7 @@ class ServingLoop:
         self.lanes: List[Optional[_Lane]] = [None] * sched.n_lanes
         self._host_done = np.ones((sched.n_lanes,), bool)
         S = sched.n_shards
-        if sched.paged:
+        if sched.kv_paged:
             # one pool per data shard, over a private (pool_blocks+1)-row
             # slab of the device block axis.  Block ids are GLOBAL
             # (id_base = s * (pool_blocks + 1)), so every piece of host
@@ -865,9 +926,6 @@ class ServingLoop:
                 [_PrefixCache(p, sched.block_size,
                               sched.prefix_cache_entries)
                  for p in self.pools] if sched.share_prefix else None)
-            self.cache = model_lib.init_paged_decode_state(
-                sched.cfg, sched.n_lanes, sched.s_max, sched.block_size,
-                S * (sched.pool_blocks + 1) - 1)
             self._host_table = np.zeros((sched.n_lanes, sched.max_blocks),
                                         np.int32)
             self._table_dirty = False
@@ -884,9 +942,31 @@ class ServingLoop:
         sched.pool = self.pool
         sched.pools = self.pools
         sched.prefix_cache = self.prefix_cache
-        if not sched.paged:
+        if sched.paged:
+            # pure-SSM paged has no KV pool; n_blocks is then unused by
+            # init_paged_decode_state (no attention keys in the pytree)
+            n_blocks = (S * (sched.pool_blocks + 1) - 1
+                        if sched.kv_paged else 1)
+            self.cache = model_lib.init_paged_decode_state(
+                sched.cfg, sched.n_lanes, sched.s_max, sched.block_size,
+                n_blocks)
+        else:
             self.cache = model_lib.init_decode_state(sched.cfg, sched.n_lanes,
                                                      sched.s_max)
+        if sched.state_paged:
+            # recurrent-state slot accounting, one pool per shard like
+            # the KV pools.  A slot is one lane's conv tail + SSD state
+            # across all layers; the state itself stays lane-indexed
+            # dense (O(1) per lane), so the pool tracks occupancy and
+            # bytes, not device placement
+            slot_bytes = (self.cache["conv"].nbytes
+                          + self.cache["ssm"].nbytes) // sched.n_lanes
+            self.state_pools: Optional[List[StateSlotPool]] = [
+                StateSlotPool(sched.state_slots, slot_bytes,
+                              id_base=s * (sched.state_slots + 1))
+                for s in range(S)]
+        else:
+            self.state_pools = None
         self.cur_logits = jnp.zeros((sched.n_lanes, sched.cfg.vocab_size),
                                     jnp.float32)
         self.completions: Dict[int, Completion] = {}
@@ -933,6 +1013,10 @@ class ServingLoop:
     def _pool(self, i: int) -> BlockPool:
         """The block pool lane ``i`` allocates from."""
         return self.pools[i // self.sched.lanes_per_shard]
+
+    def _state_pool(self, i: int) -> StateSlotPool:
+        """The state-slot pool lane ``i`` allocates from."""
+        return self.state_pools[i // self.sched.lanes_per_shard]
 
     def _prefix_cache_of(self, s: int) -> Optional["_PrefixCache"]:
         return self.prefix_caches[s] if self.prefix_caches else None
@@ -1179,6 +1263,24 @@ class ServingLoop:
                        for s, r in reports if r is not None]
             self.stats.leak_report = ("; ".join(reports)
                                       if reports else None)
+        if self.state_pools is not None:
+            sp = self.state_pools
+            self.stats.state_slots = self.sched.state_slots * len(sp)
+            self.stats.peak_state_slots = sum(p.peak_in_use for p in sp)
+            self.stats.state_slot_bytes = sp[0].slot_bytes
+            self.stats.peak_state_bytes = sum(p.peak_state_bytes
+                                              for p in sp)
+            # the state-slot pools get the same shutdown leak audit as
+            # the block pools; reports from both are joined
+            reports = [(s, p.leak_report()) for s, p in enumerate(sp)]
+            reports = [f"state shard {s}: {r}" if len(sp) > 1
+                       else f"state: {r}"
+                       for s, r in reports if r is not None]
+            if reports:
+                joined = "; ".join(reports)
+                self.stats.leak_report = (
+                    joined if self.stats.leak_report is None
+                    else f"{self.stats.leak_report}; {joined}")
         return self.stats
 
     # -- split-phase step: dispatch / harvest --------------------------
@@ -1221,7 +1323,7 @@ class ServingLoop:
             return False
         r = self.sched.round_tokens
         fed = self._stage_drafts(live) if self.sched.spec_k else {}
-        if self.sched.paged:
+        if self.sched.kv_paged:
             # grow each live lane's block table one round ahead of its
             # decode position — plus its draft window, whose verify
             # writes land at positions pos..pos+draft_len-1 — (drawn
@@ -1447,7 +1549,7 @@ class ServingLoop:
             # a released (cancelled) uid's client is gone: don't retain
             # or emit a record nobody will claim
             self.completions[lane.req.uid] = comp
-        if self.sched.paged:
+        if self.sched.kv_paged:
             # reclaim immediately: blocks (and the unused tail of the
             # reservation) go back to the pool mid-flight, and the
             # lane's table row points at the trash block so its
@@ -1457,6 +1559,8 @@ class ServingLoop:
             lane.blocks, lane.reserved = [], 0
             self._host_table[i] = 0
             self._table_dirty = True
+        if self.sched.state_paged:
+            self._state_pool(i).free(lane.state_slot)
         self.lanes[i] = None
         self._host_done[i] = True
         self._submit_s.pop(lane.req.uid, None)
@@ -1493,11 +1597,13 @@ class ServingLoop:
         and re-admission reproduces the prefill exactly (no tokens were
         generated, no PRNG consumed)."""
         lane = self.lanes[i]
-        if self.sched.paged:
+        if self.sched.kv_paged:
             self._pool(i).free(lane.blocks)
             self._pool(i).unreserve(lane.reserved)
             self._host_table[i] = 0
             self._table_dirty = True
+        if self.sched.state_paged:
+            self._state_pool(i).free(lane.state_slot)
         self.lanes[i] = None
         self._host_done[i] = True
         self.pending.appendleft(lane.req)
@@ -1515,7 +1621,7 @@ class ServingLoop:
                          logits_row=np.asarray(self.cur_logits[i]),
                          hold=hold, parked_round=self._round_no,
                          shard=self._shard_of(i))
-        if self.sched.paged:
+        if self.sched.kv_paged:
             parked.n_blocks = len(lane.blocks)
             parked.host, copies = self._pool(i).offload(lane.blocks)
             if copies:
@@ -1523,13 +1629,24 @@ class ServingLoop:
             self._pool(i).unreserve(lane.reserved)
             self._host_table[i] = 0
             self._table_dirty = True
-        else:
+        row = {}
+        if not self.sched.paged:
             row = {name: np.asarray(self.cache[name][:, i])
                    for name in self._LANE_AXIS1 if name in self.cache}
             if "cache_pos" in self.cache:
                 row["cache_pos"] = np.asarray(self.cache["cache_pos"][i])
+        elif self.sched.state_paged:
+            # paged SSM / hybrid: the KV side (if any) rode the block
+            # offload above; recurrent state is lane-indexed dense, so
+            # its rows snapshot here.  Never via _LANE_AXIS1 wholesale —
+            # paged "k"/"v" axis 1 is the BLOCK axis, not the lane axis
+            row = {name: np.asarray(self.cache[name][:, i])
+                   for name in ("conv", "ssm")}
+        if row:
             parked.dense_row = row
             self.stats.offload_bytes += sum(a.nbytes for a in row.values())
+        if self.sched.state_paged:
+            parked.state_host = self._state_pool(i).offload(lane.state_slot)
         self.lanes[i] = None
         self._host_done[i] = True
         self._parked[lane.req.uid] = parked
@@ -1578,13 +1695,21 @@ class ServingLoop:
                      first_tok_s=parked.first_tok_s,
                      prompt_len=parked.prompt_len,
                      last_tok_round=self._round_no)
-        if sched.paged:
+        if sched.kv_paged:
             pool = self.pools[parked.shard]
             growth = sched._reservation(parked.prompt_len,
                                         parked.budget) - parked.n_blocks
             need = pool.restore_cost(parked.host) + growth
             if not pool.reserve(need):
                 return False
+        if sched.state_paged:
+            spool = self.state_pools[parked.shard]
+            if not spool.reserve(1):
+                if sched.kv_paged:
+                    pool.unreserve(need)
+                return False
+            lane.state_slot = spool.restore(parked.state_host)
+        if sched.kv_paged:
             blocks, scatters, dropped = pool.restore(parked.host)
             if scatters:
                 n = pick_bucket(len(scatters), sched._blk_buckets)
@@ -1606,7 +1731,8 @@ class ServingLoop:
             self._host_table[free_i] = 0
             self._host_table[free_i, : len(blocks)] = blocks
             self._table_dirty = True
-        else:
+        if parked.dense_row is not None:
+            # dense: every parked row; paged SSM/hybrid: conv/ssm rows
             for name, arr in parked.dense_row.items():
                 if name == "cache_pos":
                     self.cache[name] = self.cache[name].at[free_i].set(
@@ -1672,6 +1798,8 @@ class ServingLoop:
         if parked.host is not None:
             for h in self.pools[parked.shard].discard(parked.host):
                 self._host_kv.pop((parked.shard, h), None)
+        if parked.state_host is not None:
+            self.state_pools[parked.shard].discard(parked.state_host)
         toks = (np.concatenate(parked.parts) if parked.parts
                 else np.zeros((0,), np.int32))
         text = self.sched.tokenizer.decode(toks) if self.sched.tokenizer \
@@ -1782,7 +1910,7 @@ class ServingLoop:
         start = np.zeros((admit_n,), np.int32)
         lengths = np.ones((admit_n,), np.int32)
         lane_ids = np.full((admit_n,), sched.n_lanes, np.int32)
-        n_rows = sched.max_blocks if sched.paged else 1
+        n_rows = sched.max_blocks if sched.kv_paged else 1
         read_rows = np.zeros((admit_n, n_rows), np.int32)
         write_rows = np.zeros((admit_n, n_rows), np.int32)
         for j, job in enumerate(batch):
@@ -1792,7 +1920,7 @@ class ServingLoop:
             lengths[j] = max(len(job.toks), 1)
             if not job.shared:
                 lane_ids[j] = job.lanes[0]
-            if sched.paged:
+            if sched.kv_paged:
                 read_rows[j] = job.read_row
                 write_rows[j] = job.write_row
             stats.prefill_tokens += max(0, min(c, len(job.toks) - job.off))
@@ -1815,7 +1943,7 @@ class ServingLoop:
             i = job.lanes[0]
             if self.lanes[i] is not lane:
                 continue             # killed mid-prefill; reap drops the job
-            if sched.paged:
+            if sched.kv_paged:
                 self._host_table[i] = job.read_row
                 self._table_dirty = True
             lane.ready = True
@@ -1910,12 +2038,22 @@ class ServingLoop:
                 self._enc[req.uid] = sched._encode(req)
             lane_i = None
             if sched.paged:
-                need = sched._reservation(max(len(self._enc[req.uid]), 1),
-                                          sched._budget(req))
+                # admission must secure every pool the protocol needs:
+                # KV blocks (kv_paged) and a recurrent-state slot
+                # (state_paged) from the SAME shard, atomically
+                need = (sched._reservation(max(len(self._enc[req.uid]), 1),
+                                           sched._budget(req))
+                        if sched.kv_paged else 0)
                 for s in self._shard_order(free_by):
-                    if self.pools[s].reserve(need):
-                        lane_i = free_by[s].pop(0)
-                        break
+                    if sched.kv_paged and not self.pools[s].reserve(need):
+                        continue
+                    if (sched.state_paged
+                            and not self.state_pools[s].reserve(1)):
+                        if sched.kv_paged:
+                            self.pools[s].unreserve(need)
+                        continue
+                    lane_i = free_by[s].pop(0)
+                    break
                 if lane_i is None:
                     # pool pressure in every shard with a free lane:
                     # evict the coldest preemptible lane to host RAM
@@ -1949,6 +2087,7 @@ class ServingLoop:
                 read_row = write_row = None
                 if sched.paged:
                     lane.prompt_len = max(len(toks), 1)
+                if sched.kv_paged:
                     n_pb = -(-lane.prompt_len // sched.block_size)
                     lane.blocks = self._pool(i).alloc(n_pb)
                     lane.reserved = sched._reservation(
@@ -1958,6 +2097,8 @@ class ServingLoop:
                     read_row = write_row = row
                     self._host_table[i] = 0
                     self._table_dirty = True
+                if sched.state_paged:
+                    lane.state_slot = self._state_pool(i).alloc()
                 lanes[i] = lane
                 self._salts[i] = r.uid & 0x7FFFFFFF
                 self._host_done[i] = True
@@ -1980,7 +2121,10 @@ class ServingLoop:
             toks, lens = pad_token_rows([self._enc[r.uid] for r, _ in grp],
                                         sched.gcfg.pad_id, bucket, admit_n)
             lane_ids = np.full((admit_n,), sched.n_lanes, np.int32)
-            block_rows = (np.zeros((admit_n, sched.max_blocks), np.int32)
+            # pure-SSM paged has no pages to scatter; a 1-wide dummy row
+            # keeps insert_lanes_paged's signature uniform
+            n_rows = sched.max_blocks if sched.kv_paged else 1
+            block_rows = (np.zeros((admit_n, n_rows), np.int32)
                           if sched.paged else None)
             for j, (r, i) in enumerate(grp):
                 lane_ids[j] = i
@@ -1988,6 +2132,7 @@ class ServingLoop:
                              last_tok_round=self._round_no)
                 if sched.paged:
                     lane.prompt_len = max(len(self._enc[r.uid]), 1)
+                if sched.kv_paged:
                     n_pb = -(-lane.prompt_len // sched.block_size)
                     lane.blocks = self._pool(i).alloc(n_pb)
                     lane.reserved = sched._reservation(
@@ -1995,6 +2140,8 @@ class ServingLoop:
                     block_rows[j, :n_pb] = lane.blocks
                     self._host_table[i] = block_rows[j]
                     self._table_dirty = True
+                if sched.state_paged:
+                    lane.state_slot = self._state_pool(i).alloc()
                 lanes[i] = lane
                 self._salts[i] = r.uid & 0x7FFFFFFF
                 self._host_done[i] = False
@@ -2072,8 +2219,13 @@ class ServingLoop:
                         degraded = True
                         break
                     if pool.reserve(need):
-                        shard = s
-                        break
+                        # hybrid: the unit's lanes each need a state
+                        # slot from the same shard, atomically
+                        if (not sched.state_paged or
+                                self.state_pools[s].reserve(len(members))):
+                            shard = s
+                            break
+                        pool.unreserve(need)
                     # shard pool pressure: shed its warm prefix-cache
                     # blocks, then preempt its cold lanes, before
                     # falling through to the next candidate shard
@@ -2206,6 +2358,8 @@ class ServingLoop:
                         lane.blocks[-1] = tail_of[m.uid]
                     lane.reserved = sched._reservation(
                         p_len, lane.budget) - row.n_pb
+                    if sched.state_paged:
+                        lane.state_slot = self._state_pool(i).alloc()
                     self._host_table[i] = 0
                     self._host_table[i, :row.n_pb] = lane.blocks
                     lane_rows[j, mj] = i

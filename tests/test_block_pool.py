@@ -12,7 +12,7 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.core import routing as routing_lib
 from repro.serving.batch import GenConfig
-from repro.serving.block_pool import BlockPool
+from repro.serving.block_pool import BlockPool, StateSlotPool
 from repro.serving.scheduler import (Request, RequestGroup, Scheduler,
                                      StopPolicy)
 
@@ -435,6 +435,86 @@ def test_leak_report_flags_host_side():
     assert report is not None and "host" in report
     pool.discard(hb)
     assert pool.leak_report() is None
+
+
+# ----------------------------------------------------------------------
+# State-slot pool (recurrent / SSM leg of the cache protocol)
+# ----------------------------------------------------------------------
+
+def test_state_slot_alloc_free_roundtrip():
+    pool = StateSlotPool(3, slot_bytes=128)
+    assert pool.reserve(2) and not pool.reserve(2)   # only 1 unpromised
+    a = pool.alloc()
+    b = pool.alloc()
+    assert a != b and all(1 <= s <= 3 for s in (a, b))
+    assert pool.in_use == 2 and pool.peak_in_use == 2
+    assert pool.peak_state_bytes == 2 * 128
+    pool.free(a)
+    assert pool.in_use == 1 and pool.peak_in_use == 2
+    # freed slots come back out (LIFO) before untouched ones
+    assert pool.reserve(1)
+    assert pool.alloc() == a
+    pool.free(a)
+    pool.free(b)
+    assert pool.leak_report() is None
+
+
+def test_state_slot_misuse_raises():
+    pool = StateSlotPool(2)
+    with pytest.raises(RuntimeError, match="reserv"):
+        pool.alloc()                  # nothing reserved
+    with pytest.raises(ValueError):
+        pool.free(1)                  # never allocated
+    assert pool.reserve(1)
+    s = pool.alloc()
+    pool.free(s)
+    with pytest.raises(ValueError):
+        pool.free(s)                  # double-free
+    with pytest.raises(ValueError):
+        pool.unreserve(1)
+    with pytest.raises(ValueError):
+        StateSlotPool(0)
+
+
+def test_state_slot_offload_restore_discard():
+    """offload() frees the device slot and hands back a monotonic host
+    id; restore() draws a fresh slot from a new reservation; discard()
+    drops a parked id.  Stale handles raise; the drained pool's leak
+    report is clean, an undrained one names what is held."""
+    pool = StateSlotPool(2, slot_bytes=64)
+    assert pool.reserve(2)
+    a, b = pool.alloc(), pool.alloc()
+    h1 = pool.offload(a)
+    assert pool.in_use == 1 and pool.host_in_use == 1
+    assert pool.offloaded_slots == 1 and pool.host_slots_peak == 1
+    report = pool.leak_report()
+    assert report is not None and "host" in report
+    assert pool.reserve(1)
+    a2 = pool.restore(h1)
+    assert a2 == a                    # LIFO: the freed slot comes back
+    assert pool.restored_slots == 1 and pool.host_in_use == 0
+    with pytest.raises(ValueError, match="restore"):
+        pool.restore(h1)              # handle already redeemed
+    h2 = pool.offload(b)
+    assert h2 != h1                   # host ids are never recycled
+    pool.discard(h2)
+    with pytest.raises(ValueError, match="discard"):
+        pool.discard(h2)
+    pool.free(a2)
+    assert pool.leak_report() is None
+
+
+def test_state_slot_id_base_spacing():
+    """Per-shard pools use disjoint id ranges (base+1..base+n), same
+    spacing convention as BlockPool's per-shard slabs."""
+    pools = [StateSlotPool(2, id_base=s * 3) for s in range(2)]
+    ids = []
+    for p in pools:
+        assert p.reserve(2)
+        ids += [p.alloc(), p.alloc()]
+    assert sorted(ids) == [1, 2, 4, 5]
+    with pytest.raises(ValueError):
+        StateSlotPool(2, id_base=-1)
 
 
 # ----------------------------------------------------------------------

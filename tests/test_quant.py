@@ -266,13 +266,16 @@ def test_remaining_guards_still_actionable(setup):
         _sched(params, ring, paged=True, block_size=8)
     with pytest.raises(ValueError, match="share_prefix requires paged"):
         _sched(params, cfg, share_prefix=True)
+    # SSM-bearing configs: chunked is allowed on the SSD scan grid
+    # (rejected off it), speculation stays rejected — recurrent state
+    # cannot roll a rejected draft back
     ssm = dataclasses.replace(cfg, ssm_state=16)
-    with pytest.raises(ValueError, match="attention-only"):
+    with pytest.raises(ValueError, match="ssm_chunk"):
         _sched(params, ssm, chunk_size=8)
-    with pytest.raises(ValueError, match="attention-only"):
+    with pytest.raises(ValueError, match="recurrent"):
         _sched(params, ssm, spec_k=4)
-    moe = dataclasses.replace(cfg, n_experts=4)
-    with pytest.raises(ValueError, match="MoE"):
-        _sched(params, moe, chunk_size=8)
-    with pytest.raises(ValueError, match="MoE"):
-        _sched(params, moe, spec_k=4)
+    # MoE guards are gone: dropless decode dispatch makes chunked and
+    # speculative serving sound (ISSUE 10), quantized or not
+    moe = dataclasses.replace(cfg, n_experts=4, kv_quant=True)
+    _sched(params, moe, chunk_size=8)
+    _sched(params, moe, spec_k=4)
